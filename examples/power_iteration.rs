@@ -1,0 +1,63 @@
+//! Fig-3 application: power iteration with coded matvec vs speculative
+//! execution — prints per-iteration virtual times and the eigenvalue
+//! trajectory (PageRank/PCA's inner loop).
+//!
+//!     cargo run --release --example power_iteration
+
+use slec::apps::power_iteration::{planted_matrix, power_iteration};
+use slec::codes::Scheme;
+use slec::coordinator::Env;
+use slec::util::rng::Pcg64;
+use slec::util::stats::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::host();
+    let mut rng = Pcg64::new(3);
+    let a = planted_matrix(512, 80.0, &mut rng);
+    let iters = 12;
+
+    let mut rng1 = Pcg64::new(10);
+    let coded = power_iteration(
+        &env,
+        &a,
+        8, // 8 = 2 grids of 2×2 (2-D product code, §IV-A)
+        Scheme::LocalProduct { l_a: 2, l_b: 2 },
+        iters,
+        &mut rng1,
+    )?;
+    let mut rng2 = Pcg64::new(11);
+    let spec = power_iteration(
+        &env,
+        &a,
+        8,
+        Scheme::Speculative { wait_frac: 0.9 },
+        iters,
+        &mut rng2,
+    )?;
+
+    let mut rows = Vec::new();
+    for i in 0..iters {
+        rows.push(vec![
+            format!("{}", i + 1),
+            format!("{:.2}", coded.iteration_secs[i]),
+            format!("{:.2}", spec.iteration_secs[i]),
+            format!("{:.4}", coded.eigenvalues[i]),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["iter", "coded (s)", "speculative (s)", "λ estimate"], &rows)
+    );
+    println!(
+        "dominant eigenvalue: coded {:.4} vs speculative {:.4} (identical math — coding is transparent)",
+        coded.eigenvalues.last().unwrap(),
+        spec.eigenvalues.last().unwrap()
+    );
+    println!(
+        "totals: coded {:.1}s (encode {:.1}s, amortized) vs speculative {:.1}s",
+        coded.total_secs(),
+        coded.encode_secs,
+        spec.total_secs()
+    );
+    Ok(())
+}

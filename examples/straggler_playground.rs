@@ -1,0 +1,79 @@
+//! Straggler playground: explore the platform model and the theory
+//! interactively — sweeps the straggle probability `p` and the code
+//! parameter `L`, showing how end-to-end latency, Theorem-2 undecodability
+//! and decode reads respond. The ablation companion to Figs 6 and 9.
+//!
+//!     cargo run --release --example straggler_playground
+
+use slec::codes::{montecarlo, theory, Scheme};
+use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
+use slec::linalg::Matrix;
+use slec::util::rng::Pcg64;
+use slec::util::stats::render_table;
+
+fn main() -> anyhow::Result<()> {
+    // --- Sweep p: how fragile is each scheme as the platform degrades?
+    println!("== end-to-end latency vs straggle probability (virtual 20000², 20 blocks/side) ==");
+    let mut rng = Pcg64::new(2);
+    let a = Matrix::randn(640, 128, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(640, 128, &mut rng, 0.0, 1.0);
+    let mut rows = Vec::new();
+    for p in [0.0, 0.01, 0.02, 0.05, 0.10] {
+        let mut cfg = slec::config::Config::default();
+        cfg.set("platform.p", &p.to_string())?;
+        let (env, _rt): (Env, _) = cfg.build_env()?;
+        let mut cells = vec![format!("{p:.2}")];
+        for scheme in [
+            Scheme::LocalProduct { l_a: 10, l_b: 10 },
+            Scheme::Speculative { wait_frac: 0.79 },
+        ] {
+            let mut total = 0.0;
+            let trials = 3;
+            for t in 0..trials {
+                let job = MatmulJob {
+                    s_a: 20,
+                    s_b: 20,
+                    scheme,
+                    verify: false,
+                    seed: 1000 + t,
+                    job_id: format!("pg-{}-{p}-{t}", scheme.name()),
+                    virtual_dims: Some((20_000, 20_000, 20_000)),
+                    ..Default::default()
+                };
+                let (_, report) = run_matmul(&env, &a, &b, &job)?;
+                total += report.total_secs();
+            }
+            cells.push(format!("{:.1}", total / trials as f64));
+        }
+        rows.push(cells);
+    }
+    println!(
+        "{}",
+        render_table(&["p", "local-product (s)", "speculative (s)"], &rows)
+    );
+
+    // --- Sweep L: redundancy vs undecodability (the Fig-9 trade-off).
+    println!("== code parameter L: redundancy vs Pr(undecodable), p = 0.02 ==");
+    let mut rows = Vec::new();
+    for l in [2usize, 5, 10, 15, 20] {
+        let red = slec::codes::layout::product_redundancy(l, l);
+        let bound = theory::thm2_bound(l, l, 0.02);
+        let mc = montecarlo::simulate(l, l, 0.02, 20_000, 5 + l as u64);
+        rows.push(vec![
+            format!("{l}"),
+            format!("{:.0}%", red * 100.0),
+            format!("{bound:.2e}"),
+            format!("{:.2e}", mc.pr_undecodable),
+            format!("{:.1}", mc.mean_reads()),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["L", "redundancy", "Thm-2 bound", "MC Pr(undec.)", "mean decode reads"],
+            &rows
+        )
+    );
+    println!("sweet spot at L ≈ 10 (n = 121): low redundancy, negligible undecodability — the paper's choice.");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! §IV-C application: tall-skinny SVD via two coded matmuls (`AᵀA`, then
+//! `U = A·VΣ⁻¹`) with a local eigendecomposition between — reports the
+//! phase breakdown and verifies the factorization.
+//!
+//!     cargo run --release --example svd_tall_skinny
+
+use slec::apps::svd::{reconstruction_error, tall_skinny_svd, SvdConfig};
+use slec::codes::Scheme;
+use slec::linalg::Matrix;
+use slec::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // BLAS-3 calibration (see EXPERIMENTS.md §svd).
+    let mut cfg = slec::config::Config::default();
+    cfg.set("platform.flops_per_s", "6e9")?;
+    let (env, _rt) = cfg.build_env()?;
+    let mut rng = Pcg64::new(9);
+    let a = Matrix::randn(600, 60, &mut rng, 0.0, 1.0);
+
+    for (label, scheme) in [
+        ("coded (local product)", Scheme::LocalProduct { l_a: 10, l_b: 10 }),
+        ("speculative", Scheme::Speculative { wait_frac: 0.79 }),
+    ] {
+        let mut rng = Pcg64::new(27);
+        let res = tall_skinny_svd(
+            &env,
+            &a,
+            &SvdConfig {
+                s_blocks: 20, // 400 computation workers (paper's setup)
+                scheme,
+                virtual_dims: Some((300_000, 30_000)), // paper scale
+                ..Default::default()
+            },
+            &mut rng,
+        )?;
+        let err = reconstruction_error(&a, &res);
+        println!(
+            "{label}: gram {:.1}s + eigen {:.1}s + U {:.1}s = {:.1}s total; ‖A−UΣVᵀ‖/‖A‖ = {err:.2e}",
+            res.gram_report.total_secs(),
+            res.eigen_secs,
+            res.u_report.total_secs(),
+            res.total_secs()
+        );
+        println!(
+            "  σ₁..σ₅ = {:?}",
+            res.sigma[..5].iter().map(|s| (s * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
+        anyhow::ensure!(err < 1e-2, "SVD must reconstruct A");
+    }
+    println!("(paper: coded 270.9s vs speculative 368.75s → 26.5% reduction)");
+    Ok(())
+}

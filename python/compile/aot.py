@@ -1,0 +1,209 @@
+"""AOT compiler: lower the Layer-2 graphs to HLO **text** artifacts.
+
+Run once by `make artifacts` (a no-op when outputs are newer than
+sources); never on the request path. Emits:
+
+    artifacts/<name>.hlo.txt   one per (op, shape) in the manifest
+    artifacts/manifest.json    shapes + op metadata for the Rust runtime
+
+HLO *text* — NOT `lowered.compile()` / proto `.serialize()` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+The default manifest covers every shape the Rust default configs use;
+`--spec op:dims` adds extra shapes without editing this file.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Spec table: name → (callable, example-arg builder)
+# ---------------------------------------------------------------------------
+
+def spec_matmul_bt(m, k, n):
+    name = f"matmul_bt_{m}x{k}x{n}"
+    fn = model.block_product
+    args = (f32(m, k), f32(n, k))
+    return name, fn, args
+
+
+def spec_stack_sum(l, r, c):
+    name = f"stack_sum_{l}x{r}x{c}"
+    fn = model.encode_parity
+    args = (f32(l, r, c),)
+    return name, fn, args
+
+
+def spec_parity_residual(l, r, c):
+    name = f"parity_residual_{l}x{r}x{c}"
+    fn = model.parity_residual
+    args = (f32(r, c), f32(l, r, c))
+    return name, fn, args
+
+
+def spec_gemv(m, n):
+    name = f"gemv_{m}x{n}"
+    fn = model.gemv_chunk
+    args = (f32(m, n), f32(n))
+    return name, fn, args
+
+
+def spec_coded_matmul(m, k, n, l_a, l_b):
+    name = f"coded_matmul_{m}x{k}x{n}_l{l_a}x{l_b}"
+    def fn(a, b):
+        return model.local_coded_matmul(a, b, l_a=l_a, l_b=l_b)
+    args = (f32(m, k), f32(n, k))
+    return name, fn, args
+
+
+def spec_decode_roundtrip(m, k, n, l_a, l_b):
+    name = f"decode_roundtrip_{m}x{k}x{n}_l{l_a}x{l_b}"
+    def fn(a, b):
+        return model.decode_roundtrip(a, b, l_a=l_a, l_b=l_b)
+    args = (f32(m, k), f32(n, k))
+    return name, fn, args
+
+
+def default_specs():
+    """Shapes used by the Rust default configs, tests and examples.
+
+    Block shapes: tests use 64-row blocks with k=256; the quickstart /
+    end-to-end examples use 256-row blocks with k∈{1024, 2048}; matvec
+    chunks at 512/1024 rows.
+    """
+    specs = []
+    # Block products (m × k · (n × k)ᵀ).
+    for (m, k, n) in [
+        (64, 256, 64),
+        (128, 512, 128),
+        (256, 1024, 256),
+        (256, 2048, 256),
+        (512, 2048, 512),
+    ]:
+        specs.append(spec_matmul_bt(m, k, n))
+    # Parity encodes: group sizes 2/4/10 over the same block shapes.
+    for (l, r, c) in [
+        (2, 64, 256),
+        (4, 64, 256),
+        (10, 64, 256),
+        (2, 256, 1024),
+        (4, 256, 1024),
+        (10, 256, 1024),
+        (10, 256, 2048),
+        (4, 512, 2048),
+        # decode-side stack sums over OUTPUT blocks (parity-cell recovery)
+        (10, 64, 64),
+        (10, 128, 128),
+    ]:
+        specs.append(spec_stack_sum(l, r, c))
+    # Decode residuals over OUTPUT blocks (r × n_b): survivors stack length
+    # = L_B − 1 (recover systematic) or L_B (recover parity ← stack_sum).
+    for r_c in [64, 128, 256]:
+        for l in [1, 2, 3, 5, 8, 9, 10]:
+            specs.append(spec_parity_residual(l, r_c, r_c))
+    # Matvec chunks.
+    for (m, n) in [(512, 2048), (1024, 4096), (256, 1024)]:
+        specs.append(spec_gemv(m, n))
+    # Fused end-to-end pipelines (ablation + L2 integration check).
+    specs.append(spec_coded_matmul(128, 256, 128, 2, 2))
+    specs.append(spec_decode_roundtrip(128, 256, 128, 2, 2))
+    return specs
+
+
+def parse_extra_spec(text):
+    """Parse `--spec op:d1xd2x...` into a spec tuple."""
+    op, _, dims = text.partition(":")
+    d = [int(x) for x in dims.split("x")] if dims else []
+    table = {
+        "matmul_bt": (spec_matmul_bt, 3),
+        "stack_sum": (spec_stack_sum, 3),
+        "parity_residual": (spec_parity_residual, 3),
+        "gemv": (spec_gemv, 2),
+        "coded_matmul": (spec_coded_matmul, 5),
+        "decode_roundtrip": (spec_decode_roundtrip, 5),
+    }
+    if op not in table:
+        raise SystemExit(f"unknown op '{op}' (choose from {sorted(table)})")
+    fn, arity = table[op]
+    if len(d) != arity:
+        raise SystemExit(f"{op} takes {arity} dims, got {len(d)}")
+    return fn(*d)
+
+
+def shape_list(args):
+    out = []
+    for a in args:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument(
+        "--spec",
+        action="append",
+        default=[],
+        help="extra artifact, e.g. matmul_bt:256x1024x256",
+    )
+    ns = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = ns.out_dir or os.path.join(repo, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    specs = default_specs() + [parse_extra_spec(s) for s in ns.spec]
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, args in specs:
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Output shapes from the lowered signature.
+        out_avals = jax.eval_shape(fn, *args)
+        outs = jax.tree_util.tree_leaves(out_avals)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": shape_list(args),
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+                ],
+            }
+        )
+        print(f"[aot] {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {len(specs)} artifacts to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: tiled block product `C = A · Bᵀ`.
+
+This is the compute hot-spot of the whole system — every serverless
+computation worker in the paper runs exactly this on its pair of coded
+blocks (Fig 2's `f_comp`).
+
+TPU-shaped design (DESIGN.md §Hardware-Adaptation):
+
+- the grid iterates (m/bm, n/bn, k/bk) with the K dimension innermost and
+  the output tile's index map independent of K, so each (bm×bn) output
+  tile stays resident in VMEM across the whole K sweep (accumulate in
+  place) instead of re-streaming C through HBM;
+- tile sizes default to MXU-friendly multiples of 128 with f32
+  accumulation (`preferred_element_type`);
+- `BlockSpec` index maps express the HBM↔VMEM schedule that the paper's
+  Lambda workers expressed with S3 block reads.
+
+On this CPU-only image the kernel runs with `interpret=True` (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT client cannot execute);
+the tiling still exercises the same code structure.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_bt_kernel(a_ref, b_ref, o_ref):
+    """One grid step: accumulate a_tile @ b_tileᵀ into the output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_bt(a, b, *, bm=128, bn=128, bk=256):
+    """`C = A · Bᵀ` with A (m×k), B (n×k) via a tiled Pallas kernel.
+
+    Tile sizes are clamped to the problem size; dimensions must divide
+    evenly by the (clamped) tiles — the coordinator always feeds
+    power-of-two block shapes, and the AOT manifest records the exact
+    shapes compiled.
+    """
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({n},{k}) not divisible by tiles ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_bt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kt: (i, kt)),
+            pl.BlockSpec((bn, bk), lambda i, j, kt: (j, kt)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(bm, bn, bk):
+    """Estimated VMEM working set of one grid step (f32): A-tile + B-tile
+    + resident output tile. Used by EXPERIMENTS.md §Perf for the TPU
+    feasibility estimate (target ≤ ~16 MiB with double-buffering x2 on
+    the input tiles)."""
+    return 4 * (2 * bm * bk + 2 * bn * bk + bm * bn)
+
+
+def mxu_utilization_estimate(bm, bn):
+    """Crude MXU utilization proxy: fraction of the 128×128 systolic array
+    filled by the inner matmul tile shape."""
+    return (min(bm, 128) / 128.0) * (min(bn, 128) / 128.0)

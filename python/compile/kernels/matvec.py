@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: tiled GEMV `y = A·x`.
+
+The per-worker task of the coded matvec pipeline (§II-A): each serverless
+worker multiplies its coded row-block by the shared vector. The kernel
+tiles rows (VPU lanes) and streams the N axis through VMEM, keeping the
+output row-tile resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemv(a, x, *, bm=512, bn=2048):
+    """y = A·x with A (m×n), x (n,)."""
+    m, n = a.shape
+    assert x.shape == (n,), f"x {x.shape} vs A {a.shape}"
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not divisible by ({bm},{bn})"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(a, x)
+
+
+def vmem_bytes(bm, bn):
+    """Working set per grid step: A tile (double-buffered) + x chunk +
+    resident y tile."""
+    return 4 * (2 * bm * bn + bn + bm)

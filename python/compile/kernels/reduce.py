@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernels: parity encode (`stack_sum`) and peeling
+recovery (`parity_residual`).
+
+These are Fig 2's `f_enc` and `f_dec`: an encoding worker sums the `L`
+blocks of its group into a parity block; a decoding worker reconstructs a
+missing block as `parity − Σ survivors`. Both are bandwidth-bound
+streaming reductions, so the kernel tiles the (r, c) plane and streams
+the stack axis through VMEM one layer at a time — the TPU analogue of
+the Lambda worker streaming S3 objects through memory.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stack_sum_kernel(stack_ref, o_ref):
+    """Accumulate one stack layer into the resident output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # stack_ref block is (1, br, bc): drop the leading axis and add.
+    o_ref[...] += stack_ref[0, :, :]
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bc"))
+def stack_sum(stack, *, br=256, bc=256):
+    """Sum an (L, r, c) stack into an (r, c) parity block."""
+    l, r, c = stack.shape
+    br, bc = min(br, r), min(bc, c)
+    assert r % br == 0 and c % bc == 0, f"({r},{c}) not divisible by ({br},{bc})"
+    grid = (r // br, c // bc, l)
+    return pl.pallas_call(
+        _stack_sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, br, bc), lambda i, j, s: (s, i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(stack)
+
+
+def _parity_residual_kernel(parity_ref, stack_ref, o_ref, *, l):
+    """out_tile = parity_tile − Σ_s stack_tile[s]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = parity_ref[...]
+
+    o_ref[...] -= stack_ref[0, :, :]
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bc"))
+def parity_residual(parity, stack, *, br=256, bc=256):
+    """`parity − Σ stack` over an (L, r, c) survivor stack — the numeric
+    payload of one peeling-recovery step."""
+    l, r, c = stack.shape
+    assert parity.shape == (r, c), f"parity {parity.shape} vs stack {(r, c)}"
+    br, bc = min(br, r), min(bc, c)
+    assert r % br == 0 and c % bc == 0
+    grid = (r // br, c // bc, l)
+    return pl.pallas_call(
+        functools.partial(_parity_residual_kernel, l=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j, s: (i, j)),
+            pl.BlockSpec((1, br, bc), lambda i, j, s: (s, i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(parity, stack)
+
+
+def vmem_bytes(br, bc):
+    """VMEM working set per grid step: one stack layer tile + the resident
+    output tile (+ parity tile for the residual kernel), double-buffered
+    inputs."""
+    return 4 * (2 * br * bc + br * bc + br * bc)

@@ -1,0 +1,29 @@
+"""Pure-jnp reference oracles for every Pallas kernel (Layer 1).
+
+These are the ground truth the pytest suite compares the kernels against
+(`python/tests/test_kernels.py`) and double as readable documentation of
+each kernel's contract. Keep them dead simple — no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_bt(a, b):
+    """C = A · Bᵀ for A (m×k), B (n×k) — the paper's Eq. (1) block product."""
+    return jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+
+
+def stack_sum(stack):
+    """Parity encode: sum an (L, r, c) stack of blocks into one (r, c) block."""
+    return jnp.sum(stack, axis=0)
+
+
+def parity_residual(parity, stack):
+    """Peeling-recovery step: parity − Σ stack (recovers the one missing
+    systematic block of a parity line when `stack` holds the survivors)."""
+    return parity - jnp.sum(stack, axis=0)
+
+
+def gemv(a, x):
+    """y = A·x for A (m×n), x (n,) — the matvec worker's task (§II-A)."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)

@@ -1,0 +1,85 @@
+"""Layer 2 — the JAX compute graphs AOT-lowered into `artifacts/`.
+
+Each function here is a thin jax composition over the Layer-1 Pallas
+kernels (`kernels/*.py`). `aot.py` lowers them once per shape in the
+manifest; the Rust coordinator (`rust/src/runtime/`) loads the resulting
+HLO text and executes it via PJRT on its hot path — Python never runs at
+request time.
+
+`local_coded_matmul` is the full L2 pipeline (encode → blockwise products
+→ systematic extraction) used as an end-to-end correctness check of the
+kernel composition and as the fused-path ablation artifact.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import matmul as k_matmul
+from compile.kernels import matvec as k_matvec
+from compile.kernels import reduce as k_reduce
+
+
+def block_product(a, b):
+    """One computation worker's task: `C_ij = A_i · B_jᵀ` (Fig 2 f_comp)."""
+    return k_matmul.matmul_bt(a, b)
+
+
+def encode_parity(stack):
+    """One encoding worker's task: parity = Σ of its group's L blocks."""
+    return k_reduce.stack_sum(stack)
+
+
+def parity_residual(parity, stack):
+    """One decoding worker's recovery step: parity − Σ survivors."""
+    return k_reduce.parity_residual(parity, stack)
+
+
+def gemv_chunk(a, x):
+    """One matvec worker's task: y_i = A_i · x."""
+    return k_matvec.gemv(a, x)
+
+
+def local_coded_matmul(a, b, *, l_a, l_b):
+    """End-to-end L2 pipeline for `C = A·Bᵀ` with one local group per side
+    (s_a = l_a, s_b = l_b): encode parities with the reduce kernel, run
+    every coded block product with the matmul kernel, return the
+    systematic output. Numerically identical to `A·Bᵀ` — asserted by
+    pytest against the jnp oracle.
+    """
+    m, k = a.shape
+    n, _ = b.shape
+    assert m % l_a == 0 and n % l_b == 0
+    ra, rb = m // l_a, n // l_b
+
+    a_blocks = [a[i * ra : (i + 1) * ra] for i in range(l_a)]
+    b_blocks = [b[j * rb : (j + 1) * rb] for j in range(l_b)]
+    a_par = encode_parity(jnp.stack(a_blocks))
+    b_par = encode_parity(jnp.stack(b_blocks))
+    a_coded = a_blocks + [a_par]
+    b_coded = b_blocks + [b_par]
+
+    rows = []
+    for i in range(l_a):
+        rows.append(jnp.concatenate(
+            [block_product(a_coded[i], b_coded[j]) for j in range(l_b)], axis=1
+        ))
+    return jnp.concatenate(rows, axis=0)
+
+
+def decode_roundtrip(a, b, *, l_a, l_b):
+    """L2 decode-correctness graph: build one local grid, erase the (0, 0)
+    cell, recover it with the parity_residual kernel via its row, and
+    return (recovered, truth). Lowered as an artifact so the Rust side can
+    sanity-check the decode numerics end-to-end through PJRT."""
+    m, k = a.shape
+    n, _ = b.shape
+    ra, rb = m // l_a, n // l_b
+    a_blocks = [a[i * ra : (i + 1) * ra] for i in range(l_a)]
+    b_blocks = [b[j * rb : (j + 1) * rb] for j in range(l_b)]
+    b_par = encode_parity(jnp.stack(b_blocks))
+    b_coded = b_blocks + [b_par]
+    # Row 0 of the local grid: C_00 .. C_0lb (last is the row parity).
+    row0 = [block_product(a_blocks[0], b_coded[j]) for j in range(l_b + 1)]
+    truth = row0[0]
+    survivors = jnp.stack(row0[1:l_b])  # systematic survivors of row 0
+    recovered = parity_residual(row0[l_b], survivors)
+    return recovered, truth

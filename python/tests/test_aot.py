@@ -1,0 +1,67 @@
+"""AOT pipeline checks: lowering produces valid, parseable HLO text and a
+consistent manifest — without writing the full artifact set (fast)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_roundtrips():
+    lowered = jax.jit(model.block_product).lower(aot.f32(8, 16), aot.f32(8, 16))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[8,16]" in text
+    # dot or fusion must appear — the product survives lowering.
+    assert "dot" in text or "fusion" in text
+
+
+def test_specs_have_unique_names():
+    specs = aot.default_specs()
+    names = [name for name, _, _ in specs]
+    assert len(names) == len(set(names))
+    assert any(n.startswith("matmul_bt_") for n in names)
+    assert any(n.startswith("stack_sum_") for n in names)
+    assert any(n.startswith("parity_residual_") for n in names)
+    assert any(n.startswith("gemv_") for n in names)
+
+
+def test_parse_extra_spec():
+    name, fn, args = aot.parse_extra_spec("matmul_bt:8x16x8")
+    assert name == "matmul_bt_8x16x8"
+    assert args[0].shape == (8, 16)
+    with pytest.raises(SystemExit):
+        aot.parse_extra_spec("bogus:1x2")
+    with pytest.raises(SystemExit):
+        aot.parse_extra_spec("gemv:1x2x3")
+
+
+def test_single_artifact_emission(tmp_path):
+    """Run the real CLI for one tiny extra spec set against a temp dir.
+
+    Uses a stripped manifest (monkeypatched default_specs) to stay fast.
+    """
+    out = tmp_path / "artifacts"
+    # Call main() in-process with a minimal spec list.
+    argv = sys.argv
+    real_defaults = aot.default_specs
+    try:
+        aot.default_specs = lambda: [aot.spec_matmul_bt(8, 16, 8)]
+        sys.argv = ["aot.py", "--out-dir", str(out)]
+        aot.main()
+    finally:
+        sys.argv = argv
+        aot.default_specs = real_defaults
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    (entry,) = manifest["artifacts"]
+    assert entry["name"] == "matmul_bt_8x16x8"
+    hlo = (out / entry["file"]).read_text()
+    assert "HloModule" in hlo
+    assert entry["inputs"][0]["shape"] == [8, 16]
+    assert entry["outputs"][0]["shape"] == [8, 8]

@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and data distributions; every comparison is
+against `compile.kernels.ref` with tight f32 tolerances. This is the core
+correctness signal for the kernels the whole system executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, matvec, reduce, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def assert_close(got, want, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bt
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([8, 16, 32, 64, 128])
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_bt_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, n, k)
+    got = matmul.matmul_bt(a, b)
+    assert_close(got, ref.matmul_bt(a, b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (64, 64, 64)])
+def test_matmul_bt_tile_invariance(bm, bn, bk):
+    """Result must not depend on the tiling."""
+    rng = np.random.default_rng(0)
+    a, b = rand(rng, 64, 64), rand(rng, 64, 64)
+    base = ref.matmul_bt(a, b)
+    got = matmul.matmul_bt(a, b, bm=bm, bn=bn, bk=bk)
+    assert_close(got, base, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bt_rejects_mismatched_inner():
+    rng = np.random.default_rng(1)
+    with pytest.raises(AssertionError):
+        matmul.matmul_bt(rand(rng, 8, 16), rand(rng, 8, 32))
+
+
+def test_matmul_bt_large_values_accumulate_f32():
+    rng = np.random.default_rng(2)
+    a, b = rand(rng, 32, 256, scale=100.0), rand(rng, 32, 256, scale=100.0)
+    got = matmul.matmul_bt(a, b)
+    assert_close(got, ref.matmul_bt(a, b), rtol=1e-3, atol=1e-1)
+
+
+def test_vmem_estimate_within_budget():
+    """The default tiles must fit a TPU core's VMEM (≈16 MiB)."""
+    assert matmul.vmem_bytes(128, 128, 256) < 16 * 2**20
+    assert 0.0 < matmul.mxu_utilization_estimate(128, 128) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# stack_sum / parity_residual
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.integers(1, 12),
+    r=st.sampled_from([8, 32, 64]),
+    c=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stack_sum_matches_ref(l, r, c, seed):
+    rng = np.random.default_rng(seed)
+    stack = rand(rng, l, r, c)
+    assert_close(reduce.stack_sum(stack), ref.stack_sum(stack), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.integers(1, 10),
+    r=st.sampled_from([8, 64]),
+    c=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_parity_residual_matches_ref(l, r, c, seed):
+    rng = np.random.default_rng(seed)
+    parity, stack = rand(rng, r, c), rand(rng, l, r, c)
+    assert_close(
+        reduce.parity_residual(parity, stack),
+        ref.parity_residual(parity, stack),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+def test_parity_roundtrip_recovers_block():
+    """encode(L blocks) then residual(all-but-one) == the left-out block —
+    the numeric identity the peeling decoder relies on."""
+    rng = np.random.default_rng(3)
+    blocks = rand(rng, 5, 32, 48)
+    parity = reduce.stack_sum(blocks)
+    for miss in range(5):
+        survivors = jnp.stack([blocks[i] for i in range(5) if i != miss])
+        rec = reduce.parity_residual(parity, survivors)
+        assert_close(rec, blocks[miss], rtol=1e-4, atol=1e-4)
+
+
+def test_stack_sum_tiling_invariance():
+    rng = np.random.default_rng(4)
+    stack = rand(rng, 3, 128, 128)
+    base = ref.stack_sum(stack)
+    for br, bc in [(32, 32), (64, 128), (128, 64)]:
+        assert_close(reduce.stack_sum(stack, br=br, bc=bc), base, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gemv
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 64, 256]),
+    n=st.sampled_from([16, 128, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemv_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand(rng, m, n), rand(rng, n)
+    assert_close(matvec.gemv(a, x), ref.gemv(a, x), rtol=1e-4, atol=1e-4)
+
+
+def test_gemv_tiling_invariance():
+    rng = np.random.default_rng(5)
+    a, x = rand(rng, 128, 256), rand(rng, 256)
+    base = ref.gemv(a, x)
+    for bm, bn in [(32, 64), (128, 128), (64, 256)]:
+        assert_close(matvec.gemv(a, x, bm=bm, bn=bn), base, rtol=1e-4, atol=1e-4)
+
+
+def test_gemv_rejects_bad_vector():
+    rng = np.random.default_rng(6)
+    with pytest.raises(AssertionError):
+        matvec.gemv(rand(rng, 8, 16), rand(rng, 8))

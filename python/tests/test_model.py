@@ -1,0 +1,73 @@
+"""L2 correctness: model graphs (kernel compositions) vs jnp, plus the
+coded-pipeline identity `local_coded_matmul(A, B) == A·Bᵀ`."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def assert_close(got, want, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    la=st.integers(1, 4),
+    lb=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_local_coded_matmul_identity(la, lb, block, k, seed):
+    """The coded pipeline computes exactly A·Bᵀ (coding is transparent to
+    the application — the paper's 'universality' claim in §VI)."""
+    rng = np.random.default_rng(seed)
+    a = rand(rng, la * block, k)
+    b = rand(rng, lb * block, k)
+    got = model.local_coded_matmul(a, b, l_a=la, l_b=lb)
+    assert_close(got, a @ b.T, rtol=1e-3, atol=1e-3)
+
+
+def test_decode_roundtrip_recovers():
+    """The decode graph's recovered block equals the erased block."""
+    rng = np.random.default_rng(1)
+    a = rand(rng, 64, 128)
+    b = rand(rng, 64, 128)
+    recovered, truth = model.decode_roundtrip(a, b, l_a=2, l_b=2)
+    assert_close(recovered, truth, rtol=1e-3, atol=1e-3)
+
+
+def test_block_product_shapes():
+    rng = np.random.default_rng(2)
+    c = model.block_product(rand(rng, 32, 64), rand(rng, 16, 64))
+    assert c.shape == (32, 16)
+
+
+def test_encode_parity_shape_and_value():
+    rng = np.random.default_rng(3)
+    stack = rand(rng, 4, 8, 8)
+    p = model.encode_parity(stack)
+    assert p.shape == (8, 8)
+    assert_close(p, jnp.sum(stack, axis=0))
+
+
+def test_gemv_chunk_shape():
+    rng = np.random.default_rng(4)
+    y = model.gemv_chunk(rand(rng, 64, 32), rand(rng, 32))
+    assert y.shape == (64,)
+
+
+@pytest.mark.parametrize("la,lb", [(2, 3), (3, 2)])
+def test_local_coded_matmul_rectangular_groups(la, lb):
+    rng = np.random.default_rng(5)
+    a = rand(rng, la * 16, 32)
+    b = rand(rng, lb * 16, 32)
+    got = model.local_coded_matmul(a, b, l_a=la, l_b=lb)
+    assert_close(got, a @ b.T, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,18 @@
+//! Bench: regenerate Figs 10–11 (KRR-PCG, ADULT-like and EPSILON-like).
+use slec::config::Config;
+use slec::figures::{fig10_11, RunScale};
+use slec::util::bench::banner;
+
+fn main() {
+    banner("Figs 10–11 — KRR with PCG, coded vs speculative");
+    let cfg = Config { results_dir: "results".into(), ..Default::default() };
+    for ds in [fig10_11::Dataset::AdultLike, fig10_11::Dataset::EpsilonLike] {
+        let j = fig10_11::run(&cfg, RunScale::Quick, ds).expect("krr");
+        println!(
+            "{:?}: savings {:.1}% (paper {:.1}%)",
+            ds,
+            j.get("savings_pct").unwrap().as_f64().unwrap(),
+            j.get("paper_savings_pct").unwrap().as_f64().unwrap()
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig 12 (ALS matrix completion).
+use slec::config::Config;
+use slec::figures::{fig12, RunScale};
+use slec::util::bench::banner;
+
+fn main() {
+    banner("Fig 12 — ALS matrix completion, coded vs speculative");
+    let cfg = Config { results_dir: "results".into(), ..Default::default() };
+    let j = fig12::run(&cfg, RunScale::Quick).expect("fig12");
+    println!(
+        "savings {:.1}% (paper 20%)",
+        j.get("savings_pct").unwrap().as_f64().unwrap()
+    );
+}

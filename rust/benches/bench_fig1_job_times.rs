@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 1 (job-time distribution) and time the straggler
+//! model's sampling throughput (a simulator hot path).
+use slec::config::Config;
+use slec::figures::{fig1, RunScale};
+use slec::platform::{StragglerModel, WorkProfile};
+use slec::util::bench::{banner, Bencher};
+use slec::util::rng::Pcg64;
+
+fn main() {
+    banner("Fig 1 — job-time distribution + sampler throughput");
+    let cfg = Config { results_dir: "results".into(), ..Default::default() };
+    fig1::run(&cfg, RunScale::Quick).expect("fig1");
+
+    let model = StragglerModel::new(Default::default(), Default::default());
+    let work = WorkProfile::block_product(2048, 16384, 2048);
+    let b = Bencher::default();
+    let r = b.bench("sample_fleet(3600)", || {
+        let mut rng = Pcg64::new(1);
+        model.sample_fleet(&work, 3600, &mut rng)
+    });
+    println!("{}", r.line());
+    println!("throughput: {:.1} M samples/s", 3600.0 / r.summary.p50 / 1e6);
+}

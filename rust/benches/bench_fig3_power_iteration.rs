@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 3 (power iteration, coded vs speculative).
+use slec::config::Config;
+use slec::figures::{fig3, RunScale};
+use slec::util::bench::banner;
+
+fn main() {
+    banner("Fig 3 — power iteration, coded vs speculative execution");
+    let cfg = Config { results_dir: "results".into(), ..Default::default() };
+    let j = fig3::run(&cfg, RunScale::Quick).expect("fig3");
+    let speedup = j.get("spec_total_s").unwrap().as_f64().unwrap()
+        / j.get("coded_total_s").unwrap().as_f64().unwrap();
+    println!("end-to-end speedup: {speedup:.2}× (paper: ~2×)");
+}

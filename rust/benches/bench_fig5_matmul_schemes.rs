@@ -1,0 +1,49 @@
+//! Bench: regenerate Fig 5 (coded matmul scheme comparison) plus the
+//! L-sweep ablation (redundancy vs latency trade, DESIGN.md §6).
+use slec::codes::Scheme;
+use slec::config::Config;
+use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
+use slec::figures::{fig5, RunScale};
+use slec::linalg::Matrix;
+use slec::util::bench::banner;
+use slec::util::rng::Pcg64;
+use slec::util::stats::render_table;
+
+fn main() {
+    banner("Fig 5 — matmul schemes vs dimension");
+    let cfg = Config { results_dir: "results".into(), ..Default::default() };
+    fig5::run(&cfg, RunScale::Quick).expect("fig5");
+
+    // Ablation: end-to-end latency vs L at fixed worker budget.
+    banner("ablation — latency vs L (virtual 20000², 20 blocks/side)");
+    let env = Env::host();
+    let mut rng = Pcg64::new(4);
+    let a = Matrix::randn(640, 128, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(640, 128, &mut rng, 0.0, 1.0);
+    let mut rows = Vec::new();
+    for l in [2usize, 4, 5, 10, 20] {
+        let mut total = 0.0;
+        let trials = 3;
+        for t in 0..trials {
+            let job = MatmulJob {
+                s_a: 20,
+                s_b: 20,
+                scheme: Scheme::LocalProduct { l_a: l, l_b: l },
+                verify: false,
+                seed: 7 + t,
+                job_id: format!("abl-{l}-{t}"),
+                virtual_dims: Some((20_000, 20_000, 20_000)),
+                ..Default::default()
+            };
+            let (_, r) = run_matmul(&env, &a, &b, &job).expect("run");
+            total += r.total_secs();
+        }
+        let red = slec::codes::layout::product_redundancy(l, l);
+        rows.push(vec![
+            format!("{l}"),
+            format!("{:.0}%", red * 100.0),
+            format!("{:.1}", total / trials as f64),
+        ]);
+    }
+    println!("{}", render_table(&["L", "redundancy", "mean total (s)"], &rows));
+}

@@ -1,0 +1,85 @@
+//! Hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
+//! host GEMM roofline, peeling-decoder planning throughput, coded
+//! encode/decode numerics, PJRT block-product latency vs host, and the
+//! event-simulation loop.
+use slec::codes::peeling::plan_peel;
+use slec::linalg::{gemm, Matrix, Partition};
+use slec::platform::{launch, StragglerModel, WorkProfile};
+use slec::runtime::{ComputeBackend, HostBackend, PjrtBackend, PjrtRuntime};
+use slec::util::bench::{banner, black_box, Bencher};
+use slec::util::rng::Pcg64;
+
+fn main() {
+    banner("hot paths — GEMM / peeling / encode-decode / PJRT / event loop");
+    let b = Bencher::default();
+    let mut rng = Pcg64::new(1);
+
+    // L3 host GEMM (the fallback compute kernel + verification oracle).
+    for n in [256usize, 512, 1024] {
+        let a = Matrix::randn(n, n, &mut rng, 0.0, 1.0);
+        let bm = Matrix::randn(n, n, &mut rng, 0.0, 1.0);
+        let r = b.bench(&format!("host gemm {n}³"), || gemm::matmul_bt(&a, &bm));
+        let gflops = 2.0 * (n as f64).powi(3) / r.summary.p50 / 1e9;
+        println!("{}  → {gflops:.2} GFLOP/s", r.line());
+    }
+
+    // Peeling planner throughput (decode-phase planning).
+    let mut present = vec![true; 121];
+    for i in [3usize, 17, 40, 77, 100] {
+        present[i] = false;
+    }
+    let r = b.bench("plan_peel 11×11, 5 missing", || {
+        black_box(plan_peel(11, 11, &present))
+    });
+    println!(
+        "{}  → {:.2} M grids/s",
+        r.line(),
+        1.0 / r.summary.p50 / 1e6
+    );
+
+    // Coded encode numerics at fig-5 block scale.
+    let a = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
+    let p = Partition::new(640, 256, 10);
+    let blocks = p.split(&a);
+    let layout = slec::codes::layout::LocalLayout::new(10, 10);
+    let r = b.bench("encode_side 10 blocks (64×256)", || {
+        slec::codes::local_product::LocalProductCode::encode_side(layout, &blocks)
+    });
+    println!("{}", r.line());
+
+    // Event loop: launch + order statistics over a 3600-worker phase.
+    let model = StragglerModel::new(Default::default(), Default::default());
+    let work = WorkProfile::block_product(2048, 16384, 2048);
+    let r = b.bench("phase launch+sort 3600 workers", || {
+        let mut rng = Pcg64::new(3);
+        let phase = launch(&model, &work, 3600, &mut rng);
+        black_box(phase.arrival_order())
+    });
+    println!(
+        "{}  → {:.2} M events/s",
+        r.line(),
+        3600.0 / r.summary.p50 / 1e6
+    );
+
+    // PJRT vs host block product (requires `make artifacts`).
+    let dir = PjrtRuntime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = PjrtRuntime::start(&dir).expect("engine");
+        let be = PjrtBackend::new(rt.handle());
+        let host = HostBackend;
+        let x = Matrix::randn(256, 1024, &mut rng, 0.0, 1.0);
+        let y = Matrix::randn(256, 1024, &mut rng, 0.0, 1.0);
+        let r1 = b.bench("block_product 256×1024×256 (pjrt)", || {
+            be.block_product(&x, &y)
+        });
+        let r2 = b.bench("block_product 256×1024×256 (host)", || {
+            host.block_product(&x, &y)
+        });
+        println!("{}", r1.line());
+        println!("{}", r2.line());
+        let (ops, fb) = be.counts();
+        println!("pjrt ops {ops}, fallbacks {fb}");
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT comparison)");
+    }
+}

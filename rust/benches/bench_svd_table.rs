@@ -1,0 +1,14 @@
+//! Bench: regenerate the §IV-C SVD table.
+use slec::config::Config;
+use slec::figures::{svd_table, RunScale};
+use slec::util::bench::banner;
+
+fn main() {
+    banner("§IV-C — tall-skinny SVD, coded vs speculative");
+    let cfg = Config { results_dir: "results".into(), ..Default::default() };
+    let j = svd_table::run(&cfg, RunScale::Quick).expect("svd");
+    println!(
+        "reduction {:.1}% (paper 26.5%)",
+        j.get("savings_pct").unwrap().as_f64().unwrap()
+    );
+}

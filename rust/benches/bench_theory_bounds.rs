@@ -1,0 +1,25 @@
+//! Bench: regenerate Figs 6 and 9 (theory bounds + Monte-Carlo overlays)
+//! and time the bound evaluations / MC simulation hot paths.
+use slec::codes::{montecarlo, theory};
+use slec::config::Config;
+use slec::figures::{fig6, fig9, RunScale};
+use slec::util::bench::{banner, Bencher};
+
+fn main() {
+    banner("Figs 6 & 9 — theory bounds with Monte-Carlo validation");
+    let cfg = Config { results_dir: "results".into(), ..Default::default() };
+    fig6::run(&cfg, RunScale::Quick).expect("fig6");
+    fig9::run(&cfg, RunScale::Quick).expect("fig9");
+
+    let b = Bencher::default();
+    let r1 = b.bench("thm2_bound(10,10,0.02)", || theory::thm2_bound(10, 10, 0.02));
+    let r2 = b.bench("mc_simulate(10,10,1e4 trials)", || {
+        montecarlo::simulate(10, 10, 0.02, 10_000, 1)
+    });
+    println!("{}", r1.line());
+    println!("{}", r2.line());
+    println!(
+        "MC grid throughput: {:.2} M grids/s",
+        10_000.0 / r2.summary.p50 / 1e6
+    );
+}

@@ -1,0 +1,8 @@
+//! The paper's §IV applications, each built on the coded coordinator:
+//! power iteration (Fig 3), KRR with PCG (Figs 10–11), ALS matrix
+//! completion (Fig 12), and tall-skinny SVD (§IV-C).
+
+pub mod als;
+pub mod krr;
+pub mod power_iteration;
+pub mod svd;

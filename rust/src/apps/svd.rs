@@ -1,0 +1,180 @@
+//! Application: tall-skinny SVD (§IV-C).
+//!
+//! For A (m×p, m ≫ p): (1) the bottleneck `B = AᵀA` runs as a coded
+//! matmul over the column-blocks of A (i.e. row-blocks of Aᵀ); (2) the
+//! p×p eigendecomposition `B = V Σ² Vᵀ` runs locally at the master;
+//! (3) `U = A·(V Σ⁻¹)` runs as a second coded matmul. The paper reports
+//! 270.9 s coded vs 368.75 s speculative (26.5% reduction) at 21%
+//! redundancy.
+
+use crate::codes::Scheme;
+use crate::coordinator::matmul::{run_matmul, Env, MatmulJob};
+use crate::coordinator::metrics::JobReport;
+use crate::linalg::eigen::{svd_from_gram, v_sigma_inv};
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Pcg64;
+
+/// SVD outcome with phase reports from the two coded matmuls.
+pub struct SvdResult {
+    pub u: Matrix,
+    pub sigma: Vec<f64>,
+    pub v: Matrix,
+    pub gram_report: JobReport,
+    pub u_report: JobReport,
+    /// Virtual seconds of the local p×p eigendecomposition (estimated
+    /// from its flop count at master rates — not a distributed phase).
+    pub eigen_secs: f64,
+}
+
+impl SvdResult {
+    pub fn total_secs(&self) -> f64 {
+        self.gram_report.total_secs() + self.eigen_secs + self.u_report.total_secs()
+    }
+}
+
+pub struct SvdConfig {
+    /// Row-blocks for the coded matmuls.
+    pub s_blocks: usize,
+    pub scheme: Scheme,
+    /// Singular values below this (relative to σ₁) are truncated.
+    pub rank_cutoff: f64,
+    /// Paper-scale dims (m, p) for virtual-time profiles.
+    pub virtual_dims: Option<(usize, usize)>,
+}
+
+impl Default for SvdConfig {
+    fn default() -> Self {
+        SvdConfig {
+            s_blocks: 4,
+            scheme: Scheme::LocalProduct { l_a: 2, l_b: 2 },
+            rank_cutoff: 1e-7,
+            virtual_dims: None,
+        }
+    }
+}
+
+/// Compute the tall-skinny SVD `A = U Σ Vᵀ`.
+pub fn tall_skinny_svd(
+    env: &Env,
+    a: &Matrix,
+    cfg: &SvdConfig,
+    rng: &mut Pcg64,
+) -> anyhow::Result<SvdResult> {
+    anyhow::ensure!(a.rows >= a.cols, "tall-skinny needs m ≥ p");
+    let at = a.transpose();
+
+    // Phase 1 (coded): B = AᵀA = Aᵀ·(Aᵀ)ᵀ.
+    let job = MatmulJob {
+        s_a: cfg.s_blocks,
+        s_b: cfg.s_blocks,
+        scheme: cfg.scheme,
+        verify: false,
+        seed: rng.next_u64(),
+        job_id: "svd-gram".into(),
+        virtual_dims: cfg.virtual_dims.map(|(vm, vp)| (vp, vm, vp)),
+        ..Default::default()
+    };
+    let (gram, gram_report) = run_matmul(env, &at, &at, &job)?;
+
+    // Phase 2 (local): eigendecomposition of the p×p gram.
+    let svd = svd_from_gram(&gram)?;
+    let p = a.cols;
+    // Jacobi sweeps ~ O(p³) per sweep; charge the master's flop rate.
+    let eigen_flops = 12.0 * (p as f64).powi(3);
+    let eigen_secs = eigen_flops / env.model.rates.flops_per_s;
+
+    // Phase 3 (coded): U = A · (V Σ⁻¹)  — as A·Bᵀ with B = (VΣ⁻¹)ᵀ.
+    let cutoff = cfg.rank_cutoff * svd.sigma.first().copied().unwrap_or(1.0);
+    let vsi = v_sigma_inv(&svd, cutoff);
+    let vsi_t = vsi.transpose();
+    let job = MatmulJob {
+        // Both sides distribute (the paper's 400-worker U step): A's
+        // row-blocks × (VΣ⁻¹)ᵀ's row-blocks.
+        s_a: cfg.s_blocks,
+        s_b: cfg.s_blocks,
+        scheme: cfg.scheme,
+        verify: false,
+        seed: rng.next_u64(),
+        job_id: "svd-u".into(),
+        virtual_dims: cfg.virtual_dims.map(|(vm, vp)| (vm, vp, vp)),
+        ..Default::default()
+    };
+    let (u, u_report) = run_matmul(env, a, &vsi_t, &job)?;
+
+    Ok(SvdResult {
+        u,
+        sigma: svd.sigma,
+        v: svd.v,
+        gram_report,
+        u_report,
+        eigen_secs,
+    })
+}
+
+/// Reconstruction error ‖A − U Σ Vᵀ‖_F / ‖A‖_F.
+pub fn reconstruction_error(a: &Matrix, res: &SvdResult) -> f64 {
+    let p = a.cols;
+    let mut sig = Matrix::zeros(p, p);
+    for i in 0..p {
+        sig.set(i, i, res.sigma[i] as f32);
+    }
+    let us = crate::linalg::gemm::matmul(&res.u, &sig);
+    let recon = crate::linalg::gemm::matmul(&us, &res.v.transpose());
+    recon.sub(a).fro_norm() / a.fro_norm().max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+
+    #[test]
+    fn svd_reconstructs_tall_matrix() {
+        let env = Env::host();
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::randn(96, 16, &mut rng, 0.0, 1.0);
+        let res = tall_skinny_svd(&env, &a, &SvdConfig::default(), &mut rng).unwrap();
+        let err = reconstruction_error(&a, &res);
+        assert!(err < 1e-2, "reconstruction error {err}");
+        // Singular values descending.
+        for wpair in res.sigma.windows(2) {
+            assert!(wpair[0] >= wpair[1] - 1e-6);
+        }
+        // U has near-orthonormal columns.
+        let utu = gemm::matmul(&res.u.transpose(), &res.u);
+        assert!(utu.rel_err(&Matrix::eye(16)) < 5e-2, "UᵀU err {}", utu.rel_err(&Matrix::eye(16)));
+        assert!(res.total_secs() > 0.0);
+        assert!(res.eigen_secs > 0.0);
+    }
+
+    #[test]
+    fn svd_speculative_same_result() {
+        let env = Env::host();
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::randn(64, 8, &mut rng, 0.0, 1.0);
+        let mut r1 = Pcg64::new(3);
+        let mut r2 = Pcg64::new(4);
+        let coded = tall_skinny_svd(&env, &a, &SvdConfig::default(), &mut r1).unwrap();
+        let spec = tall_skinny_svd(
+            &env,
+            &a,
+            &SvdConfig {
+                scheme: Scheme::Speculative { wait_frac: 0.79 },
+                ..Default::default()
+            },
+            &mut r2,
+        )
+        .unwrap();
+        for (c, s) in coded.sigma.iter().zip(&spec.sigma) {
+            assert!((c - s).abs() < 1e-2 * (1.0 + s), "{c} vs {s}");
+        }
+    }
+
+    #[test]
+    fn rejects_wide_matrix() {
+        let env = Env::host();
+        let mut rng = Pcg64::new(5);
+        let a = Matrix::zeros(8, 16);
+        assert!(tall_skinny_svd(&env, &a, &SvdConfig::default(), &mut rng).is_err());
+    }
+}

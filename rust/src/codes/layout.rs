@@ -1,0 +1,158 @@
+//! Coded row-block layouts: where systematic blocks and parity blocks live
+//! in an encoded matrix, for all schemes.
+//!
+//! The paper's local encoding (§II-B) inserts one parity row-block after
+//! every `L` systematic row-blocks, so an input with `s` row-blocks
+//! (s divisible by L) becomes `s + s/L` coded row-blocks, grouped into
+//! `s/L` groups of `L+1`.
+
+/// Identity of a coded row-block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodedBlock {
+    /// Systematic block carrying original row-block `orig`.
+    Systematic { orig: usize },
+    /// Parity block of local `group` (sum of that group's L systematic
+    /// blocks).
+    Parity { group: usize },
+}
+
+/// Local-parity layout with parameter `l`: groups of `l` systematic blocks
+/// each followed by one parity block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LocalLayout {
+    /// Number of systematic blocks (original row-blocks).
+    pub systematic: usize,
+    /// Group length L.
+    pub l: usize,
+}
+
+impl LocalLayout {
+    pub fn new(systematic: usize, l: usize) -> LocalLayout {
+        assert!(l > 0, "L must be positive");
+        assert!(systematic > 0, "need at least one block");
+        assert_eq!(
+            systematic % l,
+            0,
+            "systematic blocks ({systematic}) must be divisible by L ({l})"
+        );
+        LocalLayout { systematic, l }
+    }
+
+    /// Number of groups (= number of parity blocks).
+    pub fn groups(&self) -> usize {
+        self.systematic / self.l
+    }
+
+    /// Total coded blocks.
+    pub fn coded_len(&self) -> usize {
+        self.systematic + self.groups()
+    }
+
+    /// Identify the coded block at coded index `k` (parities interleaved:
+    /// [S_0..S_{L-1}, P_0, S_L..S_{2L-1}, P_1, ...]).
+    pub fn block_at(&self, k: usize) -> CodedBlock {
+        assert!(k < self.coded_len());
+        let group = k / (self.l + 1);
+        let within = k % (self.l + 1);
+        if within < self.l {
+            CodedBlock::Systematic {
+                orig: group * self.l + within,
+            }
+        } else {
+            CodedBlock::Parity { group }
+        }
+    }
+
+    /// Coded index of original systematic block `orig`.
+    pub fn systematic_pos(&self, orig: usize) -> usize {
+        assert!(orig < self.systematic);
+        let group = orig / self.l;
+        group * (self.l + 1) + (orig % self.l)
+    }
+
+    /// Coded index of group `g`'s parity block.
+    pub fn parity_pos(&self, g: usize) -> usize {
+        assert!(g < self.groups());
+        g * (self.l + 1) + self.l
+    }
+
+    /// Original systematic blocks belonging to group `g`.
+    pub fn group_members(&self, g: usize) -> std::ops::Range<usize> {
+        assert!(g < self.groups());
+        g * self.l..(g + 1) * self.l
+    }
+
+    /// Fraction of extra computation the code adds along this axis:
+    /// `coded_len / systematic − 1` = 1/L.
+    pub fn redundancy(&self) -> f64 {
+        self.coded_len() as f64 / self.systematic as f64 - 1.0
+    }
+}
+
+/// Redundancy of the full 2-D local product code:
+/// `(L_A+1)(L_B+1)/(L_A·L_B) − 1` (e.g. 21% for L_A=L_B=10, §II-B).
+pub fn product_redundancy(la: usize, lb: usize) -> f64 {
+    ((la + 1) * (lb + 1)) as f64 / (la * lb) as f64 - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_interleaving() {
+        let l = LocalLayout::new(4, 2);
+        assert_eq!(l.groups(), 2);
+        assert_eq!(l.coded_len(), 6);
+        use CodedBlock::*;
+        let blocks: Vec<CodedBlock> = (0..6).map(|k| l.block_at(k)).collect();
+        assert_eq!(
+            blocks,
+            vec![
+                Systematic { orig: 0 },
+                Systematic { orig: 1 },
+                Parity { group: 0 },
+                Systematic { orig: 2 },
+                Systematic { orig: 3 },
+                Parity { group: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn positions_invert_block_at() {
+        let l = LocalLayout::new(12, 3);
+        for orig in 0..12 {
+            let k = l.systematic_pos(orig);
+            assert_eq!(l.block_at(k), CodedBlock::Systematic { orig });
+        }
+        for g in 0..4 {
+            let k = l.parity_pos(g);
+            assert_eq!(l.block_at(k), CodedBlock::Parity { group: g });
+        }
+    }
+
+    #[test]
+    fn group_members_partition() {
+        let l = LocalLayout::new(9, 3);
+        let all: Vec<usize> = (0..3).flat_map(|g| l.group_members(g)).collect();
+        assert_eq!(all, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn redundancy_values() {
+        // L=1: 100% along an axis; 2-D L_A=L_B=1 → 300% total blocks ( (2·2)/(1·1) − 1 ).
+        assert!((LocalLayout::new(4, 1).redundancy() - 1.0).abs() < 1e-12);
+        // L=10 axis redundancy 10%; 2-D 21% (paper).
+        assert!((LocalLayout::new(10, 10).redundancy() - 0.1).abs() < 1e-12);
+        assert!((product_redundancy(10, 10) - 0.21).abs() < 1e-12);
+        // L_A=L_B=5 → 44% (paper §II-B).
+        assert!((product_redundancy(5, 5) - 0.44).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn rejects_non_divisible() {
+        LocalLayout::new(10, 3);
+    }
+}

@@ -1,0 +1,521 @@
+//! Coded matrix-vector multiplication (§II-A), the primitive behind power
+//! iteration and KRR-PCG.
+//!
+//! Follows the [17]-style construction the paper uses for its matvec
+//! experiments: the row-blocks of A carry local parities (the same
+//! [`LocalLayout`] as the matmul scheme's A side), so
+//! `y_coded = A_coded · x` satisfies, per group, `y_parity = Σ y_i`.
+//! Decoding over *vector* blocks is inexpensive — the reason §II-A notes
+//! existing matvec schemes port directly to serverless.
+
+use crate::codes::layout::LocalLayout;
+use crate::linalg::matrix::Matrix;
+
+/// Coded matvec scheme over `s` row-blocks with group size `l`.
+#[derive(Debug, Clone, Copy)]
+pub struct CodedMatvec {
+    pub layout: LocalLayout,
+}
+
+/// Decode outcome for one matvec.
+#[derive(Debug, Clone)]
+pub struct MatvecDecode {
+    /// Recovered systematic result blocks in original order.
+    pub blocks: Vec<Vec<f32>>,
+    /// Vector blocks read during recovery.
+    pub blocks_read: usize,
+    /// Stragglers recovered.
+    pub recovered: usize,
+}
+
+impl CodedMatvec {
+    pub fn new(s: usize, l: usize) -> CodedMatvec {
+        CodedMatvec {
+            layout: LocalLayout::new(s, l),
+        }
+    }
+
+    /// Encode the row-blocks of A (done once; amortized over iterations).
+    pub fn encode(&self, blocks: &[Matrix]) -> Vec<Matrix> {
+        crate::codes::local_product::LocalProductCode::encode_side(self.layout, blocks)
+    }
+
+    /// Redundant computation fraction (1/L).
+    pub fn redundancy(&self) -> f64 {
+        self.layout.redundancy()
+    }
+
+    /// Decode coded result blocks (`None` = straggled worker). At most one
+    /// straggler per group is recoverable; a second one in the same group
+    /// makes that group undecodable (returns Err with the group index so
+    /// the coordinator can recompute).
+    pub fn decode(&self, coded: &[Option<Vec<f32>>]) -> Result<MatvecDecode, Vec<usize>> {
+        assert_eq!(coded.len(), self.layout.coded_len());
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; self.layout.systematic];
+        let mut blocks_read = 0usize;
+        let mut recovered = 0usize;
+        let mut stuck_groups = Vec::new();
+
+        for g in 0..self.layout.groups() {
+            let member_pos: Vec<usize> = self
+                .layout
+                .group_members(g)
+                .map(|orig| self.layout.systematic_pos(orig))
+                .collect();
+            let parity_pos = self.layout.parity_pos(g);
+            let missing_members: Vec<usize> = member_pos
+                .iter()
+                .enumerate()
+                .filter(|(_, &pos)| coded[pos].is_none())
+                .map(|(idx, _)| idx)
+                .collect();
+
+            match missing_members.len() {
+                0 => {
+                    // All systematic results arrived; parity unused.
+                    for (idx, &pos) in member_pos.iter().enumerate() {
+                        out[g * self.layout.l + idx] = coded[pos].clone();
+                    }
+                }
+                1 if coded[parity_pos].is_some() => {
+                    // Recover the missing block: y_miss = parity − Σ others.
+                    let miss_idx = missing_members[0];
+                    let mut rec = coded[parity_pos].clone().unwrap();
+                    blocks_read += 1; // the parity block
+                    for (idx, &pos) in member_pos.iter().enumerate() {
+                        if idx == miss_idx {
+                            continue;
+                        }
+                        let y = coded[pos].as_ref().unwrap();
+                        blocks_read += 1;
+                        for (r, &v) in rec.iter_mut().zip(y) {
+                            *r -= v;
+                        }
+                    }
+                    for (idx, &pos) in member_pos.iter().enumerate() {
+                        out[g * self.layout.l + idx] = if idx == miss_idx {
+                            Some(rec.clone())
+                        } else {
+                            coded[pos].clone()
+                        };
+                    }
+                    recovered += 1;
+                }
+                _ => stuck_groups.push(g),
+            }
+        }
+
+        if !stuck_groups.is_empty() {
+            return Err(stuck_groups);
+        }
+        Ok(MatvecDecode {
+            blocks: out.into_iter().map(Option::unwrap).collect(),
+            blocks_read,
+            recovered,
+        })
+    }
+
+    /// Smallest number of arrived coded blocks that *guarantees*
+    /// decodability in every group: all but one block per group.
+    pub fn worst_case_threshold(&self) -> usize {
+        self.layout.coded_len() - self.layout.groups()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2-D product-coded matvec — the scheme the paper actually deploys for
+// power iteration and KRR ("a 2D product code similar to [17]", §IV-A):
+// the `s = grids·l²` systematic row-blocks are arranged into `grids`
+// local (l+1)×(l+1) grids with one parity per row, per column, and a
+// corner parity. Each grid tolerates ANY 3 stragglers via peeling (and
+// most 4+ patterns), so a single slow group no longer stalls the
+// iteration the way the 1-D scheme above does.
+// ---------------------------------------------------------------------------
+
+use crate::codes::peeling::{plan_peel, Axis, PeelPlan};
+
+/// 2-D product-coded matvec layout.
+#[derive(Debug, Clone, Copy)]
+pub struct CodedMatvec2D {
+    /// Side length of each systematic sub-grid.
+    pub l: usize,
+    /// Number of local grids.
+    pub grids: usize,
+}
+
+impl CodedMatvec2D {
+    /// `s` systematic blocks must equal `grids · l²`.
+    pub fn new(s: usize, l: usize) -> anyhow::Result<CodedMatvec2D> {
+        anyhow::ensure!(l > 0, "l must be positive");
+        anyhow::ensure!(
+            s % (l * l) == 0,
+            "systematic blocks ({s}) must be a multiple of l² ({})",
+            l * l
+        );
+        Ok(CodedMatvec2D { l, grids: s / (l * l) })
+    }
+
+    pub fn systematic(&self) -> usize {
+        self.grids * self.l * self.l
+    }
+
+    /// Coded blocks: grids × (l+1)².
+    pub fn coded_len(&self) -> usize {
+        self.grids * (self.l + 1) * (self.l + 1)
+    }
+
+    /// Redundancy (21% for l = 10).
+    pub fn redundancy(&self) -> f64 {
+        self.coded_len() as f64 / self.systematic() as f64 - 1.0
+    }
+
+    /// Identify coded position `k` → (grid, r, c) in its (l+1)×(l+1) grid.
+    pub fn cell(&self, k: usize) -> (usize, usize, usize) {
+        let per = (self.l + 1) * (self.l + 1);
+        let g = k / per;
+        let w = k % per;
+        (g, w / (self.l + 1), w % (self.l + 1))
+    }
+
+    /// Coded position of (grid, r, c).
+    pub fn pos(&self, g: usize, r: usize, c: usize) -> usize {
+        g * (self.l + 1) * (self.l + 1) + r * (self.l + 1) + c
+    }
+
+    /// Original systematic index of a systematic cell.
+    pub fn orig(&self, g: usize, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.l && c < self.l);
+        g * self.l * self.l + r * self.l + c
+    }
+
+    /// Encode the systematic row-blocks (any `Clone + AddAssign`-style
+    /// payload via closures): returns coded blocks in coded order.
+    pub fn encode(&self, blocks: &[Matrix], sum: impl Fn(&[&Matrix]) -> Matrix) -> Vec<Matrix> {
+        assert_eq!(blocks.len(), self.systematic());
+        let l = self.l;
+        let mut out = Vec::with_capacity(self.coded_len());
+        for g in 0..self.grids {
+            // Row-major over the (l+1)×(l+1) grid.
+            for r in 0..=l {
+                for c in 0..=l {
+                    let cellv = if r < l && c < l {
+                        blocks[self.orig(g, r, c)].clone()
+                    } else if r < l {
+                        // Row parity: Σ_c blocks[g, r, ·]
+                        let members: Vec<&Matrix> =
+                            (0..l).map(|cc| &blocks[self.orig(g, r, cc)]).collect();
+                        sum(&members)
+                    } else if c < l {
+                        // Column parity: Σ_r blocks[g, ·, c]
+                        let members: Vec<&Matrix> =
+                            (0..l).map(|rr| &blocks[self.orig(g, rr, c)]).collect();
+                        sum(&members)
+                    } else {
+                        // Corner: Σ over the whole grid.
+                        let members: Vec<&Matrix> = (0..l * l)
+                            .map(|i| &blocks[g * l * l + i])
+                            .collect();
+                        sum(&members)
+                    };
+                    out.push(cellv);
+                }
+            }
+        }
+        out
+    }
+
+    /// Peel-decodability of grid `g` under an arrival mask over coded
+    /// positions.
+    pub fn grid_decodable(&self, g: usize, arrived: &[bool]) -> bool {
+        let side = self.l + 1;
+        let mut present = Vec::with_capacity(side * side);
+        for r in 0..side {
+            for c in 0..side {
+                present.push(arrived[self.pos(g, r, c)]);
+            }
+        }
+        plan_peel(side, side, &present).decodable()
+    }
+
+    /// Decode coded vector-block results (None = straggler). Returns the
+    /// systematic result blocks plus total vector-blocks read; undecodable
+    /// grid indices are returned as Err for the coordinator's recompute
+    /// fallback.
+    pub fn decode(
+        &self,
+        coded: &[Option<Vec<f32>>],
+    ) -> Result<(Vec<Vec<f32>>, usize, Vec<PeelPlan>), Vec<usize>> {
+        assert_eq!(coded.len(), self.coded_len());
+        let side = self.l + 1;
+        let mut cells: Vec<Option<Vec<f32>>> = coded.to_vec();
+        let mut plans = Vec::with_capacity(self.grids);
+        let mut stuck = Vec::new();
+        for g in 0..self.grids {
+            let present: Vec<bool> = (0..side * side)
+                .map(|w| cells[g * side * side + w].is_some())
+                .collect();
+            let plan = plan_peel(side, side, &present);
+            if !plan.decodable() {
+                stuck.push(g);
+            }
+            // Execute the recoveries we can (vector arithmetic).
+            for step in &plan.steps {
+                let (r, c) = step.cell;
+                let line: Vec<usize> = match step.axis {
+                    Axis::Row => (0..side).map(|cc| self.pos(g, r, cc)).collect(),
+                    Axis::Col => (0..side).map(|rr| self.pos(g, rr, c)).collect(),
+                };
+                let target = self.pos(g, r, c);
+                let parity_idx = *line.last().unwrap();
+                let value = if target == parity_idx {
+                    let mut acc: Option<Vec<f32>> = None;
+                    for &i in line.iter().take(line.len() - 1) {
+                        let v = cells[i].as_ref().expect("plan order");
+                        match &mut acc {
+                            None => acc = Some(v.clone()),
+                            Some(a) => {
+                                for (x, y) in a.iter_mut().zip(v) {
+                                    *x += y;
+                                }
+                            }
+                        }
+                    }
+                    acc.unwrap()
+                } else {
+                    let mut acc = cells[parity_idx].as_ref().expect("plan order").clone();
+                    for &i in line.iter().take(line.len() - 1) {
+                        if i == target {
+                            continue;
+                        }
+                        let v = cells[i].as_ref().expect("plan order");
+                        for (x, y) in acc.iter_mut().zip(v) {
+                            *x -= y;
+                        }
+                    }
+                    acc
+                };
+                cells[target] = Some(value);
+            }
+            plans.push(plan);
+        }
+        if !stuck.is_empty() {
+            return Err(stuck);
+        }
+        let total_reads = plans.iter().map(|p| p.total_reads).sum();
+        let mut out = Vec::with_capacity(self.systematic());
+        for g in 0..self.grids {
+            for r in 0..self.l {
+                for c in 0..self.l {
+                    out.push(cells[self.pos(g, r, c)].clone().expect("decoded"));
+                }
+            }
+        }
+        Ok((out, total_reads, plans))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matvec;
+    use crate::linalg::Partition;
+    use crate::util::prop::proptest;
+    use crate::util::rng::Pcg64;
+
+    fn setup(s: usize, l: usize, rows: usize, cols: usize, seed: u64) -> (CodedMatvec, Matrix, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::randn(rows, cols, &mut rng, 0.0, 1.0);
+        let x: Vec<f32> = (0..cols).map(|i| ((i * 7 + 3) as f32).sin()).collect();
+        (CodedMatvec::new(s, l), a, x)
+    }
+
+    fn coded_results(cm: &CodedMatvec, a: &Matrix, x: &[f32], s: usize) -> Vec<Option<Vec<f32>>> {
+        let p = Partition::new(a.rows, a.cols, s);
+        let blocks = p.split(a);
+        let coded = cm.encode(&blocks);
+        coded.iter().map(|blk| Some(matvec(blk, x))).collect()
+    }
+
+    #[test]
+    fn no_stragglers_roundtrip() {
+        let (cm, a, x) = setup(6, 3, 24, 10, 1);
+        let results = coded_results(&cm, &a, &x, 6);
+        let dec = cm.decode(&results).unwrap();
+        assert_eq!(dec.recovered, 0);
+        assert_eq!(dec.blocks_read, 0);
+        let y: Vec<f32> = dec.blocks.concat();
+        let truth = matvec(&a, &x);
+        for (a, b) in y.iter().zip(&truth) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn one_straggler_per_group_recovers() {
+        let (cm, a, x) = setup(6, 3, 24, 10, 2);
+        let mut results = coded_results(&cm, &a, &x, 6);
+        // Kill one systematic block in group 0 and the parity of group 1.
+        results[cm.layout.systematic_pos(1)] = None;
+        results[cm.layout.parity_pos(1)] = None; // parity loss: nothing to recover
+        let dec = cm.decode(&results).unwrap();
+        assert_eq!(dec.recovered, 1);
+        assert_eq!(dec.blocks_read, 3); // parity + 2 surviving members
+        let y: Vec<f32> = dec.blocks.concat();
+        let truth = matvec(&a, &x);
+        for (a, b) in y.iter().zip(&truth) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn two_stragglers_same_group_stuck() {
+        let (cm, a, x) = setup(4, 2, 16, 8, 3);
+        let mut results = coded_results(&cm, &a, &x, 4);
+        results[cm.layout.systematic_pos(0)] = None;
+        results[cm.layout.systematic_pos(1)] = None;
+        let err = cm.decode(&results).unwrap_err();
+        assert_eq!(err, vec![0]);
+    }
+
+    #[test]
+    fn threshold_guarantees_decode() {
+        let cm = CodedMatvec::new(8, 4);
+        assert_eq!(cm.worst_case_threshold(), 8);
+        assert!((cm.redundancy() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_property_random_single_losses() {
+        proptest(60, 0xFEED, |g| {
+            let l = g.usize_in(2, 5);
+            let groups = g.usize_in(1, 4);
+            let s = l * groups;
+            let rows_per = g.usize_in(2, 4);
+            let cols = g.usize_in(3, 8);
+            let (cm, a, x) = setup(s, l, s * rows_per, cols, g.case as u64 + 50);
+            let mut results = coded_results(&cm, &a, &x, s);
+            // Drop at most one coded block per group.
+            for grp in 0..groups {
+                if g.bool() {
+                    let within = g.usize_in(0, l); // l ⇒ parity
+                    let pos = grp * (l + 1) + within;
+                    results[pos] = None;
+                }
+            }
+            let dec = cm.decode(&results).expect("≤1 loss per group decodes");
+            let y: Vec<f32> = dec.blocks.concat();
+            let truth = matvec(&a, &x);
+            for (got, want) in y.iter().zip(&truth) {
+                assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests_2d {
+    use super::*;
+    use crate::linalg::gemm::matvec;
+    use crate::linalg::matrix::Matrix;
+    use crate::linalg::Partition;
+    use crate::util::prop::proptest;
+    use crate::util::rng::Pcg64;
+
+    fn host_sum(blocks: &[&Matrix]) -> Matrix {
+        let mut acc = blocks[0].clone();
+        for b in &blocks[1..] {
+            acc.add_assign(b);
+        }
+        acc
+    }
+
+    fn setup(s: usize, l: usize, rows: usize, cols: usize, seed: u64) -> (CodedMatvec2D, Matrix, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::randn(rows, cols, &mut rng, 0.0, 1.0);
+        let x: Vec<f32> = (0..cols).map(|i| ((i * 3 + 1) as f32).cos()).collect();
+        (CodedMatvec2D::new(s, l).unwrap(), a, x)
+    }
+
+    fn coded_results(code: &CodedMatvec2D, a: &Matrix, x: &[f32]) -> Vec<Option<Vec<f32>>> {
+        let p = Partition::new(a.rows, a.cols, code.systematic());
+        let blocks = p.split(a);
+        let coded = code.encode(&blocks, host_sum);
+        coded.iter().map(|blk| Some(matvec(blk, x))).collect()
+    }
+
+    #[test]
+    fn layout_counts() {
+        let code = CodedMatvec2D::new(500, 10).unwrap();
+        assert_eq!(code.grids, 5);
+        assert_eq!(code.coded_len(), 5 * 121);
+        assert!((code.redundancy() - 0.21).abs() < 1e-12);
+        assert!(CodedMatvec2D::new(500, 7).is_err());
+    }
+
+    #[test]
+    fn no_stragglers_roundtrip() {
+        let (code, a, x) = setup(8, 2, 32, 10, 1);
+        let results = coded_results(&code, &a, &x);
+        let (blocks, reads, _) = code.decode(&results).unwrap();
+        assert_eq!(reads, 0);
+        let y: Vec<f32> = blocks.concat();
+        let truth = matvec(&a, &x);
+        for (g, w) in y.iter().zip(&truth) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn any_three_stragglers_per_grid_recover() {
+        let (code, a, x) = setup(8, 2, 32, 10, 2);
+        let truth = matvec(&a, &x);
+        proptest(100, 0x2D, |g| {
+            let mut results = coded_results(&code, &a, &x);
+            for grid in 0..code.grids {
+                let n_kills = g.usize_in(0, 3);
+                let kills = g.subset(9, n_kills);
+                for w in kills {
+                    let (r, c) = (w / 3, w % 3);
+                    results[code.pos(grid, r, c)] = None;
+                }
+            }
+            let (blocks, _, _) = code.decode(&results).expect("≤3 per grid decodes");
+            let y: Vec<f32> = blocks.concat();
+            for (got, want) in y.iter().zip(&truth) {
+                assert!((got - want).abs() < 1e-2);
+            }
+        });
+    }
+
+    #[test]
+    fn square_pattern_reports_stuck_grid() {
+        let (code, a, x) = setup(8, 2, 32, 10, 3);
+        let mut results = coded_results(&code, &a, &x);
+        // 4-square in grid 1.
+        for &(r, c) in &[(0usize, 0usize), (0, 1), (1, 0), (1, 1)] {
+            results[code.pos(1, r, c)] = None;
+        }
+        let err = code.decode(&results).unwrap_err();
+        assert_eq!(err, vec![1]);
+    }
+
+    #[test]
+    fn parity_structure_is_product_code() {
+        // Row/col/corner parities satisfy the product-code constraints.
+        let (code, a, x) = setup(4, 2, 16, 6, 4);
+        let _ = x;
+        let p = Partition::new(16, 6, 4);
+        let blocks = p.split(&a);
+        let coded = code.encode(&blocks, host_sum);
+        let l = 2;
+        // Row parity of row 0 = b(0,0)+b(0,1).
+        let want = blocks[0].add(&blocks[1]);
+        assert!(coded[code.pos(0, 0, l)].rel_err(&want) < 1e-6);
+        // Corner = sum of all four.
+        let corner = blocks[0].add(&blocks[1]).add(&blocks[2]).add(&blocks[3]);
+        assert!(coded[code.pos(0, l, l)].rel_err(&corner) < 1e-6);
+        // Corner also equals sum of row parities (consistency).
+        let via_rows = coded[code.pos(0, 0, l)].add(&coded[code.pos(0, 1, l)]);
+        assert!(coded[code.pos(0, l, l)].rel_err(&via_rows) < 1e-6);
+    }
+}

@@ -1,0 +1,112 @@
+//! Coding-theoretic core: the paper's local product code, the peeling
+//! decoder, baseline codes (product [16], polynomial [18]), coded matvec
+//! ([17]-style), the §III theory bounds, and Monte-Carlo validation.
+
+pub mod layout;
+pub mod local_product;
+pub mod matvec;
+pub mod montecarlo;
+pub mod peeling;
+pub mod polynomial;
+pub mod product;
+pub mod theory;
+
+/// Straggler-mitigation strategy selector used by the coordinator and the
+/// figure harnesses (Fig 5's four contenders).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// No redundancy; wait for every worker.
+    Uncoded,
+    /// Speculative execution: wait until `wait_frac` of tasks finish, then
+    /// relaunch the stragglers (first finisher wins).
+    Speculative { wait_frac: f64 },
+    /// The paper's local product code with group sizes (l_a, l_b).
+    LocalProduct { l_a: usize, l_b: usize },
+    /// Product code with global MDS parities (t_a, t_b per axis).
+    Product { t_a: usize, t_b: usize },
+    /// Polynomial (MDS) code with the given redundancy over threshold K.
+    Polynomial { redundancy: f64 },
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Uncoded => "uncoded",
+            Scheme::Speculative { .. } => "speculative",
+            Scheme::LocalProduct { .. } => "local-product",
+            Scheme::Product { .. } => "product",
+            Scheme::Polynomial { .. } => "polynomial",
+        }
+    }
+
+    /// Parse from a CLI string like `local-product`, `speculative:0.79`,
+    /// `local-product:10x10`, `product:1x1`, `polynomial:0.21`.
+    pub fn parse(s: &str) -> anyhow::Result<Scheme> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        Ok(match head {
+            "uncoded" => Scheme::Uncoded,
+            "speculative" => Scheme::Speculative {
+                wait_frac: arg.map(|a| a.parse()).transpose()?.unwrap_or(0.79),
+            },
+            "local-product" => {
+                let (la, lb) = parse_pair(arg.unwrap_or("10x10"))?;
+                Scheme::LocalProduct { l_a: la, l_b: lb }
+            }
+            "product" => {
+                let (ta, tb) = parse_pair(arg.unwrap_or("1x1"))?;
+                Scheme::Product { t_a: ta, t_b: tb }
+            }
+            "polynomial" => Scheme::Polynomial {
+                redundancy: arg.map(|a| a.parse()).transpose()?.unwrap_or(0.21),
+            },
+            other => anyhow::bail!("unknown scheme '{other}'"),
+        })
+    }
+}
+
+fn parse_pair(s: &str) -> anyhow::Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("expected AxB, got '{s}'"))?;
+    Ok((a.parse()?, b.parse()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(Scheme::parse("uncoded").unwrap(), Scheme::Uncoded);
+        assert_eq!(
+            Scheme::parse("speculative:0.9").unwrap(),
+            Scheme::Speculative { wait_frac: 0.9 }
+        );
+        assert_eq!(
+            Scheme::parse("local-product:5x8").unwrap(),
+            Scheme::LocalProduct { l_a: 5, l_b: 8 }
+        );
+        assert_eq!(
+            Scheme::parse("product:2x3").unwrap(),
+            Scheme::Product { t_a: 2, t_b: 3 }
+        );
+        assert!(matches!(
+            Scheme::parse("polynomial").unwrap(),
+            Scheme::Polynomial { .. }
+        ));
+        assert!(Scheme::parse("bogus").is_err());
+        assert!(Scheme::parse("local-product:5").is_err());
+    }
+
+    #[test]
+    fn scheme_names() {
+        assert_eq!(Scheme::parse("local-product").unwrap().name(), "local-product");
+        assert_eq!(
+            Scheme::Speculative { wait_frac: 0.79 }.name(),
+            "speculative"
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Monte-Carlo validation of Theorems 1 and 2: sample i.i.d. straggler
+//! patterns on an `(L_A+1)×(L_B+1)` grid, run the actual peeling decoder,
+//! and compare the empirical statistics against the closed-form bounds.
+//! Regenerates the empirical overlays for Figs. 6 and 9.
+
+use crate::codes::peeling::plan_peel;
+use crate::util::rng::Pcg64;
+
+/// Result of a Monte-Carlo study of one (L_A, L_B, p) design point.
+#[derive(Debug, Clone)]
+pub struct McResult {
+    pub l_a: usize,
+    pub l_b: usize,
+    pub p: f64,
+    pub trials: usize,
+    /// Empirical Pr(grid not decodable by peeling alone).
+    pub pr_undecodable: f64,
+    /// Empirical distribution of R (total reads, Theorem-1 accounting):
+    /// sorted sample.
+    pub reads: Vec<usize>,
+    /// Mean stragglers per grid observed.
+    pub mean_stragglers: f64,
+}
+
+impl McResult {
+    /// Empirical Pr(R ≥ x).
+    pub fn pr_reads_ge(&self, x: usize) -> f64 {
+        let cnt = self.reads.iter().filter(|&&r| r >= x).count();
+        cnt as f64 / self.reads.len() as f64
+    }
+
+    /// Empirical mean of R.
+    pub fn mean_reads(&self) -> f64 {
+        self.reads.iter().sum::<usize>() as f64 / self.reads.len() as f64
+    }
+}
+
+/// Run `trials` independent grids with per-block straggle probability `p`.
+pub fn simulate(l_a: usize, l_b: usize, p: f64, trials: usize, seed: u64) -> McResult {
+    let rows = l_a + 1;
+    let cols = l_b + 1;
+    let n = rows * cols;
+    let mut rng = Pcg64::new(seed);
+    let mut undecodable = 0usize;
+    let mut reads = Vec::with_capacity(trials);
+    let mut straggler_total = 0usize;
+    let mut present = vec![true; n];
+    for _ in 0..trials {
+        let mut s = 0usize;
+        for cell in present.iter_mut() {
+            let straggle = rng.bernoulli(p);
+            *cell = !straggle;
+            s += straggle as usize;
+        }
+        straggler_total += s;
+        let plan = plan_peel(rows, cols, &present);
+        if !plan.decodable() {
+            undecodable += 1;
+        }
+        reads.push(plan.total_reads);
+    }
+    reads.sort_unstable();
+    McResult {
+        l_a,
+        l_b,
+        p,
+        trials,
+        pr_undecodable: undecodable as f64 / trials as f64,
+        reads,
+        mean_stragglers: straggler_total as f64 / trials as f64,
+    }
+}
+
+/// Sweep L = L_A = L_B over a range (Fig 9's x-axis), returning
+/// (L, empirical Pr(D̄), Theorem-2 bound) triples. L starts at the smallest
+/// value satisfying Theorem 2's n ≥ 8 requirement.
+pub fn sweep_l(p: f64, ls: &[usize], trials: usize, seed: u64) -> Vec<(usize, f64, f64)> {
+    ls.iter()
+        .map(|&l| {
+            let mc = simulate(l, l, p, trials, seed.wrapping_add(l as u64));
+            let bound = if (l + 1) * (l + 1) >= 8 {
+                crate::codes::theory::thm2_bound(l, l, p)
+            } else {
+                f64::NAN
+            };
+            (l, mc.pr_undecodable, bound)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::theory;
+
+    #[test]
+    fn empirical_undecodability_below_thm2_bound() {
+        // The bound must dominate the empirical rate (up to MC noise).
+        for &(la, lb) in &[(3usize, 3usize), (5, 5), (10, 10)] {
+            let p = 0.05; // higher p than the paper's 0.02 to get signal
+            let mc = simulate(la, lb, p, 20_000, 42);
+            let bound = theory::thm2_bound(la, lb, p);
+            // Allow 3-sigma MC slack.
+            let sigma = (bound * (1.0 - bound) / mc.trials as f64).sqrt();
+            assert!(
+                mc.pr_undecodable <= bound + 3.0 * sigma.max(1e-4),
+                "L=({la},{lb}): empirical {} > bound {bound}",
+                mc.pr_undecodable
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_reads_below_thm1_bound() {
+        let (l, p) = (6usize, 0.05);
+        let n = (l + 1) * (l + 1);
+        let mc = simulate(l, l, p, 20_000, 7);
+        for x in [10usize, 20, 30, 40] {
+            let emp = mc.pr_reads_ge(x);
+            let bound = theory::thm1_bound(x as f64, n, p, l);
+            let sigma = (bound.max(1e-6) / mc.trials as f64).sqrt();
+            assert!(
+                emp <= bound + 5.0 * sigma.max(1e-4),
+                "x={x}: empirical {emp} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_reads_close_to_npl_scale() {
+        // E[R] ≤ npL with equality when every straggler costs exactly L.
+        // Our decoder uses the cheaper axis when possible, so the mean
+        // should be positive but below npL.
+        let (l, p) = (10usize, 0.02);
+        let n = (l + 1) * (l + 1);
+        let mc = simulate(l, l, p, 30_000, 11);
+        let npl = theory::expected_reads(n, p, l);
+        let mean = mc.mean_reads();
+        assert!(mean > 0.2 * npl, "mean reads {mean} vs npL {npl}");
+        assert!(mean <= npl * 1.05, "mean reads {mean} vs npL {npl}");
+    }
+
+    #[test]
+    fn mean_stragglers_matches_np() {
+        let (l, p) = (9usize, 0.03);
+        let n = (l + 1) * (l + 1);
+        let mc = simulate(l, l, p, 30_000, 13);
+        let expect = n as f64 * p;
+        assert!(
+            (mc.mean_stragglers - expect).abs() < 0.1 * expect,
+            "{} vs {expect}",
+            mc.mean_stragglers
+        );
+    }
+
+    #[test]
+    fn sweep_produces_bounds() {
+        let rows = sweep_l(0.02, &[2, 5, 10], 2_000, 3);
+        assert_eq!(rows.len(), 3);
+        for (l, emp, bound) in rows {
+            assert!(emp >= 0.0 && emp <= 1.0);
+            assert!(bound.is_finite(), "L={l}");
+        }
+    }
+}

@@ -1,0 +1,404 @@
+//! Peeling decoder over a single local grid.
+//!
+//! A *local grid* is the `(L_A+1) × (L_B+1)` block of `C_coded` a decoding
+//! worker operates on (§II-B): rows `0..L_A` and columns `0..L_B` are
+//! systematic, the last row and last column are parities, and every row and
+//! every column satisfies "parity cell = Σ systematic cells" (a product
+//! code with one parity per axis, minimum distance 4).
+//!
+//! The decoder here produces a *recovery plan* — the exact order of row/
+//! column peels and the number of block reads each costs — which the
+//! coordinator's decode phase then executes numerically, and the
+//! Monte-Carlo validator uses to check Theorems 1 and 2.
+
+/// Which constraint is used to recover a cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// Recover via the cell's row: read the other `L_B` cells in the row.
+    Row,
+    /// Recover via the cell's column: read the other `L_A` cells.
+    Col,
+}
+
+/// One step of the recovery plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Recovery {
+    /// Grid coordinates (r, c) of the recovered cell.
+    pub cell: (usize, usize),
+    pub axis: Axis,
+    /// Blocks read to execute this step under the paper's accounting
+    /// (every other cell in the chosen row/column, no caching).
+    pub reads: usize,
+}
+
+/// Outcome of planning the peeling decode for a grid.
+#[derive(Debug, Clone)]
+pub struct PeelPlan {
+    /// Grid dims: (L_A + 1) rows × (L_B + 1) cols.
+    pub rows: usize,
+    pub cols: usize,
+    /// Recovery steps in execution order.
+    pub steps: Vec<Recovery>,
+    /// Cells that cannot be recovered (an undecodable set), empty on
+    /// success.
+    pub undecodable: Vec<(usize, usize)>,
+    /// Total block reads under the paper's per-straggler accounting
+    /// (Theorem 1's `R`): Σ reads over steps.
+    pub total_reads: usize,
+    /// Total *distinct* blocks read assuming the decoding worker caches
+    /// blocks it has already fetched (the implementation optimization; the
+    /// bound still holds since cached ≤ uncached).
+    pub distinct_reads: usize,
+}
+
+impl PeelPlan {
+    pub fn decodable(&self) -> bool {
+        self.undecodable.is_empty()
+    }
+
+    /// Number of stragglers the plan recovers.
+    pub fn recovered(&self) -> usize {
+        self.steps.len()
+    }
+}
+
+/// Plan a peeling decode of a grid with `rows × cols` cells given which
+/// cells are present. `present[r][c]` uses row-major `present[r * cols + c]`.
+///
+/// Strategy: repeatedly find a row or column with exactly one missing cell
+/// and peel it. When both axes are available for some cell, prefer the
+/// cheaper axis (fewer reads) — this realizes the locality
+/// `min(L_A, L_B)` for an isolated straggler.
+pub fn plan_peel(rows: usize, cols: usize, present: &[bool]) -> PeelPlan {
+    assert_eq!(present.len(), rows * cols);
+    let mut have: Vec<bool> = present.to_vec();
+    let mut row_missing: Vec<usize> = vec![0; rows];
+    let mut col_missing: Vec<usize> = vec![0; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            if !have[r * cols + c] {
+                row_missing[r] += 1;
+                col_missing[c] += 1;
+            }
+        }
+    }
+
+    let mut steps = Vec::new();
+    let mut read_cells: Vec<bool> = vec![false; rows * cols];
+    let mut distinct_reads = 0usize;
+    let row_cost = cols - 1; // read the other L_B cells (cols = L_B + 1)
+    let col_cost = rows - 1;
+
+    loop {
+        // Candidate peels: (cost, r, c, axis). Scan rows and columns with
+        // exactly one missing cell; pick the cheapest candidate first so
+        // isolated stragglers use the min(L_A, L_B) axis.
+        let mut best: Option<(usize, usize, usize, Axis)> = None;
+        for r in 0..rows {
+            if row_missing[r] == 1 {
+                let c = (0..cols).find(|&c| !have[r * cols + c]).unwrap();
+                // If this cell's column is also peelable, the column may be
+                // cheaper; the column scan below will consider it.
+                if best.map(|b| row_cost < b.0).unwrap_or(true) {
+                    best = Some((row_cost, r, c, Axis::Row));
+                }
+            }
+        }
+        for c in 0..cols {
+            if col_missing[c] == 1 {
+                let r = (0..rows).find(|&r| !have[r * cols + c]).unwrap();
+                if best.map(|b| col_cost < b.0).unwrap_or(true) {
+                    best = Some((col_cost, r, c, Axis::Col));
+                }
+            }
+        }
+        let Some((cost, r, c, axis)) = best else { break };
+
+        // Count distinct reads for the cached accounting.
+        match axis {
+            Axis::Row => {
+                for cc in 0..cols {
+                    if cc != c && !read_cells[r * cols + cc] {
+                        read_cells[r * cols + cc] = true;
+                        distinct_reads += 1;
+                    }
+                }
+            }
+            Axis::Col => {
+                for rr in 0..rows {
+                    if rr != r && !read_cells[rr * cols + c] {
+                        read_cells[rr * cols + c] = true;
+                        distinct_reads += 1;
+                    }
+                }
+            }
+        }
+        steps.push(Recovery { cell: (r, c), axis, reads: cost });
+        have[r * cols + c] = true;
+        // A recovered cell counts as locally available for later peels at
+        // no extra read cost (it is in the worker's memory).
+        read_cells[r * cols + c] = true;
+        row_missing[r] -= 1;
+        col_missing[c] -= 1;
+    }
+
+    let undecodable: Vec<(usize, usize)> = (0..rows * cols)
+        .filter(|&i| !have[i])
+        .map(|i| (i / cols, i % cols))
+        .collect();
+    let total_reads = steps.iter().map(|s| s.reads).sum();
+    PeelPlan {
+        rows,
+        cols,
+        steps,
+        undecodable,
+        total_reads,
+        distinct_reads,
+    }
+}
+
+/// Brute-force decodability oracle for small grids (tests/MC cross-check):
+/// a missing set is decodable iff iterating "recover any cell that is the
+/// only missing one in its row or column" empties it. Peeling is optimal
+/// for product codes with one parity per axis, so this equals `plan_peel`'s
+/// verdict — but this implementation is deliberately independent (set-based,
+/// no counters) to serve as an oracle.
+pub fn decodable_bruteforce(rows: usize, cols: usize, present: &[bool]) -> bool {
+    let mut missing: std::collections::BTreeSet<(usize, usize)> = (0..rows * cols)
+        .filter(|&i| !present[i])
+        .map(|i| (i / cols, i % cols))
+        .collect();
+    loop {
+        let mut progressed = false;
+        let snapshot: Vec<(usize, usize)> = missing.iter().copied().collect();
+        for &(r, c) in &snapshot {
+            let row_others = missing.iter().filter(|&&(rr, _)| rr == r).count();
+            let col_others = missing.iter().filter(|&&(_, cc)| cc == c).count();
+            if row_others == 1 || col_others == 1 {
+                missing.remove(&(r, c));
+                progressed = true;
+            }
+        }
+        if missing.is_empty() {
+            return true;
+        }
+        if !progressed {
+            return false;
+        }
+    }
+}
+
+/// An individual straggler is undecodable iff there is at least one other
+/// straggler in both its row and its column (§III-C). Exposed for tests.
+pub fn individually_blocked(rows: usize, cols: usize, present: &[bool], cell: (usize, usize)) -> bool {
+    let (r, c) = cell;
+    let row_block = (0..cols).any(|cc| cc != c && !present[r * cols + cc]);
+    let col_block = (0..rows).any(|rr| rr != r && !present[rr * cols + c]);
+    row_block && col_block
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::proptest;
+
+    fn grid(rows: usize, cols: usize, missing: &[(usize, usize)]) -> Vec<bool> {
+        let mut p = vec![true; rows * cols];
+        for &(r, c) in missing {
+            p[r * cols + c] = false;
+        }
+        p
+    }
+
+    #[test]
+    fn no_stragglers_no_work() {
+        let p = grid(3, 3, &[]);
+        let plan = plan_peel(3, 3, &p);
+        assert!(plan.decodable());
+        assert_eq!(plan.total_reads, 0);
+        assert_eq!(plan.recovered(), 0);
+    }
+
+    #[test]
+    fn single_straggler_uses_min_locality() {
+        // 4 rows (L_A=3), 3 cols (L_B=2): min locality = 2 via the row.
+        let p = grid(4, 3, &[(1, 1)]);
+        let plan = plan_peel(4, 3, &p);
+        assert!(plan.decodable());
+        assert_eq!(plan.recovered(), 1);
+        assert_eq!(plan.steps[0].axis, Axis::Row);
+        assert_eq!(plan.total_reads, 2); // = L_B = min(3, 2)
+    }
+
+    #[test]
+    fn any_three_stragglers_decodable_3x3() {
+        // Paper §III-C: local product codes decode ANY 3 stragglers.
+        let (rows, cols) = (3, 3);
+        let n = rows * cols;
+        let mut checked = 0;
+        for a in 0..n {
+            for b in a + 1..n {
+                for c in b + 1..n {
+                    let p = grid(
+                        rows,
+                        cols,
+                        &[
+                            (a / cols, a % cols),
+                            (b / cols, b % cols),
+                            (c / cols, c % cols),
+                        ],
+                    );
+                    let plan = plan_peel(rows, cols, &p);
+                    assert!(plan.decodable(), "cells {a},{b},{c}");
+                    assert_eq!(plan.recovered(), 3);
+                    checked += 1;
+                }
+            }
+        }
+        assert_eq!(checked, 84); // C(9,3)
+    }
+
+    #[test]
+    fn interlocking_three_decodable() {
+        // Fig 8-style interlocking configuration in a 3×3 grid.
+        let p = grid(3, 3, &[(0, 0), (0, 1), (1, 0)]);
+        let plan = plan_peel(3, 3, &p);
+        assert!(plan.decodable());
+    }
+
+    #[test]
+    fn square_four_undecodable() {
+        // Fig 7 middle: 4 stragglers in a 2×2 sub-square cannot be decoded.
+        let p = grid(3, 3, &[(0, 0), (0, 2), (2, 0), (2, 2)]);
+        let plan = plan_peel(3, 3, &p);
+        assert!(!plan.decodable());
+        assert_eq!(plan.undecodable.len(), 4);
+    }
+
+    #[test]
+    fn partial_decode_before_stall() {
+        // A 4-square plus one isolated straggler: the isolated one peels,
+        // the square remains.
+        let p = grid(4, 4, &[(0, 0), (0, 1), (1, 0), (1, 1), (3, 3)]);
+        let plan = plan_peel(4, 4, &p);
+        assert!(!plan.decodable());
+        assert_eq!(plan.recovered(), 1);
+        assert_eq!(plan.undecodable.len(), 4);
+    }
+
+    #[test]
+    fn whole_row_missing_recoverable_by_columns() {
+        // Entire row missing: each cell is the only one missing in its
+        // column, so column peels recover everything.
+        let missing: Vec<(usize, usize)> = (0..4).map(|c| (1, c)).collect();
+        let p = grid(3, 4, &missing);
+        let plan = plan_peel(3, 4, &p);
+        assert!(plan.decodable());
+        assert_eq!(plan.recovered(), 4);
+        assert!(plan.steps.iter().all(|s| s.axis == Axis::Col));
+    }
+
+    #[test]
+    fn reads_bounded_by_sl() {
+        // Theorem 1 accounting: R ≤ S·L with L = max(L_A, L_B).
+        proptest(300, 0x5EED, |g| {
+            let rows = g.usize_in(2, 8);
+            let cols = g.usize_in(2, 8);
+            let n = rows * cols;
+            let s = g.usize_in(0, n);
+            let missing = g.subset(n, s);
+            let mut p = vec![true; n];
+            for &i in &missing {
+                p[i] = false;
+            }
+            let plan = plan_peel(rows, cols, &p);
+            let l = (rows - 1).max(cols - 1);
+            assert!(
+                plan.total_reads <= plan.recovered() * l,
+                "reads {} > {} * {}",
+                plan.total_reads,
+                plan.recovered(),
+                l
+            );
+            assert!(plan.distinct_reads <= plan.total_reads);
+        });
+    }
+
+    #[test]
+    fn peel_matches_bruteforce_oracle() {
+        proptest(500, 0xACE, |g| {
+            let rows = g.usize_in(2, 6);
+            let cols = g.usize_in(2, 6);
+            let n = rows * cols;
+            let s = g.usize_in(0, n.min(10));
+            let missing = g.subset(n, s);
+            let mut p = vec![true; n];
+            for &i in &missing {
+                p[i] = false;
+            }
+            let plan = plan_peel(rows, cols, &p);
+            assert_eq!(
+                plan.decodable(),
+                decodable_bruteforce(rows, cols, &p),
+                "rows={rows} cols={cols} missing={missing:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn le_three_always_decodable_prop() {
+        // Property: any ≤3 stragglers decode, for any grid ≥ 2×2.
+        proptest(400, 0xD00D, |g| {
+            let rows = g.usize_in(2, 9);
+            let cols = g.usize_in(2, 9);
+            let n = rows * cols;
+            let s = g.usize_in(0, 3.min(n));
+            let missing = g.subset(n, s);
+            let mut p = vec![true; n];
+            for &i in &missing {
+                p[i] = false;
+            }
+            let plan = plan_peel(rows, cols, &p);
+            assert!(plan.decodable(), "rows={rows} cols={cols} missing={missing:?}");
+        });
+    }
+
+    #[test]
+    fn individually_blocked_matches_definition() {
+        let p = grid(3, 3, &[(0, 0), (0, 1), (1, 0)]);
+        assert!(individually_blocked(3, 3, &p, (0, 0)));
+        assert!(!individually_blocked(3, 3, &p, (0, 1)));
+        assert!(!individually_blocked(3, 3, &p, (1, 0)));
+    }
+
+    #[test]
+    fn recovered_cells_usable_for_later_peels() {
+        // Chain: (0,0),(0,1),(1,0),(1,2),(2,1) — needs multiple rounds.
+        let p = grid(3, 3, &[(0, 0), (0, 1), (1, 0), (1, 2), (2, 1)]);
+        let plan = plan_peel(3, 3, &p);
+        // Whether or not fully decodable, verify the plan is executable:
+        // each step's constraint must have all other cells available at
+        // execution time.
+        let mut have = p.clone();
+        for step in &plan.steps {
+            let (r, c) = step.cell;
+            match step.axis {
+                Axis::Row => {
+                    for cc in 0..3 {
+                        if cc != c {
+                            assert!(have[r * 3 + cc], "step {:?} needs ({r},{cc})", step);
+                        }
+                    }
+                }
+                Axis::Col => {
+                    for rr in 0..3 {
+                        if rr != r {
+                            assert!(have[rr * 3 + c], "step {:?} needs ({rr},{c})", step);
+                        }
+                    }
+                }
+            }
+            have[r * 3 + c] = true;
+        }
+    }
+}

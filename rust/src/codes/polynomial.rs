@@ -1,0 +1,291 @@
+//! Baseline: **polynomial codes** [18] (Yu–Maddah-Ali–Avestimehr), the
+//! MDS scheme with optimal recovery threshold that Fig 5 compares against.
+//!
+//! Encoding over the reals: worker k receives
+//!   Ã_k = Σ_i A_i x_k^i          (degree < s_a)
+//!   B̃_k = Σ_j B_j x_k^{s_a·j}    (degree < s_a·s_b)
+//! and computes Ã_k·B̃_kᵀ = Σ_{i,j} (A_i·B_jᵀ) x_k^{i + s_a·j} — an
+//! evaluation of a matrix polynomial whose s_a·s_b coefficients are
+//! exactly the output blocks. Any K = s_a·s_b results reconstruct C by
+//! polynomial interpolation.
+//!
+//! The decode reads **all K blocks** regardless of how many workers
+//! straggled, and over the reals the Vandermonde interpolation is
+//! numerically ill-conditioned as K grows — both are the paper's stated
+//! reasons polynomial codes lose end-to-end in serverless settings (and
+//! why "for large matrix dimensions, decoding with a polynomial code is
+//! not feasible"). We use Chebyshev evaluation points to push the
+//! feasible K as far as possible; the instability threshold is measured
+//! in `tests` and reported in EXPERIMENTS.md.
+
+use crate::linalg::matrix::Matrix;
+
+/// Polynomial code over `s_a × s_b` systematic blocks with `n_workers ≥ K`
+/// total workers.
+#[derive(Debug, Clone)]
+pub struct PolynomialCode {
+    pub s_a: usize,
+    pub s_b: usize,
+    pub n_workers: usize,
+    /// Per-worker evaluation points (Chebyshev nodes on [-1, 1]).
+    pub points: Vec<f64>,
+}
+
+impl PolynomialCode {
+    pub fn new(s_a: usize, s_b: usize, n_workers: usize) -> PolynomialCode {
+        let k = s_a * s_b;
+        assert!(n_workers >= k, "need at least K = {k} workers");
+        let points: Vec<f64> = (0..n_workers)
+            .map(|i| {
+                // Chebyshev points of the first kind.
+                let t = (2.0 * i as f64 + 1.0) * std::f64::consts::PI
+                    / (2.0 * n_workers as f64);
+                t.cos()
+            })
+            .collect();
+        PolynomialCode {
+            s_a,
+            s_b,
+            n_workers,
+            points,
+        }
+    }
+
+    /// Recovery threshold K = s_a · s_b.
+    pub fn threshold(&self) -> usize {
+        self.s_a * self.s_b
+    }
+
+    pub fn redundancy(&self) -> f64 {
+        self.n_workers as f64 / self.threshold() as f64 - 1.0
+    }
+
+    /// Encode the A side for worker k: Σ_i A_i x_k^i.
+    pub fn encode_a(&self, a_blocks: &[Matrix], k: usize) -> Matrix {
+        assert_eq!(a_blocks.len(), self.s_a);
+        weighted_sum(a_blocks, |i| self.points[k].powi(i as i32))
+    }
+
+    /// Encode the B side for worker k: Σ_j B_j x_k^{s_a·j}.
+    pub fn encode_b(&self, b_blocks: &[Matrix], k: usize) -> Matrix {
+        assert_eq!(b_blocks.len(), self.s_b);
+        weighted_sum(b_blocks, |j| self.points[k].powi((self.s_a * j) as i32))
+    }
+
+    /// Decode from any ≥K worker results `(worker_index, Ã_k·B̃_kᵀ)`.
+    /// Returns the `s_a × s_b` output blocks (row-major, C_{ij} at
+    /// i·s_b + j) and the number of blocks read (always K — the MDS decode
+    /// cost the paper highlights).
+    pub fn decode(&self, results: &[(usize, Matrix)]) -> anyhow::Result<(Vec<Matrix>, usize)> {
+        let k = self.threshold();
+        anyhow::ensure!(
+            results.len() >= k,
+            "need {k} results, got {}",
+            results.len()
+        );
+        let use_results = &results[..k];
+        let (br, bc) = use_results[0].1.shape();
+
+        // Build the K×K Vandermonde V[t][m] = x_{k_t}^m and invert it by
+        // solving K unit systems (f64 throughout).
+        let n = k;
+        let mut v = vec![0f64; n * n];
+        for (t, &(w, _)) in use_results.iter().enumerate() {
+            let x = self.points[w];
+            let mut p = 1f64;
+            for m in 0..n {
+                v[t * n + m] = p;
+                p *= x;
+            }
+        }
+        let vinv = invert_f64(&v, n)
+            .map_err(|e| anyhow::anyhow!("polynomial decode ill-conditioned: {e}"))?;
+
+        // Coefficient m (block C at exponent m = i + s_a·j) is
+        // Σ_t vinv[m][t] · R_t.
+        let mut out: Vec<Matrix> = (0..k).map(|_| Matrix::zeros(br, bc)).collect();
+        for m in 0..k {
+            let dst = &mut out[m];
+            for (t, (_, r)) in use_results.iter().enumerate() {
+                let coef = vinv[m * n + t] as f32;
+                if coef == 0.0 {
+                    continue;
+                }
+                for (d, &s) in dst.data.iter_mut().zip(&r.data) {
+                    *d += coef * s;
+                }
+            }
+        }
+
+        // Reorder exponent m = i + s_a·j into row-major (i, j).
+        let mut blocks = Vec::with_capacity(k);
+        for i in 0..self.s_a {
+            for j in 0..self.s_b {
+                blocks.push(out[i + self.s_a * j].clone());
+            }
+        }
+        Ok((blocks, k))
+    }
+}
+
+fn weighted_sum(blocks: &[Matrix], weight: impl Fn(usize) -> f64) -> Matrix {
+    let mut acc = Matrix::zeros(blocks[0].rows, blocks[0].cols);
+    for (i, b) in blocks.iter().enumerate() {
+        let w = weight(i) as f32;
+        if w == 0.0 {
+            continue;
+        }
+        for (a, &x) in acc.data.iter_mut().zip(&b.data) {
+            *a += w * x;
+        }
+    }
+    acc
+}
+
+/// Dense f64 matrix inverse via Gauss–Jordan with partial pivoting.
+fn invert_f64(a: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    let mut m = a.to_vec();
+    let mut inv = vec![0f64; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0;
+    }
+    for col in 0..n {
+        // Pivot.
+        let (piv, pval) = (col..n)
+            .map(|r| (r, m[r * n + col].abs()))
+            .fold((col, -1.0), |best, cand| if cand.1 > best.1 { cand } else { best });
+        if pval < 1e-12 {
+            return Err(format!("pivot {pval:.2e} at column {col}"));
+        }
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+                inv.swap(col * n + k, piv * n + k);
+            }
+        }
+        let d = m[col * n + col];
+        for k in 0..n {
+            m[col * n + k] /= d;
+            inv[col * n + k] /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m[r * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in 0..n {
+                m[r * n + k] -= f * m[col * n + k];
+                inv[r * n + k] -= f * inv[col * n + k];
+            }
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_bt;
+    use crate::util::rng::Pcg64;
+
+    fn random_blocks(s: usize, rows: usize, cols: usize, seed: u64) -> Vec<Matrix> {
+        let mut rng = Pcg64::new(seed);
+        (0..s).map(|_| Matrix::randn(rows, cols, &mut rng, 0.0, 1.0)).collect()
+    }
+
+    fn worker_results(
+        code: &PolynomialCode,
+        a: &[Matrix],
+        b: &[Matrix],
+        workers: &[usize],
+    ) -> Vec<(usize, Matrix)> {
+        workers
+            .iter()
+            .map(|&k| (k, matmul_bt(&code.encode_a(a, k), &code.encode_b(b, k))))
+            .collect()
+    }
+
+    #[test]
+    fn decodes_with_first_k_workers() {
+        let (sa, sb) = (3usize, 2usize);
+        let code = PolynomialCode::new(sa, sb, 8);
+        let a = random_blocks(sa, 4, 5, 1);
+        let b = random_blocks(sb, 4, 5, 2);
+        let workers: Vec<usize> = (0..code.threshold()).collect();
+        let results = worker_results(&code, &a, &b, &workers);
+        let (blocks, read) = code.decode(&results).unwrap();
+        assert_eq!(read, 6);
+        for i in 0..sa {
+            for j in 0..sb {
+                let truth = matmul_bt(&a[i], &b[j]);
+                let err = blocks[i * sb + j].rel_err(&truth);
+                assert!(err < 1e-2, "({i},{j}) err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn decodes_with_any_k_subset() {
+        // MDS property: stragglers on arbitrary workers don't matter.
+        let (sa, sb) = (2usize, 2usize);
+        let code = PolynomialCode::new(sa, sb, 7);
+        let a = random_blocks(sa, 3, 4, 3);
+        let b = random_blocks(sb, 3, 4, 4);
+        for subset in [[0usize, 2, 4, 6], [1, 3, 5, 6], [3, 4, 5, 6]] {
+            let results = worker_results(&code, &a, &b, &subset);
+            let (blocks, _) = code.decode(&results).unwrap();
+            for i in 0..sa {
+                for j in 0..sb {
+                    let truth = matmul_bt(&a[i], &b[j]);
+                    assert!(blocks[i * sb + j].rel_err(&truth) < 1e-2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_than_k_fails() {
+        let code = PolynomialCode::new(2, 2, 6);
+        let a = random_blocks(2, 2, 3, 5);
+        let b = random_blocks(2, 2, 3, 6);
+        let results = worker_results(&code, &a, &b, &[0, 1, 2]);
+        assert!(code.decode(&results).is_err());
+    }
+
+    #[test]
+    fn instability_grows_with_k() {
+        // The real-arithmetic conditioning wall the paper alludes to:
+        // reconstruction error grows rapidly with K = s_a·s_b. We assert
+        // the *trend* — small K fine, large K degraded by orders of
+        // magnitude — which EXPERIMENTS.md reports quantitatively.
+        let mut errs = Vec::new();
+        for &(sa, sb) in &[(2usize, 2usize), (4, 4), (6, 6)] {
+            let code = PolynomialCode::new(sa, sb, sa * sb + 4);
+            let a = random_blocks(sa, 2, 3, 7);
+            let b = random_blocks(sb, 2, 3, 8);
+            let workers: Vec<usize> = (0..code.threshold()).collect();
+            let results = worker_results(&code, &a, &b, &workers);
+            let (blocks, _) = code.decode(&results).unwrap();
+            let mut worst = 0f64;
+            for i in 0..sa {
+                for j in 0..sb {
+                    let truth = matmul_bt(&a[i], &b[j]);
+                    worst = worst.max(blocks[i * sb + j].rel_err(&truth));
+                }
+            }
+            errs.push(worst);
+        }
+        assert!(errs[0] < 1e-3, "K=4 should be accurate: {errs:?}");
+        assert!(errs[2] > errs[0], "error should grow with K: {errs:?}");
+    }
+
+    #[test]
+    fn redundancy_and_threshold() {
+        let code = PolynomialCode::new(10, 10, 121);
+        assert_eq!(code.threshold(), 100);
+        assert!((code.redundancy() - 0.21).abs() < 1e-12);
+    }
+}

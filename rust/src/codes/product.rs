@@ -1,0 +1,407 @@
+//! Baseline: classic **product code** with *global* parities ([16], the
+//! scheme the paper compares against in Fig 5).
+//!
+//! Unlike the local product code, parities here are MDS along each full
+//! axis: `t_a` parity row-blocks are Vandermonde-weighted combinations of
+//! ALL `s_a` systematic row-blocks (likewise `t_b` columns). Decoding even
+//! a single straggler therefore requires reading an **entire row or column
+//! of C_coded** (§II-B: "Product codes have to read the entire column (or
+//! row) block of C_coded ... this results in a huge communication
+//! overhead") — which is exactly the effect the Fig-5 comparison measures.
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::solve::lu_solve;
+
+/// MDS code along one axis: `systematic` data blocks + `parities`
+/// Vandermonde parity blocks. Any `systematic` of the `systematic +
+/// parities` blocks suffice to reconstruct.
+#[derive(Debug, Clone)]
+pub struct MdsAxisCode {
+    pub systematic: usize,
+    pub parities: usize,
+    /// Evaluation points: systematic block i acts as coefficient of x^i;
+    /// parity p is the polynomial evaluated at `points[p]`.
+    points: Vec<f64>,
+}
+
+impl MdsAxisCode {
+    pub fn new(systematic: usize, parities: usize) -> MdsAxisCode {
+        assert!(systematic > 0);
+        // Small spread-out points keep the Vandermonde system conditioned
+        // well enough for the modest axis sizes the simulator uses; the
+        // instability at scale is *the paper's point* about such schemes.
+        let points: Vec<f64> = (0..parities)
+            .map(|p| 0.3 + 0.7 * (p as f64 + 1.0) / parities.max(1) as f64)
+            .collect();
+        MdsAxisCode {
+            systematic,
+            parities,
+            points,
+        }
+    }
+
+    pub fn coded_len(&self) -> usize {
+        self.systematic + self.parities
+    }
+
+    /// Weight of systematic block `i` in parity `p`.
+    pub fn weight(&self, p: usize, i: usize) -> f64 {
+        self.points[p].powi(i as i32)
+    }
+
+    /// Compute parity block `p` from all systematic blocks.
+    pub fn parity(&self, p: usize, blocks: &[Matrix]) -> Matrix {
+        assert_eq!(blocks.len(), self.systematic);
+        let mut acc = Matrix::zeros(blocks[0].rows, blocks[0].cols);
+        for (i, b) in blocks.iter().enumerate() {
+            let w = self.weight(p, i) as f32;
+            for (a, &x) in acc.data.iter_mut().zip(&b.data) {
+                *a += w * x;
+            }
+        }
+        acc
+    }
+
+    /// Encode a side: systematic blocks followed by parity blocks.
+    pub fn encode(&self, blocks: &[Matrix]) -> Vec<Matrix> {
+        let mut out = blocks.to_vec();
+        for p in 0..self.parities {
+            out.push(self.parity(p, blocks));
+        }
+        out
+    }
+
+    /// Recover missing systematic blocks along one line.
+    ///
+    /// `line[k]` is the k-th coded block of the line (`None` = missing),
+    /// k < systematic are data, k ≥ systematic are parities. Returns the
+    /// fully recovered systematic prefix, or Err if more than `parities`
+    /// blocks are missing / insufficient parities survive.
+    pub fn recover_line(&self, line: &[Option<Matrix>]) -> anyhow::Result<Vec<Matrix>> {
+        anyhow::ensure!(line.len() == self.coded_len(), "line length");
+        let missing: Vec<usize> = (0..self.systematic).filter(|&i| line[i].is_none()).collect();
+        if missing.is_empty() {
+            return Ok(line[..self.systematic]
+                .iter()
+                .map(|b| b.clone().unwrap())
+                .collect());
+        }
+        let avail_parities: Vec<usize> = (0..self.parities)
+            .filter(|&p| line[self.systematic + p].is_some())
+            .collect();
+        anyhow::ensure!(
+            avail_parities.len() >= missing.len(),
+            "{} missing but only {} parities available",
+            missing.len(),
+            avail_parities.len()
+        );
+        let e = missing.len();
+        let use_parities = &avail_parities[..e];
+
+        // Each used parity p gives: Σ_{m in missing} w_{p,m} X_m
+        //   = parity_p − Σ_{present i} w_{p,i} D_i  (the "syndrome").
+        let (br, bc) = {
+            let any = line.iter().flatten().next().expect("some block present");
+            (any.rows, any.cols)
+        };
+        let mut syndromes: Vec<Matrix> = Vec::with_capacity(e);
+        for &p in use_parities {
+            let mut s = line[self.systematic + p].clone().unwrap();
+            for i in 0..self.systematic {
+                if let Some(d) = &line[i] {
+                    let w = self.weight(p, i) as f32;
+                    for (sv, &dv) in s.data.iter_mut().zip(&d.data) {
+                        *sv -= w * dv;
+                    }
+                }
+            }
+            syndromes.push(s);
+        }
+
+        // Solve the e×e system W·X = S for each entry; W is shared, so
+        // invert once by solving against unit vectors.
+        let mut w = Matrix::zeros(e, e);
+        for (r, &p) in use_parities.iter().enumerate() {
+            for (c, &m) in missing.iter().enumerate() {
+                w.set(r, c, self.weight(p, m) as f32);
+            }
+        }
+        let mut winv = vec![vec![0f64; e]; e]; // winv[row][col]
+        for col in 0..e {
+            let mut rhs = vec![0f64; e];
+            rhs[col] = 1.0;
+            let x = lu_solve(&w, &rhs)?;
+            for row in 0..e {
+                winv[row][col] = x[row];
+            }
+        }
+
+        // X_m = Σ_p winv[m][p] · S_p.
+        let mut recovered: Vec<Matrix> = (0..e).map(|_| Matrix::zeros(br, bc)).collect();
+        for (m, rec) in recovered.iter_mut().enumerate() {
+            for (pi, syn) in syndromes.iter().enumerate() {
+                let coef = winv[m][pi] as f32;
+                for (rv, &sv) in rec.data.iter_mut().zip(&syn.data) {
+                    *rv += coef * sv;
+                }
+            }
+        }
+
+        let mut out: Vec<Matrix> = Vec::with_capacity(self.systematic);
+        let mut next_rec = 0usize;
+        for i in 0..self.systematic {
+            if line[i].is_some() {
+                out.push(line[i].clone().unwrap());
+            } else {
+                out.push(recovered[next_rec].clone());
+                next_rec += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The 2-D product code over the output grid: `(s_a + t_a) × (s_b + t_b)`
+/// coded blocks where coded row i ≥ s_a is the Vandermonde combination of
+/// all systematic rows (and likewise for columns).
+#[derive(Debug, Clone)]
+pub struct ProductCode {
+    pub row_code: MdsAxisCode,
+    pub col_code: MdsAxisCode,
+}
+
+/// Result of a product-code decode attempt.
+#[derive(Debug, Clone)]
+pub struct ProductDecode {
+    /// Recovered systematic blocks, row-major `s_a × s_b`.
+    pub systematic: Vec<Matrix>,
+    /// Total blocks read during recovery (the Fig-5 cost driver).
+    pub blocks_read: usize,
+    /// Stragglers recovered.
+    pub recovered: usize,
+}
+
+impl ProductCode {
+    pub fn new(s_a: usize, t_a: usize, s_b: usize, t_b: usize) -> ProductCode {
+        ProductCode {
+            row_code: MdsAxisCode::new(s_a, t_a),
+            col_code: MdsAxisCode::new(s_b, t_b),
+        }
+    }
+
+    pub fn coded_grid(&self) -> (usize, usize) {
+        (self.row_code.coded_len(), self.col_code.coded_len())
+    }
+
+    pub fn redundancy(&self) -> f64 {
+        let (ra, rb) = self.coded_grid();
+        (ra * rb) as f64 / (self.row_code.systematic * self.col_code.systematic) as f64 - 1.0
+    }
+
+    /// Encode both sides' row-blocks.
+    pub fn encode_sides(&self, a: &[Matrix], b: &[Matrix]) -> (Vec<Matrix>, Vec<Matrix>) {
+        (self.row_code.encode(a), self.col_code.encode(b))
+    }
+
+    /// Decode the coded output grid (row-major `Option<Matrix>`); uses
+    /// column-wise then row-wise MDS recovery passes until fixpoint.
+    pub fn decode(&self, coded: &mut [Option<Matrix>]) -> anyhow::Result<ProductDecode> {
+        let (ra, rb) = self.coded_grid();
+        assert_eq!(coded.len(), ra * rb);
+        let s_a = self.row_code.systematic;
+        let s_b = self.col_code.systematic;
+        let mut blocks_read = 0usize;
+        let mut recovered = 0usize;
+
+        loop {
+            let mut progressed = false;
+            // Column passes: for each coded column, treat the s_a
+            // systematic rows as data and t_a parity rows as parities.
+            for c in 0..rb {
+                let missing_data =
+                    (0..s_a).filter(|&r| coded[r * rb + c].is_none()).count();
+                if missing_data == 0 {
+                    continue;
+                }
+                let avail_par = (s_a..ra).filter(|&r| coded[r * rb + c].is_some()).count();
+                if missing_data <= avail_par {
+                    let line: Vec<Option<Matrix>> =
+                        (0..ra).map(|r| coded[r * rb + c].clone()).collect();
+                    let present = line.iter().flatten().count();
+                    blocks_read += present; // read the entire surviving column
+                    let rec = self.row_code.recover_line(&line)?;
+                    for (r, blk) in rec.into_iter().enumerate() {
+                        if coded[r * rb + c].is_none() {
+                            recovered += 1;
+                            progressed = true;
+                        }
+                        coded[r * rb + c] = Some(blk);
+                    }
+                }
+            }
+            // Row passes over systematic rows only (parity rows beyond the
+            // systematic columns are never needed for output).
+            for r in 0..s_a {
+                let missing_data =
+                    (0..s_b).filter(|&c| coded[r * rb + c].is_none()).count();
+                if missing_data == 0 {
+                    continue;
+                }
+                let avail_par = (s_b..rb).filter(|&c| coded[r * rb + c].is_some()).count();
+                if missing_data <= avail_par {
+                    let line: Vec<Option<Matrix>> =
+                        (0..rb).map(|c| coded[r * rb + c].clone()).collect();
+                    let present = line.iter().flatten().count();
+                    blocks_read += present;
+                    let rec = self.col_code.recover_line(&line)?;
+                    for (c, blk) in rec.into_iter().enumerate() {
+                        if coded[r * rb + c].is_none() {
+                            recovered += 1;
+                            progressed = true;
+                        }
+                        coded[r * rb + c] = Some(blk);
+                    }
+                }
+            }
+            // Done when all systematic cells are present.
+            let all_sys = (0..s_a).all(|r| (0..s_b).all(|c| coded[r * rb + c].is_some()));
+            if all_sys {
+                break;
+            }
+            anyhow::ensure!(progressed, "product code stuck: undecodable straggler pattern");
+        }
+
+        let mut systematic = Vec::with_capacity(s_a * s_b);
+        for r in 0..s_a {
+            for c in 0..s_b {
+                systematic.push(coded[r * rb + c].clone().unwrap());
+            }
+        }
+        Ok(ProductDecode {
+            systematic,
+            blocks_read,
+            recovered,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_bt;
+    use crate::util::rng::Pcg64;
+
+    fn random_blocks(s: usize, rows: usize, cols: usize, seed: u64) -> Vec<Matrix> {
+        let mut rng = Pcg64::new(seed);
+        (0..s).map(|_| Matrix::randn(rows, cols, &mut rng, 0.0, 1.0)).collect()
+    }
+
+    fn build_grid(pc: &ProductCode, a: &[Matrix], b: &[Matrix]) -> Vec<Option<Matrix>> {
+        let (ac, bc) = pc.encode_sides(a, b);
+        let (ra, rb) = pc.coded_grid();
+        let mut grid = Vec::with_capacity(ra * rb);
+        for i in 0..ra {
+            for j in 0..rb {
+                grid.push(Some(matmul_bt(&ac[i], &bc[j])));
+            }
+        }
+        grid
+    }
+
+    #[test]
+    fn axis_recover_single_missing() {
+        let code = MdsAxisCode::new(4, 2);
+        let blocks = random_blocks(4, 3, 4, 1);
+        let coded = code.encode(&blocks);
+        for missing in 0..4 {
+            let mut line: Vec<Option<Matrix>> = coded.iter().cloned().map(Some).collect();
+            line[missing] = None;
+            let rec = code.recover_line(&line).unwrap();
+            assert!(rec[missing].rel_err(&blocks[missing]) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn axis_recover_two_missing() {
+        let code = MdsAxisCode::new(5, 2);
+        let blocks = random_blocks(5, 2, 3, 2);
+        let coded = code.encode(&blocks);
+        let mut line: Vec<Option<Matrix>> = coded.iter().cloned().map(Some).collect();
+        line[1] = None;
+        line[3] = None;
+        let rec = code.recover_line(&line).unwrap();
+        for i in 0..5 {
+            assert!(rec[i].rel_err(&blocks[i]) < 1e-3, "block {i}");
+        }
+    }
+
+    #[test]
+    fn axis_too_many_missing_fails() {
+        let code = MdsAxisCode::new(4, 1);
+        let blocks = random_blocks(4, 2, 2, 3);
+        let coded = code.encode(&blocks);
+        let mut line: Vec<Option<Matrix>> = coded.iter().cloned().map(Some).collect();
+        line[0] = None;
+        line[1] = None;
+        assert!(code.recover_line(&line).is_err());
+    }
+
+    #[test]
+    fn product_decode_recovers_output() {
+        let pc = ProductCode::new(3, 1, 3, 1);
+        let a = random_blocks(3, 4, 5, 4);
+        let b = random_blocks(3, 4, 5, 5);
+        let mut grid = build_grid(&pc, &a, &b);
+        // Remove 3 scattered cells.
+        let (_, rb) = pc.coded_grid();
+        for &(r, c) in &[(0usize, 0usize), (1, 2), (3, 1)] {
+            grid[r * rb + c] = None;
+        }
+        let dec = pc.decode(&mut grid).unwrap();
+        assert!(dec.recovered >= 2); // (3,1) is a parity-row cell, may or may not be rebuilt
+        assert!(dec.blocks_read > 0);
+        // Check systematic output.
+        for i in 0..3 {
+            for j in 0..3 {
+                let truth = matmul_bt(&a[i], &b[j]);
+                assert!(dec.systematic[i * 3 + j].rel_err(&truth) < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn product_decode_reads_entire_lines() {
+        // The cost signature vs local product codes: one straggler forces
+        // reading a full surviving column (s_a + t_a − 1 blocks here).
+        let pc = ProductCode::new(4, 1, 4, 1);
+        let a = random_blocks(4, 3, 4, 6);
+        let b = random_blocks(4, 3, 4, 7);
+        let mut grid = build_grid(&pc, &a, &b);
+        let (_, rb) = pc.coded_grid();
+        grid[2 * rb + 2] = None; // single straggler
+        let dec = pc.decode(&mut grid).unwrap();
+        assert_eq!(dec.recovered, 1);
+        assert_eq!(dec.blocks_read, 4 + 1 - 1); // whole column minus the missing cell
+    }
+
+    #[test]
+    fn product_unrecoverable_pattern_errors() {
+        // 2×2 square of missing data cells with only 1 parity per axis.
+        let pc = ProductCode::new(3, 1, 3, 1);
+        let a = random_blocks(3, 2, 3, 8);
+        let b = random_blocks(3, 2, 3, 9);
+        let mut grid = build_grid(&pc, &a, &b);
+        let (_, rb) = pc.coded_grid();
+        for &(r, c) in &[(0usize, 0usize), (0, 1), (1, 0), (1, 1)] {
+            grid[r * rb + c] = None;
+        }
+        assert!(pc.decode(&mut grid).is_err());
+    }
+
+    #[test]
+    fn redundancy_matches_fig5_setup() {
+        // Fig 5 matches ≥21% redundancy: 10% parities each axis.
+        let pc = ProductCode::new(10, 1, 10, 1);
+        assert!((pc.redundancy() - 0.21).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,310 @@
+//! Closed-form theory from §III and §V: Theorem 1 (decode-read tail
+//! bound), Corollary 1, Theorem 2 (undecodability bound with the α_s
+//! configuration counts), and the LRC locality/minimum-distance bounds
+//! (Eqs. 2–3). These generate Figs. 6 and 9 and are validated against
+//! Monte-Carlo simulation in [`crate::codes::montecarlo`].
+
+/// ln(n!) via direct summation (exact enough for n ≤ ~10⁶; we use n ≤ 10⁴).
+pub fn ln_factorial(n: usize) -> f64 {
+    (2..=n).map(|k| (k as f64).ln()).sum()
+}
+
+/// ln C(n, k); −∞ when k > n.
+pub fn ln_choose(n: usize, k: usize) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// C(n, k) as f64 (may overflow to inf only for huge inputs).
+pub fn choose(n: usize, k: usize) -> f64 {
+    ln_choose(n, k).exp()
+}
+
+/// Binomial pmf P(S = s) for S ~ Binomial(n, p).
+pub fn binom_pmf(n: usize, s: usize, p: f64) -> f64 {
+    if s > n {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return if s == 0 { 1.0 } else { 0.0 };
+    }
+    if p >= 1.0 {
+        return if s == n { 1.0 } else { 0.0 };
+    }
+    (ln_choose(n, s) + s as f64 * p.ln() + (n - s) as f64 * (1.0 - p).ln()).exp()
+}
+
+/// Binomial upper tail P(S ≥ s0).
+pub fn binom_tail(n: usize, s0: usize, p: f64) -> f64 {
+    (s0..=n).map(|s| binom_pmf(n, s, p)).sum()
+}
+
+/// **Theorem 1, as printed in the paper**: with straggling probability
+/// `p`, grid size `n = (L_A+1)(L_B+1)`, and `L = max(L_A, L_B)`,
+/// `Pr(R ≥ x) ≤ (x / (npL))^{-x/L} · e^{-x/L + np}`.
+///
+/// ⚠ REPRODUCTION NOTE: this printed expression contains a sign typo. The
+/// Chernoff argument in §V-A gives `Pr(R ≥ x) ≤ e^{-tx}(1-p+pe^{tL})^n ≤
+/// exp(-tx + np(e^{tL} − 1))`, and optimizing `t = (1/L)·ln(x/(npL))`
+/// yields `(x/(npL))^{-x/L} · e^{+x/L − np}` — the standard multiplicative
+/// Chernoff tail for `S ≥ x/L`. The printed form (with `e^{-x/L+np}`) is
+/// *smaller than the true probability*: e.g. for n=121, p=0.02, L=10 the
+/// paper's caption claims Pr(R ≥ 2E[R]) ≤ 3.1×10⁻³, but already
+/// Pr(S ≥ 5) ≈ 0.10 for S ~ Binomial(121, 0.02) and R ≈ S·L on a square
+/// grid. Our Monte-Carlo validator ([`crate::codes::montecarlo`])
+/// confirms the violation empirically.
+///
+/// We therefore provide both: this function reproduces the figure as
+/// printed (Fig 6), and [`thm1_bound`] is the corrected, MC-validated
+/// bound. See EXPERIMENTS.md §fig6 for the side-by-side.
+pub fn thm1_bound_paper(x: f64, n: usize, p: f64, l: usize) -> f64 {
+    assert!(x > 0.0 && p > 0.0 && l > 0);
+    let npl = n as f64 * p * l as f64;
+    let ln_bound = -(x / l as f64) * (x / npl).ln() + (-(x / l as f64) + n as f64 * p);
+    ln_bound.exp().min(1.0)
+}
+
+/// **Theorem 1, corrected**: the valid Chernoff bound
+/// `Pr(R ≥ x) ≤ (x/(npL))^{-x/L} · e^{x/L − np}` (nontrivial for
+/// x > npL = E[R]). This is what the §V-A derivation actually yields; see
+/// [`thm1_bound_paper`] for the discrepancy discussion.
+pub fn thm1_bound(x: f64, n: usize, p: f64, l: usize) -> f64 {
+    assert!(x > 0.0 && p > 0.0 && l > 0);
+    let npl = n as f64 * p * l as f64;
+    if x <= npl {
+        // The Chernoff optimizer t* = ln(x/(npL))/L is ≤ 0 here; no
+        // nontrivial upper bound exists below the mean.
+        return 1.0;
+    }
+    let ln_bound = -(x / l as f64) * (x / npl).ln() + (x / l as f64) - n as f64 * p;
+    ln_bound.exp().min(1.0)
+}
+
+/// Expected reads E[R] = npL for the square case L_A = L_B = L (§III-B).
+pub fn expected_reads(n: usize, p: f64, l: usize) -> f64 {
+    n as f64 * p * l as f64
+}
+
+/// **Corollary 1, as printed**: Pr(R ≥ E[R] + εL) ≤ (1 + ε/(np))^{−np−ε} e^{−ε}.
+/// Inherits the Theorem-1 sign typo (see [`thm1_bound_paper`]).
+pub fn cor1_bound_paper(eps: f64, n: usize, p: f64) -> f64 {
+    assert!(eps > 0.0);
+    let np = n as f64 * p;
+    let ln_bound = (-np - eps) * (1.0 + eps / np).ln() - eps;
+    ln_bound.exp().min(1.0)
+}
+
+/// **Corollary 1, corrected**: Pr(R ≥ E[R] + εL) ≤ (1 + ε/(np))^{−np−ε} e^{+ε}
+/// (specializing the corrected Theorem 1 at x = (np + ε)L).
+pub fn cor1_bound(eps: f64, n: usize, p: f64) -> f64 {
+    assert!(eps > 0.0);
+    let np = n as f64 * p;
+    let ln_bound = (-np - eps) * (1.0 + eps / np).ln() + eps;
+    ln_bound.exp().min(1.0)
+}
+
+/// The α_s configuration counts of Theorem 2 (upper bounds for s = 6, 7).
+pub fn alpha_counts(l_a: usize, l_b: usize) -> [f64; 4] {
+    let n = (l_a + 1) * (l_b + 1);
+    let a4 = choose(l_a + 1, 2) * choose(l_b + 1, 2);
+    let a5 = a4 * (n as f64 - 4.0);
+    let three_by_three = choose(l_a + 1, 3) * choose(l_b + 1, 3);
+    let a6 = three_by_three * choose(9, 6) + a4 * choose(n - 4, 2);
+    let a7 = three_by_three * choose(9, 7) + a4 * choose(n - 4, 3);
+    [a4, a5, a6, a7]
+}
+
+/// **Theorem 2**: upper bound on Pr(D̄) — a decoding worker with an
+/// `(L_A+1)×(L_B+1)` grid (n ≥ 8 blocks) being unable to decode:
+/// `Σ_{s=4}^{7} α_s p^s (1−p)^{n−s} + Σ_{s=8}^{n} C(n,s) p^s (1−p)^{n−s}`.
+pub fn thm2_bound(l_a: usize, l_b: usize, p: f64) -> f64 {
+    let n = (l_a + 1) * (l_b + 1);
+    assert!(n >= 8, "Theorem 2 requires n ≥ 8 (got {n})");
+    let alphas = alpha_counts(l_a, l_b);
+    let mut total = 0.0;
+    for (i, &alpha) in alphas.iter().enumerate() {
+        let s = 4 + i;
+        // α_s p^s (1-p)^{n-s}, computed in log space for stability.
+        if alpha > 0.0 {
+            let ln_term =
+                alpha.ln() + s as f64 * p.ln() + (n - s) as f64 * (1.0 - p).ln();
+            total += ln_term.exp();
+        }
+    }
+    total += binom_tail(n, 8, p);
+    total.min(1.0)
+}
+
+/// Union bound over `k` parallel decoding workers (Remark 3).
+pub fn union_over_workers(per_worker: f64, k: usize) -> f64 {
+    (per_worker * k as f64).min(1.0)
+}
+
+/// LRC Singleton-like bound (Eq. 2): d ≤ n − k − ⌈k/r⌉ + 2.
+pub fn lrc_distance_bound(n: usize, k: usize, r: usize) -> isize {
+    n as isize - k as isize - (k as isize + r as isize - 1) / r as isize + 2
+}
+
+/// Locality lower bound for any code tolerating ≥1 straggler (Eq. 3):
+/// r ≥ k / (n − k).
+pub fn lrc_locality_lower_bound(n: usize, k: usize) -> f64 {
+    assert!(n > k);
+    k as f64 / (n - k) as f64
+}
+
+/// The paper's optimality claim (§III-A): the local product code's locality
+/// `min(L_A, L_B)` is within a constant factor (2 + o(1)) of the lower
+/// bound for its (n, k). Returns (achieved, lower_bound).
+pub fn locality_vs_bound(l_a: usize, l_b: usize) -> (usize, f64) {
+    let k = l_a * l_b;
+    let n = (l_a + 1) * (l_b + 1);
+    (l_a.min(l_b), lrc_locality_lower_bound(n, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_small_values() {
+        assert_eq!(choose(5, 2).round() as u64, 10);
+        assert_eq!(choose(9, 6).round() as u64, 84);
+        assert_eq!(choose(9, 7).round() as u64, 36);
+        assert_eq!(choose(11, 2).round() as u64, 55);
+        assert_eq!(choose(3, 5), 0.0);
+    }
+
+    #[test]
+    fn binom_pmf_sums_to_one() {
+        let n = 30;
+        let total: f64 = (0..=n).map(|s| binom_pmf(n, s, 0.13)).sum();
+        assert!((total - 1.0).abs() < 1e-10);
+        assert!((binom_tail(n, 0, 0.13) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn thm1_paper_fig6_reference_points() {
+        // Fig 6 caption (paper formula): L=10, n=121, p=0.02 ⇒
+        // Pr(R ≥ 2E[R]) ≤ 3.1e−3. We reproduce the printed curve exactly.
+        let (n, p, l) = (121usize, 0.02, 10usize);
+        let er = expected_reads(n, p, l);
+        assert!((er - 24.2).abs() < 1e-9);
+        let b = thm1_bound_paper(2.0 * er, n, p, l);
+        assert!(
+            (b - 3.1e-3).abs() < 0.3e-3,
+            "Pr(R≥2E[R]) paper bound = {b:.4e}, caption says ≈3.1e−3"
+        );
+        // §III-B: Pr(R ≥ 100) ≤ 3.5e−10 (paper formula).
+        let b100 = thm1_bound_paper(100.0, n, p, l);
+        assert!(
+            (b100 - 3.5e-10).abs() < 1.0e-10,
+            "Pr(R≥100) paper bound = {b100:.4e}, paper says ≈3.5e−10"
+        );
+    }
+
+    #[test]
+    fn thm1_corrected_dominates_paper_form() {
+        // The corrected bound is necessarily weaker (larger) than the
+        // typo'd printed form for x > E[R].
+        let (n, p, l) = (121usize, 0.02, 10usize);
+        for x in [30.0, 50.0, 100.0] {
+            assert!(thm1_bound(x, n, p, l) >= thm1_bound_paper(x, n, p, l));
+        }
+    }
+
+    #[test]
+    fn thm1_corrected_bounds_binomial_tail() {
+        // Validity check: Pr(R ≥ x) ≤ Pr(S ≥ x/L) ≤ corrected bound —
+        // compare against the exact binomial tail.
+        let (n, p, l) = (121usize, 0.02, 10usize);
+        for x in [30.0, 50.0, 80.0, 100.0] {
+            let s0 = (x / l as f64).ceil() as usize;
+            let exact_tail = binom_tail(n, s0, p);
+            let bound = thm1_bound(x, n, p, l);
+            assert!(
+                bound >= exact_tail,
+                "x={x}: corrected bound {bound:.3e} < exact tail {exact_tail:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn cor1_matches_thm1_at_eps_np() {
+        // Paper form at ε = np: Pr(R ≥ 2E[R]) ≤ (4e)^{−np};
+        // corrected form: (4/e)^{−np}.
+        let (n, p) = (121usize, 0.02);
+        let np = n as f64 * p;
+        let via_paper = cor1_bound_paper(np, n, p);
+        let closed_paper = (4.0 * std::f64::consts::E).powf(-np);
+        assert!((via_paper - closed_paper).abs() < 1e-12);
+        let via_corr = cor1_bound(np, n, p);
+        let closed_corr = (4.0 / std::f64::consts::E).powf(-np);
+        assert!((via_corr - closed_corr).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thm1_decreasing_in_x() {
+        let (n, p, l) = (121usize, 0.02, 10usize);
+        let xs = [30.0, 50.0, 80.0, 100.0, 120.0];
+        for w in xs.windows(2) {
+            assert!(thm1_bound(w[1], n, p, l) <= thm1_bound(w[0], n, p, l));
+        }
+    }
+
+    #[test]
+    fn alpha4_exact_small_grid() {
+        // 3×3 grid (L_A=L_B=2): 4-undecodable sets = C(3,2)² = 9.
+        let a = alpha_counts(2, 2);
+        assert_eq!(a[0].round() as u64, 9);
+        // α5 = α4 (n−4) = 9·5 = 45.
+        assert_eq!(a[1].round() as u64, 45);
+    }
+
+    #[test]
+    fn thm2_fig9_reference_point() {
+        // §III-C: for L_A=L_B=10, p=0.02, a worker decodes w.p. ≥ 99.64%.
+        let b = thm2_bound(10, 10, 0.02);
+        assert!(b <= 1.0 - 0.9964 + 2e-4, "Pr(D̄) bound = {b:.4e} should be ≈3.6e−3");
+        assert!(b > 1e-4, "bound should not be vacuously small: {b:.4e}");
+    }
+
+    #[test]
+    fn thm2_has_sweet_spot_shape() {
+        // Fig 9: bound vs L is U-shaped-ish with small values in the
+        // L≈5..15 region and growth for large L.
+        let p = 0.02;
+        let small = thm2_bound(2, 2, p); // n=9 < 8? no: 9 ≥ 8 ok
+        let mid = thm2_bound(10, 10, p);
+        let large = thm2_bound(25, 25, p);
+        assert!(mid < large, "mid {mid} < large {large}");
+        // The n=9 grid has fewer blocks so fewer 4-sets, but mid should
+        // still be the same order or below `small`'s neighborhood scaled.
+        assert!(small < 1.0 && mid < 1.0 && large < 1.0);
+    }
+
+    #[test]
+    fn lrc_bounds() {
+        // Product code with one parity per axis: k = L², n = (L+1)².
+        // d = 4 must satisfy Eq. 2.
+        for l in [2usize, 5, 10] {
+            let k = l * l;
+            let n = (l + 1) * (l + 1);
+            let bound = lrc_distance_bound(n, k, l);
+            assert!(4 <= bound, "d=4 ≤ {bound} for L={l}");
+        }
+        // Eq. 3 sanity + §III-A: min(LA,LB) within 2+o(1) of the bound.
+        let (ach, low) = locality_vs_bound(10, 10);
+        assert_eq!(ach, 10);
+        assert!((low - 100.0 / 21.0).abs() < 1e-12);
+        assert!(ach as f64 >= low);
+        assert!((ach as f64) <= low * (2.0 + 0.5));
+    }
+
+    #[test]
+    fn union_bound_clamps() {
+        assert_eq!(union_over_workers(0.3, 5), 1.0);
+        assert!((union_over_workers(1e-3, 25) - 0.025).abs() < 1e-12);
+    }
+}

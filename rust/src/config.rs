@@ -1,0 +1,262 @@
+//! Configuration system: JSON config files + dotted-path overrides.
+//!
+//! Every experiment is driven by a [`Config`]: platform calibration
+//! (straggler model, worker rates), backend selection, seeds and output
+//! paths. Defaults reproduce the paper's AWS-Lambda calibration; a JSON
+//! file (`--config path.json`) and `--set key=value` overrides adjust any
+//! field, e.g. `--set platform.p=0.05 --set backend=pjrt`.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::Env;
+use crate::platform::{StragglerModel, StragglerParams, WorkerRates};
+use crate::storage::cost::CostModel;
+use crate::util::json::{obj, Json};
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Straggler-injection parameters (paper: p ≈ 0.02 on Lambda).
+    pub straggler: StragglerParams,
+    /// Worker compute/communication rates.
+    pub rates: WorkerRates,
+    /// Compute backend: "host" or "pjrt".
+    pub backend: String,
+    /// Artifacts directory for the PJRT backend.
+    pub artifacts_dir: PathBuf,
+    /// Results output directory.
+    pub results_dir: PathBuf,
+    /// Host threads for real numerics (0 ⇒ all cores).
+    pub threads: usize,
+    /// Base seed for all simulations.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            straggler: StragglerParams::default(),
+            rates: WorkerRates::default(),
+            backend: "host".into(),
+            artifacts_dir: crate::runtime::PjrtRuntime::default_dir(),
+            results_dir: PathBuf::from("results"),
+            threads: 0,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file over the defaults.
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let root = crate::util::json::load_file(path)?;
+        let mut cfg = Config::default();
+        cfg.apply_json(&root)?;
+        Ok(cfg)
+    }
+
+    /// Apply a JSON object onto this config (unknown keys are errors so
+    /// config typos fail loudly).
+    pub fn apply_json(&mut self, root: &Json) -> anyhow::Result<()> {
+        let fields = root
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config root must be an object"))?;
+        for (key, val) in fields {
+            match key.as_str() {
+                "platform" => {
+                    let sub = val
+                        .as_obj()
+                        .ok_or_else(|| anyhow::anyhow!("'platform' must be an object"))?;
+                    for (k, v) in sub {
+                        self.set(&format!("platform.{k}"), &json_scalar(v))?;
+                    }
+                }
+                other => self.set(other, &json_scalar(val))?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Set a single dotted-path field from a string value.
+    pub fn set(&mut self, path: &str, value: &str) -> anyhow::Result<()> {
+        let f64v = || -> anyhow::Result<f64> {
+            value
+                .parse()
+                .map_err(|_| anyhow::anyhow!("'{path}' expects a number, got '{value}'"))
+        };
+        match path {
+            "platform.p" => self.straggler.p = f64v()?,
+            "platform.slow_mu" => self.straggler.slow_mu = f64v()?,
+            "platform.slow_sigma" => self.straggler.slow_sigma = f64v()?,
+            "platform.slow_min" => self.straggler.slow_min = f64v()?,
+            "platform.slow_max" => self.straggler.slow_max = f64v()?,
+            "platform.jitter_sigma" => self.straggler.jitter_sigma = f64v()?,
+            "platform.invoke_mean_s" => self.rates.invoke_mean_s = f64v()?,
+            "platform.invoke_sigma" => self.rates.invoke_sigma = f64v()?,
+            "platform.flops_per_s" => self.rates.flops_per_s = f64v()?,
+            "platform.s3_latency_s" => self.rates.cost.op_latency_s = f64v()?,
+            "platform.s3_bandwidth_bps" => self.rates.cost.bandwidth_bps = f64v()?,
+            "backend" => {
+                anyhow::ensure!(
+                    value == "host" || value == "pjrt",
+                    "backend must be 'host' or 'pjrt', got '{value}'"
+                );
+                self.backend = value.to_string();
+            }
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "results_dir" => self.results_dir = PathBuf::from(value),
+            "threads" => self.threads = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// The straggler model this config describes.
+    pub fn model(&self) -> StragglerModel {
+        StragglerModel::new(self.straggler, self.rates)
+    }
+
+    /// Build the execution environment. For the PJRT backend the returned
+    /// runtime must outlive the env.
+    pub fn build_env(&self) -> anyhow::Result<(Env, Option<crate::runtime::PjrtRuntime>)> {
+        let threads = if self.threads == 0 {
+            crate::util::threadpool::num_threads()
+        } else {
+            self.threads
+        };
+        let (backend, rt): (
+            std::sync::Arc<dyn crate::runtime::ComputeBackend>,
+            Option<crate::runtime::PjrtRuntime>,
+        ) = match self.backend.as_str() {
+            "pjrt" => {
+                let rt = crate::runtime::PjrtRuntime::start(&self.artifacts_dir)?;
+                (
+                    std::sync::Arc::new(crate::runtime::PjrtBackend::new(rt.handle())),
+                    Some(rt),
+                )
+            }
+            _ => (std::sync::Arc::new(crate::runtime::HostBackend), None),
+        };
+        let env = Env {
+            backend,
+            store: std::sync::Arc::new(crate::storage::InMemoryStore::new()),
+            model: self.model(),
+            threads,
+        };
+        Ok((env, rt))
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj()
+            .field(
+                "platform",
+                obj()
+                    .field("p", self.straggler.p)
+                    .field("slow_mu", self.straggler.slow_mu)
+                    .field("slow_sigma", self.straggler.slow_sigma)
+                    .field("slow_min", self.straggler.slow_min)
+                    .field("slow_max", self.straggler.slow_max)
+                    .field("jitter_sigma", self.straggler.jitter_sigma)
+                    .field("invoke_mean_s", self.rates.invoke_mean_s)
+                    .field("invoke_sigma", self.rates.invoke_sigma)
+                    .field("flops_per_s", self.rates.flops_per_s)
+                    .field("s3_latency_s", self.rates.cost.op_latency_s)
+                    .field("s3_bandwidth_bps", self.rates.cost.bandwidth_bps)
+                    .build(),
+            )
+            .field("backend", self.backend.as_str())
+            .field("artifacts_dir", self.artifacts_dir.display().to_string())
+            .field("results_dir", self.results_dir.display().to_string())
+            .field("threads", self.threads)
+            .field("seed", self.seed)
+            .build()
+    }
+
+    /// Write a JSON result document under `results_dir`.
+    pub fn write_result(&self, name: &str, value: &Json) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(&self.results_dir)?;
+        let path = self.results_dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+fn json_scalar(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string_compact(),
+    }
+}
+
+/// A default CostModel mirror (re-exported for doc purposes).
+pub fn default_cost() -> CostModel {
+    CostModel::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_calibration() {
+        let c = Config::default();
+        assert!((c.straggler.p - 0.02).abs() < 1e-12);
+        assert_eq!(c.backend, "host");
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::default();
+        c.set("platform.p", "0.05").unwrap();
+        c.set("backend", "pjrt").unwrap();
+        c.set("seed", "7").unwrap();
+        c.set("threads", "2").unwrap();
+        assert!((c.straggler.p - 0.05).abs() < 1e-12);
+        assert_eq!(c.backend, "pjrt");
+        assert_eq!(c.seed, 7);
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("platform.p", "abc").is_err());
+        assert!(c.set("backend", "gpu").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Config::default();
+        c.set("platform.p", "0.1").unwrap();
+        c.set("platform.flops_per_s", "5e8").unwrap();
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert!((c2.straggler.p - 0.1).abs() < 1e-12);
+        assert!((c2.rates.flops_per_s - 5e8).abs() < 1.0);
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join(format!("slec-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"platform": {"p": 0.03}, "seed": 9}"#).unwrap();
+        let c = Config::load(&path).unwrap();
+        assert!((c.straggler.p - 0.03).abs() < 1e-12);
+        assert_eq!(c.seed, 9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_json_key_fails() {
+        let mut c = Config::default();
+        let j = crate::util::json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn build_env_host() {
+        let c = Config::default();
+        let (env, rt) = c.build_env().unwrap();
+        assert!(rt.is_none());
+        assert_eq!(env.backend.name(), "host");
+        assert!(env.threads >= 1);
+    }
+}

@@ -1,0 +1,894 @@
+//! The coded matrix-multiplication workflow — the paper's Fig-2 pipeline
+//! (`f_enc → f_comp → f_dec`, all phases on simulated serverless workers)
+//! for every scheme: local product codes (the contribution), speculative
+//! execution, uncoded, global-parity product codes, polynomial codes.
+//!
+//! Virtual time and real numerics advance together: the straggler model
+//! decides *which* output blocks arrive before the earliest-decodable
+//! cutoff, and the decode phase must then *really* reconstruct the missing
+//! blocks from parities (through the compute backend, i.e. the PJRT
+//! artifacts) — so every simulated run is also an end-to-end numerical
+//! test against `A·Bᵀ`.
+
+use std::sync::Arc;
+
+use crate::codes::local_product::LocalProductCode;
+use crate::codes::peeling::plan_peel;
+use crate::codes::polynomial::PolynomialCode;
+use crate::codes::product::ProductCode;
+use crate::codes::Scheme;
+use crate::coordinator::metrics::JobReport;
+use crate::linalg::blocked::{assemble_grid, GridShape, Partition};
+use crate::linalg::matrix::Matrix;
+use crate::platform::{launch, recompute_round, speculative, StragglerModel, WorkProfile};
+use crate::runtime::ComputeBackend;
+use crate::storage::{keys, InMemoryStore};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::{num_threads, parallel_map};
+
+/// Shared execution environment.
+pub struct Env {
+    pub backend: Arc<dyn ComputeBackend>,
+    pub store: Arc<InMemoryStore>,
+    pub model: StragglerModel,
+    /// Host threads used to execute the real numerics.
+    pub threads: usize,
+}
+
+impl Env {
+    /// Host-backend environment with default platform calibration.
+    pub fn host() -> Env {
+        Env {
+            backend: Arc::new(crate::runtime::HostBackend),
+            store: Arc::new(InMemoryStore::new()),
+            model: StragglerModel::new(Default::default(), Default::default()),
+            threads: num_threads(),
+        }
+    }
+
+    /// Environment with an explicit backend (e.g. PJRT).
+    pub fn with_backend(backend: Arc<dyn ComputeBackend>) -> Env {
+        Env {
+            backend,
+            store: Arc::new(InMemoryStore::new()),
+            model: StragglerModel::new(Default::default(), Default::default()),
+            threads: num_threads(),
+        }
+    }
+}
+
+/// A coded matmul job description (`C = A·Bᵀ`).
+#[derive(Debug, Clone)]
+pub struct MatmulJob {
+    /// Systematic row-blocks of A / B.
+    pub s_a: usize,
+    pub s_b: usize,
+    pub scheme: Scheme,
+    /// Parallel decoding workers (Remark 3).
+    pub decode_workers: usize,
+    /// Parallel encoding workers (Remark 1: encoding is column-sliced
+    /// across a small worker fleet, <10% of the compute phase; 0 ⇒ auto =
+    /// ceil(compute_tasks / 10)).
+    pub encode_workers: usize,
+    /// Verify the output against the direct product (costs a host GEMM).
+    pub verify: bool,
+    pub seed: u64,
+    /// Unique job id for store keys.
+    pub job_id: String,
+    /// Full-matrix dims `(rows_a, k, rows_b)` used for the *virtual-time*
+    /// work profiles. `None` ⇒ the actual matrix dims. Figure harnesses
+    /// set this to the PAPER's scale (e.g. 0.5M) so simulated seconds are
+    /// comparable to the paper's plots while the verified numerics run at
+    /// lab scale (DESIGN.md §Virtual-time model).
+    pub virtual_dims: Option<(usize, usize, usize)>,
+}
+
+impl Default for MatmulJob {
+    fn default() -> Self {
+        MatmulJob {
+            s_a: 4,
+            s_b: 4,
+            scheme: Scheme::LocalProduct { l_a: 2, l_b: 2 },
+            decode_workers: 4,
+            encode_workers: 0,
+            verify: true,
+            seed: 0,
+            job_id: "job".into(),
+            virtual_dims: None,
+        }
+    }
+}
+
+impl MatmulJob {
+    /// Virtual-time dims for profile building.
+    fn vdims(&self, a: &Matrix, b: &Matrix) -> (usize, usize, usize) {
+        self.virtual_dims.unwrap_or((a.rows, a.cols, b.rows))
+    }
+
+    /// Encode fleet size (Remark 1): explicit or ~10% of compute tasks.
+    fn encode_fleet(&self, compute_tasks: usize) -> usize {
+        if self.encode_workers > 0 {
+            self.encode_workers
+        } else {
+            compute_tasks.div_ceil(10).max(1)
+        }
+    }
+}
+
+/// Column-sliced encode-phase profile: the side's parities total
+/// `groups·l` block-reads of `block_rows × k` each; `fleet` workers split
+/// the columns evenly, each writing its slice of every parity.
+fn sliced_encode_profile(
+    groups: usize,
+    l: usize,
+    block_rows: usize,
+    k: usize,
+    fleet: usize,
+) -> WorkProfile {
+    let total_read = (groups * l * block_rows * k * 4) as u64;
+    let total_write = (groups * block_rows * k * 4) as u64;
+    WorkProfile {
+        bytes_read: total_read / fleet as u64,
+        // Ranged GETs, split across the fleet like the bytes.
+        read_ops: (groups * l).div_ceil(fleet) as u64,
+        flops: (groups * (l - 1).max(1) * block_rows * k) as f64 / fleet as f64,
+        bytes_written: total_write / fleet as u64,
+        write_ops: groups.div_ceil(fleet) as u64,
+    }
+}
+
+/// Run the job; returns the output matrix and the phase report.
+pub fn run_matmul(env: &Env, a: &Matrix, b: &Matrix, job: &MatmulJob) -> anyhow::Result<(Matrix, JobReport)> {
+    anyhow::ensure!(a.cols == b.cols, "A (m×n) · Bᵀ needs matching n");
+    anyhow::ensure!(a.rows % job.s_a == 0, "A rows must divide s_a");
+    anyhow::ensure!(b.rows % job.s_b == 0, "B rows must divide s_b");
+    let mut rng = Pcg64::new(job.seed);
+
+    let (c, mut report) = match job.scheme {
+        Scheme::Uncoded => run_uncoded(env, a, b, job, &mut rng, None)?,
+        Scheme::Speculative { wait_frac } => {
+            run_uncoded(env, a, b, job, &mut rng, Some(wait_frac))?
+        }
+        Scheme::LocalProduct { l_a, l_b } => run_local_product(env, a, b, job, l_a, l_b, &mut rng)?,
+        Scheme::Product { t_a, t_b } => run_product(env, a, b, job, t_a, t_b, &mut rng)?,
+        Scheme::Polynomial { redundancy } => run_polynomial(env, a, b, job, redundancy, &mut rng)?,
+    };
+
+    if job.verify && report.numerics_ok {
+        let direct = env.backend.block_product(a, b);
+        report.rel_err = c.rel_err(&direct);
+    }
+    Ok((c, report))
+}
+
+// ---------------------------------------------------------------------------
+// Uncoded / speculative
+// ---------------------------------------------------------------------------
+
+fn run_uncoded(
+    env: &Env,
+    a: &Matrix,
+    b: &Matrix,
+    job: &MatmulJob,
+    rng: &mut Pcg64,
+    wait_frac: Option<f64>,
+) -> anyhow::Result<(Matrix, JobReport)> {
+    let mut report = JobReport::new(if wait_frac.is_some() {
+        "speculative"
+    } else {
+        "uncoded"
+    });
+    let pa = Partition::new(a.rows, a.cols, job.s_a);
+    let pb = Partition::new(b.rows, b.cols, job.s_b);
+    let a_blocks = pa.split(a);
+    let b_blocks = pb.split(b);
+
+    // Virtual compute phase over s_a × s_b tasks (profiles at virtual dims).
+    let (vm, vk, vl) = job.vdims(a, b);
+    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
+    let n_tasks = job.s_a * job.s_b;
+    let phase = launch(&env.model, &profile, n_tasks, rng);
+    report.comp.tasks = n_tasks;
+    report.comp.stragglers = phase.straggled.iter().filter(|&&s| s).count();
+    report.comp.virtual_secs = match wait_frac {
+        None => phase.wait_all(),
+        Some(f) => {
+            let out = speculative(&env.model, &profile, &phase, f, rng);
+            report.comp.relaunched = out.relaunched;
+            out.makespan
+        }
+    };
+
+    // Numerics: every block is eventually computed.
+    let blocks = compute_products(env, &a_blocks, &b_blocks, |_i, _j| true);
+    let shape = GridShape { rows: job.s_a, cols: job.s_b };
+    let c = assemble_grid(shape, &blocks.into_iter().map(Option::unwrap).collect::<Vec<_>>());
+    Ok((c, report))
+}
+
+// ---------------------------------------------------------------------------
+// Local product code (the paper's scheme)
+// ---------------------------------------------------------------------------
+
+fn run_local_product(
+    env: &Env,
+    a: &Matrix,
+    b: &Matrix,
+    job: &MatmulJob,
+    l_a: usize,
+    l_b: usize,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(Matrix, JobReport)> {
+    anyhow::ensure!(job.s_a % l_a == 0, "s_a ({}) % l_a ({l_a}) != 0", job.s_a);
+    anyhow::ensure!(job.s_b % l_b == 0, "s_b ({}) % l_b ({l_b}) != 0", job.s_b);
+    let mut report = JobReport::new("local-product");
+    let code = LocalProductCode::new(job.s_a, l_a, job.s_b, l_b);
+    report.redundancy = code.redundancy();
+
+    let pa = Partition::new(a.rows, a.cols, job.s_a);
+    let pb = Partition::new(b.rows, b.cols, job.s_b);
+    let a_blocks = pa.split(a);
+    let b_blocks = pb.split(b);
+
+    // --- Encode phase: column-sliced across a small fleet (Remark 1),
+    // straggler-protected by speculative relaunch.
+    let (vm, vk, vl) = job.vdims(a, b);
+    let (ra, rb) = code.coded_grid();
+    let fleet = job.encode_fleet(ra * rb);
+    let enc_profile_a = sliced_encode_profile(
+        code.a.groups() + code.b.groups(),
+        l_a.max(l_b),
+        vm / job.s_a,
+        vk,
+        fleet,
+    );
+    let enc_phase = launch(&env.model, &enc_profile_a, fleet, rng);
+    let enc_out = speculative(&env.model, &enc_profile_a, &enc_phase, 0.95, rng);
+    report.enc.tasks = fleet;
+    report.enc.stragglers = enc_phase.straggled.iter().filter(|&&s| s).count();
+    report.enc.relaunched = enc_out.relaunched;
+    report.enc.virtual_secs = enc_out.makespan;
+    report.enc.blocks_read = l_a * code.a.groups() + l_b * code.b.groups();
+
+    // Numerics: encode both sides through the backend, stash in the store
+    // (the serverless dataflow — workers exchange blocks via storage).
+    let backend = &env.backend;
+    let a_coded = encode_side_numeric(backend.as_ref(), code.a, &a_blocks);
+    let b_coded = encode_side_numeric(backend.as_ref(), code.b, &b_blocks);
+    for (i, blk) in a_coded.iter().enumerate() {
+        crate::storage::put_matrix(env.store.as_ref(), &keys::coded_block(&job.job_id, "a", i), blk);
+    }
+    for (j, blk) in b_coded.iter().enumerate() {
+        crate::storage::put_matrix(env.store.as_ref(), &keys::coded_block(&job.job_id, "b", j), blk);
+    }
+
+    // --- Compute phase: (ra × rb) coded block products; terminate at the
+    // earliest virtual time every local grid is peeling-decodable.
+    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
+    let phase = launch(&env.model, &profile, ra * rb, rng);
+    report.comp.tasks = ra * rb;
+    report.comp.stragglers = phase.straggled.iter().filter(|&&s| s).count();
+
+    let (ga, gb) = code.groups();
+    let grid_of = |cell: usize| -> usize {
+        let (r, c) = (cell / rb, cell % rb);
+        (r / (l_a + 1)) * gb + (c / (l_b + 1))
+    };
+    let mut arrived = vec![false; ra * rb];
+    let mut pending: std::collections::BTreeSet<usize> = (0..ga * gb).collect();
+    let mut t_comp = 0.0;
+    for &cell in &phase.arrival_order() {
+        arrived[cell] = true;
+        t_comp = phase.finish[cell];
+        let g = grid_of(cell);
+        if pending.contains(&g) && grid_decodable(&code, g, &arrived, rb) {
+            pending.remove(&g);
+        }
+        if pending.is_empty() {
+            break;
+        }
+    }
+    report.comp.virtual_secs = t_comp;
+
+    // Numerics: compute the arrived products only. The rest are the
+    // stragglers decode must reconstruct.
+    let mut grid: Vec<Option<Matrix>> = {
+        let arrived_ref = &arrived;
+        let a_ref = &a_coded;
+        let b_ref = &b_coded;
+        parallel_map(env.threads, ra * rb, move |cell| {
+            if arrived_ref[cell] {
+                let (i, j) = (cell / rb, cell % rb);
+                Some(env.backend.block_product(&a_ref[i], &b_ref[j]))
+            } else {
+                None
+            }
+        })
+    };
+
+    // --- Decode phase: decode workers peel their grids in parallel.
+    let missing_before = grid.iter().filter(|c| c.is_none()).count();
+    let mut plans = Vec::with_capacity(ga * gb);
+    for gi in 0..ga {
+        for gj in 0..gb {
+            // Extract local grid, decode numerically, write back.
+            let mut cells: Vec<Option<Matrix>> = Vec::with_capacity((l_a + 1) * (l_b + 1));
+            for r in 0..=l_a {
+                for c in 0..=l_b {
+                    let (cr, cc) = code.grid_cell(gi, gj, r, c);
+                    cells.push(grid[cr * rb + cc].take());
+                }
+            }
+            let plan = decode_numeric(env.backend.as_ref(), l_a, l_b, &mut cells);
+            let mut it = cells.into_iter();
+            for r in 0..=l_a {
+                for c in 0..=l_b {
+                    let (cr, cc) = code.grid_cell(gi, gj, r, c);
+                    grid[cr * rb + cc] = it.next().unwrap();
+                }
+            }
+            plans.push(plan);
+        }
+    }
+
+    // Virtual decode time: grids round-robin over decode workers; each
+    // worker's time is sampled from its aggregate read/write profile.
+    let out_bytes = ((vm / job.s_a) * (vl / job.s_b) * 4) as u64;
+    let workers = job.decode_workers.max(1);
+    // Individual recoveries are (almost always) independent, so decode
+    // workers split the recovery *steps*, not whole grids (Remark 3).
+    let mut per_worker_reads = vec![0usize; workers];
+    let mut per_worker_writes = vec![0usize; workers];
+    let mut next = 0usize;
+    for plan in plans.iter() {
+        for step in &plan.steps {
+            per_worker_reads[next % workers] += step.reads;
+            per_worker_writes[next % workers] += 1;
+            next += 1;
+        }
+    }
+    // Only grids with recovery work need a decode worker; an all-arrived
+    // output needs no decode phase at all.
+    let dec_profiles: Vec<WorkProfile> = per_worker_reads
+        .iter()
+        .zip(&per_worker_writes)
+        .filter(|(&reads, _)| reads > 0)
+        .map(|(&reads, &writes)| WorkProfile {
+            bytes_read: reads as u64 * out_bytes,
+            read_ops: reads as u64,
+            flops: (reads * (vm / job.s_a) * (vl / job.s_b)) as f64,
+            bytes_written: writes as u64 * out_bytes,
+            write_ops: writes as u64,
+        })
+        .collect();
+    report.dec.tasks = dec_profiles.len();
+    report.dec.blocks_read = plans.iter().map(|p| p.total_reads).sum();
+    if !dec_profiles.is_empty() {
+        let dec_phase = crate::platform::launch_tasks(&env.model, &dec_profiles, rng);
+        let dec_out = speculative(&env.model, &dec_profiles[0], &dec_phase, 0.8, rng);
+        report.dec.relaunched = dec_out.relaunched;
+        report.dec.virtual_secs = dec_out.makespan;
+    }
+
+    // Undecodable grids (rare, Thm 2): recompute the still-missing cells.
+    let undecodable: usize = plans.iter().map(|p| p.undecodable.len()).sum();
+    if undecodable > 0 {
+        let t_rec = recompute_round(&env.model, &profile, undecodable, 0.0, rng);
+        report.dec.virtual_secs += t_rec;
+        report.dec.relaunched += undecodable;
+        let grid_slice = &mut grid;
+        for cell in 0..ra * rb {
+            if grid_slice[cell].is_none() {
+                let (i, j) = (cell / rb, cell % rb);
+                grid_slice[cell] = Some(env.backend.block_product(&a_coded[i], &b_coded[j]));
+            }
+        }
+    }
+    let _ = missing_before;
+
+    // Extract systematic output.
+    let sys = crate::codes::local_product::extract_systematic(&code, &grid)?;
+    for (idx, blk) in sys.iter().enumerate() {
+        let (i, j) = (idx / job.s_b, idx % job.s_b);
+        crate::storage::put_matrix(env.store.as_ref(), &keys::result_block(&job.job_id, i, j), blk);
+    }
+    let c = assemble_grid(GridShape { rows: job.s_a, cols: job.s_b }, &sys);
+    Ok((c, report))
+}
+
+/// Is local grid `g` decodable given the arrival mask?
+fn grid_decodable(code: &LocalProductCode, g: usize, arrived: &[bool], rb: usize) -> bool {
+    let (l_a, l_b) = (code.a.l, code.b.l);
+    let gb = code.b.groups();
+    let (gi, gj) = (g / gb, g % gb);
+    let mut present = Vec::with_capacity((l_a + 1) * (l_b + 1));
+    for r in 0..=l_a {
+        for c in 0..=l_b {
+            let (cr, cc) = code.grid_cell(gi, gj, r, c);
+            present.push(arrived[cr * rb + cc]);
+        }
+    }
+    plan_peel(l_a + 1, l_b + 1, &present).decodable()
+}
+
+/// Backend-routed side encode (each parity via `stack_sum`).
+fn encode_side_numeric(
+    backend: &dyn ComputeBackend,
+    layout: crate::codes::layout::LocalLayout,
+    blocks: &[Matrix],
+) -> Vec<Matrix> {
+    use crate::codes::layout::CodedBlock;
+    (0..layout.coded_len())
+        .map(|k| match layout.block_at(k) {
+            CodedBlock::Systematic { orig } => blocks[orig].clone(),
+            CodedBlock::Parity { group } => {
+                let members: Vec<&Matrix> =
+                    layout.group_members(group).map(|m| &blocks[m]).collect();
+                backend.stack_sum(&members)
+            }
+        })
+        .collect()
+}
+
+/// Backend-routed peeling decode of one local grid (numeric twin of
+/// [`decode_local_grid`], but every recovery runs through the compute
+/// backend so the PJRT `parity_residual` / `stack_sum` artifacts are on
+/// the decode hot path).
+fn decode_numeric(
+    backend: &dyn ComputeBackend,
+    l_a: usize,
+    l_b: usize,
+    cells: &mut [Option<Matrix>],
+) -> crate::codes::peeling::PeelPlan {
+    use crate::codes::peeling::Axis;
+    let rows = l_a + 1;
+    let cols = l_b + 1;
+    let present: Vec<bool> = cells.iter().map(Option::is_some).collect();
+    let plan = plan_peel(rows, cols, &present);
+    for step in &plan.steps {
+        let (r, c) = step.cell;
+        let line: Vec<usize> = match step.axis {
+            Axis::Row => (0..cols).map(|cc| r * cols + cc).collect(),
+            Axis::Col => (0..rows).map(|rr| rr * cols + c).collect(),
+        };
+        let target = r * cols + c;
+        let parity_idx = *line.last().unwrap();
+        let value = if target == parity_idx {
+            let members: Vec<&Matrix> = line[..line.len() - 1]
+                .iter()
+                .map(|&i| cells[i].as_ref().expect("plan order"))
+                .collect();
+            backend.stack_sum(&members)
+        } else {
+            let parity = cells[parity_idx].as_ref().expect("plan order").clone();
+            let survivors: Vec<&Matrix> = line[..line.len() - 1]
+                .iter()
+                .filter(|&&i| i != target)
+                .map(|&i| cells[i].as_ref().expect("plan order"))
+                .collect();
+            backend.parity_residual(&parity, &survivors)
+        };
+        cells[target] = Some(value);
+    }
+    plan
+}
+
+// ---------------------------------------------------------------------------
+// Product code baseline (global parities)
+// ---------------------------------------------------------------------------
+
+fn run_product(
+    env: &Env,
+    a: &Matrix,
+    b: &Matrix,
+    job: &MatmulJob,
+    t_a: usize,
+    t_b: usize,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(Matrix, JobReport)> {
+    let mut report = JobReport::new("product");
+    let pc = ProductCode::new(job.s_a, t_a, job.s_b, t_b);
+    report.redundancy = pc.redundancy();
+    let pa = Partition::new(a.rows, a.cols, job.s_a);
+    let pb = Partition::new(b.rows, b.cols, job.s_b);
+    let a_blocks = pa.split(a);
+    let b_blocks = pb.split(b);
+
+    // Encode: each parity reads ALL s blocks of its side (global parities
+    // — the encode-cost handicap vs local codes), column-sliced across
+    // the same small fleet.
+    let (vm, vk, vl) = job.vdims(a, b);
+    let (ra, rb) = pc.coded_grid();
+    let fleet = job.encode_fleet(ra * rb);
+    let enc_profile = sliced_encode_profile(
+        t_a + t_b,
+        job.s_a.max(job.s_b),
+        vm / job.s_a,
+        vk,
+        fleet,
+    );
+    let enc_phase = launch(&env.model, &enc_profile, fleet, rng);
+    let enc_out = speculative(&env.model, &enc_profile, &enc_phase, 0.95, rng);
+    report.enc.tasks = fleet;
+    report.enc.virtual_secs = enc_out.makespan;
+    report.enc.blocks_read = t_a * job.s_a + t_b * job.s_b;
+
+    let (ac, bc) = pc.encode_sides(&a_blocks, &b_blocks);
+
+    // Compute phase with earliest-decodable termination.
+    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
+    let phase = launch(&env.model, &profile, ra * rb, rng);
+    report.comp.tasks = ra * rb;
+    report.comp.stragglers = phase.straggled.iter().filter(|&&s| s).count();
+    let mut arrived = vec![false; ra * rb];
+    let mut t_comp = 0.0;
+    for &cell in &phase.arrival_order() {
+        arrived[cell] = true;
+        t_comp = phase.finish[cell];
+        if product_decodable(&pc, &arrived) {
+            break;
+        }
+    }
+    report.comp.virtual_secs = t_comp;
+
+    // Numerics over arrived cells.
+    let mut grid: Vec<Option<Matrix>> = {
+        let arrived_ref = &arrived;
+        let ac_ref = &ac;
+        let bc_ref = &bc;
+        parallel_map(env.threads, ra * rb, move |cell| {
+            if arrived_ref[cell] {
+                let (i, j) = (cell / rb, cell % rb);
+                Some(env.backend.block_product(&ac_ref[i], &bc_ref[j]))
+            } else {
+                None
+            }
+        })
+    };
+
+    let dec = pc.decode(&mut grid)?;
+    let out_bytes = ((vm / job.s_a) * (vl / job.s_b) * 4) as u64;
+    report.dec.blocks_read = dec.blocks_read;
+    if dec.blocks_read > 0 {
+        // Unlike the local scheme's independent grids, the product code's
+        // row/column recovery passes are globally coupled (a column pass
+        // feeds the next row pass), so decode does not parallelize across
+        // workers — the paper's "huge communication overhead" (§II-B).
+        let workers = 1usize;
+        let _ = job.decode_workers;
+        let per_worker_reads = dec.blocks_read.div_ceil(workers);
+        let dec_profile = WorkProfile {
+            bytes_read: per_worker_reads as u64 * out_bytes,
+            read_ops: per_worker_reads as u64,
+            flops: (dec.blocks_read * (vm / job.s_a) * (vl / job.s_b)) as f64 / workers as f64,
+            bytes_written: (dec.recovered.max(1) as u64) * out_bytes / workers as u64,
+            write_ops: dec.recovered.div_ceil(workers) as u64,
+        };
+        let dec_phase = launch(&env.model, &dec_profile, workers, rng);
+        let dec_out = speculative(&env.model, &dec_profile, &dec_phase, 0.8, rng);
+        report.dec.tasks = workers;
+        report.dec.virtual_secs = dec_out.makespan;
+    }
+
+    let c = assemble_grid(
+        GridShape { rows: job.s_a, cols: job.s_b },
+        &dec.systematic,
+    );
+    Ok((c, report))
+}
+
+/// Boolean decodability for the product code: iterate axis recoveries on
+/// the arrival mask to fixpoint.
+fn product_decodable(pc: &ProductCode, arrived: &[bool]) -> bool {
+    let (ra, rb) = pc.coded_grid();
+    let s_a = pc.row_code.systematic;
+    let s_b = pc.col_code.systematic;
+    let mut have = arrived.to_vec();
+    loop {
+        let mut progressed = false;
+        for c in 0..rb {
+            let miss = (0..s_a).filter(|&r| !have[r * rb + c]).count();
+            let par = (s_a..ra).filter(|&r| have[r * rb + c]).count();
+            if miss > 0 && miss <= par {
+                for r in 0..s_a {
+                    have[r * rb + c] = true;
+                }
+                progressed = true;
+            }
+        }
+        for r in 0..s_a {
+            let miss = (0..s_b).filter(|&c| !have[r * rb + c]).count();
+            let par = (s_b..rb).filter(|&c| have[r * rb + c]).count();
+            if miss > 0 && miss <= par {
+                for c in 0..s_b {
+                    have[r * rb + c] = true;
+                }
+                progressed = true;
+            }
+        }
+        let all = (0..s_a).all(|r| (0..s_b).all(|c| have[r * rb + c]));
+        if all {
+            return true;
+        }
+        if !progressed {
+            return false;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Polynomial code baseline
+// ---------------------------------------------------------------------------
+
+/// Past this recovery threshold the real-arithmetic Vandermonde decode is
+/// numerically meaningless (and the paper's master "cannot store" the
+/// blocks): report virtual time but mark numerics infeasible.
+pub const POLY_NUMERIC_CAP: usize = 64;
+
+fn run_polynomial(
+    env: &Env,
+    a: &Matrix,
+    b: &Matrix,
+    job: &MatmulJob,
+    redundancy: f64,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(Matrix, JobReport)> {
+    let mut report = JobReport::new("polynomial");
+    let k = job.s_a * job.s_b;
+    let n_workers = ((k as f64) * (1.0 + redundancy)).ceil() as usize;
+    let code = PolynomialCode::new(job.s_a, job.s_b, n_workers);
+    report.redundancy = code.redundancy();
+
+    let pa = Partition::new(a.rows, a.cols, job.s_a);
+    let pb = Partition::new(b.rows, b.cols, job.s_b);
+    let a_blocks = pa.split(a);
+    let b_blocks = pb.split(b);
+
+    // Encode: every one of the n_workers coded inputs Ã_k/B̃_k is a
+    // weighted sum of ALL the side's blocks — n× more encode volume than
+    // the local scheme. Column-sliced across a fleet sized like the other
+    // schemes' (10% of compute) for a fair comparison.
+    let (vm, vk, vl) = job.vdims(a, b);
+    let fleet = job.encode_fleet(n_workers);
+    let enc_profile = sliced_encode_profile(
+        2 * n_workers,
+        job.s_a.max(job.s_b),
+        vm / job.s_a,
+        vk,
+        fleet,
+    );
+    let enc_phase = launch(&env.model, &enc_profile, fleet, rng);
+    let enc_out = speculative(&env.model, &enc_profile, &enc_phase, 0.95, rng);
+    report.enc.tasks = fleet;
+    report.enc.virtual_secs = enc_out.makespan;
+    report.enc.blocks_read = n_workers * (job.s_a + job.s_b);
+
+    // Compute: n_workers tasks; MDS termination at the K-th arrival.
+    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
+    let phase = launch(&env.model, &profile, n_workers, rng);
+    report.comp.tasks = n_workers;
+    report.comp.stragglers = phase.straggled.iter().filter(|&&s| s).count();
+    report.comp.virtual_secs = phase.wait_k(k);
+
+    // Decode: EVERY decode worker reads all K blocks (the paper's
+    // communication-overhead point) and the interpolation costs K² block
+    // combines.
+    let out_bytes = ((vm / job.s_a) * (vl / job.s_b) * 4) as u64;
+    let workers = job.decode_workers.max(1);
+    let per_worker_blocks = k; // locality = K: no partial reads possible
+    let dec_profile = WorkProfile {
+        bytes_read: per_worker_blocks as u64 * out_bytes,
+        read_ops: per_worker_blocks as u64,
+        flops: (k * k / workers) as f64 * ((vm / job.s_a) * (vl / job.s_b)) as f64,
+        bytes_written: (k / workers).max(1) as u64 * out_bytes,
+        write_ops: (k / workers).max(1) as u64,
+    };
+    let dec_phase = launch(&env.model, &dec_profile, workers, rng);
+    report.dec.tasks = workers;
+    report.dec.blocks_read = workers * k;
+    report.dec.virtual_secs = dec_phase.wait_all();
+
+    // Numerics only below the conditioning wall.
+    if k > POLY_NUMERIC_CAP {
+        report.numerics_ok = false;
+        return Ok((Matrix::zeros(a.rows, b.rows), report));
+    }
+    let order = phase.arrival_order();
+    let first_k: Vec<usize> = order[..k].to_vec();
+    let results: Vec<(usize, Matrix)> = {
+        let a_ref = &a_blocks;
+        let b_ref = &b_blocks;
+        let code_ref = &code;
+        parallel_map(env.threads, k, move |t| {
+            let w = first_k[t];
+            let at = code_ref.encode_a(a_ref, w);
+            let bt = code_ref.encode_b(b_ref, w);
+            (w, env.backend.block_product(&at, &bt))
+        })
+    };
+    let (blocks, _) = code.decode(&results)?;
+    let c = assemble_grid(GridShape { rows: job.s_a, cols: job.s_b }, &blocks);
+    Ok((c, report))
+}
+
+// ---------------------------------------------------------------------------
+// Shared numeric helpers
+// ---------------------------------------------------------------------------
+
+fn compute_products(
+    env: &Env,
+    a_blocks: &[Matrix],
+    b_blocks: &[Matrix],
+    include: impl Fn(usize, usize) -> bool + Sync,
+) -> Vec<Option<Matrix>> {
+    let sb = b_blocks.len();
+    parallel_map(env.threads, a_blocks.len() * sb, move |cell| {
+        let (i, j) = (cell / sb, cell % sb);
+        if include(i, j) {
+            Some(env.backend.block_product(&a_blocks[i], &b_blocks[j]))
+        } else {
+            None
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_bt;
+    use crate::storage::ObjectStore;
+
+    fn env() -> Env {
+        Env::host()
+    }
+
+    fn inputs(m: usize, n: usize, l: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Pcg64::new(seed);
+        (
+            Matrix::randn(m, n, &mut rng, 0.0, 1.0),
+            Matrix::randn(l, n, &mut rng, 0.0, 1.0),
+        )
+    }
+
+    #[test]
+    fn local_product_end_to_end_correct() {
+        let env = env();
+        let (a, b) = inputs(64, 48, 64, 1);
+        let job = MatmulJob {
+            s_a: 4,
+            s_b: 4,
+            scheme: Scheme::LocalProduct { l_a: 2, l_b: 2 },
+            seed: 7,
+            ..Default::default()
+        };
+        let (c, report) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert!(report.rel_err < 1e-4, "rel_err={}", report.rel_err);
+        assert!(c.rel_err(&matmul_bt(&a, &b)) < 1e-4);
+        assert!(report.total_secs() > 0.0);
+        assert!((report.redundancy - 1.25).abs() < 1e-9); // (3·3)/(2·2)−1
+    }
+
+    #[test]
+    fn local_product_correct_across_seeds() {
+        // Different seeds ⇒ different straggler patterns; decode must
+        // always reconstruct the exact product.
+        let env = env();
+        let (a, b) = inputs(48, 32, 48, 2);
+        for seed in 0..8 {
+            let job = MatmulJob {
+                s_a: 4,
+                s_b: 4,
+                scheme: Scheme::LocalProduct { l_a: 2, l_b: 2 },
+                seed,
+                job_id: format!("seed{seed}"),
+                ..Default::default()
+            };
+            let (_, report) = run_matmul(&env, &a, &b, &job).unwrap();
+            assert!(report.rel_err < 1e-4, "seed {seed}: {}", report.rel_err);
+        }
+    }
+
+    #[test]
+    fn speculative_and_uncoded_correct() {
+        let env = env();
+        let (a, b) = inputs(32, 24, 32, 3);
+        for scheme in [Scheme::Uncoded, Scheme::Speculative { wait_frac: 0.75 }] {
+            let job = MatmulJob {
+                s_a: 4,
+                s_b: 4,
+                scheme,
+                seed: 5,
+                ..Default::default()
+            };
+            let (_, report) = run_matmul(&env, &a, &b, &job).unwrap();
+            assert!(report.rel_err < 1e-5, "{}: {}", report.scheme, report.rel_err);
+            assert_eq!(report.enc.virtual_secs, 0.0);
+            assert_eq!(report.dec.virtual_secs, 0.0);
+        }
+    }
+
+    #[test]
+    fn product_code_correct() {
+        let env = env();
+        let (a, b) = inputs(32, 24, 32, 4);
+        let job = MatmulJob {
+            s_a: 4,
+            s_b: 4,
+            scheme: Scheme::Product { t_a: 1, t_b: 1 },
+            seed: 11,
+            ..Default::default()
+        };
+        let (_, report) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert!(report.rel_err < 1e-3, "rel_err={}", report.rel_err);
+        assert!((report.redundancy - 0.5625).abs() < 1e-9); // 25/16−1
+    }
+
+    #[test]
+    fn polynomial_code_correct_small() {
+        let env = env();
+        let (a, b) = inputs(32, 24, 32, 5);
+        let job = MatmulJob {
+            s_a: 4,
+            s_b: 4,
+            scheme: Scheme::Polynomial { redundancy: 0.25 },
+            seed: 13,
+            ..Default::default()
+        };
+        let (_, report) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert!(report.numerics_ok);
+        // Real-arithmetic polynomial decode at K=16 already carries ~1e-2
+        // relative error (the conditioning wall the paper points to).
+        assert!(report.rel_err < 5e-2, "rel_err={}", report.rel_err);
+    }
+
+    #[test]
+    fn polynomial_large_marks_infeasible() {
+        let env = env();
+        let (a, b) = inputs(90, 16, 90, 6);
+        let job = MatmulJob {
+            s_a: 9,
+            s_b: 9,
+            scheme: Scheme::Polynomial { redundancy: 0.21 },
+            seed: 17,
+            verify: true,
+            ..Default::default()
+        };
+        let (_, report) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert!(!report.numerics_ok); // K = 81 > cap
+        assert!(report.comp.virtual_secs > 0.0);
+        assert!(report.dec.virtual_secs > 0.0);
+    }
+
+    #[test]
+    fn phases_populated_for_local_product() {
+        let env = env();
+        let (a, b) = inputs(64, 32, 64, 7);
+        let job = MatmulJob {
+            s_a: 4,
+            s_b: 4,
+            scheme: Scheme::LocalProduct { l_a: 4, l_b: 4 },
+            seed: 23,
+            ..Default::default()
+        };
+        let (_, report) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert!(report.enc.virtual_secs > 0.0);
+        assert!(report.comp.virtual_secs > 0.0);
+        assert!(report.dec.virtual_secs > 0.0);
+        assert_eq!(report.comp.tasks, 25);
+        assert_eq!(report.enc.tasks, 3); // encode fleet = ceil(25/10)
+        // Store holds the coded inputs and the results.
+        assert_eq!(env.store.list("job/coded/a/").len(), 5);
+        assert_eq!(env.store.list("job/result/").len(), 16);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let env = env();
+        let (a, b) = inputs(30, 24, 32, 8);
+        let job = MatmulJob {
+            s_a: 4,
+            ..Default::default()
+        };
+        assert!(run_matmul(&env, &a, &b, &job).is_err());
+    }
+}

@@ -1,0 +1,364 @@
+//! The coded matrix-vector workflow (§II-A) — the per-iteration primitive
+//! of power iteration and KRR-PCG.
+//!
+//! Encoding happens ONCE (criterion 1 of §I-B: the cost is amortized over
+//! iterations); each iteration runs the compute phase over the coded
+//! row-blocks and a cheap vector-decode. The speculative baseline runs the
+//! same row-blocks uncoded with wait-for-q% + relaunch.
+
+use crate::codes::matvec::CodedMatvec2D;
+use crate::codes::Scheme;
+use crate::coordinator::matmul::Env;
+use crate::coordinator::metrics::{JobReport, PhaseMetrics};
+use crate::linalg::blocked::Partition;
+use crate::linalg::matrix::Matrix;
+use crate::platform::{launch, speculative, WorkProfile};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::parallel_map;
+
+/// A matvec engine bound to one matrix: pays the encode once, then serves
+/// `y = A·x` per iteration.
+pub struct MatvecEngine {
+    /// Coded blocks of A (systematic + parities) or plain blocks when
+    /// uncoded/speculative.
+    blocks: Vec<Matrix>,
+    code: Option<CodedMatvec2D>,
+    scheme: Scheme,
+    s: usize,
+    cols: usize,
+    /// Virtual-time dims (rows, cols) used for work profiles — the paper-
+    /// scale dims when the figure harness simulates at paper scale.
+    v_rows: usize,
+    v_cols: usize,
+    /// Encode-phase report (paid once).
+    pub encode_report: PhaseMetrics,
+}
+
+/// Per-iteration outcome.
+#[derive(Debug, Clone)]
+pub struct IterationReport {
+    pub comp: PhaseMetrics,
+    pub dec: PhaseMetrics,
+}
+
+impl IterationReport {
+    pub fn total_secs(&self) -> f64 {
+        self.comp.virtual_secs + self.dec.virtual_secs
+    }
+}
+
+impl MatvecEngine {
+    /// Build the engine: partition A into `s` row-blocks and (for coded
+    /// schemes) encode with group size from the scheme.
+    pub fn new(
+        env: &Env,
+        a: &Matrix,
+        s: usize,
+        scheme: Scheme,
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<MatvecEngine> {
+        Self::with_virtual_dims(env, a, s, scheme, None, rng)
+    }
+
+    /// Like [`MatvecEngine::new`] but with explicit virtual-time dims
+    /// `(rows, cols)` for the work profiles (paper-scale simulation over
+    /// lab-scale numerics).
+    pub fn with_virtual_dims(
+        env: &Env,
+        a: &Matrix,
+        s: usize,
+        scheme: Scheme,
+        virtual_dims: Option<(usize, usize)>,
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<MatvecEngine> {
+        anyhow::ensure!(a.rows % s == 0, "rows must divide s");
+        let (v_rows, v_cols) = virtual_dims.unwrap_or((a.rows, a.cols));
+        anyhow::ensure!(v_rows % s == 0, "virtual rows must divide s");
+        let p = Partition::new(a.rows, a.cols, s);
+        let plain = p.split(a);
+        let mut encode_report = PhaseMetrics::default();
+
+        let (blocks, code) = match scheme {
+            Scheme::LocalProduct { l_a, .. } => {
+                // 2-D product-coded matvec ("2D product code similar to
+                // [17]", §IV-A): s = grids·l² systematic blocks.
+                let code = CodedMatvec2D::new(s, l_a)?;
+                // Encode volume: every systematic block is read twice
+                // (row parity + column parity); the corner is built from
+                // the already-written row parities (l extra reads per
+                // grid). The fleet matches the compute width, so encoding
+                // costs about one iteration (amortized per §I-B).
+                let fleet = code.coded_len();
+                let parities = code.coded_len() - code.systematic();
+                let blocks_read_total = 2 * code.systematic() + code.grids * code.l;
+                let total_read = (blocks_read_total * (v_rows / s) * v_cols * 4) as u64;
+                let enc_profile = WorkProfile {
+                    bytes_read: total_read / fleet as u64,
+                    read_ops: blocks_read_total.div_ceil(fleet) as u64,
+                    flops: (2 * code.systematic() * (v_rows / s) * v_cols) as f64
+                        / fleet as f64,
+                    bytes_written: (parities * (v_rows / s) * v_cols * 4) as u64 / fleet as u64,
+                    write_ops: parities.div_ceil(fleet).max(1) as u64,
+                };
+                let enc_phase = launch(&env.model, &enc_profile, fleet, rng);
+                let out = speculative(&env.model, &enc_profile, &enc_phase, 0.95, rng);
+                encode_report.tasks = fleet;
+                encode_report.virtual_secs = out.makespan;
+                encode_report.blocks_read = 2 * code.systematic() + code.grids * code.l;
+                // Numerics through the backend.
+                let backend = env.backend.as_ref();
+                let coded = code.encode(&plain, |members| backend.stack_sum(members));
+                (coded, Some(code))
+            }
+            Scheme::Uncoded | Scheme::Speculative { .. } => (plain, None),
+            other => anyhow::bail!("matvec engine does not support {:?}", other),
+        };
+
+        Ok(MatvecEngine {
+            blocks,
+            code,
+            scheme,
+            s,
+            cols: a.cols,
+            v_rows,
+            v_cols,
+            encode_report,
+        })
+    }
+
+    pub fn redundancy(&self) -> f64 {
+        self.code.map(|c| c.redundancy()).unwrap_or(0.0)
+    }
+
+    /// One iteration: `y = A·x` under the engine's scheme.
+    pub fn multiply(
+        &self,
+        env: &Env,
+        x: &[f32],
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<(Vec<f32>, IterationReport)> {
+        anyhow::ensure!(x.len() == self.cols, "x length {} != {}", x.len(), self.cols);
+        let mut rep = IterationReport {
+            comp: PhaseMetrics::default(),
+            dec: PhaseMetrics::default(),
+        };
+        let profile = WorkProfile::block_matvec(self.v_rows / self.s, self.v_cols);
+        let n = self.blocks.len();
+        let phase = launch(&env.model, &profile, n, rng);
+        rep.comp.tasks = n;
+        rep.comp.stragglers = phase.straggled.iter().filter(|&&s| s).count();
+
+        match (&self.code, self.scheme) {
+            (Some(code), _) => {
+                // Earliest time every local grid is peeling-decodable.
+                let mut arrived = vec![false; n];
+                let mut t = 0.0;
+                let mut pending: std::collections::BTreeSet<usize> =
+                    (0..code.grids).collect();
+                for &i in &phase.arrival_order() {
+                    arrived[i] = true;
+                    t = phase.finish[i];
+                    let (g, _, _) = code.cell(i);
+                    if pending.contains(&g) && code.grid_decodable(g, &arrived) {
+                        pending.remove(&g);
+                    }
+                    if pending.is_empty() {
+                        break;
+                    }
+                }
+                rep.comp.virtual_secs = t;
+
+                // Numerics on arrived blocks.
+                let mut results: Vec<Option<Vec<f32>>> = {
+                    let arrived_ref = &arrived;
+                    let blocks = &self.blocks;
+                    parallel_map(env.threads, n, move |i| {
+                        if arrived_ref[i] {
+                            Some(env.backend.gemv(&blocks[i], x))
+                        } else {
+                            None
+                        }
+                    })
+                };
+                let decoded = match code.decode(&results) {
+                    Ok(d) => d,
+                    Err(stuck) => {
+                        // Undecodable grid(s) (Thm-2 tail): recompute the
+                        // missing cells on fresh workers — virtual time is
+                        // a fresh round; numerics are direct gemvs.
+                        let mut missing = 0usize;
+                        for &g in &stuck {
+                            for r in 0..=code.l {
+                                for c in 0..=code.l {
+                                    let posn = code.pos(g, r, c);
+                                    if results[posn].is_none() {
+                                        results[posn] =
+                                            Some(env.backend.gemv(&self.blocks[posn], x));
+                                        missing += 1;
+                                    }
+                                }
+                            }
+                        }
+                        rep.dec.relaunched = missing;
+                        let t_rec = crate::platform::recompute_round(
+                            &env.model,
+                            &profile,
+                            missing,
+                            0.0,
+                            rng,
+                        );
+                        rep.dec.virtual_secs += t_rec;
+                        code.decode(&results)
+                            .map_err(|g| anyhow::anyhow!("still undecodable: {g:?}"))?
+                    }
+                };
+                let (blocks, reads, plans) = decoded;
+                rep.dec.blocks_read = reads;
+                // Decode work exists only when something straggled; the
+                // all-arrived common case needs no decode worker at all.
+                if reads > 0 {
+                    // Vector-block decode is "inexpensive ... performed
+                    // over a vector" (§II-A): the long-lived master does
+                    // it while assembling y — no worker invocation, just
+                    // the block reads.
+                    rep.dec.tasks = 1;
+                    let v_block = self.v_rows / self.s;
+                    let _recovered: usize = _plans_len(&plans);
+                    rep.dec.virtual_secs += env.model.rates.cost.read_many_parallel(
+                        reads as u64,
+                        (reads * v_block * 4) as u64,
+                        32,
+                    );
+                }
+                Ok((blocks.concat(), rep))
+            }
+            (None, Scheme::Speculative { wait_frac }) => {
+                let out = speculative(&env.model, &profile, &phase, wait_frac, rng);
+                rep.comp.relaunched = out.relaunched;
+                rep.comp.virtual_secs = out.makespan;
+                let y = self.multiply_all(env, x);
+                Ok((y, rep))
+            }
+            (None, _) => {
+                rep.comp.virtual_secs = phase.wait_all();
+                let y = self.multiply_all(env, x);
+                Ok((y, rep))
+            }
+        }
+    }
+
+    fn multiply_all(&self, env: &Env, x: &[f32]) -> Vec<f32> {
+        let blocks = &self.blocks;
+        let parts: Vec<Vec<f32>> = parallel_map(env.threads, self.s, move |i| {
+            env.backend.gemv(&blocks[i], x)
+        });
+        parts.concat()
+    }
+
+    /// Aggregate a full job report over `iters` iterations.
+    pub fn job_report(&self, iters: &[IterationReport]) -> JobReport {
+        let mut rep = JobReport::new(self.scheme.name());
+        rep.redundancy = self.redundancy();
+        rep.enc = self.encode_report.clone();
+        for it in iters {
+            rep.comp.virtual_secs += it.comp.virtual_secs;
+            rep.comp.tasks += it.comp.tasks;
+            rep.comp.stragglers += it.comp.stragglers;
+            rep.comp.relaunched += it.comp.relaunched;
+            rep.dec.virtual_secs += it.dec.virtual_secs;
+            rep.dec.blocks_read += it.dec.blocks_read;
+        }
+        rep
+    }
+}
+
+fn _plans_len(plans: &[crate::codes::peeling::PeelPlan]) -> usize {
+    plans.iter().map(|p| p.recovered()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+
+    fn setup(seed: u64) -> (Env, Matrix, Vec<f32>) {
+        let env = Env::host();
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::randn(64, 40, &mut rng, 0.0, 1.0);
+        let x: Vec<f32> = (0..40).map(|i| (i as f32 * 0.3).cos()).collect();
+        (env, a, x)
+    }
+
+    #[test]
+    fn coded_matvec_exact_across_seeds() {
+        let (env, a, x) = setup(1);
+        let truth = gemm::matvec(&a, &x);
+        for seed in 0..10 {
+            let mut rng = Pcg64::new(seed);
+            let eng = MatvecEngine::new(
+                &env,
+                &a,
+                8,
+                Scheme::LocalProduct { l_a: 2, l_b: 2 },
+                &mut rng,
+            )
+            .unwrap();
+            let (y, rep) = eng.multiply(&env, &x, &mut rng).unwrap();
+            for (got, want) in y.iter().zip(&truth) {
+                assert!((got - want).abs() < 1e-3, "seed {seed}");
+            }
+            assert!(rep.comp.virtual_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn speculative_matvec_correct() {
+        let (env, a, x) = setup(2);
+        let truth = gemm::matvec(&a, &x);
+        let mut rng = Pcg64::new(3);
+        let eng =
+            MatvecEngine::new(&env, &a, 8, Scheme::Speculative { wait_frac: 0.9 }, &mut rng)
+                .unwrap();
+        assert_eq!(eng.encode_report.virtual_secs, 0.0);
+        let (y, _) = eng.multiply(&env, &x, &mut rng).unwrap();
+        for (got, want) in y.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn encode_paid_once() {
+        let (env, a, x) = setup(4);
+        let mut rng = Pcg64::new(5);
+        let eng = MatvecEngine::new(
+            &env,
+            &a,
+            8,
+            Scheme::LocalProduct { l_a: 2, l_b: 2 },
+            &mut rng,
+        )
+        .unwrap();
+        let enc_t = eng.encode_report.virtual_secs;
+        assert!(enc_t > 0.0);
+        let mut iters = Vec::new();
+        for _ in 0..3 {
+            let (_, rep) = eng.multiply(&env, &x, &mut rng).unwrap();
+            iters.push(rep);
+        }
+        let job = eng.job_report(&iters);
+        // Encode counted once, not per iteration.
+        assert!((job.enc.virtual_secs - enc_t).abs() < 1e-12);
+        // 2 grids × (2+1)² = 18 coded tasks per iteration.
+        assert_eq!(job.comp.tasks, 3 * 18);
+        // 2-D redundancy: (l+1)²/l² − 1 = 1.25 for l = 2.
+        assert!((eng.redundancy() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_unsupported_scheme() {
+        let (env, a, _) = setup(6);
+        let mut rng = Pcg64::new(7);
+        assert!(MatvecEngine::new(&env, &a, 8, Scheme::Polynomial { redundancy: 0.2 }, &mut rng)
+            .is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Job metrics: the `T_enc + T_comp + T_dec` decomposition the paper's
+//! evaluation revolves around (Fig 2), plus communication accounting.
+
+use crate::util::json::{obj, Json};
+
+/// One phase's virtual-time outcome.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseMetrics {
+    /// Virtual seconds this phase took (its makespan under the scheme's
+    /// termination rule).
+    pub virtual_secs: f64,
+    /// Tasks launched.
+    pub tasks: usize,
+    /// Tasks that straggled (per the model).
+    pub stragglers: usize,
+    /// Tasks relaunched (speculative) or recomputed (undecodable).
+    pub relaunched: usize,
+    /// Blocks read by this phase's workers.
+    pub blocks_read: usize,
+}
+
+impl PhaseMetrics {
+    pub fn to_json(&self) -> Json {
+        obj()
+            .field("virtual_secs", self.virtual_secs)
+            .field("tasks", self.tasks)
+            .field("stragglers", self.stragglers)
+            .field("relaunched", self.relaunched)
+            .field("blocks_read", self.blocks_read)
+            .build()
+    }
+}
+
+/// End-to-end report for one coded job.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub scheme: String,
+    pub enc: PhaseMetrics,
+    pub comp: PhaseMetrics,
+    pub dec: PhaseMetrics,
+    /// Redundant computation fraction of the scheme.
+    pub redundancy: f64,
+    /// Relative Frobenius error of the output vs the direct product
+    /// (NaN when not verified).
+    pub rel_err: f64,
+    /// False when the scheme could not produce numerics at this scale
+    /// (polynomial codes past their conditioning wall — the paper's
+    /// "not feasible" regime).
+    pub numerics_ok: bool,
+}
+
+impl JobReport {
+    pub fn new(scheme: &str) -> JobReport {
+        JobReport {
+            scheme: scheme.to_string(),
+            enc: PhaseMetrics::default(),
+            comp: PhaseMetrics::default(),
+            dec: PhaseMetrics::default(),
+            redundancy: 0.0,
+            rel_err: f64::NAN,
+            numerics_ok: true,
+        }
+    }
+
+    /// `T_tot = T_enc + T_comp + T_dec` (§I).
+    pub fn total_secs(&self) -> f64 {
+        self.enc.virtual_secs + self.comp.virtual_secs + self.dec.virtual_secs
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj()
+            .field("scheme", self.scheme.as_str())
+            .field("t_enc", self.enc.virtual_secs)
+            .field("t_comp", self.comp.virtual_secs)
+            .field("t_dec", self.dec.virtual_secs)
+            .field("t_total", self.total_secs())
+            .field("redundancy", self.redundancy)
+            .field("rel_err", self.rel_err)
+            .field("numerics_ok", self.numerics_ok)
+            .field("enc", self.enc.to_json())
+            .field("comp", self.comp.to_json())
+            .field("dec", self.dec.to_json())
+            .build()
+    }
+
+    /// One table row: scheme, T_enc, T_comp, T_dec, total.
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.scheme.clone(),
+            format!("{:.1}", self.enc.virtual_secs),
+            format!("{:.1}", self.comp.virtual_secs),
+            format!("{:.1}", self.dec.virtual_secs),
+            format!("{:.1}", self.total_secs()),
+            if self.rel_err.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.2e}", self.rel_err)
+            },
+        ]
+    }
+}
+
+pub const REPORT_HEADERS: [&str; 6] =
+    ["scheme", "T_enc (s)", "T_comp (s)", "T_dec (s)", "T_total (s)", "rel_err"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_up() {
+        let mut r = JobReport::new("local-product");
+        r.enc.virtual_secs = 10.0;
+        r.comp.virtual_secs = 100.0;
+        r.dec.virtual_secs = 5.0;
+        assert!((r.total_secs() - 115.0).abs() < 1e-12);
+        let j = r.to_json();
+        assert_eq!(j.get("t_total").unwrap().as_f64(), Some(115.0));
+        assert_eq!(j.get("scheme").unwrap().as_str(), Some("local-product"));
+    }
+
+    #[test]
+    fn row_formats() {
+        let mut r = JobReport::new("s");
+        r.rel_err = 1.5e-6;
+        let row = r.row();
+        assert_eq!(row.len(), REPORT_HEADERS.len());
+        assert_eq!(row[5], "1.50e-6");
+        r.rel_err = f64::NAN;
+        assert_eq!(r.row()[5], "-");
+    }
+}

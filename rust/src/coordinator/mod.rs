@@ -1,0 +1,14 @@
+//! The serverless coordinator — the paper's workflow engine.
+//!
+//! Orchestrates the three phases of Fig 2 over the platform simulator and
+//! the compute backend: parallel encode, straggler-prone compute with
+//! scheme-specific termination, and parallel local decode with recompute
+//! fallback. End-to-end latency is `T_enc + T_comp + T_dec`.
+
+pub mod matmul;
+pub mod matvec;
+pub mod metrics;
+
+pub use matmul::{run_matmul, Env, MatmulJob};
+pub use matvec::{IterationReport, MatvecEngine};
+pub use metrics::{JobReport, PhaseMetrics, REPORT_HEADERS};

@@ -1,0 +1,72 @@
+//! Fig 1: job-completion-time distribution for distributed matmul over
+//! 3600 Lambda workers — median ≈ 135 s, ~2% stragglers far in the tail.
+
+use crate::config::Config;
+use crate::figures::{banner, RunScale};
+use crate::platform::WorkProfile;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{Histogram, Summary};
+
+/// The Fig-1 workload: a worker's block product sized so the median job
+/// lands at the paper's ≈135 s under the default calibration.
+pub fn fig1_profile() -> WorkProfile {
+    WorkProfile::block_product(2048, 16384, 2048)
+}
+
+pub fn run(cfg: &Config, scale: RunScale) -> anyhow::Result<Json> {
+    banner(
+        "Fig 1",
+        "job time distribution, 3600 workers × 10 trials (paper: median ≈135 s, ~2% stragglers)",
+    );
+    let model = cfg.model();
+    let trials = scale.pick(3, 10);
+    let workers = 3600;
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut all = Vec::with_capacity(trials * workers);
+    for _ in 0..trials {
+        all.extend(model.sample_fleet(&fig1_profile(), workers, &mut rng));
+    }
+    let s = Summary::of(&all);
+    let tail2x = all.iter().filter(|&&t| t >= 2.0 * s.p50).count() as f64 / all.len() as f64;
+
+    let mut hist = Histogram::new(0.0, 4.0 * s.p50, 40);
+    hist.add_all(&all);
+    println!("{}", hist.render(48));
+    println!("summary: {}", s.line());
+    println!(
+        "stragglers ≥2×median: {:.2}% (paper: ~2%) | median {:.1}s (paper ≈135s)",
+        tail2x * 100.0,
+        s.p50
+    );
+
+    Ok(obj()
+        .field("figure", "fig1")
+        .field("workers", workers)
+        .field("trials", trials)
+        .field("median_s", s.p50)
+        .field("paper_median_s", 135.0)
+        .field("straggler_frac_2x", tail2x)
+        .field("paper_straggler_frac", 0.02)
+        .field("summary", s.to_json())
+        .field("histogram", hist.to_json())
+        .build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_matches_paper_shape() {
+        let cfg = Config {
+            results_dir: std::env::temp_dir().join("slec-test-results"),
+            ..Default::default()
+        };
+        let j = run(&cfg, RunScale::Quick).unwrap();
+        let median = j.get("median_s").unwrap().as_f64().unwrap();
+        let tail = j.get("straggler_frac_2x").unwrap().as_f64().unwrap();
+        assert!((median - 135.0).abs() < 20.0, "median {median}");
+        assert!(tail > 0.005 && tail < 0.04, "tail {tail}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Figs 10–11: KRR with PCG, coded vs speculative execution.
+//!
+//! Fig 10: ADULT-like (32k×32k kernel over 64 workers; paper: 42.1%
+//! total-time reduction, 11% test error). Fig 11: EPSILON-like (400k×400k
+//! over 400 workers; paper: 44.5% reduction, 8% test error).
+
+use crate::codes::Scheme;
+use crate::config::Config;
+use crate::apps::krr::{krr_pcg, synthetic_dataset, KrrConfig};
+use crate::figures::{banner, savings_pct, RunScale};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg64;
+use crate::util::stats::render_table;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    AdultLike,
+    EpsilonLike,
+}
+
+pub fn run(cfg: &Config, scale: RunScale, which: Dataset) -> anyhow::Result<Json> {
+    let (fig, virtual_n, s_blocks, l_a, paper_savings, paper_err) = match which {
+        Dataset::AdultLike => ("fig10", 32_000, 64, 4, 42.1, 0.11),
+        Dataset::EpsilonLike => ("fig11", 400_000, 400, 10, 44.5, 0.08),
+    };
+    banner(
+        fig,
+        &format!(
+            "KRR-PCG {which:?}: kernel {virtual_n}² over {s_blocks} workers (paper: {paper_savings}% reduction)"
+        ),
+    );
+    // Calibration: the KRR row-block objects are large single-stream S3
+    // reads (see fig3 note); 25 MB/s effective GET throughput.
+    let mut fig_cfg = cfg.clone();
+    fig_cfg.set("platform.s3_bandwidth_bps", "25e6")?;
+    let (env, _rt) = fig_cfg.build_env()?;
+
+    // Lab-scale numerics: n must divide s_blocks.
+    let numeric_n = match which {
+        Dataset::AdultLike => scale.pick(512, 1024),
+        Dataset::EpsilonLike => scale.pick(800, 1200),
+    };
+    let mut rng = Pcg64::new(cfg.seed);
+    let data = synthetic_dataset(numeric_n, numeric_n / 2, 10, &mut rng);
+
+    let mut run_one = |scheme: Scheme, seed: u64| -> anyhow::Result<crate::apps::krr::KrrResult> {
+        let mut rng = Pcg64::new(seed);
+        let kcfg = KrrConfig {
+            s_blocks,
+            scheme,
+            virtual_n: Some(virtual_n),
+            max_iters: 25,
+            ..Default::default()
+        };
+        krr_pcg(&env, &data, &kcfg, &mut rng)
+    };
+
+    let coded = run_one(Scheme::LocalProduct { l_a, l_b: l_a }, cfg.seed + 1)?;
+    let spec = run_one(Scheme::Speculative { wait_frac: 0.9 }, cfg.seed + 2)?;
+
+    let iters = coded.iterations.len().max(spec.iterations.len());
+    let mut rows = Vec::new();
+    for i in 0..iters {
+        let c = coded.iterations.get(i);
+        let s = spec.iterations.get(i);
+        rows.push(vec![
+            format!("{}", i + 1),
+            c.map(|x| format!("{:.1}", x.virtual_secs)).unwrap_or_default(),
+            s.map(|x| format!("{:.1}", x.virtual_secs)).unwrap_or_default(),
+            c.map(|x| format!("{:.1e}", x.residual)).unwrap_or_default(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["iter", "coded (s)", "speculative (s)", "residual"], &rows)
+    );
+    let savings = savings_pct(coded.total_secs(), spec.total_secs());
+    println!(
+        "total: coded {:.0}s (encode {:.0}s) vs spec {:.0}s → {savings:.1}% savings (paper: {paper_savings}%)",
+        coded.total_secs(),
+        coded.encode_secs,
+        spec.total_secs()
+    );
+    println!(
+        "converged: coded={} spec={}; test error {:.1}% (paper: {:.0}%)",
+        coded.converged,
+        spec.converged,
+        coded.test_error * 100.0,
+        paper_err * 100.0
+    );
+
+    Ok(obj()
+        .field("figure", fig)
+        .field("virtual_n", virtual_n)
+        .field("workers", s_blocks)
+        .field("numeric_n", numeric_n)
+        .field(
+            "coded_per_iter",
+            Json::Arr(coded.iterations.iter().map(|i| i.virtual_secs.into()).collect()),
+        )
+        .field(
+            "spec_per_iter",
+            Json::Arr(spec.iterations.iter().map(|i| i.virtual_secs.into()).collect()),
+        )
+        .field("coded_total_s", coded.total_secs())
+        .field("coded_encode_s", coded.encode_secs)
+        .field("spec_total_s", spec.total_secs())
+        .field("savings_pct", savings)
+        .field("paper_savings_pct", paper_savings)
+        .field("coded_converged", coded.converged)
+        .field("spec_converged", spec.converged)
+        .field("test_error", coded.test_error)
+        .field("paper_test_error", paper_err)
+        .build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_coded_saves_vs_speculative() {
+        let cfg = Config {
+            results_dir: std::env::temp_dir().join("slec-test-results"),
+            ..Default::default()
+        };
+        let j = run(&cfg, RunScale::Quick, Dataset::AdultLike).unwrap();
+        let savings = j.get("savings_pct").unwrap().as_f64().unwrap();
+        assert!(savings > 10.0, "savings {savings}% too small");
+        assert_eq!(j.get("coded_converged").unwrap().as_bool(), Some(true));
+        let err = j.get("test_error").unwrap().as_f64().unwrap();
+        assert!(err < 0.45, "test error {err}");
+    }
+}

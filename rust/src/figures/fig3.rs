@@ -1,0 +1,140 @@
+//! Fig 3: power iteration on a 0.5M-dim matrix, 500 workers, 20
+//! iterations — coded ≈200 s/iter (low variance) vs speculative 340–470 s;
+//! ≈2× end-to-end speedup.
+
+use crate::codes::Scheme;
+use crate::config::Config;
+use crate::coordinator::matvec::MatvecEngine;
+use crate::figures::{banner, savings_pct, RunScale};
+use crate::linalg::matrix::vecops;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{render_table, Summary};
+
+pub fn run(cfg: &Config, scale: RunScale) -> anyhow::Result<Json> {
+    banner(
+        "Fig 3",
+        "power iteration, 0.5M dim, 500 workers, 20 iters (paper: coded ~200s/iter, spec 340–470s, 2× total)",
+    );
+    // Calibration override: the 0.5M row-block objects are read in a
+    // single S3 stream; measured Lambda→S3 single-stream GET throughput
+    // is ~10 MB/s at these object sizes (vs the multi-part ~100 MB/s used
+    // elsewhere). Documented in EXPERIMENTS.md §fig3.
+    let mut fig_cfg = cfg.clone();
+    fig_cfg.set("platform.s3_bandwidth_bps", "10e6")?;
+    let (env, _rt) = fig_cfg.build_env()?;
+
+    let iters = scale.pick(8, 20);
+    let s_workers = 500; // paper's worker count
+    let numeric_n = scale.pick(1000, 2000); // lab-scale numerics
+    let virtual_n = 500_000; // paper-scale virtual dims
+    let mut rng = Pcg64::new(cfg.seed);
+    let a = crate::apps::power_iteration::planted_matrix(numeric_n, 100.0, &mut rng);
+
+    let mut run_scheme = |scheme: Scheme, seed: u64| -> anyhow::Result<(Vec<f64>, f64, f64)> {
+        let mut rng = Pcg64::new(seed);
+        let engine = MatvecEngine::with_virtual_dims(
+            &env,
+            &a,
+            s_workers,
+            scheme,
+            Some((virtual_n, virtual_n)),
+            &mut rng,
+        )?;
+        let mut x: Vec<f32> = (0..numeric_n).map(|i| ((i + 1) as f32).sin()).collect();
+        let norm = vecops::norm2(&x) as f32;
+        vecops::scale(&mut x, 1.0 / norm);
+        let mut times = Vec::with_capacity(iters);
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let (y, rep) = engine.multiply(&env, &x, &mut rng)?;
+            lambda = vecops::dot(&x, &y);
+            let ynorm = vecops::norm2(&y) as f32;
+            x = y;
+            vecops::scale(&mut x, 1.0 / ynorm);
+            times.push(rep.total_secs());
+        }
+        Ok((times, engine.encode_report.virtual_secs, lambda))
+    };
+
+    let (coded_times, coded_enc, lambda_c) =
+        run_scheme(Scheme::LocalProduct { l_a: 10, l_b: 10 }, cfg.seed + 1)?;
+    let (spec_times, _, lambda_s) =
+        run_scheme(Scheme::Speculative { wait_frac: 0.90 }, cfg.seed + 2)?;
+
+    let coded_total = coded_enc + coded_times.iter().sum::<f64>();
+    let spec_total: f64 = spec_times.iter().sum();
+    let cs = Summary::of(&coded_times);
+    let ss = Summary::of(&spec_times);
+
+    let mut rows = Vec::new();
+    for i in 0..iters {
+        rows.push(vec![
+            format!("{}", i + 1),
+            format!("{:.1}", coded_times[i]),
+            format!("{:.1}", spec_times[i]),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["iter", "coded (s)", "speculative (s)"], &rows)
+    );
+    println!(
+        "coded: {:.1}s/iter (std {:.1})  spec: {:.1}s/iter (range {:.0}–{:.0})",
+        cs.mean, cs.std, ss.mean, ss.min, ss.max
+    );
+    println!(
+        "total: coded {:.0}s (incl. encode {:.0}s) vs spec {:.0}s → {:.1}% savings (paper: ~2× ⇒ 50%)",
+        coded_total,
+        coded_enc,
+        spec_total,
+        savings_pct(coded_total, spec_total)
+    );
+    // Eigenvalue agreement = universality check.
+    anyhow::ensure!(
+        ((lambda_c - lambda_s) / lambda_s).abs() < 1e-3,
+        "schemes disagree numerically: {lambda_c} vs {lambda_s}"
+    );
+
+    Ok(obj()
+        .field("figure", "fig3")
+        .field("iters", iters)
+        .field("workers", s_workers)
+        .field("virtual_dim", virtual_n)
+        .field("coded_per_iter", Json::Arr(coded_times.iter().map(|&t| t.into()).collect()))
+        .field("spec_per_iter", Json::Arr(spec_times.iter().map(|&t| t.into()).collect()))
+        .field("coded_encode_s", coded_enc)
+        .field("coded_total_s", coded_total)
+        .field("spec_total_s", spec_total)
+        .field("savings_pct", savings_pct(coded_total, spec_total))
+        .field("coded_iter_summary", cs.to_json())
+        .field("spec_iter_summary", ss.to_json())
+        .field("eigenvalue", lambda_c)
+        .build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_coded_beats_speculative() {
+        let cfg = Config {
+            results_dir: std::env::temp_dir().join("slec-test-results"),
+            ..Default::default()
+        };
+        let j = run(&cfg, RunScale::Quick).unwrap();
+        // Fig 3a's claim is per-iteration: coded ≈200s vs spec 340–470s.
+        let cs = j.get_path("coded_iter_summary.mean").unwrap().as_f64().unwrap();
+        let ss = j.get_path("spec_iter_summary.mean").unwrap().as_f64().unwrap();
+        assert!(ss / cs > 1.4, "per-iter speedup {:.2} (want ≳2×)", ss / cs);
+        // Reliability: coded iteration times are much steadier.
+        let cstd = j.get_path("coded_iter_summary.std").unwrap().as_f64().unwrap();
+        let sstd = j.get_path("spec_iter_summary.std").unwrap().as_f64().unwrap();
+        assert!(cstd < sstd, "coded std {cstd} vs spec std {sstd}");
+        // Totals including the one-time encode still favor coded.
+        let coded = j.get("coded_total_s").unwrap().as_f64().unwrap();
+        let spec = j.get("spec_total_s").unwrap().as_f64().unwrap();
+        assert!(coded < spec, "coded {coded} should beat spec {spec}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig 6: Theorem 1's bound on decode reads, Pr(R ≥ x) for L = 10,
+//! n = 121, p = 0.02 — plus our Monte-Carlo ground truth and the
+//! corrected bound (the printed theorem has a sign typo; see
+//! `codes::theory::thm1_bound_paper`).
+
+use crate::codes::{montecarlo, theory};
+use crate::config::Config;
+use crate::figures::{banner, RunScale};
+use crate::util::json::{obj, Json};
+use crate::util::stats::render_table;
+
+pub fn run(cfg: &Config, scale: RunScale) -> anyhow::Result<Json> {
+    banner(
+        "Fig 6",
+        "Pr(R ≥ x) bounds, L=10, n=121, p=0.02 (paper caption: Pr(R≥2E[R]) ≤ 3.1e−3)",
+    );
+    let (l, p) = (10usize, 0.02);
+    let n = (l + 1) * (l + 1);
+    let er = theory::expected_reads(n, p, l);
+    let trials = scale.pick(50_000, 400_000);
+    let mc = montecarlo::simulate(l, l, p, trials, cfg.seed);
+
+    let xs: Vec<f64> = (1..=12).map(|i| i as f64 * 10.0).collect();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &x in &xs {
+        let paper = theory::thm1_bound_paper(x, n, p, l);
+        let corrected = theory::thm1_bound(x, n, p, l);
+        let emp = mc.pr_reads_ge(x as usize);
+        rows.push(vec![
+            format!("{x:.0}"),
+            format!("{paper:.3e}"),
+            format!("{corrected:.3e}"),
+            format!("{emp:.3e}"),
+        ]);
+        out.push(
+            obj()
+                .field("x", x)
+                .field("paper_bound", paper)
+                .field("corrected_bound", corrected)
+                .field("empirical", emp)
+                .build(),
+        );
+    }
+    println!(
+        "{}",
+        render_table(
+            &["x (blocks)", "paper bound", "corrected bound", "MC empirical"],
+            &rows
+        )
+    );
+    println!("E[R] = npL = {er:.1}; MC mean R = {:.1}", mc.mean_reads());
+    println!(
+        "paper Pr(R≥2E[R]) = {:.2e} (caption: 3.1e−3); MC truth = {:.2e} → printed bound is NOT an upper bound (sign typo, see theory.rs)",
+        theory::thm1_bound_paper(2.0 * er, n, p, l),
+        mc.pr_reads_ge((2.0 * er) as usize)
+    );
+
+    Ok(obj()
+        .field("figure", "fig6")
+        .field("l", l)
+        .field("n", n)
+        .field("p", p)
+        .field("expected_reads", er)
+        .field("mc_trials", trials)
+        .field("mc_mean_reads", mc.mean_reads())
+        .field("series", Json::Arr(out))
+        .build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_corrected_bound_dominates_mc() {
+        let cfg = Config {
+            results_dir: std::env::temp_dir().join("slec-test-results"),
+            ..Default::default()
+        };
+        let j = run(&cfg, RunScale::Quick).unwrap();
+        for point in j.get("series").unwrap().as_arr().unwrap() {
+            let emp = point.get("empirical").unwrap().as_f64().unwrap();
+            let corr = point.get("corrected_bound").unwrap().as_f64().unwrap();
+            assert!(
+                emp <= corr + 5e-3,
+                "x={:?}: empirical {emp} > corrected {corr}",
+                point.get("x")
+            );
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Fig 9: Theorem 2's bound on Pr(decode worker cannot decode) vs
+//! L = L_A = L_B, p = 0.02 — sweet spot at L = 10 (n = 121), decode
+//! probability ≥ 99.64% — with Monte-Carlo overlay.
+
+use crate::codes::{montecarlo, theory};
+use crate::config::Config;
+use crate::figures::{banner, RunScale};
+use crate::util::json::{obj, Json};
+use crate::util::stats::render_table;
+
+pub fn run(cfg: &Config, scale: RunScale) -> anyhow::Result<Json> {
+    banner(
+        "Fig 9",
+        "Pr(undecodable) vs L, p=0.02 (paper: sweet spot n=121 ⇒ L=10, decode prob ≥ 99.64%)",
+    );
+    let p = 0.02;
+    let ls: Vec<usize> = match scale {
+        RunScale::Quick => vec![2, 3, 5, 8, 10, 15, 20, 25],
+        RunScale::Full => (2..=25).collect(),
+    };
+    let trials = scale.pick(20_000, 100_000);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    let mut best = (0usize, f64::INFINITY);
+    for &l in &ls {
+        let bound = theory::thm2_bound(l, l, p);
+        let mc = montecarlo::simulate(l, l, p, trials, cfg.seed ^ l as u64);
+        if bound < best.1 {
+            best = (l, bound);
+        }
+        rows.push(vec![
+            format!("{l}"),
+            format!("{}", (l + 1) * (l + 1)),
+            format!("{bound:.3e}"),
+            format!("{:.3e}", mc.pr_undecodable),
+        ]);
+        out.push(
+            obj()
+                .field("l", l)
+                .field("n", (l + 1) * (l + 1))
+                .field("thm2_bound", bound)
+                .field("mc_empirical", mc.pr_undecodable)
+                .build(),
+        );
+    }
+    println!(
+        "{}",
+        render_table(&["L", "n blocks", "Thm-2 bound", "MC empirical"], &rows)
+    );
+    let b10 = theory::thm2_bound(10, 10, p);
+    println!(
+        "minimum of the bound at L={} ({:.2e}); L=10 decode prob ≥ {:.2}% (paper: ≥99.64%)",
+        best.0,
+        best.1,
+        (1.0 - b10) * 100.0
+    );
+
+    Ok(obj()
+        .field("figure", "fig9")
+        .field("p", p)
+        .field("trials", trials)
+        .field("series", Json::Arr(out))
+        .field("bound_at_10", b10)
+        .field("paper_decode_prob", 0.9964)
+        .build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_bound_dominates_mc_and_matches_caption() {
+        let cfg = Config {
+            results_dir: std::env::temp_dir().join("slec-test-results"),
+            ..Default::default()
+        };
+        let j = run(&cfg, RunScale::Quick).unwrap();
+        for point in j.get("series").unwrap().as_arr().unwrap() {
+            let emp = point.get("mc_empirical").unwrap().as_f64().unwrap();
+            let bound = point.get("thm2_bound").unwrap().as_f64().unwrap();
+            assert!(emp <= bound + 5e-3, "L={:?}", point.get("l"));
+        }
+        let b10 = j.get("bound_at_10").unwrap().as_f64().unwrap();
+        assert!(
+            (1.0 - b10 - 0.9964).abs() < 2e-3,
+            "decode prob {:.4} should be ≈0.9964",
+            1.0 - b10
+        );
+    }
+}

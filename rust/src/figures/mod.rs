@@ -1,0 +1,91 @@
+//! Figure/table reproduction harness: one module per paper artifact.
+//!
+//! Every module regenerates its figure's series: it prints a paper-style
+//! table (and ASCII plot where useful), writes machine-readable JSON to
+//! `results/`, and returns the JSON for tests. Figures simulate at the
+//! PAPER's scale via virtual dims (DESIGN.md §Virtual-time model) while
+//! the verified numerics run at lab scale; per-figure calibration
+//! overrides are documented inline and in EXPERIMENTS.md.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod fig10_11;
+pub mod fig12;
+pub mod svd_table;
+
+use crate::config::Config;
+use crate::util::json::Json;
+
+/// Scale of a figure run: `quick` for CI-speed, `full` for paper-scale
+/// statistics (more trials / bigger numerics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunScale {
+    Quick,
+    Full,
+}
+
+impl RunScale {
+    pub fn pick<T>(self, quick: T, full: T) -> T {
+        match self {
+            RunScale::Quick => quick,
+            RunScale::Full => full,
+        }
+    }
+}
+
+/// All figure ids, in paper order.
+pub const ALL: [&str; 9] = [
+    "fig1", "fig3", "fig5", "fig6", "fig7", "fig9", "fig10", "fig11", "svd",
+];
+
+/// Run one figure by id; returns its JSON result document.
+pub fn run(id: &str, cfg: &Config, scale: RunScale) -> anyhow::Result<Json> {
+    let result = match id {
+        "fig1" => fig1::run(cfg, scale)?,
+        "fig3" => fig3::run(cfg, scale)?,
+        "fig5" => fig5::run(cfg, scale)?,
+        "fig6" => fig6::run(cfg, scale)?,
+        "fig7" | "fig8" => fig7::run(cfg, scale)?,
+        "fig9" => fig9::run(cfg, scale)?,
+        "fig10" => fig10_11::run(cfg, scale, fig10_11::Dataset::AdultLike)?,
+        "fig11" => fig10_11::run(cfg, scale, fig10_11::Dataset::EpsilonLike)?,
+        "fig12" => fig12::run(cfg, scale)?,
+        "svd" => svd_table::run(cfg, scale)?,
+        other => anyhow::bail!("unknown figure '{other}' (available: {ALL:?}, fig12)"),
+    };
+    let path = cfg.write_result(id, &result)?;
+    println!("[results] wrote {}", path.display());
+    Ok(result)
+}
+
+/// Header printed by each figure.
+pub fn banner(id: &str, claim: &str) {
+    println!("\n{}", "=".repeat(78));
+    println!("{id} — {claim}");
+    println!("{}", "=".repeat(78));
+}
+
+/// Savings of `coded` relative to `baseline` in percent.
+pub fn savings_pct(coded: f64, baseline: f64) -> f64 {
+    (1.0 - coded / baseline) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn savings_math() {
+        assert!((super::savings_pct(75.0, 100.0) - 25.0).abs() < 1e-12);
+        assert!(super::savings_pct(120.0, 100.0) < 0.0);
+    }
+
+    #[test]
+    fn scale_pick() {
+        use super::RunScale;
+        assert_eq!(RunScale::Quick.pick(1, 2), 1);
+        assert_eq!(RunScale::Full.pick(1, 2), 2);
+    }
+}

@@ -1,0 +1,24 @@
+//! # slec — Serverless Straggler Mitigation using Local Error-Correcting Codes
+//!
+//! A complete reproduction of Gupta et al., *"Serverless Straggler
+//! Mitigation using Local Error-Correcting Codes"* (2020) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **Layer 1 (Pallas)**: tiled matmul / parity kernels, AOT-lowered,
+//! - **Layer 2 (JAX)**: block-product compute graphs → HLO-text artifacts,
+//! - **Layer 3 (this crate)**: the serverless coordinator — coded encode /
+//!   compute / decode phases over a simulated serverless platform + object
+//!   store, with local product codes, peeling decoding and all baselines.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+pub mod apps;
+pub mod codes;
+pub mod config;
+pub mod figures;
+pub mod coordinator;
+pub mod linalg;
+pub mod platform;
+pub mod runtime;
+pub mod storage;
+pub mod util;

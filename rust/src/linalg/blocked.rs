@@ -1,0 +1,207 @@
+//! Block partitioning of matrices — the grid abstraction every coding
+//! scheme operates on (Remark 2: block partitioning is the communication-
+//! efficient layout for distributed matmul).
+//!
+//! A `Partition` splits the row range of a matrix into `nblocks` equal
+//! row-blocks (the paper's unit of encoding); a `Grid` describes the 2-D
+//! block structure of the output `C = A·Bᵀ`, where block (i, j) is
+//! `A_i · B_jᵀ`.
+
+use crate::linalg::matrix::Matrix;
+
+/// Row-block partition of an (rows × cols) matrix into equal blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub rows: usize,
+    pub cols: usize,
+    pub nblocks: usize,
+    pub block_rows: usize,
+}
+
+impl Partition {
+    /// Partition `rows` into `nblocks` equal row-blocks. `rows` must divide
+    /// evenly — callers pad to a multiple first (see [`pad_rows`]).
+    pub fn new(rows: usize, cols: usize, nblocks: usize) -> Partition {
+        assert!(nblocks > 0, "need at least one block");
+        assert_eq!(
+            rows % nblocks,
+            0,
+            "rows ({rows}) must be divisible by nblocks ({nblocks}); pad first"
+        );
+        Partition {
+            rows,
+            cols,
+            nblocks,
+            block_rows: rows / nblocks,
+        }
+    }
+
+    /// Row range of block `i`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.nblocks);
+        (i * self.block_rows, (i + 1) * self.block_rows)
+    }
+
+    /// Extract block `i` from a matrix with this partition's shape.
+    pub fn extract(&self, m: &Matrix, i: usize) -> Matrix {
+        assert_eq!((m.rows, m.cols), (self.rows, self.cols));
+        let (r0, r1) = self.range(i);
+        m.slice(r0, r1, 0, self.cols)
+    }
+
+    /// Split the whole matrix into blocks.
+    pub fn split(&self, m: &Matrix) -> Vec<Matrix> {
+        (0..self.nblocks).map(|i| self.extract(m, i)).collect()
+    }
+
+    /// Reassemble blocks into the full matrix.
+    pub fn assemble(&self, blocks: &[Matrix]) -> Matrix {
+        assert_eq!(blocks.len(), self.nblocks);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(b.shape(), (self.block_rows, self.cols), "block {i} shape");
+            let (r0, _) = self.range(i);
+            out.paste(r0, 0, b);
+        }
+        out
+    }
+}
+
+/// Pad a matrix with zero rows so `rows % nblocks == 0`; returns the padded
+/// matrix and the original row count.
+pub fn pad_rows(m: &Matrix, multiple: usize) -> (Matrix, usize) {
+    let orig = m.rows;
+    let rem = m.rows % multiple;
+    if rem == 0 {
+        return (m.clone(), orig);
+    }
+    let padded_rows = m.rows + (multiple - rem);
+    let mut out = Matrix::zeros(padded_rows, m.cols);
+    out.paste(0, 0, m);
+    (out, orig)
+}
+
+/// Strip padding rows added by [`pad_rows`].
+pub fn unpad_rows(m: &Matrix, orig_rows: usize) -> Matrix {
+    assert!(orig_rows <= m.rows);
+    m.slice(0, orig_rows, 0, m.cols)
+}
+
+/// 2-D grid of output blocks for `C = A·Bᵀ`: `C_{ij} = A_i · B_jᵀ`,
+/// block shape (a.block_rows × b.block_rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GridShape {
+    /// Number of row-blocks (A side).
+    pub rows: usize,
+    /// Number of column-blocks (B side).
+    pub cols: usize,
+}
+
+impl GridShape {
+    pub fn n(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Flatten (r, c) → linear id (row-major).
+    pub fn id(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        r * self.cols + c
+    }
+
+    /// Inverse of [`GridShape::id`].
+    pub fn rc(&self, id: usize) -> (usize, usize) {
+        debug_assert!(id < self.n());
+        (id / self.cols, id % self.cols)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.rows).flat_map(move |r| (0..self.cols).map(move |c| (r, c)))
+    }
+}
+
+/// Assemble a full output matrix from a row-major grid of equally-shaped
+/// blocks.
+pub fn assemble_grid(shape: GridShape, blocks: &[Matrix]) -> Matrix {
+    assert_eq!(blocks.len(), shape.n());
+    let (br, bc) = blocks[0].shape();
+    let mut out = Matrix::zeros(shape.rows * br, shape.cols * bc);
+    for (idx, b) in blocks.iter().enumerate() {
+        assert_eq!(b.shape(), (br, bc), "grid block {idx} shape mismatch");
+        let (r, c) = shape.rc(idx);
+        out.paste(r * br, c * bc, b);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn partition_split_assemble_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let m = Matrix::randn(12, 5, &mut rng, 0.0, 1.0);
+        let p = Partition::new(12, 5, 4);
+        let blocks = p.split(&m);
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[0].shape(), (3, 5));
+        assert_eq!(p.assemble(&blocks), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn partition_rejects_uneven() {
+        Partition::new(10, 3, 4);
+    }
+
+    #[test]
+    fn pad_unpad() {
+        let mut rng = Pcg64::new(2);
+        let m = Matrix::randn(10, 3, &mut rng, 0.0, 1.0);
+        let (p, orig) = pad_rows(&m, 4);
+        assert_eq!(p.rows, 12);
+        assert_eq!(orig, 10);
+        // Padding rows are zero.
+        for c in 0..3 {
+            assert_eq!(p.get(10, c), 0.0);
+            assert_eq!(p.get(11, c), 0.0);
+        }
+        assert_eq!(unpad_rows(&p, orig), m);
+        // Already-aligned input is unchanged.
+        let (q, o2) = pad_rows(&m, 5);
+        assert_eq!(q, m);
+        assert_eq!(o2, 10);
+    }
+
+    #[test]
+    fn grid_id_roundtrip() {
+        let g = GridShape { rows: 3, cols: 5 };
+        assert_eq!(g.n(), 15);
+        for r in 0..3 {
+            for c in 0..5 {
+                assert_eq!(g.rc(g.id(r, c)), (r, c));
+            }
+        }
+        assert_eq!(g.iter().count(), 15);
+    }
+
+    #[test]
+    fn grid_assembly_matches_full_product() {
+        // Blockwise A·Aᵀ assembled from blocks equals the direct product.
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::randn(12, 7, &mut rng, 0.0, 1.0);
+        let p = Partition::new(12, 7, 3);
+        let ab = p.split(&a);
+        let shape = GridShape { rows: 3, cols: 3 };
+        let mut blocks = Vec::new();
+        for i in 0..3 {
+            for j in 0..3 {
+                blocks.push(crate::linalg::gemm::matmul_bt(&ab[i], &ab[j]));
+            }
+        }
+        let assembled = assemble_grid(shape, &blocks);
+        let direct = crate::linalg::gemm::matmul_bt(&a, &a);
+        assert!(assembled.rel_err(&direct) < 1e-5);
+    }
+}

@@ -1,0 +1,216 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and the small-side SVD used
+//! by the tall-skinny SVD application (§IV-C): B = AᵀA is p×p, its
+//! eigendecomposition B = V Σ² Vᵀ runs "locally at the master".
+//!
+//! f64 internal arithmetic; f32 I/O to match the Matrix payload type.
+
+use crate::linalg::matrix::Matrix;
+
+/// Result of a symmetric eigendecomposition: `a = V · diag(vals) · Vᵀ`,
+/// eigenvalues sorted descending, eigenvectors in V's columns.
+#[derive(Debug, Clone)]
+pub struct SymEigen {
+    pub values: Vec<f64>,
+    pub vectors: Matrix,
+}
+
+/// Cyclic Jacobi eigenvalue iteration for a symmetric matrix.
+pub fn sym_eigen(a: &Matrix, max_sweeps: usize, tol: f64) -> anyhow::Result<SymEigen> {
+    anyhow::ensure!(a.rows == a.cols, "sym_eigen needs a square matrix");
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    // Symmetrize defensively (accumulated f32 noise in gram matrices).
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[i * n + j] + m[j * n + i]);
+            m[i * n + j] = avg;
+            m[j * n + i] = avg;
+        }
+    }
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let off = |m: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += m[i * n + j] * m[i * n + j];
+                }
+            }
+        }
+        s.sqrt()
+    };
+
+    let scale = m.iter().map(|x| x.abs()).fold(0.0, f64::max).max(1e-30);
+    for _sweep in 0..max_sweeps {
+        if off(&m) <= tol * scale * n as f64 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[p * n + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate rotations into V.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract eigenpairs, sort descending by eigenvalue.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|(val, _)| *val).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (newcol, &(_, oldcol)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vectors.set(r, newcol, v[r * n + oldcol] as f32);
+        }
+    }
+    Ok(SymEigen { values, vectors })
+}
+
+/// SVD of a tall matrix A (m×p, m ≥ p) given its precomputed gram matrix
+/// `B = AᵀA`: returns (V, Σ) with `A = U Σ Vᵀ`, singular values descending.
+/// U is recovered by the caller with another coded matmul `U = A·(V Σ⁻¹)`.
+pub struct SmallSvd {
+    pub v: Matrix,
+    pub sigma: Vec<f64>,
+}
+
+pub fn svd_from_gram(b: &Matrix) -> anyhow::Result<SmallSvd> {
+    let eig = sym_eigen(b, 60, 1e-14)?;
+    let sigma: Vec<f64> = eig.values.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    Ok(SmallSvd { v: eig.vectors, sigma })
+}
+
+/// Compute `V · diag(1/σ)` (the right factor of U = A·VΣ⁻¹); zero columns
+/// for σ below `cutoff` to keep the result finite for rank-deficient input.
+pub fn v_sigma_inv(svd: &SmallSvd, cutoff: f64) -> Matrix {
+    let p = svd.v.rows;
+    let mut out = Matrix::zeros(p, p);
+    for c in 0..p {
+        let s = svd.sigma[c];
+        let inv = if s > cutoff { 1.0 / s } else { 0.0 };
+        for r in 0..p {
+            out.set(r, c, (svd.v.get(r, c) as f64 * inv) as f32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_bt};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn eigen_reconstructs() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::randn(10, 10, &mut rng, 0.0, 1.0);
+        let sym = matmul_bt(&a, &a);
+        let eig = sym_eigen(&sym, 50, 1e-13).unwrap();
+        // V diag Vᵀ ≈ sym
+        let n = 10;
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            d.set(i, i, eig.values[i] as f32);
+        }
+        let recon = matmul(&matmul(&eig.vectors, &d), &eig.vectors.transpose());
+        assert!(recon.rel_err(&sym) < 1e-3, "err={}", recon.rel_err(&sym));
+        // Eigenvalues descending and nonnegative (gram matrix).
+        for w in eig.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(eig.values.iter().all(|&v| v > -1e-3));
+    }
+
+    #[test]
+    fn eigen_orthonormal_vectors() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::randn(8, 8, &mut rng, 0.0, 1.0);
+        let sym = matmul_bt(&a, &a);
+        let eig = sym_eigen(&sym, 50, 1e-13).unwrap();
+        let vtv = matmul(&eig.vectors.transpose(), &eig.vectors);
+        assert!(vtv.rel_err(&Matrix::eye(8)) < 1e-3);
+    }
+
+    #[test]
+    fn eigen_diagonal_matrix() {
+        let mut d = Matrix::zeros(4, 4);
+        for (i, &v) in [4.0f32, 1.0, 3.0, 2.0].iter().enumerate() {
+            d.set(i, i, v);
+        }
+        let eig = sym_eigen(&d, 30, 1e-14).unwrap();
+        let got: Vec<f64> = eig.values.iter().map(|&x| (x * 1e9).round() / 1e9).collect();
+        assert_eq!(got, vec![4.0, 3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn svd_matches_direct() {
+        // Tall A: singular values of A == sqrt(eigenvalues of AᵀA).
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::randn(40, 6, &mut rng, 0.0, 1.0);
+        let gram = matmul(&a.transpose(), &a);
+        let svd = svd_from_gram(&gram).unwrap();
+        assert_eq!(svd.sigma.len(), 6);
+        // Check A·V has orthogonal columns with norms σ_i.
+        let av = matmul(&a, &svd.v);
+        for c in 0..6 {
+            let col: Vec<f32> = (0..40).map(|r| av.get(r, c)).collect();
+            let norm = crate::linalg::matrix::vecops::norm2(&col);
+            assert!(
+                (norm - svd.sigma[c]).abs() < 1e-2 * (1.0 + svd.sigma[c]),
+                "col {c}: {norm} vs {}",
+                svd.sigma[c]
+            );
+        }
+        // Full reconstruction: U Σ Vᵀ = A with U = A V Σ⁻¹.
+        let u = matmul(&a, &v_sigma_inv(&svd, 1e-9));
+        let mut sig = Matrix::zeros(6, 6);
+        for i in 0..6 {
+            sig.set(i, i, svd.sigma[i] as f32);
+        }
+        let recon = matmul(&matmul(&u, &sig), &svd.v.transpose());
+        assert!(recon.rel_err(&a) < 1e-3, "err={}", recon.rel_err(&a));
+    }
+
+    #[test]
+    fn v_sigma_inv_handles_rank_deficiency() {
+        // Rank-1 gram.
+        let ones = Matrix::from_vec(3, 1, vec![1.0, 1.0, 1.0]);
+        let gram = matmul(&ones, &ones.transpose());
+        let svd = svd_from_gram(&gram).unwrap();
+        let vsi = v_sigma_inv(&svd, 1e-6);
+        assert!(vsi.is_finite());
+    }
+}

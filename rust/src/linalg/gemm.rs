@@ -1,0 +1,247 @@
+//! Host GEMM/GEMV: the pure-Rust reference backend and correctness oracle
+//! for the PJRT artifacts, and the workhorse for test-sized problems.
+//!
+//! The kernel is a cache-blocked, 4×4-register-tiled, f32 GEMM with f32
+//! accumulation (matching XLA CPU's f32 semantics closely enough for
+//! tolerance-based comparison) parallelized over row panels.
+
+use crate::linalg::matrix::Matrix;
+use crate::util::threadpool::parallel_for;
+
+/// `C = A · Bᵀ` — the paper's canonical product (Eq. 1). A is m×n, B is
+/// l×n, C is m×l. Row-major × row-major-transposed is the dot-product
+/// friendly layout, so this is the fastest host path.
+pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "A (m×n) · Bᵀ (n×l) needs matching n");
+    let m = a.rows;
+    let l = b.rows;
+    let n = a.cols;
+    let mut c = Matrix::zeros(m, l);
+    let threads = crate::util::threadpool::num_threads();
+    // Parallelize over 64-row panels of A.
+    const PANEL: usize = 64;
+    let panels = m.div_ceil(PANEL);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    parallel_for(threads, panels, |p| {
+        let r0 = p * PANEL;
+        let r1 = (r0 + PANEL).min(m);
+        // SAFETY: panels write disjoint row ranges of c.
+        let c_panel = unsafe {
+            std::slice::from_raw_parts_mut(c_ptr.get().add(r0 * l), (r1 - r0) * l)
+        };
+        gemm_bt_panel(&a.data[r0 * n..r1 * n], &b.data, c_panel, r1 - r0, l, n);
+    });
+    c
+}
+
+/// `C = A · B` with plain orientations (m×k)·(k×n). Implemented via the
+/// dot-friendly kernel against Bᵀ.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "A (m×k) · B (k×n) needs matching k");
+    let bt = b.transpose();
+    matmul_bt(a, &bt)
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Accessor so closures capture `&SendPtr` (Sync) rather than the raw
+    /// pointer field (edition-2021 disjoint capture would otherwise grab
+    /// the non-Sync `*mut f32` directly).
+    #[inline]
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Panel kernel: c[mp×l] = a_panel[mp×n] · bᵀ where b is l×n.
+/// Register-tiled 4×4 with k-blocking.
+fn gemm_bt_panel(a: &[f32], b: &[f32], c: &mut [f32], mp: usize, l: usize, n: usize) {
+    const KC: usize = 256;
+    for kb in (0..n).step_by(KC) {
+        let kend = (kb + KC).min(n);
+        let mut i = 0;
+        while i + 4 <= mp {
+            let mut j = 0;
+            while j + 4 <= l {
+                // 4×4 register tile over bounds-check-free row slices —
+                // the slices let LLVM keep the K loop fully vectorized
+                // (§Perf iteration 1: +2.3× over indexed access).
+                let kw = kend - kb;
+                let a0 = &a[i * n + kb..i * n + kend];
+                let a1 = &a[(i + 1) * n + kb..(i + 1) * n + kend];
+                let a2 = &a[(i + 2) * n + kb..(i + 2) * n + kend];
+                let a3 = &a[(i + 3) * n + kb..(i + 3) * n + kend];
+                let b0 = &b[j * n + kb..j * n + kend];
+                let b1 = &b[(j + 1) * n + kb..(j + 1) * n + kend];
+                let b2 = &b[(j + 2) * n + kb..(j + 2) * n + kend];
+                let b3 = &b[(j + 3) * n + kb..(j + 3) * n + kend];
+                let mut acc = [[0f32; 4]; 4];
+                for k in 0..kw {
+                    let av = [a0[k], a1[k], a2[k], a3[k]];
+                    let bv = [b0[k], b1[k], b2[k], b3[k]];
+                    for (ti, &avi) in av.iter().enumerate() {
+                        for (tj, &bvj) in bv.iter().enumerate() {
+                            acc[ti][tj] += avi * bvj;
+                        }
+                    }
+                }
+                for (ti, row) in acc.iter().enumerate() {
+                    for (tj, &v) in row.iter().enumerate() {
+                        c[(i + ti) * l + j + tj] += v;
+                    }
+                }
+                j += 4;
+            }
+            // Remainder columns.
+            while j < l {
+                for ti in 0..4 {
+                    let mut s = 0f32;
+                    for k in kb..kend {
+                        s += a[(i + ti) * n + k] * b[j * n + k];
+                    }
+                    c[(i + ti) * l + j] += s;
+                }
+                j += 1;
+            }
+            i += 4;
+        }
+        // Remainder rows.
+        while i < mp {
+            for j in 0..l {
+                let mut s = 0f32;
+                for k in kb..kend {
+                    s += a[i * n + k] * b[j * n + k];
+                }
+                c[i * l + j] += s;
+            }
+            i += 1;
+        }
+    }
+}
+
+/// y = A · x (GEMV), parallel over row chunks.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let m = a.rows;
+    let mut y = vec![0f32; m];
+    let threads = crate::util::threadpool::num_threads();
+    const PANEL: usize = 256;
+    let panels = m.div_ceil(PANEL);
+    let y_ptr = SendPtr(y.as_mut_ptr());
+    parallel_for(threads, panels, |p| {
+        let r0 = p * PANEL;
+        let r1 = (r0 + PANEL).min(m);
+        let out = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(r0), r1 - r0) };
+        for (o, r) in (r0..r1).enumerate() {
+            let row = &a.data[r * a.cols..(r + 1) * a.cols];
+            let mut s = 0f32;
+            // Unrolled-by-4 dot.
+            let mut k = 0;
+            let mut s0 = 0f32;
+            let mut s1 = 0f32;
+            let mut s2 = 0f32;
+            let mut s3 = 0f32;
+            while k + 4 <= row.len() {
+                s0 += row[k] * x[k];
+                s1 += row[k + 1] * x[k + 1];
+                s2 += row[k + 2] * x[k + 2];
+                s3 += row[k + 3] * x[k + 3];
+                k += 4;
+            }
+            while k < row.len() {
+                s += row[k] * x[k];
+                k += 1;
+            }
+            out[o] = s + s0 + s1 + s2 + s3;
+        }
+    });
+    y
+}
+
+/// Naive triple-loop GEMM (the oracle for the blocked kernel's tests).
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.get(i, k);
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..b.cols {
+                c.data[i * b.cols + j] += av * b.get(k, j);
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matmul_bt_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        for (m, n, l) in [(1, 1, 1), (4, 4, 4), (7, 13, 9), (65, 33, 70), (128, 64, 128)] {
+            let a = Matrix::randn(m, n, &mut rng, 0.0, 1.0);
+            let b = Matrix::randn(l, n, &mut rng, 0.0, 1.0);
+            let fast = matmul_bt(&a, &b);
+            let slow = matmul_naive(&a, &b.transpose());
+            assert!(
+                fast.rel_err(&slow) < 1e-5,
+                "({m},{n},{l}) err={}",
+                fast.rel_err(&slow)
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_plain_matches_naive() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::randn(31, 17, &mut rng, 0.0, 1.0);
+        let b = Matrix::randn(17, 23, &mut rng, 0.0, 1.0);
+        let fast = matmul(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert!(fast.rel_err(&slow) < 1e-5);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::randn(301, 129, &mut rng, 0.0, 1.0);
+        let x: Vec<f32> = (0..129).map(|i| (i as f32).sin()).collect();
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(129, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..301 {
+            assert!((y[i] - ym.get(i, 0)).abs() < 1e-3 * (1.0 + ym.get(i, 0).abs()));
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(4);
+        let a = Matrix::randn(20, 20, &mut rng, 0.0, 1.0);
+        let i = Matrix::eye(20);
+        assert!(matmul(&a, &i).rel_err(&a) < 1e-6);
+        assert!(matmul(&i, &a).rel_err(&a) < 1e-6);
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let mut rng = Pcg64::new(5);
+        let a = Matrix::randn(40, 25, &mut rng, 0.0, 1.0);
+        let g = matmul_bt(&a, &a); // A·Aᵀ
+        assert_eq!(g.shape(), (40, 40));
+        for r in 0..40 {
+            for c in 0..40 {
+                assert!((g.get(r, c) - g.get(c, r)).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Dense row-major `f32` matrix.
+//!
+//! The numeric payload everywhere in the system: blocks stored in the
+//! object store, PJRT literals, and host reference computation all use this
+//! type. f32 matches the dtype of the AOT-compiled JAX artifacts.
+
+use crate::util::rng::Pcg64;
+
+/// Dense row-major matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Matrix from existing row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// I.i.d. normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64, mean: f32, std: f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal_f32(&mut m.data, mean, std);
+        m
+    }
+
+    /// I.i.d. uniform entries in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, rng: &mut Pcg64, lo: f32, hi: f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_uniform_f32(&mut m.data, lo, hi);
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Extract the sub-matrix rows [r0, r1) × cols [c0, c1).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for (or, ir) in (r0..r1).enumerate() {
+            let src = &self.data[ir * self.cols + c0..ir * self.cols + c1];
+            out.row_mut(or).copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write `block` into this matrix at offset (r0, c0).
+    pub fn paste(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for br in 0..block.rows {
+            let dst_start = (r0 + br) * self.cols + c0;
+            self.data[dst_start..dst_start + block.cols].copy_from_slice(block.row(br));
+        }
+    }
+
+    /// Transpose (out-of-place).
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large inputs.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise addition.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Elementwise subtraction.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// In-place `self += other`.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place `self -= other`.
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// Scalar multiply.
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Relative Frobenius error ‖a−b‖/‖b‖ (with ε guard).
+    pub fn rel_err(&self, reference: &Matrix) -> f64 {
+        let denom = reference.fro_norm().max(1e-30);
+        self.sub(reference).fro_norm() / denom
+    }
+
+    /// True if all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Serialize to little-endian bytes (8-byte header of rows/cols, then
+    /// f32 payload) — the wire format stored in the simulated object store.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.data.len() * 4);
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        for &x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse the wire format written by [`Matrix::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Matrix> {
+        if bytes.len() < 16 {
+            anyhow::bail!("matrix blob too short: {} bytes", bytes.len());
+        }
+        let rows = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let expect = 16 + rows * cols * 4;
+        if bytes.len() != expect {
+            anyhow::bail!("matrix blob size mismatch: got {}, want {expect}", bytes.len());
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        for chunk in bytes[16..].chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+}
+
+/// Dense vector helpers (vectors are (n×1) semantics stored flat).
+pub mod vecops {
+    /// Dot product in f64 accumulation.
+    pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+    }
+
+    /// 2-norm.
+    pub fn norm2(a: &[f32]) -> f64 {
+        dot(a, a).sqrt()
+    }
+
+    /// y += alpha * x
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// out = a - b
+    pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| x - y).collect()
+    }
+
+    /// Scale in place.
+    pub fn scale(x: &mut [f32], s: f32) {
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    fn eye_diag() {
+        let i = Matrix::eye(4);
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(i.get(r, c), if r == c { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn slice_paste_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let m = Matrix::randn(8, 10, &mut rng, 0.0, 1.0);
+        let s = m.slice(2, 5, 3, 9);
+        assert_eq!(s.shape(), (3, 6));
+        assert_eq!(s.get(0, 0), m.get(2, 3));
+        let mut back = Matrix::zeros(8, 10);
+        back.paste(2, 3, &s);
+        assert_eq!(back.get(4, 8), m.get(4, 8));
+        assert_eq!(back.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let mut rng = Pcg64::new(2);
+        let m = Matrix::randn(37, 53, &mut rng, 0.0, 1.0);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.get(10, 20), m.get(20, 10));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.add(&b).data, vec![5.0; 4]);
+        assert_eq!(a.sub(&b).data, vec![-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(a.scale(2.0).data, vec![2.0, 4.0, 6.0, 8.0]);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c.data, vec![5.0; 4]);
+        c.sub_assign(&b);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        let b = Matrix::from_vec(1, 2, vec![3.0, 5.0]);
+        assert!((a.max_abs_diff(&b) - 1.0).abs() < 1e-12);
+        assert!(a.rel_err(&a) < 1e-12);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        let m = Matrix::randn(5, 7, &mut rng, 0.0, 2.0);
+        let b = m.to_bytes();
+        assert_eq!(b.len(), 16 + 5 * 7 * 4);
+        let m2 = Matrix::from_bytes(&b).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn bytes_rejects_corrupt() {
+        assert!(Matrix::from_bytes(&[0u8; 3]).is_err());
+        let m = Matrix::zeros(2, 2);
+        let mut b = m.to_bytes();
+        b.pop();
+        assert!(Matrix::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn vecops_sanity() {
+        use vecops::*;
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert!((dot(&a, &b) - 32.0).abs() < 1e-9);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        assert_eq!(sub(&b, &a), vec![3.0, 3.0, 3.0]);
+        let mut z = [2.0f32, 4.0];
+        scale(&mut z, 0.5);
+        assert_eq!(z, [1.0, 2.0]);
+    }
+}

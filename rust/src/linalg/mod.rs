@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate: matrices, block partitioning, host
+//! GEMM/GEMV, small solves and eigendecompositions.
+//!
+//! The host kernels here serve three roles: (1) correctness oracle for the
+//! AOT-compiled PJRT artifacts, (2) the `HostBackend` compute path used in
+//! unit tests, and (3) the "local at the master" small steps of the
+//! applications (f×f solves in ALS, p×p eigen in SVD).
+
+pub mod blocked;
+pub mod eigen;
+pub mod gemm;
+pub mod matrix;
+pub mod solve;
+
+pub use blocked::{assemble_grid, pad_rows, unpad_rows, GridShape, Partition};
+pub use matrix::Matrix;

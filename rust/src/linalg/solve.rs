@@ -1,0 +1,297 @@
+//! Small dense solves: Cholesky factorization, triangular solves, SPD
+//! inverse — the "done locally at the master" f×f steps of ALS
+//! (Algorithm 2) and the small-system solves in KRR/SVD.
+//!
+//! Factorizations run in f64 internally for stability, with f32 matrix I/O.
+
+use crate::linalg::matrix::Matrix;
+
+/// Cholesky factor L (lower-triangular, row-major f64) of an SPD matrix.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    pub n: usize,
+    l: Vec<f64>,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix; returns Err if a non-positive pivot appears.
+    pub fn factor(a: &Matrix) -> anyhow::Result<Cholesky> {
+        anyhow::ensure!(a.rows == a.cols, "Cholesky needs a square matrix");
+        let n = a.rows;
+        let mut l = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a.get(i, j) as f64;
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    anyhow::ensure!(s > 0.0, "matrix not positive definite at pivot {i} (s={s})");
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky { n, l })
+    }
+
+    /// Solve A x = b via forward/back substitution.
+    pub fn solve(&self, b: &[f32]) -> Vec<f32> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        // L y = b
+        let mut y = vec![0f64; n];
+        for i in 0..n {
+            let mut s = b[i] as f64;
+            for k in 0..i {
+                s -= self.l[i * n + k] * y[k];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        // Lᵀ x = y
+        let mut x = vec![0f64; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        x.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Solve A X = B for a matrix right-hand side (column by column).
+    pub fn solve_matrix(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.rows, self.n);
+        let mut out = Matrix::zeros(b.rows, b.cols);
+        for c in 0..b.cols {
+            let col: Vec<f32> = (0..b.rows).map(|r| b.get(r, c)).collect();
+            let x = self.solve(&col);
+            for r in 0..b.rows {
+                out.set(r, c, x[r]);
+            }
+        }
+        out
+    }
+
+    /// Explicit inverse (used for the paper's `(W Wᵀ + λI)⁻¹` f×f step).
+    pub fn inverse(&self) -> Matrix {
+        self.solve_matrix(&Matrix::eye(self.n))
+    }
+}
+
+/// Solve the regularized normal system `(G + λI) X = B` where G is SPD-ish.
+pub fn solve_regularized(g: &Matrix, lambda: f32, b: &Matrix) -> anyhow::Result<Matrix> {
+    anyhow::ensure!(g.rows == g.cols, "G must be square");
+    let mut greg = g.clone();
+    for i in 0..g.rows {
+        let v = greg.get(i, i) + lambda;
+        greg.set(i, i, v);
+    }
+    Ok(Cholesky::factor(&greg)?.solve_matrix(b))
+}
+
+/// General LU solve with partial pivoting (used by the polynomial-code
+/// decoder's Vandermonde systems, which are square but not SPD).
+pub fn lu_solve(a: &Matrix, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+    anyhow::ensure!(a.rows == a.cols, "LU needs square");
+    let n = a.rows;
+    anyhow::ensure!(b.len() == n, "rhs length");
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut x: Vec<f64> = b.to_vec();
+    let mut perm: Vec<usize> = (0..n).collect();
+    for col in 0..n {
+        // Partial pivot.
+        let (piv, pval) = (col..n)
+            .map(|r| (r, m[r * n + col].abs()))
+            .fold((col, -1.0), |best, cand| if cand.1 > best.1 { cand } else { best });
+        anyhow::ensure!(pval > 1e-300, "singular matrix at column {col}");
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+            }
+            x.swap(col, piv);
+            perm.swap(col, piv);
+        }
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            m[r * n + col] = 0.0;
+            for k in col + 1..n {
+                m[r * n + k] -= f * m[col * n + k];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // Back substitution.
+    let mut out = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in i + 1..n {
+            s -= m[i * n + k] * out[k];
+        }
+        out[i] = s / m[i * n + i];
+    }
+    Ok(out)
+}
+
+/// Solve a real Vandermonde-like system given the evaluation points:
+/// find coefficients c such that Σ_j c_j · points[i]^j = values[i].
+/// (Used as the polynomial-code decode oracle for small systems.)
+pub fn vandermonde_solve(points: &[f64], values: &[f64]) -> anyhow::Result<Vec<f64>> {
+    anyhow::ensure!(points.len() == values.len());
+    let n = points.len();
+    let mut v = Matrix::zeros(n, n);
+    for i in 0..n {
+        let mut p = 1f64;
+        for j in 0..n {
+            v.set(i, j, p as f32); // f32 storage loses precision for big powers;
+            p *= points[i];
+        }
+    }
+    // For precision, build the f64 system directly through lu on an f64 copy:
+    // we bypass Matrix's f32 storage here.
+    let mut m = vec![0f64; n * n];
+    for i in 0..n {
+        let mut p = 1f64;
+        for j in 0..n {
+            m[i * n + j] = p;
+            p *= points[i];
+        }
+    }
+    lu_solve_f64(&m, n, values)
+}
+
+fn lu_solve_f64(a: &[f64], n: usize, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+    let mut m = a.to_vec();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        let (piv, pval) = (col..n)
+            .map(|r| (r, m[r * n + col].abs()))
+            .fold((col, -1.0), |best, cand| if cand.1 > best.1 { cand } else { best });
+        anyhow::ensure!(pval > 1e-300, "singular at column {col}");
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+            }
+            x.swap(col, piv);
+        }
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col + 1..n {
+                m[r * n + k] -= f * m[col * n + k];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    let mut out = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in i + 1..n {
+            s -= m[i * n + k] * out[k];
+        }
+        out[i] = s / m[i * n + i];
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_bt};
+    use crate::util::rng::Pcg64;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::randn(n, n, &mut rng, 0.0, 1.0);
+        let mut g = matmul_bt(&a, &a); // A·Aᵀ is PSD
+        for i in 0..n {
+            g.set(i, i, g.get(i, i) + n as f32); // make strictly PD
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_solves() {
+        let a = spd(12, 1);
+        let chol = Cholesky::factor(&a).unwrap();
+        let b: Vec<f32> = (0..12).map(|i| (i as f32 + 1.0).sin()).collect();
+        let x = chol.solve(&b);
+        // Check A x ≈ b.
+        let xm = Matrix::from_vec(12, 1, x);
+        let ax = matmul(&a, &xm);
+        for i in 0..12 {
+            assert!((ax.get(i, 0) - b[i]).abs() < 1e-3, "row {i}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Matrix::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = spd(8, 2);
+        let inv = Cholesky::factor(&a).unwrap().inverse();
+        let prod = matmul(&a, &inv);
+        assert!(prod.rel_err(&Matrix::eye(8)) < 1e-3);
+    }
+
+    #[test]
+    fn solve_regularized_works() {
+        let mut rng = Pcg64::new(3);
+        let g = {
+            let a = Matrix::randn(6, 6, &mut rng, 0.0, 1.0);
+            matmul_bt(&a, &a)
+        };
+        let b = Matrix::randn(6, 2, &mut rng, 0.0, 1.0);
+        let x = solve_regularized(&g, 0.5, &b).unwrap();
+        // (G + λI)x ≈ b
+        let mut greg = g.clone();
+        for i in 0..6 {
+            greg.set(i, i, greg.get(i, i) + 0.5);
+        }
+        assert!(matmul(&greg, &x).rel_err(&b) < 1e-3);
+    }
+
+    #[test]
+    fn lu_solves_general() {
+        let a = Matrix::from_vec(3, 3, vec![0.0, 2.0, 1.0, 1.0, 0.0, 0.0, 3.0, 1.0, 2.0]);
+        let b = [5.0f64, 1.0, 10.0];
+        let x = lu_solve(&a, &b).unwrap();
+        // Verify residual.
+        for i in 0..3 {
+            let s: f64 = (0..3).map(|j| a.get(i, j) as f64 * x[j]).sum();
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(lu_solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn vandermonde_interpolates() {
+        // c(x) = 3 + 2x − x², points 0..3
+        let pts = [0.0, 1.0, 2.0, 3.0];
+        let vals: Vec<f64> = pts.iter().map(|&x| 3.0 + 2.0 * x - x * x).collect();
+        let c = vandermonde_solve(&pts, &vals).unwrap();
+        assert!((c[0] - 3.0).abs() < 1e-9);
+        assert!((c[1] - 2.0).abs() < 1e-9);
+        assert!((c[2] + 1.0).abs() < 1e-9);
+        assert!(c[3].abs() < 1e-9);
+    }
+}

@@ -1,0 +1,216 @@
+//! `slec` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   figures <id|all>     regenerate paper figures/tables into results/
+//!   run                  run one coded matmul job and print its report
+//!   mc                   Monte-Carlo validation of Theorems 1–2
+//!   inspect-artifacts    list the AOT artifact manifest
+//!   help                 this text
+
+use slec::codes::Scheme;
+use slec::config::Config;
+use slec::coordinator::matmul::{run_matmul, MatmulJob};
+use slec::coordinator::REPORT_HEADERS;
+use slec::figures::{self, RunScale};
+use slec::linalg::Matrix;
+use slec::util::cli::{Args, OptSpec};
+use slec::util::rng::Pcg64;
+use slec::util::stats::render_table;
+
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", help: "JSON config file", takes_value: true, default: None },
+        OptSpec { name: "set", help: "override, e.g. platform.p=0.05 (comma-separable)", takes_value: true, default: None },
+        OptSpec { name: "backend", help: "host | pjrt", takes_value: true, default: None },
+        OptSpec { name: "seed", help: "base RNG seed", takes_value: true, default: None },
+        OptSpec { name: "full", help: "paper-scale run (slower)", takes_value: false, default: None },
+        OptSpec { name: "results-dir", help: "output directory", takes_value: true, default: None },
+    ]
+}
+
+fn run_specs() -> Vec<OptSpec> {
+    let mut s = common_specs();
+    s.extend([
+        OptSpec { name: "scheme", help: "uncoded | speculative[:q] | local-product[:AxB] | product[:AxB] | polynomial[:r]", takes_value: true, default: Some("local-product:2x2") },
+        OptSpec { name: "rows", help: "numeric rows per side", takes_value: true, default: Some("640") },
+        OptSpec { name: "k", help: "numeric inner dim", takes_value: true, default: Some("256") },
+        OptSpec { name: "blocks", help: "systematic row-blocks per side", takes_value: true, default: Some("10") },
+        OptSpec { name: "virtual-dim", help: "paper-scale dim for virtual time", takes_value: true, default: None },
+        OptSpec { name: "decode-workers", help: "parallel decode workers", takes_value: true, default: Some("5") },
+    ]);
+    s
+}
+
+fn build_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(sets) = args.get("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.set("backend", b)?;
+    }
+    if let Some(seed) = args.get_u64("seed").map_err(anyhow::Error::msg)? {
+        cfg.seed = seed;
+    }
+    if let Some(dir) = args.get("results-dir") {
+        cfg.results_dir = dir.into();
+    }
+    Ok(cfg)
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match raw.split_first() {
+        Some((s, rest)) => (s.as_str(), rest.to_vec()),
+        None => ("help", vec![]),
+    };
+
+    match sub {
+        "figures" => cmd_figures(&rest),
+        "run" => cmd_run(&rest),
+        "mc" => cmd_mc(&rest),
+        "inspect-artifacts" => cmd_inspect(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "slec — Serverless Straggler Mitigation using Local Error-Correcting Codes\n\n\
+         Usage: slec <subcommand> [options]\n\n\
+         Subcommands:\n\
+           figures <id|all>   reproduce paper figures ({}, fig12) into results/\n\
+           run                one coded matmul job, printed report\n\
+           mc                 Monte-Carlo validation of Theorems 1 and 2\n\
+           inspect-artifacts  list the AOT artifact manifest\n\n\
+         Common options: --config <file> --set k=v[,k=v] --backend host|pjrt --seed N --full",
+        figures::ALL.join(", ")
+    );
+}
+
+fn cmd_figures(rest: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(rest, &common_specs()).map_err(anyhow::Error::msg)?;
+    let cfg = build_config(&args)?;
+    let scale = if args.flag("full") { RunScale::Full } else { RunScale::Quick };
+    let ids: Vec<String> = if args.positional.is_empty()
+        || args.positional.iter().any(|p| p == "all")
+    {
+        let mut v: Vec<String> = figures::ALL.iter().map(|s| s.to_string()).collect();
+        v.push("fig12".into());
+        v
+    } else {
+        args.positional.clone()
+    };
+    for id in &ids {
+        figures::run(id, &cfg, scale)?;
+    }
+    Ok(())
+}
+
+fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(rest, &run_specs()).map_err(anyhow::Error::msg)?;
+    let cfg = build_config(&args)?;
+    let (env, _rt) = cfg.build_env()?;
+    let scheme = Scheme::parse(args.get("scheme").unwrap())?;
+    let rows = args.get_usize("rows").map_err(anyhow::Error::msg)?.unwrap();
+    let k = args.get_usize("k").map_err(anyhow::Error::msg)?.unwrap();
+    let blocks = args.get_usize("blocks").map_err(anyhow::Error::msg)?.unwrap();
+    let vdim = args.get_usize("virtual-dim").map_err(anyhow::Error::msg)?;
+    let decode_workers = args
+        .get_usize("decode-workers")
+        .map_err(anyhow::Error::msg)?
+        .unwrap();
+
+    let mut rng = Pcg64::new(cfg.seed);
+    let a = Matrix::randn(rows, k, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(rows, k, &mut rng, 0.0, 1.0);
+    let job = MatmulJob {
+        s_a: blocks,
+        s_b: blocks,
+        scheme,
+        decode_workers,
+        verify: true,
+        seed: cfg.seed,
+        job_id: "cli".into(),
+        virtual_dims: vdim.map(|d| (d, d, d)),
+        encode_workers: 0,
+    };
+    let (_, report) = run_matmul(&env, &a, &b, &job)?;
+    println!("{}", render_table(&REPORT_HEADERS, &[report.row()]));
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_mc(rest: &[String]) -> anyhow::Result<()> {
+    let mut specs = common_specs();
+    specs.extend([
+        OptSpec { name: "l", help: "grid parameter L (=L_A=L_B)", takes_value: true, default: Some("10") },
+        OptSpec { name: "p", help: "straggle probability", takes_value: true, default: Some("0.02") },
+        OptSpec { name: "trials", help: "Monte-Carlo trials", takes_value: true, default: Some("100000") },
+    ]);
+    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+    let cfg = build_config(&args)?;
+    let l = args.get_usize("l").map_err(anyhow::Error::msg)?.unwrap();
+    let p = args.get_f64("p").map_err(anyhow::Error::msg)?.unwrap();
+    let trials = args.get_usize("trials").map_err(anyhow::Error::msg)?.unwrap();
+
+    let mc = slec::codes::montecarlo::simulate(l, l, p, trials, cfg.seed);
+    let n = (l + 1) * (l + 1);
+    println!(
+        "L={l} n={n} p={p} trials={trials}\n\
+         Pr(undecodable): empirical {:.3e}  Thm-2 bound {:.3e}\n\
+         mean stragglers {:.2} (np = {:.2}); mean reads {:.2} (npL = {:.2})",
+        mc.pr_undecodable,
+        slec::codes::theory::thm2_bound(l, l, p),
+        mc.mean_stragglers,
+        n as f64 * p,
+        mc.mean_reads(),
+        slec::codes::theory::expected_reads(n, p, l),
+    );
+    for x in [1, 2, 3, 4].map(|m| m * l * 2) {
+        println!(
+            "Pr(R ≥ {x:>3}): empirical {:.3e}  corrected Thm-1 {:.3e}  paper form {:.3e}",
+            mc.pr_reads_ge(x),
+            slec::codes::theory::thm1_bound(x as f64, n, p, l),
+            slec::codes::theory::thm1_bound_paper(x as f64, n, p, l),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(rest: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(rest, &common_specs()).map_err(anyhow::Error::msg)?;
+    let cfg = build_config(&args)?;
+    let manifest = slec::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    println!("{} artifacts in {}:", manifest.len(), cfg.artifacts_dir.display());
+    for name in manifest.names() {
+        let info = manifest.get(name).unwrap();
+        println!(
+            "  {:<44} in={:?} out={:?}",
+            info.name, info.inputs, info.outputs
+        );
+    }
+    Ok(())
+}

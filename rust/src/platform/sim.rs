@@ -1,0 +1,285 @@
+//! Virtual-time phase simulation: order statistics + termination rules.
+//!
+//! A *phase* launches `n` stateless workers; each worker's virtual
+//! duration is sampled from the [`super::straggler::StragglerModel`]. The
+//! coordinator then applies a termination rule:
+//!
+//! - **wait-all** (uncoded): the phase ends at the slowest worker,
+//! - **wait-k**: k-th order statistic (coded schemes with a recovery
+//!   threshold),
+//! - **speculative execution**: at the `wait_frac` completion time,
+//!   relaunch every unfinished task on a fresh worker; a task completes
+//!   at min(original, relaunch) — the paper's baseline (§I),
+//! - **earliest-decodable**: the first virtual time at which the set of
+//!   arrived results satisfies an arbitrary decodability predicate — the
+//!   coded schemes' termination (§II-B).
+//!
+//! Real numerics are computed separately by the coordinator; this module
+//! is purely about *when* things happen on the simulated platform.
+
+use crate::platform::straggler::{StragglerModel, WorkProfile};
+use crate::util::rng::Pcg64;
+
+/// Sampled phase: per-task virtual finish times (relative to phase start).
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub finish: Vec<f64>,
+    pub straggled: Vec<bool>,
+}
+
+/// Launch `n` tasks with the same work profile.
+pub fn launch(model: &StragglerModel, work: &WorkProfile, n: usize, rng: &mut Pcg64) -> Phase {
+    let mut finish = Vec::with_capacity(n);
+    let mut straggled = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = model.sample(work, rng);
+        finish.push(s.total());
+        straggled.push(s.straggled);
+    }
+    Phase { finish, straggled }
+}
+
+/// Launch tasks with heterogeneous profiles.
+pub fn launch_tasks(
+    model: &StragglerModel,
+    works: &[WorkProfile],
+    rng: &mut Pcg64,
+) -> Phase {
+    let mut finish = Vec::with_capacity(works.len());
+    let mut straggled = Vec::with_capacity(works.len());
+    for w in works {
+        let s = model.sample(w, rng);
+        finish.push(s.total());
+        straggled.push(s.straggled);
+    }
+    Phase { finish, straggled }
+}
+
+impl Phase {
+    pub fn n(&self) -> usize {
+        self.finish.len()
+    }
+
+    /// Wait-for-all makespan.
+    pub fn wait_all(&self) -> f64 {
+        self.finish.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Time at which the k-th task (1-based) completes.
+    pub fn wait_k(&self, k: usize) -> f64 {
+        assert!(k >= 1 && k <= self.n());
+        let mut sorted = self.finish.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[k - 1]
+    }
+
+    /// Completion order: task indices sorted by finish time.
+    pub fn arrival_order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        idx.sort_by(|&a, &b| self.finish[a].partial_cmp(&self.finish[b]).unwrap());
+        idx
+    }
+}
+
+/// Outcome of a phase run under speculative execution.
+#[derive(Debug, Clone)]
+pub struct SpeculativeOutcome {
+    /// Final per-task completion time (min of original and relaunch).
+    pub completion: Vec<f64>,
+    /// Phase makespan (all tasks complete).
+    pub makespan: f64,
+    /// Virtual time at which relaunch was triggered.
+    pub trigger_time: f64,
+    /// Number of tasks relaunched.
+    pub relaunched: usize,
+}
+
+/// The paper's speculative-execution baseline: wait until `wait_frac` of
+/// tasks have finished, then resubmit every unfinished task on a fresh
+/// worker *without killing the original* — "the worker that finishes
+/// first submits its results" (§I).
+pub fn speculative(
+    model: &StragglerModel,
+    work: &WorkProfile,
+    phase: &Phase,
+    wait_frac: f64,
+    rng: &mut Pcg64,
+) -> SpeculativeOutcome {
+    let n = phase.n();
+    let k = ((n as f64 * wait_frac).ceil() as usize).clamp(1, n);
+    let trigger_time = phase.wait_k(k);
+    let mut completion = phase.finish.clone();
+    let mut relaunched = 0;
+    for c in completion.iter_mut() {
+        if *c > trigger_time {
+            relaunched += 1;
+            let fresh = model.sample(work, rng).total();
+            *c = (*c).min(trigger_time + fresh);
+        }
+    }
+    let makespan = completion.iter().copied().fold(0.0, f64::max);
+    SpeculativeOutcome {
+        completion,
+        makespan,
+        trigger_time,
+        relaunched,
+    }
+}
+
+/// Earliest-decodable termination: walk completions in arrival order and
+/// stop at the first time `decodable(&arrived)` is true.
+///
+/// Returns `(stop_time, arrived_mask)`. If the predicate never fires, the
+/// phase degenerates to wait-all with every task arrived.
+pub fn earliest_decodable(
+    phase: &Phase,
+    mut decodable: impl FnMut(&[bool]) -> bool,
+) -> (f64, Vec<bool>) {
+    let mut arrived = vec![false; phase.n()];
+    // Cheap early exit: some schemes are decodable with nothing (n = 0).
+    if decodable(&arrived) {
+        return (0.0, arrived);
+    }
+    for &i in &phase.arrival_order() {
+        arrived[i] = true;
+        if decodable(&arrived) {
+            return (phase.finish[i], arrived);
+        }
+    }
+    (phase.wait_all(), arrived)
+}
+
+/// Recompute stragglers: launch replacement tasks for `missing` at
+/// `start_time`; returns the time all replacements are done.
+pub fn recompute_round(
+    model: &StragglerModel,
+    work: &WorkProfile,
+    missing: usize,
+    start_time: f64,
+    rng: &mut Pcg64,
+) -> f64 {
+    if missing == 0 {
+        return start_time;
+    }
+    let replacements = launch(model, work, missing, rng);
+    start_time + replacements.wait_all()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::straggler::{StragglerParams, WorkerRates};
+
+    fn model() -> StragglerModel {
+        StragglerModel::new(StragglerParams::default(), WorkerRates::default())
+    }
+
+    fn work() -> WorkProfile {
+        WorkProfile::block_product(512, 2048, 512)
+    }
+
+    #[test]
+    fn order_statistics_consistent() {
+        let mut rng = Pcg64::new(1);
+        let phase = launch(&model(), &work(), 200, &mut rng);
+        assert_eq!(phase.n(), 200);
+        assert!((phase.wait_k(200) - phase.wait_all()).abs() < 1e-12);
+        assert!(phase.wait_k(1) <= phase.wait_k(100));
+        assert!(phase.wait_k(100) <= phase.wait_k(200));
+        // Arrival order is sorted by finish time.
+        let order = phase.arrival_order();
+        for w in order.windows(2) {
+            assert!(phase.finish[w[0]] <= phase.finish[w[1]]);
+        }
+    }
+
+    #[test]
+    fn speculative_never_slower_than_uncoded_much() {
+        // With stragglers present, speculative should usually beat
+        // wait-all; it can never beat the trigger time.
+        let mut rng = Pcg64::new(2);
+        let mut spec_wins = 0;
+        let trials = 40;
+        for _ in 0..trials {
+            let phase = launch(&model(), &work(), 300, &mut rng);
+            let out = speculative(&model(), &work(), &phase, 0.9, &mut rng);
+            assert!(out.makespan >= out.trigger_time);
+            for (i, &c) in out.completion.iter().enumerate() {
+                assert!(c <= phase.finish[i] + 1e-12);
+            }
+            if out.makespan < phase.wait_all() - 1e-9 {
+                spec_wins += 1;
+            }
+        }
+        assert!(spec_wins > trials / 2, "spec wins only {spec_wins}/{trials}");
+    }
+
+    #[test]
+    fn speculative_relaunches_exactly_unfinished() {
+        let mut rng = Pcg64::new(3);
+        let phase = Phase {
+            finish: vec![1.0, 2.0, 3.0, 10.0, 20.0],
+            straggled: vec![false, false, false, true, true],
+        };
+        let out = speculative(&model(), &work(), &phase, 0.6, &mut rng);
+        assert!((out.trigger_time - 3.0).abs() < 1e-12);
+        assert_eq!(out.relaunched, 2);
+    }
+
+    #[test]
+    fn earliest_decodable_waits_for_threshold() {
+        let phase = Phase {
+            finish: vec![5.0, 1.0, 3.0, 9.0],
+            straggled: vec![false; 4],
+        };
+        // Decodable once any 2 arrived.
+        let (t, arrived) = earliest_decodable(&phase, |a| {
+            a.iter().filter(|&&x| x).count() >= 2
+        });
+        assert!((t - 3.0).abs() < 1e-12);
+        assert_eq!(arrived.iter().filter(|&&x| x).count(), 2);
+        assert!(arrived[1] && arrived[2]);
+    }
+
+    #[test]
+    fn earliest_decodable_never_fires_degenerates_to_wait_all() {
+        let phase = Phase {
+            finish: vec![2.0, 4.0],
+            straggled: vec![false; 2],
+        };
+        let (t, arrived) = earliest_decodable(&phase, |_| false);
+        assert!((t - 4.0).abs() < 1e-12);
+        assert!(arrived.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn earliest_decodable_zero_requirement() {
+        let phase = Phase {
+            finish: vec![2.0],
+            straggled: vec![false],
+        };
+        let (t, arrived) = earliest_decodable(&phase, |_| true);
+        assert_eq!(t, 0.0);
+        assert!(!arrived[0]);
+    }
+
+    #[test]
+    fn recompute_round_advances_time() {
+        let mut rng = Pcg64::new(4);
+        let t = recompute_round(&model(), &work(), 3, 100.0, &mut rng);
+        assert!(t > 100.0);
+        assert_eq!(recompute_round(&model(), &work(), 0, 50.0, &mut rng), 50.0);
+    }
+
+    #[test]
+    fn heterogeneous_launch() {
+        let mut rng = Pcg64::new(5);
+        let works = vec![
+            WorkProfile::block_product(64, 64, 64),
+            WorkProfile::block_product(2048, 8192, 2048),
+        ];
+        let phase = launch_tasks(&model(), &works, &mut rng);
+        // The big task should essentially always dominate.
+        assert!(phase.finish[1] > phase.finish[0]);
+    }
+}

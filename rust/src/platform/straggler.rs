@@ -1,0 +1,267 @@
+//! Straggler model calibrated to the paper's Fig 1.
+//!
+//! Fig 1 shows job-completion times of 3600 AWS Lambda workers running
+//! distributed matmul: median ≈ 135 s and ~2% of workers take far longer
+//! ("straggle consistently"). We model a worker's job time as
+//!
+//! `T = t_invoke + t_read + t_compute + t_write`, all log-normally
+//! jittered, and with probability `p` the worker is a straggler: its
+//! total is multiplied by a heavy-tailed factor (LogNormal clipped to
+//! [min, max], default median ≈ 2.8×, tail to 8×) — matching the Fig-1
+//! histogram's far-right bump.
+
+use crate::util::rng::Pcg64;
+
+/// Straggler-injection parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerParams {
+    /// Probability a worker straggles (paper: p ≈ 0.02 on Lambda).
+    pub p: f64,
+    /// LogNormal mu of the slowdown factor (of ln-factor).
+    pub slow_mu: f64,
+    /// LogNormal sigma of the slowdown factor.
+    pub slow_sigma: f64,
+    /// Clamp range of the slowdown factor.
+    pub slow_min: f64,
+    pub slow_max: f64,
+    /// Multiplicative jitter sigma applied to every job's duration
+    /// (system noise for non-stragglers).
+    pub jitter_sigma: f64,
+}
+
+impl Default for StragglerParams {
+    fn default() -> Self {
+        StragglerParams {
+            p: 0.02,
+            slow_mu: 1.05, // median slowdown e^1.05 ≈ 2.86×
+            slow_sigma: 0.35,
+            slow_min: 1.8,
+            slow_max: 8.0,
+            jitter_sigma: 0.08,
+        }
+    }
+}
+
+/// Compute/communication rates of a simulated serverless worker.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerRates {
+    /// Invocation (cold-start/queueing) latency mean, seconds.
+    pub invoke_mean_s: f64,
+    /// Invocation latency lognormal sigma.
+    pub invoke_sigma: f64,
+    /// Effective compute throughput, FLOP/s (Lambda-class single core).
+    pub flops_per_s: f64,
+    /// Storage model.
+    pub cost: crate::storage::cost::CostModel,
+}
+
+impl Default for WorkerRates {
+    fn default() -> Self {
+        WorkerRates {
+            invoke_mean_s: 1.5,
+            invoke_sigma: 0.4,
+            // Single Lambda worker running BLAS-backed numpy: ~1 GFLOP/s
+            // effective on large blocks (calibrated so the Fig-1 workload
+            // lands at the paper's ≈135 s median).
+            flops_per_s: 1.0e9,
+            cost: crate::storage::cost::CostModel::default(),
+        }
+    }
+}
+
+/// Description of one task's resource demands.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkProfile {
+    pub bytes_read: u64,
+    pub read_ops: u64,
+    pub flops: f64,
+    pub bytes_written: u64,
+    pub write_ops: u64,
+}
+
+impl WorkProfile {
+    /// Profile of a block product `A_i (r×n) · B_jᵀ (n×c)`: read both
+    /// blocks, 2rnc FLOPs, write the (r×c) result.
+    pub fn block_product(r: usize, n: usize, c: usize) -> WorkProfile {
+        WorkProfile {
+            bytes_read: ((r * n + c * n) * 4) as u64,
+            read_ops: 2,
+            flops: 2.0 * r as f64 * n as f64 * c as f64,
+            bytes_written: (r * c * 4) as u64,
+            write_ops: 1,
+        }
+    }
+
+    /// Profile of a parity-encode task: read `l` blocks of `rows×cols`,
+    /// sum them, write one block.
+    pub fn encode_parity(l: usize, rows: usize, cols: usize) -> WorkProfile {
+        WorkProfile {
+            bytes_read: (l * rows * cols * 4) as u64,
+            read_ops: l as u64,
+            flops: ((l - 1) * rows * cols) as f64,
+            bytes_written: (rows * cols * 4) as u64,
+            write_ops: 1,
+        }
+    }
+
+    /// Profile of a block matvec: read block (rows×cols) + vector chunk.
+    pub fn block_matvec(rows: usize, cols: usize) -> WorkProfile {
+        WorkProfile {
+            bytes_read: ((rows * cols + cols) * 4) as u64,
+            read_ops: 2,
+            flops: 2.0 * rows as f64 * cols as f64,
+            bytes_written: (rows * 4) as u64,
+            write_ops: 1,
+        }
+    }
+}
+
+/// A sampled job execution in virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct JobSample {
+    pub invoke: f64,
+    pub io_read: f64,
+    pub compute: f64,
+    pub io_write: f64,
+    pub straggle_factor: f64,
+    pub straggled: bool,
+}
+
+impl JobSample {
+    /// Total virtual duration from invocation to result-in-store.
+    pub fn total(&self) -> f64 {
+        (self.invoke + self.io_read + self.compute + self.io_write) * self.straggle_factor
+    }
+}
+
+/// The sampling engine.
+#[derive(Debug, Clone)]
+pub struct StragglerModel {
+    pub params: StragglerParams,
+    pub rates: WorkerRates,
+}
+
+impl StragglerModel {
+    pub fn new(params: StragglerParams, rates: WorkerRates) -> StragglerModel {
+        StragglerModel { params, rates }
+    }
+
+    /// Sample one worker's execution of `work`.
+    pub fn sample(&self, work: &WorkProfile, rng: &mut Pcg64) -> JobSample {
+        let p = &self.params;
+        let r = &self.rates;
+        let jitter = |rng: &mut Pcg64| rng.lognormal(0.0, p.jitter_sigma);
+        let invoke = r.invoke_mean_s * rng.lognormal(0.0, r.invoke_sigma);
+        let io_read = r.cost.read_many(work.read_ops, work.bytes_read) * jitter(rng);
+        let compute = work.flops / r.flops_per_s * jitter(rng);
+        let io_write =
+            r.cost.read_many(work.write_ops, work.bytes_written) * jitter(rng);
+        let straggled = rng.bernoulli(p.p);
+        let straggle_factor = if straggled {
+            rng.lognormal(p.slow_mu, p.slow_sigma)
+                .clamp(p.slow_min, p.slow_max)
+        } else {
+            1.0
+        };
+        JobSample {
+            invoke,
+            io_read,
+            compute,
+            io_write,
+            straggle_factor,
+            straggled,
+        }
+    }
+
+    /// Sample `n` independent workers on the same profile; returns total
+    /// durations.
+    pub fn sample_fleet(&self, work: &WorkProfile, n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        (0..n).map(|_| self.sample(work, rng).total()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn fig1_profile() -> WorkProfile {
+        // A Fig-1-scale job: two 2048×16384 f32 blocks in, 2·2048²·16384
+        // FLOPs (≈1.37e11 → ≈137 s at 1 GFLOP/s).
+        WorkProfile::block_product(2048, 16384, 2048)
+    }
+
+    #[test]
+    fn median_lands_near_paper_135s() {
+        let model = StragglerModel::new(StragglerParams::default(), WorkerRates::default());
+        let mut rng = Pcg64::new(1);
+        let times = model.sample_fleet(&fig1_profile(), 3600, &mut rng);
+        let s = Summary::of(&times);
+        assert!(
+            (s.p50 - 135.0).abs() < 20.0,
+            "median {:.1}s should be ≈135s",
+            s.p50
+        );
+    }
+
+    #[test]
+    fn straggler_rate_near_p() {
+        let model = StragglerModel::new(StragglerParams::default(), WorkerRates::default());
+        let mut rng = Pcg64::new(2);
+        let n = 50_000;
+        let stragglers = (0..n)
+            .filter(|_| model.sample(&fig1_profile(), &mut rng).straggled)
+            .count();
+        let rate = stragglers as f64 / n as f64;
+        assert!((rate - 0.02).abs() < 0.004, "rate={rate}");
+    }
+
+    #[test]
+    fn stragglers_dominate_tail() {
+        // ~2% of jobs should take ≥ 2× median (the Fig-1 bump).
+        let model = StragglerModel::new(StragglerParams::default(), WorkerRates::default());
+        let mut rng = Pcg64::new(3);
+        let times = model.sample_fleet(&fig1_profile(), 20_000, &mut rng);
+        let s = Summary::of(&times);
+        let tail = times.iter().filter(|&&t| t >= 2.0 * s.p50).count() as f64
+            / times.len() as f64;
+        assert!(tail > 0.008 && tail < 0.035, "tail fraction {tail}");
+    }
+
+    #[test]
+    fn straggle_factor_clamped() {
+        let model = StragglerModel::new(StragglerParams::default(), WorkerRates::default());
+        let mut rng = Pcg64::new(4);
+        for _ in 0..5000 {
+            let s = model.sample(&fig1_profile(), &mut rng);
+            if s.straggled {
+                assert!(s.straggle_factor >= 1.8 && s.straggle_factor <= 8.0);
+            } else {
+                assert_eq!(s.straggle_factor, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn profiles_scale_sensibly() {
+        // Bigger work ⇒ more time; encode profile reads L blocks.
+        let small = WorkProfile::block_product(256, 256, 256);
+        let big = WorkProfile::block_product(512, 512, 512);
+        assert!(big.flops > small.flops * 7.0);
+        let enc = WorkProfile::encode_parity(10, 512, 512);
+        assert_eq!(enc.read_ops, 10);
+        assert_eq!(enc.bytes_read, 10 * 512 * 512 * 4);
+        let mv = WorkProfile::block_matvec(1000, 2000);
+        assert!((mv.flops - 4e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let model = StragglerModel::new(StragglerParams::default(), WorkerRates::default());
+        let mut r1 = Pcg64::new(9);
+        let mut r2 = Pcg64::new(9);
+        let a = model.sample_fleet(&fig1_profile(), 100, &mut r1);
+        let b = model.sample_fleet(&fig1_profile(), 100, &mut r2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,225 @@
+//! Compute backends: the numeric operations the coordinator's workers
+//! perform, either through the AOT-compiled PJRT artifacts
+//! ([`PjrtBackend`]) or the pure-Rust host kernels ([`HostBackend`]).
+//!
+//! [`PjrtBackend`] resolves artifacts by shape-mangled name
+//! (`matmul_bt_{m}x{k}x{n}` …). Shapes outside the compiled set fall back
+//! to the host kernels — counted, so benchmarks can verify the hot path
+//! really runs through PJRT.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::gemm;
+use crate::runtime::{PjrtHandleSync, Tensor};
+
+/// The worker-side numeric ops (Fig 2's f_enc / f_comp / f_dec payloads).
+pub trait ComputeBackend: Send + Sync {
+    /// `C_ij = A_i · B_jᵀ`.
+    fn block_product(&self, a: &Matrix, b: &Matrix) -> Matrix;
+    /// Parity encode: Σ blocks.
+    fn stack_sum(&self, blocks: &[&Matrix]) -> Matrix;
+    /// Recovery: parity − Σ survivors.
+    fn parity_residual(&self, parity: &Matrix, survivors: &[&Matrix]) -> Matrix;
+    /// `y = A·x`.
+    fn gemv(&self, a: &Matrix, x: &[f32]) -> Vec<f32>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend (also the oracle in tests).
+#[derive(Debug, Default)]
+pub struct HostBackend;
+
+impl ComputeBackend for HostBackend {
+    fn block_product(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        gemm::matmul_bt(a, b)
+    }
+
+    fn stack_sum(&self, blocks: &[&Matrix]) -> Matrix {
+        assert!(!blocks.is_empty());
+        let mut acc = blocks[0].clone();
+        for b in &blocks[1..] {
+            acc.add_assign(b);
+        }
+        acc
+    }
+
+    fn parity_residual(&self, parity: &Matrix, survivors: &[&Matrix]) -> Matrix {
+        let mut acc = parity.clone();
+        for b in survivors {
+            acc.sub_assign(b);
+        }
+        acc
+    }
+
+    fn gemv(&self, a: &Matrix, x: &[f32]) -> Vec<f32> {
+        gemm::matvec(a, x)
+    }
+
+    fn name(&self) -> &'static str {
+        "host"
+    }
+}
+
+/// PJRT-backed compute with per-op host fallback for uncompiled shapes.
+pub struct PjrtBackend {
+    handle: PjrtHandleSync,
+    host: HostBackend,
+    /// Ops served by PJRT artifacts.
+    pub pjrt_ops: AtomicU64,
+    /// Ops that fell back to host kernels (shape not in the manifest).
+    pub fallback_ops: AtomicU64,
+}
+
+impl PjrtBackend {
+    pub fn new(handle: PjrtHandleSync) -> PjrtBackend {
+        PjrtBackend {
+            handle,
+            host: HostBackend,
+            pjrt_ops: AtomicU64::new(0),
+            fallback_ops: AtomicU64::new(0),
+        }
+    }
+
+    pub fn counts(&self) -> (u64, u64) {
+        (
+            self.pjrt_ops.load(Ordering::Relaxed),
+            self.fallback_ops.load(Ordering::Relaxed),
+        )
+    }
+
+    fn try_pjrt(&self, artifact: &str, inputs: Vec<Tensor>) -> Option<Vec<Tensor>> {
+        if !self.handle.has(artifact) {
+            return None;
+        }
+        match self.handle.execute(artifact, inputs) {
+            Ok(outs) => {
+                self.pjrt_ops.fetch_add(1, Ordering::Relaxed);
+                Some(outs)
+            }
+            Err(e) => {
+                // A manifest hit that fails to execute is a real bug —
+                // surface it loudly rather than silently falling back.
+                panic!("PJRT execution of '{artifact}' failed: {e}");
+            }
+        }
+    }
+
+    fn fallback(&self) {
+        self.fallback_ops.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn block_product(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let artifact = format!("matmul_bt_{}x{}x{}", a.rows, a.cols, b.rows);
+        if let Some(outs) =
+            self.try_pjrt(&artifact, vec![Tensor::from_matrix(a), Tensor::from_matrix(b)])
+        {
+            return outs[0].to_matrix().expect("rank-2 output");
+        }
+        self.fallback();
+        self.host.block_product(a, b)
+    }
+
+    fn stack_sum(&self, blocks: &[&Matrix]) -> Matrix {
+        let (r, c) = blocks[0].shape();
+        let artifact = format!("stack_sum_{}x{r}x{c}", blocks.len());
+        if self.handle.has(artifact.as_str()) {
+            let outs = self
+                .try_pjrt(&artifact, vec![Tensor::stack(blocks)])
+                .expect("checked has()");
+            return outs[0].to_matrix().expect("rank-2 output");
+        }
+        self.fallback();
+        self.host.stack_sum(blocks)
+    }
+
+    fn parity_residual(&self, parity: &Matrix, survivors: &[&Matrix]) -> Matrix {
+        if survivors.is_empty() {
+            return parity.clone();
+        }
+        let (r, c) = parity.shape();
+        let artifact = format!("parity_residual_{}x{r}x{c}", survivors.len());
+        if self.handle.has(artifact.as_str()) {
+            let outs = self
+                .try_pjrt(
+                    &artifact,
+                    vec![Tensor::from_matrix(parity), Tensor::stack(survivors)],
+                )
+                .expect("checked has()");
+            return outs[0].to_matrix().expect("rank-2 output");
+        }
+        self.fallback();
+        self.host.parity_residual(parity, survivors)
+    }
+
+    fn gemv(&self, a: &Matrix, x: &[f32]) -> Vec<f32> {
+        let artifact = format!("gemv_{}x{}", a.rows, a.cols);
+        if let Some(outs) =
+            self.try_pjrt(&artifact, vec![Tensor::from_matrix(a), Tensor::from_vec1(x)])
+        {
+            return outs[0].data.clone();
+        }
+        self.fallback();
+        self.host.gemv(a, x)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn host_backend_matches_gemm() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::randn(16, 24, &mut rng, 0.0, 1.0);
+        let b = Matrix::randn(12, 24, &mut rng, 0.0, 1.0);
+        let be = HostBackend;
+        assert_eq!(be.block_product(&a, &b), gemm::matmul_bt(&a, &b));
+        assert_eq!(be.name(), "host");
+    }
+
+    #[test]
+    fn host_stack_ops() {
+        let mut rng = Pcg64::new(2);
+        let blocks: Vec<Matrix> = (0..4)
+            .map(|_| Matrix::randn(5, 6, &mut rng, 0.0, 1.0))
+            .collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        let be = HostBackend;
+        let sum = be.stack_sum(&refs);
+        let manual = blocks[0]
+            .add(&blocks[1])
+            .add(&blocks[2])
+            .add(&blocks[3]);
+        assert!(sum.rel_err(&manual) < 1e-6);
+        // residual(sum, all but one) == the left-out block
+        let surv: Vec<&Matrix> = blocks[1..].iter().collect();
+        let rec = be.parity_residual(&sum, &surv);
+        assert!(rec.rel_err(&blocks[0]) < 1e-5);
+    }
+
+    #[test]
+    fn host_gemv_matches() {
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::randn(20, 30, &mut rng, 0.0, 1.0);
+        let x: Vec<f32> = (0..30).map(|i| i as f32 * 0.1).collect();
+        let be = HostBackend;
+        let y = be.gemv(&a, &x);
+        let want = gemm::matvec(&a, &x);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn residual_with_no_survivors_is_parity() {
+        let p = Matrix::eye(3);
+        let be = HostBackend;
+        assert_eq!(be.parity_residual(&p, &[]), p);
+    }
+}

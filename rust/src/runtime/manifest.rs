@@ -1,0 +1,175 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// Input shapes in call order.
+    pub inputs: Vec<Vec<i64>>,
+    /// Output shapes in tuple order.
+    pub outputs: Vec<Vec<i64>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    by_name: HashMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        anyhow::ensure!(
+            path.exists(),
+            "no manifest at {} — run `make artifacts` first",
+            path.display()
+        );
+        let root = json::load_file(&path)?;
+        Self::from_json(&root)
+    }
+
+    pub fn from_json(root: &Json) -> anyhow::Result<Manifest> {
+        let format = root
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'format'"))?;
+        anyhow::ensure!(format == "hlo-text", "unsupported manifest format '{format}'");
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        let mut by_name = HashMap::new();
+        for a in arts {
+            let info = parse_artifact(a)?;
+            anyhow::ensure!(
+                by_name.insert(info.name.clone(), info.clone()).is_none(),
+                "duplicate artifact '{}'",
+                info.name
+            );
+        }
+        Ok(Manifest { by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.by_name.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Sorted artifact names (stable listing for `slec inspect-artifacts`).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.by_name.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+}
+
+fn parse_artifact(a: &Json) -> anyhow::Result<ArtifactInfo> {
+    let name = a
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("artifact missing 'name'"))?
+        .to_string();
+    let file = a
+        .get("file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("artifact '{name}' missing 'file'"))?
+        .to_string();
+    let shapes = |key: &str| -> anyhow::Result<Vec<Vec<i64>>> {
+        a.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' missing '{key}'"))?
+            .iter()
+            .map(|entry| {
+                entry
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("artifact '{name}': bad '{key}' entry"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_u64()
+                            .map(|x| x as i64)
+                            .ok_or_else(|| anyhow::anyhow!("artifact '{name}': bad dim"))
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    Ok(ArtifactInfo {
+        inputs: shapes("inputs")?,
+        outputs: shapes("outputs")?,
+        name,
+        file,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": [
+        {"name": "matmul_bt_8x16x8", "file": "matmul_bt_8x16x8.hlo.txt",
+         "inputs": [{"shape": [8,16], "dtype": "float32"},
+                    {"shape": [8,16], "dtype": "float32"}],
+         "outputs": [{"shape": [8,8], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let root = crate::util::json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&root).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("matmul_bt_8x16x8").unwrap();
+        assert_eq!(a.inputs, vec![vec![8, 16], vec![8, 16]]);
+        assert_eq!(a.outputs, vec![vec![8, 8]]);
+        assert_eq!(m.names(), vec!["matmul_bt_8x16x8"]);
+        assert!(m.get("other").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let root = crate::util::json::parse(r#"{"format": "proto", "artifacts": []}"#).unwrap();
+        assert!(Manifest::from_json(&root).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let dup = SAMPLE.replace(
+            "]\n    }",
+            &format!(
+                ", {}]\n    }}",
+                r#"{"name": "matmul_bt_8x16x8", "file": "x", "inputs": [], "outputs": []}"#
+            ),
+        );
+        let root = crate::util::json::parse(&dup).unwrap();
+        assert!(Manifest::from_json(&root).is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.len() >= 10, "expected the default artifact set");
+            assert!(m.get("matmul_bt_64x256x64").is_some());
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Storage cost model: converts I/O volume into *virtual seconds*.
+//!
+//! The paper's core premise is that in serverless settings
+//! "communication costs greatly outweigh computation costs" (§VI): every
+//! S3 read/write pays a per-op latency plus bytes/bandwidth. The decode
+//! phase's cost — the quantity Theorems 1–2 bound — is linear in blocks
+//! read, which this model makes explicit.
+
+/// S3-like cost parameters (per worker).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-operation latency in seconds (request round-trip).
+    pub op_latency_s: f64,
+    /// Sustained per-worker bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Calibrated to measured AWS Lambda↔S3 characteristics circa the
+        // paper: ~60 ms request latency, ~100 MB/s per-worker throughput.
+        CostModel {
+            op_latency_s: 0.060,
+            bandwidth_bps: 100e6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Virtual time to read `bytes` in one object.
+    pub fn read_time(&self, bytes: u64) -> f64 {
+        self.op_latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Virtual time to write `bytes` in one object.
+    pub fn write_time(&self, bytes: u64) -> f64 {
+        self.op_latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Time for `n_ops` reads totalling `bytes` (e.g. a decode worker
+    /// fetching R blocks).
+    pub fn read_many(&self, n_ops: u64, bytes: u64) -> f64 {
+        n_ops as f64 * self.op_latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Like [`CostModel::read_many`] but with `parallelism` concurrent
+    /// in-flight GETs — the long-lived master's async fetch path for
+    /// small vector blocks.
+    pub fn read_many_parallel(&self, n_ops: u64, bytes: u64, parallelism: u64) -> f64 {
+        let rounds = n_ops.div_ceil(parallelism.max(1));
+        rounds as f64 * self.op_latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_time_linear_in_bytes() {
+        let c = CostModel {
+            op_latency_s: 0.1,
+            bandwidth_bps: 1e6,
+        };
+        assert!((c.read_time(0) - 0.1).abs() < 1e-12);
+        assert!((c.read_time(2_000_000) - 2.1).abs() < 1e-12);
+        assert!((c.write_time(500_000) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn read_many_accumulates_latency() {
+        let c = CostModel {
+            op_latency_s: 0.05,
+            bandwidth_bps: 1e6,
+        };
+        // 10 block reads of 100 KB each: 0.5 s latency + 1 s transfer.
+        let t = c.read_many(10, 1_000_000);
+        assert!((t - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = CostModel::default();
+        // A 64 MB block read should take ~0.7 s.
+        let t = c.read_time(64 << 20);
+        assert!(t > 0.5 && t < 1.0, "t={t}");
+    }
+}

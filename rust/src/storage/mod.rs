@@ -1,0 +1,275 @@
+//! Simulated cloud object storage (the S3 substitute).
+//!
+//! Serverless workers are stateless: all inputs, coded blocks, task
+//! results and decoded outputs flow through this store, exactly as the
+//! paper's workflow (Fig 2) routes everything through S3. The in-memory
+//! implementation is sharded for concurrency and counts bytes/ops so the
+//! cost model can convert I/O into virtual time and EXPERIMENTS.md can
+//! report communication volumes.
+
+pub mod cost;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Operation counters exposed by every store.
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub deletes: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub puts: u64,
+    pub gets: u64,
+    pub deletes: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl StoreStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Blob store abstraction. Payloads are shared (`Arc<Vec<u8>>`) so
+/// many simulated workers can read the same block without copying.
+pub trait ObjectStore: Send + Sync {
+    fn put(&self, key: &str, value: Vec<u8>);
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>>;
+    fn exists(&self, key: &str) -> bool;
+    fn delete(&self, key: &str) -> bool;
+    /// Keys with the given prefix, sorted.
+    fn list(&self, prefix: &str) -> Vec<String>;
+    fn stats(&self) -> StatsSnapshot;
+}
+
+const SHARDS: usize = 16;
+
+/// Sharded in-memory object store.
+pub struct InMemoryStore {
+    shards: Vec<RwLock<HashMap<String, Arc<Vec<u8>>>>>,
+    stats: StoreStats,
+}
+
+impl Default for InMemoryStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InMemoryStore {
+    pub fn new() -> InMemoryStore {
+        InMemoryStore {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            stats: StoreStats::default(),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &RwLock<HashMap<String, Arc<Vec<u8>>>> {
+        // FNV-1a over the key.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        &self.shards[(h % SHARDS as u64) as usize]
+    }
+}
+
+impl ObjectStore for InMemoryStore {
+    fn put(&self, key: &str, value: Vec<u8>) {
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_in
+            .fetch_add(value.len() as u64, Ordering::Relaxed);
+        self.shard(key)
+            .write()
+            .unwrap()
+            .insert(key.to_string(), Arc::new(value));
+    }
+
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let v = self.shard(key).read().unwrap().get(key).cloned();
+        if let Some(ref blob) = v {
+            self.stats.gets.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .bytes_out
+                .fetch_add(blob.len() as u64, Ordering::Relaxed);
+        }
+        v
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.shard(key).read().unwrap().contains_key(key)
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        self.stats.deletes.fetch_add(1, Ordering::Relaxed);
+        self.shard(key).write().unwrap().remove(key).is_some()
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                s.read()
+                    .unwrap()
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned()
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        keys.sort();
+        keys
+    }
+
+    fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+/// Key-naming scheme for the coded matmul workflow — one place so tests,
+/// workers and the coordinator agree.
+pub mod keys {
+    /// Coded row-block `i` of input side `side` ("a"/"b") for job `job`.
+    pub fn coded_block(job: &str, side: &str, i: usize) -> String {
+        format!("{job}/coded/{side}/{i:05}")
+    }
+
+    /// Output block (i, j) of the coded product grid.
+    pub fn out_block(job: &str, i: usize, j: usize) -> String {
+        format!("{job}/out/{i:05}x{j:05}")
+    }
+
+    /// Decoded systematic output block (i, j).
+    pub fn result_block(job: &str, i: usize, j: usize) -> String {
+        format!("{job}/result/{i:05}x{j:05}")
+    }
+
+    /// Matvec result block for coded row-block i.
+    pub fn vec_block(job: &str, i: usize) -> String {
+        format!("{job}/vec/{i:05}")
+    }
+}
+
+/// Store a matrix under a key (wire format from `Matrix::to_bytes`).
+pub fn put_matrix(store: &dyn ObjectStore, key: &str, m: &crate::linalg::Matrix) {
+    store.put(key, m.to_bytes());
+}
+
+/// Fetch + parse a matrix.
+pub fn get_matrix(store: &dyn ObjectStore, key: &str) -> anyhow::Result<crate::linalg::Matrix> {
+    let blob = store
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing object: {key}"))?;
+    crate::linalg::Matrix::from_bytes(&blob)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = InMemoryStore::new();
+        s.put("k1", vec![1, 2, 3]);
+        assert_eq!(s.get("k1").unwrap().as_slice(), &[1, 2, 3]);
+        assert!(s.exists("k1"));
+        assert!(!s.exists("nope"));
+        assert!(s.get("nope").is_none());
+    }
+
+    #[test]
+    fn overwrite_and_delete() {
+        let s = InMemoryStore::new();
+        s.put("k", vec![1]);
+        s.put("k", vec![2, 3]);
+        assert_eq!(s.get("k").unwrap().as_slice(), &[2, 3]);
+        assert!(s.delete("k"));
+        assert!(!s.delete("k"));
+        assert!(s.get("k").is_none());
+    }
+
+    #[test]
+    fn list_prefix_sorted() {
+        let s = InMemoryStore::new();
+        for k in ["job/out/2", "job/out/1", "job/in/1", "other/x"] {
+            s.put(k, vec![0]);
+        }
+        assert_eq!(s.list("job/out/"), vec!["job/out/1", "job/out/2"]);
+        assert_eq!(s.list("job/").len(), 3);
+        assert_eq!(s.list("zzz").len(), 0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let s = InMemoryStore::new();
+        s.put("a", vec![0u8; 100]);
+        s.put("b", vec![0u8; 50]);
+        let _ = s.get("a");
+        let _ = s.get("missing"); // missing get doesn't count bytes
+        s.delete("b");
+        let st = s.stats();
+        assert_eq!(st.puts, 2);
+        assert_eq!(st.gets, 1);
+        assert_eq!(st.deletes, 1);
+        assert_eq!(st.bytes_in, 150);
+        assert_eq!(st.bytes_out, 100);
+    }
+
+    #[test]
+    fn matrix_helpers() {
+        let s = InMemoryStore::new();
+        let mut rng = Pcg64::new(1);
+        let m = Matrix::randn(4, 6, &mut rng, 0.0, 1.0);
+        put_matrix(&s, "m", &m);
+        let back = get_matrix(&s, "m").unwrap();
+        assert_eq!(m, back);
+        assert!(get_matrix(&s, "absent").is_err());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let s = Arc::new(InMemoryStore::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    s.put(&format!("t{t}/k{i}"), vec![t as u8; 10]);
+                    assert!(s.get(&format!("t{t}/k{i}")).is_some());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.stats().puts, 800);
+        assert_eq!(s.list("t3/").len(), 100);
+    }
+
+    #[test]
+    fn key_scheme_stable() {
+        assert_eq!(keys::coded_block("j", "a", 3), "j/coded/a/00003");
+        assert_eq!(keys::out_block("j", 1, 2), "j/out/00001x00002");
+        assert_eq!(keys::result_block("j", 0, 0), "j/result/00000x00000");
+        assert_eq!(keys::vec_block("j", 9), "j/vec/00009");
+    }
+}

@@ -1,0 +1,159 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses this
+//! module: warmup, timed iterations, robust stats, and an aligned report.
+//! Figures-style end-to-end benches also use `run_once` for single-shot
+//! wall-clock + simulated-time reporting.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} iters={:<4} mean={:>12} p50={:>12} p99={:>12}",
+            self.name,
+            self.iters,
+            fmt_duration(self.summary.mean),
+            fmt_duration(self.summary.p50),
+            fmt_duration(self.summary.p99),
+        )
+    }
+}
+
+/// Format a duration given in seconds with adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations, then timed iterations until
+/// either `max_iters` or `max_total` wall time is reached (≥ min_iters).
+pub struct Bencher {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 50,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for heavyweight end-to-end benches.
+    pub fn end_to_end() -> Self {
+        Bencher {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 10,
+            max_total: Duration::from_secs(30),
+        }
+    }
+
+    /// Time `f`, returning per-iteration statistics.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            let _ = black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.max_iters
+            && (times.len() < self.min_iters || start.elapsed() < self.max_total)
+        {
+            let t0 = Instant::now();
+            let _ = black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&times),
+            iters: times.len(),
+        }
+    }
+}
+
+/// Run once and report wall time alongside the value.
+pub fn run_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    let dt = t0.elapsed().as_secs_f64();
+    eprintln!("[bench] {name}: {}", fmt_duration(dt));
+    (v, dt)
+}
+
+/// Identity function that defeats the optimizer (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Pretty header for a bench binary.
+pub fn banner(title: &str) {
+    println!("{}", "=".repeat(78));
+    println!("{title}");
+    println!("{}", "=".repeat(78));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 5,
+            max_total: Duration::from_secs(1),
+        };
+        let r = b.bench("noop", || 1 + 1);
+        assert!(r.iters >= 3 && r.iters <= 5);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let b = Bencher {
+            warmup: 0,
+            min_iters: 2,
+            max_iters: 1000,
+            max_total: Duration::from_millis(50),
+        };
+        let r = b.bench("sleepy", || std::thread::sleep(Duration::from_millis(10)));
+        assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+        assert!(fmt_duration(2e-6).ends_with("us"));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,203 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports: subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, plus auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage rendering and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: options, flags and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]) against a spec. Unknown
+    /// options are an error so typos fail loudly.
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        // Seed defaults.
+        for s in specs {
+            if let Some(d) = s.default {
+                out.options.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.options.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(program: &str, sub: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: {program} {sub} [options]\n\nOptions:\n");
+    for spec in specs {
+        let arg = if spec.takes_value {
+            format!("--{} <v>", spec.name)
+        } else {
+            format!("--{}", spec.name)
+        };
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  {arg:<24} {}{default}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "dim",
+                help: "matrix dimension",
+                takes_value: true,
+                default: Some("1024"),
+            },
+            OptSpec {
+                name: "verbose",
+                help: "chatty output",
+                takes_value: false,
+                default: None,
+            },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(&sv(&["--dim", "2048", "--verbose", "fig5"]), &specs()).unwrap();
+        assert_eq!(a.get("dim"), Some("2048"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["fig5"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--dim=4096"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("dim").unwrap(), Some(4096));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("dim"), Some("1024"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--dim"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = Args::parse(&sv(&["--dim", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("dim").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("slec", "figures", "Reproduce figures", &specs());
+        assert!(u.contains("--dim"));
+        assert!(u.contains("default: 1024"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared substrates: deterministic RNG, JSON, threading, CLI parsing,
+//! statistics, bench and property-test harnesses.
+//!
+//! These exist because the offline build image has no access to the usual
+//! crates (`rand`, `serde`, `tokio`/`rayon`, `clap`, `criterion`,
+//! `proptest`); each substitute is small, tested, and tailored to what the
+//! reproduction needs. See DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

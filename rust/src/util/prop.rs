@@ -1,0 +1,162 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```ignore
+//! proptest(200, 0xBEEF, |g| {
+//!     let la = g.usize_in(1, 12);
+//!     let lb = g.usize_in(1, 12);
+//!     // ... build inputs from `g`, assert invariants ...
+//! });
+//! ```
+//! On failure the panic message includes the case index and the seed so the
+//! exact case replays deterministically. A lightweight "shrink" is provided
+//! by re-running with the reported single-case seed.
+
+use crate::util::rng::Pcg64;
+
+/// Generator handed to property closures.
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Case index (0-based) for diagnostics.
+    pub case: usize,
+}
+
+impl Gen {
+    /// usize uniform in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// f64 uniform in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Probability-ish value in (0, 0.5].
+    pub fn prob(&mut self) -> f64 {
+        self.rng.uniform(1e-4, 0.5)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Random vector of f32 with entries in [-1, 1).
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.uniform(-1.0, 1.0) as f32).collect()
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Random subset of size k from 0..n.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_indices(n, k)
+    }
+}
+
+/// Run `prop` for `cases` random cases with a base `seed`.
+///
+/// Panics (failing the test) with replay info if the property panics.
+pub fn proptest(cases: usize, seed: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Pcg64::new(case_seed),
+                case,
+            };
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{cases} (replay: run_case(seed=0x{case_seed:x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported case seed.
+pub fn run_case(case_seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen {
+        rng: Pcg64::new(case_seed),
+        case: 0,
+    };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        proptest(100, 1, |g| {
+            let a = g.usize_in(0, 10);
+            let b = g.usize_in(0, 10);
+            assert!(a + b <= 20);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_case() {
+        proptest(100, 2, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 95, "x too big: {x}");
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        proptest(10, 42, |g| {
+            if g.case == 3 {
+                // capture some draws — compare across runs via a static
+            }
+            let _ = g.usize_in(0, 1000);
+        });
+        // Determinism: same seed ⇒ same draws.
+        for _ in 0..2 {
+            let mut draws = Vec::new();
+            proptest(5, 7, |g| {
+                // record first draw of each case through a thread_local
+                DRAWS.with(|d| d.borrow_mut().push(g.usize_in(0, 1_000_000)));
+            });
+            DRAWS.with(|d| {
+                draws = d.borrow().clone();
+                d.borrow_mut().clear();
+            });
+            if first.is_empty() {
+                first = draws;
+            } else {
+                assert_eq!(first, draws);
+            }
+        }
+    }
+
+    thread_local! {
+        static DRAWS: std::cell::RefCell<Vec<usize>> = const { std::cell::RefCell::new(Vec::new()) };
+    }
+
+    #[test]
+    fn subset_bounds() {
+        proptest(50, 9, |g| {
+            let n = g.usize_in(1, 30);
+            let k = g.usize_in(0, n);
+            let s = g.subset(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        });
+    }
+}

@@ -1,0 +1,276 @@
+//! Summary statistics, percentiles and text histograms.
+//!
+//! Used by the Fig-1 reproduction (job-time distribution), by the bench
+//! harness, and by every figure module to summarize virtual-time samples.
+
+/// Summary of a sample of f64 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute the summary of a sample (not required to be sorted).
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of empty sample");
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p25: percentile_sorted(&sorted, 0.25),
+            p50: percentile_sorted(&sorted, 0.50),
+            p75: percentile_sorted(&sorted, 0.75),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// One-line human-readable rendering.
+    pub fn line(&self) -> String {
+        format!(
+            "n={} mean={:.3} std={:.3} min={:.3} p50={:.3} p90={:.3} p99={:.3} max={:.3}",
+            self.n, self.mean, self.std, self.min, self.p50, self.p90, self.p99, self.max
+        )
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::obj()
+            .field("n", self.n)
+            .field("mean", self.mean)
+            .field("std", self.std)
+            .field("min", self.min)
+            .field("p25", self.p25)
+            .field("p50", self.p50)
+            .field("p75", self.p75)
+            .field("p90", self.p90)
+            .field("p99", self.p99)
+            .field("max", self.max)
+            .build()
+    }
+}
+
+/// Linear-interpolated percentile of a sorted sample, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile of an unsorted sample.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// A fixed-bin histogram over [lo, hi); values outside are clamped into the
+/// first/last bin (the Fig-1 tail must not be silently dropped).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Bin center for bin `i`.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Fraction of mass in bin `i`.
+    pub fn frac(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.counts[i] as f64 / self.total as f64
+        }
+    }
+
+    /// ASCII rendering (one row per bin) — the terminal version of Fig 1.
+    pub fn render(&self, width: usize) -> String {
+        let maxc = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = (c as f64 / maxc as f64 * width as f64).round() as usize;
+            out.push_str(&format!(
+                "{:>10.1} | {:<width$} {}\n",
+                self.center(i),
+                "#".repeat(bar),
+                c,
+                width = width
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj()
+            .field("lo", self.lo)
+            .field("hi", self.hi)
+            .field("total", self.total)
+            .field(
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| Json::from(c)).collect()),
+            )
+            .build()
+    }
+}
+
+/// Render an aligned text table. `rows` are formatted cells; column widths
+/// auto-fit. Used by every figure harness for paper-style output.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for (i, w) in widths.iter().enumerate() {
+            out.push_str(if i == 0 { "+" } else { "+" });
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        out.push_str(&format!("| {:<width$} ", h, width = widths[i]));
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for i in 0..ncol {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            out.push_str(&format!("| {:<width$} ", cell, width = widths[i]));
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Format seconds compactly (e.g. "135.2s", "2.1m").
+pub fn fmt_secs(s: f64) -> String {
+    if s < 120.0 {
+        format!("{s:.1}s")
+    } else {
+        format!("{:.1}m", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p99 - 99.01).abs() < 0.01);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add_all(&[-5.0, 0.5, 5.5, 9.9, 42.0]);
+        assert_eq!(h.total, 5);
+        assert_eq!(h.counts[0], 2); // -5 clamped + 0.5
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.counts[9], 2); // 9.9 + clamped 42
+        assert!((h.frac(0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_render_nonempty() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add_all(&[0.1, 0.1, 0.9]);
+        let r = h.render(20);
+        assert!(r.lines().count() == 4);
+        assert!(r.contains('#'));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["scheme", "time"],
+            &[
+                vec!["local-product".into(), "1.0".into()],
+                vec!["spec".into(), "2.0".into()],
+            ],
+        );
+        assert!(t.contains("| local-product | 1.0  |"));
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(5.0), "5.0s");
+        assert_eq!(fmt_secs(300.0), "5.0m");
+    }
+}

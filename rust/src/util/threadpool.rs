@@ -1,0 +1,241 @@
+//! Fixed-size thread pool and parallel iteration helpers.
+//!
+//! `tokio`/`rayon` are unavailable offline; the coordinator's real-compute
+//! path (PJRT block products, host GEMM) and the platform simulator's
+//! worker execution run on this pool instead.
+//!
+//! Design: a simple shared-queue pool with scoped `parallel_for` built on
+//! `std::thread::scope`, which lets closures borrow from the caller's stack
+//! without `'static` bounds — the dominant use-case in the coordinator.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool executing `'static` jobs; results flow back over
+/// channels owned by the submitter.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("slec-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool thread"),
+            );
+        }
+        ThreadPool {
+            tx: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job; returns immediately.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool worker died");
+    }
+
+    /// Submit a job returning a value; the result is received via the
+    /// returned handle.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> T + Send + 'static,
+    ) -> JobHandle<T> {
+        let (tx, rx) = mpsc::channel();
+        self.execute(move || {
+            let _ = tx.send(job());
+        });
+        JobHandle { rx }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to a submitted job's result.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("job panicked")
+    }
+}
+
+/// Number of hardware threads (≥1).
+pub fn num_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n` across up to `threads` scoped workers.
+///
+/// Work distribution is dynamic (atomic counter), so uneven task costs —
+/// e.g. a straggling PJRT block product — don't idle the other workers.
+pub fn parallel_for(threads: usize, n: usize, f: impl Fn(usize) + Sync) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = std::sync::Mutex::new(&mut out);
+        // Use chunk-free dynamic scheduling; writes go through disjoint
+        // indices so a striped approach is fine. We avoid unsafe by using a
+        // per-index mutex-free trick: collect (i, T) pairs per thread.
+        let counter = AtomicUsize::new(0);
+        let threads = threads.max(1).min(n.max(1));
+        thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..threads {
+                handles.push(s.spawn(|| {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = counter.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                }));
+            }
+            for h in handles {
+                let local = h.join().expect("parallel_map worker panicked");
+                let mut guard = slots.lock().unwrap();
+                for (i, v) in local {
+                    guard[i] = Some(v);
+                }
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    1u64
+                })
+            })
+            .collect();
+        let total: u64 = handles.into_iter().map(|h| h.join()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let pool = ThreadPool::new(2);
+        let h = pool.submit(|| 42);
+        drop(pool);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn parallel_for_covers_all() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(8, 1000, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(4, 0, |_| panic!("should not run"));
+        let hit = AtomicUsize::new(0);
+        parallel_for(4, 1, |i| {
+            assert_eq!(i, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_map_order() {
+        let v = parallel_map(6, 257, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_uneven_work() {
+        // Tasks with wildly different costs still land in the right slots.
+        let v = parallel_map(4, 64, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(v, (0..64).collect::<Vec<_>>());
+    }
+}

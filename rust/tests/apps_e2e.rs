@@ -1,0 +1,95 @@
+//! Integration: the four §IV applications end-to-end on the host backend —
+//! real convergence under straggler injection, coded vs speculative
+//! agreement, and phase accounting sanity.
+
+use slec::codes::Scheme;
+use slec::coordinator::Env;
+use slec::util::rng::Pcg64;
+
+#[test]
+fn power_iteration_finds_planted_eigenpair() {
+    let env = Env::host();
+    let mut rng = Pcg64::new(1);
+    let a = slec::apps::power_iteration::planted_matrix(128, 60.0, &mut rng);
+    let res = slec::apps::power_iteration::power_iteration(
+        &env,
+        &a,
+        16, // 4 grids of 2×2
+        Scheme::LocalProduct { l_a: 2, l_b: 2 },
+        20,
+        &mut rng,
+    )
+    .expect("power iteration");
+    let lam = *res.eigenvalues.last().unwrap();
+    assert!(lam > 50.0, "λ = {lam}");
+    // Eigenvector should align with the planted all-ones direction.
+    let n = 128.0f64.sqrt();
+    let corr: f64 = res.vector.iter().map(|&v| v as f64 / n).sum::<f64>().abs();
+    assert!(corr > 0.9, "alignment {corr}");
+}
+
+#[test]
+fn krr_trains_a_real_classifier() {
+    let env = Env::host();
+    let mut rng = Pcg64::new(2);
+    let data = slec::apps::krr::synthetic_dataset(512, 256, 10, &mut rng);
+    let cfg = slec::apps::krr::KrrConfig {
+        s_blocks: 64,
+        scheme: Scheme::LocalProduct { l_a: 4, l_b: 4 },
+        ..Default::default()
+    };
+    let res = slec::apps::krr::krr_pcg(&env, &data, &cfg, &mut rng).expect("krr");
+    assert!(res.converged, "PCG should converge in <25 iterations");
+    assert!(
+        res.test_error < 0.25,
+        "kernel classifier error {:.1}% too high",
+        res.test_error * 100.0
+    );
+    assert!(res.encode_secs > 0.0);
+}
+
+#[test]
+fn als_factorizes_ratings() {
+    let env = Env::host();
+    let mut rng = Pcg64::new(3);
+    let ratings = slec::apps::als::synthetic_ratings(100, 100, &mut rng);
+    let cfg = slec::apps::als::AlsConfig {
+        factors: 20,
+        iters: 6,
+        s_rows: 50,
+        s_factors: 10,
+        scheme: Scheme::LocalProduct { l_a: 10, l_b: 10 },
+        ..Default::default()
+    };
+    let res = slec::apps::als::als(&env, &ratings, &cfg, &mut rng).expect("als");
+    let first = res.iterations.first().unwrap().loss;
+    let last = res.iterations.last().unwrap().loss;
+    // Ratings are nearly full-rank noise, so the rank-20 fit saturates —
+    // but ALS must still descend monotonically.
+    assert!(last < first * 0.8, "loss barely moved: {first:.3e} → {last:.3e}");
+    for w in res.iterations.windows(2) {
+        assert!(w[1].loss <= w[0].loss * 1.001, "ALS loss increased");
+    }
+}
+
+#[test]
+fn svd_factorizes_accurately_under_stragglers() {
+    let mut cfg = slec::config::Config::default();
+    cfg.set("platform.p", "0.08").unwrap(); // 4× the paper's straggle rate
+    let (env, _) = cfg.build_env().unwrap();
+    let mut rng = Pcg64::new(4);
+    let a = slec::linalg::Matrix::randn(400, 40, &mut rng, 0.0, 1.0);
+    let res = slec::apps::svd::tall_skinny_svd(
+        &env,
+        &a,
+        &slec::apps::svd::SvdConfig {
+            s_blocks: 20,
+            scheme: Scheme::LocalProduct { l_a: 10, l_b: 10 },
+            ..Default::default()
+        },
+        &mut rng,
+    )
+    .expect("svd");
+    let err = slec::apps::svd::reconstruction_error(&a, &res);
+    assert!(err < 1e-2, "reconstruction error {err}");
+}

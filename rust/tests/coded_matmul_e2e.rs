@@ -1,0 +1,114 @@
+//! End-to-end integration: the coded matmul pipeline over the PJRT
+//! backend — artifacts on the hot path, straggler injection, numerical
+//! verification against the direct product.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+
+use std::sync::Arc;
+
+use slec::codes::Scheme;
+use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
+use slec::linalg::Matrix;
+use slec::runtime::{PjrtBackend, PjrtRuntime};
+use slec::util::rng::Pcg64;
+
+fn pjrt_env() -> (Env, Arc<PjrtBackend>, PjrtRuntime) {
+    let dir = PjrtRuntime::default_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts`"
+    );
+    let rt = PjrtRuntime::start(&dir).expect("engine start");
+    let backend = Arc::new(PjrtBackend::new(rt.handle()));
+    let env = Env::with_backend(Arc::clone(&backend) as Arc<dyn slec::runtime::ComputeBackend>);
+    (env, backend, rt)
+}
+
+#[test]
+fn local_product_through_pjrt_artifacts() {
+    let (env, backend, _rt) = pjrt_env();
+    let mut rng = Pcg64::new(1);
+    // 640×256 with 10 blocks/side → 64×256 blocks: exactly the compiled
+    // matmul_bt_64x256x64 artifact shape.
+    let a = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
+    let job = MatmulJob {
+        s_a: 10,
+        s_b: 10,
+        scheme: Scheme::LocalProduct { l_a: 10, l_b: 10 },
+        verify: true,
+        seed: 3,
+        job_id: "it-pjrt".into(),
+        ..Default::default()
+    };
+    let (_, report) = run_matmul(&env, &a, &b, &job).expect("run");
+    assert!(report.rel_err < 1e-4, "rel_err {}", report.rel_err);
+    let (pjrt_ops, fallbacks) = backend.counts();
+    // The arrived block products (stragglers are never computed — decode
+    // recovers them), the encode sums and the decode recoveries must all
+    // hit compiled artifacts.
+    assert!(pjrt_ops >= 110, "only {pjrt_ops} ops went through PJRT");
+    assert!(
+        fallbacks <= 5,
+        "{fallbacks} host fallbacks — artifact set incomplete?"
+    );
+}
+
+#[test]
+fn decode_recovers_through_pjrt_kernels() {
+    // Force heavy straggling so the decode path (parity_residual /
+    // stack_sum artifacts) definitely executes.
+    let (env, backend, _rt) = pjrt_env();
+    let mut env = env;
+    let mut params = slec::platform::StragglerParams::default();
+    params.p = 0.15; // heavy straggling
+    env.model = slec::platform::StragglerModel::new(params, Default::default());
+    let mut rng = Pcg64::new(5);
+    let a = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
+    let mut recovered_any = false;
+    for seed in 0..4 {
+        let job = MatmulJob {
+            s_a: 10,
+            s_b: 10,
+            scheme: Scheme::LocalProduct { l_a: 10, l_b: 10 },
+            verify: true,
+            seed,
+            job_id: format!("it-dec-{seed}"),
+            ..Default::default()
+        };
+        let (_, report) = run_matmul(&env, &a, &b, &job).expect("run");
+        assert!(report.rel_err < 1e-4, "seed {seed}: rel_err {}", report.rel_err);
+        if report.dec.blocks_read > 0 {
+            recovered_any = true;
+        }
+    }
+    assert!(recovered_any, "p=0.15 should trigger decode work");
+    let (ops, _) = backend.counts();
+    assert!(ops > 0);
+}
+
+#[test]
+fn host_and_pjrt_agree_end_to_end() {
+    let (penv, _backend, _rt) = pjrt_env();
+    let henv = Env::host();
+    let mut rng = Pcg64::new(9);
+    let a = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
+    let job = MatmulJob {
+        s_a: 10,
+        s_b: 10,
+        scheme: Scheme::LocalProduct { l_a: 5, l_b: 5 },
+        verify: false,
+        seed: 11,
+        job_id: "it-agree".into(),
+        ..Default::default()
+    };
+    let (c_pjrt, _) = run_matmul(&penv, &a, &b, &job).expect("pjrt run");
+    let (c_host, _) = run_matmul(&henv, &a, &b, &job).expect("host run");
+    assert!(
+        c_pjrt.rel_err(&c_host) < 1e-4,
+        "backends disagree: {}",
+        c_pjrt.rel_err(&c_host)
+    );
+}

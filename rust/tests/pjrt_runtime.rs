@@ -1,0 +1,193 @@
+//! Integration: the AOT artifacts load, compile and execute through the
+//! PJRT CPU client, and agree with the host kernels — the cross-layer
+//! correctness contract (L1 Pallas → L2 JAX → HLO text → L3 Rust).
+//!
+//! Requires `make artifacts` (Makefile runs it before `cargo test`).
+
+use slec::linalg::{gemm, Matrix};
+use slec::runtime::{ComputeBackend, HostBackend, PjrtBackend, PjrtRuntime, Tensor};
+use slec::util::rng::Pcg64;
+
+fn runtime() -> PjrtRuntime {
+    let dir = PjrtRuntime::default_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    PjrtRuntime::start(dir).expect("engine start")
+}
+
+#[test]
+fn matmul_artifact_matches_host() {
+    let rt = runtime();
+    let h = rt.handle();
+    let mut rng = Pcg64::new(1);
+    let a = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+    let outs = h
+        .execute(
+            "matmul_bt_64x256x64",
+            vec![Tensor::from_matrix(&a), Tensor::from_matrix(&b)],
+        )
+        .expect("execute");
+    let got = outs[0].to_matrix().unwrap();
+    let want = gemm::matmul_bt(&a, &b);
+    assert!(got.rel_err(&want) < 1e-4, "err={}", got.rel_err(&want));
+}
+
+#[test]
+fn stack_sum_and_residual_artifacts() {
+    let rt = runtime();
+    let h = rt.handle();
+    let mut rng = Pcg64::new(2);
+    let blocks: Vec<Matrix> = (0..4)
+        .map(|_| Matrix::randn(64, 256, &mut rng, 0.0, 1.0))
+        .collect();
+    let refs: Vec<&Matrix> = blocks.iter().collect();
+    let outs = h
+        .execute("stack_sum_4x64x256", vec![Tensor::stack(&refs)])
+        .expect("encode");
+    let parity = outs[0].to_matrix().unwrap();
+    let manual = blocks.iter().skip(1).fold(blocks[0].clone(), |mut acc, b| {
+        acc.add_assign(b);
+        acc
+    });
+    assert!(parity.rel_err(&manual) < 1e-5);
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let rt = runtime();
+    let h = rt.handle();
+    let mut rng = Pcg64::new(3);
+    for _ in 0..3 {
+        let a = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+        let b = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+        h.execute(
+            "matmul_bt_64x256x64",
+            vec![Tensor::from_matrix(&a), Tensor::from_matrix(&b)],
+        )
+        .expect("execute");
+    }
+    let stats = h.stats();
+    assert_eq!(stats.compiles, 1, "one compile for three executions");
+    assert_eq!(stats.executions, 3);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn unknown_artifact_is_clean_error() {
+    let rt = runtime();
+    let h = rt.handle();
+    let err = h.execute("nonexistent_op_1x1", vec![]).unwrap_err();
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+    assert!(!h.has("nonexistent_op_1x1"));
+    assert!(h.has("matmul_bt_64x256x64"));
+}
+
+#[test]
+fn shape_mismatch_is_clean_error() {
+    let rt = runtime();
+    let h = rt.handle();
+    let a = Matrix::zeros(8, 8);
+    let err = h
+        .execute(
+            "matmul_bt_64x256x64",
+            vec![Tensor::from_matrix(&a), Tensor::from_matrix(&a)],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
+
+#[test]
+fn pjrt_backend_routes_and_falls_back() {
+    let rt = runtime();
+    let be = PjrtBackend::new(rt.handle());
+    let host = HostBackend;
+    let mut rng = Pcg64::new(4);
+
+    // Compiled shape → PJRT.
+    let a = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+    let got = be.block_product(&a, &b);
+    assert!(got.rel_err(&host.block_product(&a, &b)) < 1e-4);
+
+    // Uncompiled shape → host fallback, same numbers.
+    let c = Matrix::randn(48, 80, &mut rng, 0.0, 1.0);
+    let d = Matrix::randn(32, 80, &mut rng, 0.0, 1.0);
+    let got2 = be.block_product(&c, &d);
+    assert!(got2.rel_err(&host.block_product(&c, &d)) < 1e-5);
+
+    let (pjrt, fallback) = be.counts();
+    assert_eq!(pjrt, 1);
+    assert_eq!(fallback, 1);
+}
+
+#[test]
+fn fused_coded_matmul_artifact_identity() {
+    // The L2 fused pipeline (encode→products→systematic extraction),
+    // lowered as ONE artifact, must equal A·Bᵀ end-to-end through PJRT.
+    let rt = runtime();
+    let h = rt.handle();
+    let mut rng = Pcg64::new(5);
+    let a = Matrix::randn(128, 256, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(128, 256, &mut rng, 0.0, 1.0);
+    let outs = h
+        .execute(
+            "coded_matmul_128x256x128_l2x2",
+            vec![Tensor::from_matrix(&a), Tensor::from_matrix(&b)],
+        )
+        .expect("fused coded matmul");
+    let got = outs[0].to_matrix().unwrap();
+    let want = gemm::matmul_bt(&a, &b);
+    assert!(got.rel_err(&want) < 1e-4, "err={}", got.rel_err(&want));
+}
+
+#[test]
+fn decode_roundtrip_artifact_recovers() {
+    // Two outputs: (recovered, truth) — the PJRT-side peeling identity.
+    let rt = runtime();
+    let h = rt.handle();
+    let mut rng = Pcg64::new(6);
+    let a = Matrix::randn(128, 256, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(128, 256, &mut rng, 0.0, 1.0);
+    let outs = h
+        .execute(
+            "decode_roundtrip_128x256x128_l2x2",
+            vec![Tensor::from_matrix(&a), Tensor::from_matrix(&b)],
+        )
+        .expect("decode roundtrip");
+    assert_eq!(outs.len(), 2);
+    let recovered = outs[0].to_matrix().unwrap();
+    let truth = outs[1].to_matrix().unwrap();
+    assert!(
+        recovered.rel_err(&truth) < 1e-4,
+        "err={}",
+        recovered.rel_err(&truth)
+    );
+}
+
+#[test]
+fn concurrent_callers_share_engine() {
+    let rt = runtime();
+    let h = rt.handle();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let h = h.clone();
+            s.spawn(move || {
+                let mut rng = Pcg64::new(100 + t);
+                let a = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+                let b = Matrix::randn(64, 256, &mut rng, 0.0, 1.0);
+                let outs = h
+                    .execute(
+                        "matmul_bt_64x256x64",
+                        vec![Tensor::from_matrix(&a), Tensor::from_matrix(&b)],
+                    )
+                    .expect("execute");
+                let got = outs[0].to_matrix().unwrap();
+                let want = gemm::matmul_bt(&a, &b);
+                assert!(got.rel_err(&want) < 1e-4);
+            });
+        }
+    });
+}

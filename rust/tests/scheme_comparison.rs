@@ -1,0 +1,119 @@
+//! Integration: cross-scheme invariants of the coordinator — identical
+//! numerics for every scheme, paper-shaped latency ordering at scale, and
+//! deterministic reproducibility.
+
+use slec::codes::Scheme;
+use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
+use slec::linalg::{gemm, Matrix};
+use slec::util::rng::Pcg64;
+
+fn job(scheme: Scheme, seed: u64) -> MatmulJob {
+    MatmulJob {
+        s_a: 10,
+        s_b: 10,
+        scheme,
+        decode_workers: 5,
+        verify: true,
+        seed,
+        job_id: format!("cmp-{}-{seed}", scheme.name()),
+        virtual_dims: Some((20_000, 20_000, 20_000)),
+        encode_workers: 0,
+    }
+}
+
+#[test]
+fn all_schemes_compute_the_same_product() {
+    // Universality (§VI): coding never changes the output.
+    let env = Env::host();
+    let mut rng = Pcg64::new(1);
+    let a = Matrix::randn(320, 128, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(320, 128, &mut rng, 0.0, 1.0);
+    let truth = gemm::matmul_bt(&a, &b);
+    for scheme in [
+        Scheme::Uncoded,
+        Scheme::Speculative { wait_frac: 0.79 },
+        Scheme::LocalProduct { l_a: 5, l_b: 5 },
+        Scheme::LocalProduct { l_a: 2, l_b: 5 },
+        Scheme::Product { t_a: 1, t_b: 1 },
+    ] {
+        let (c, report) = run_matmul(&env, &a, &b, &job(scheme, 7)).expect("run");
+        assert!(
+            c.rel_err(&truth) < 1e-3,
+            "{}: rel_err {}",
+            report.scheme,
+            c.rel_err(&truth)
+        );
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let env = Env::host();
+    let mut rng = Pcg64::new(2);
+    let a = Matrix::randn(320, 64, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(320, 64, &mut rng, 0.0, 1.0);
+    let (_, r1) = run_matmul(&env, &a, &b, &job(Scheme::LocalProduct { l_a: 5, l_b: 5 }, 42)).unwrap();
+    let (_, r2) = run_matmul(&env, &a, &b, &job(Scheme::LocalProduct { l_a: 5, l_b: 5 }, 42)).unwrap();
+    assert_eq!(r1.comp.virtual_secs, r2.comp.virtual_secs);
+    assert_eq!(r1.enc.virtual_secs, r2.enc.virtual_secs);
+    assert_eq!(r1.dec.blocks_read, r2.dec.blocks_read);
+}
+
+#[test]
+fn paper_ordering_at_scale() {
+    // Fig 5's large-dim ordering, averaged over seeds: local-product
+    // beats speculative; polynomial loses (decode reads + encode cost).
+    let env = Env::host();
+    let mut rng = Pcg64::new(3);
+    let a = Matrix::randn(640, 128, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(640, 128, &mut rng, 0.0, 1.0);
+    let mean_total = |scheme: Scheme| -> f64 {
+        (0..5)
+            .map(|s| {
+                let mut j = job(scheme, 100 + s);
+                j.s_a = 20;
+                j.s_b = 20;
+                j.verify = false;
+                run_matmul(&env, &a, &b, &j).expect("run").1.total_secs()
+            })
+            .sum::<f64>()
+            / 5.0
+    };
+    let lp = mean_total(Scheme::LocalProduct { l_a: 10, l_b: 10 });
+    let sp = mean_total(Scheme::Speculative { wait_frac: 0.79 });
+    let poly = mean_total(Scheme::Polynomial { redundancy: 0.21 });
+    assert!(lp < sp, "local-product {lp:.1}s should beat speculative {sp:.1}s");
+    assert!(poly > sp, "polynomial {poly:.1}s should lose to speculative {sp:.1}s");
+}
+
+#[test]
+fn higher_straggle_rate_widens_the_gap() {
+    // Ablation: as p grows, speculative degrades faster than coded.
+    let mut rng = Pcg64::new(4);
+    let a = Matrix::randn(320, 64, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(320, 64, &mut rng, 0.0, 1.0);
+    let gap_at = |p: f64| -> f64 {
+        let mut cfg = slec::config::Config::default();
+        cfg.set("platform.p", &p.to_string()).unwrap();
+        let (env, _) = cfg.build_env().unwrap();
+        let total = |scheme: Scheme| -> f64 {
+            (0..4)
+                .map(|s| {
+                    let mut j = job(scheme, 200 + s);
+                    j.s_a = 10;
+                    j.s_b = 10;
+                    j.verify = false;
+                    run_matmul(&env, &a, &b, &j).unwrap().1.total_secs()
+                })
+                .sum::<f64>()
+        };
+        total(Scheme::Speculative { wait_frac: 0.79 })
+            / total(Scheme::LocalProduct { l_a: 10, l_b: 10 })
+    };
+    let low = gap_at(0.01);
+    let high = gap_at(0.10);
+    assert!(
+        high > low * 0.9,
+        "gap should not shrink substantially with more stragglers: {low:.2} → {high:.2}"
+    );
+}
