@@ -1,0 +1,26 @@
+# Convenience targets. The Rust workspace is fully usable without make;
+# `artifacts` is only needed for the PJRT path (see README feature matrix).
+
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: all build test bench artifacts clean-artifacts
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+# AOT-lower the L1/L2 kernels to HLO-text artifacts + manifest.json.
+# Needs a Python with JAX (the aot module imports `compile.model`, so run
+# from python/). No-op for the default (HostBackend) build and tests.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir $(abspath $(ARTIFACTS_DIR))
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

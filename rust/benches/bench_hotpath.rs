@@ -1,11 +1,10 @@
 //! Hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
 //! host GEMM roofline, peeling-decoder planning throughput, coded
-//! encode/decode numerics, PJRT block-product latency vs host, and the
-//! event-simulation loop.
+//! encode/decode numerics, the event-simulation loop, and (with the
+//! `pjrt` feature) PJRT block-product latency vs host.
 use slec::codes::peeling::plan_peel;
 use slec::linalg::{gemm, Matrix, Partition};
 use slec::platform::{launch, StragglerModel, WorkProfile};
-use slec::runtime::{ComputeBackend, HostBackend, PjrtBackend, PjrtRuntime};
 use slec::util::bench::{banner, black_box, Bencher};
 use slec::util::rng::Pcg64;
 
@@ -61,14 +60,22 @@ fn main() {
         3600.0 / r.summary.p50 / 1e6
     );
 
-    // PJRT vs host block product (requires `make artifacts`).
+    // PJRT vs host block product (requires the `pjrt` feature and
+    // `make artifacts`).
+    bench_pjrt(&b, &mut rng);
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(b: &Bencher, rng: &mut Pcg64) {
+    use slec::runtime::{ComputeBackend, HostBackend, PjrtBackend, PjrtRuntime};
+
     let dir = PjrtRuntime::default_dir();
     if dir.join("manifest.json").exists() {
         let rt = PjrtRuntime::start(&dir).expect("engine");
         let be = PjrtBackend::new(rt.handle());
         let host = HostBackend;
-        let x = Matrix::randn(256, 1024, &mut rng, 0.0, 1.0);
-        let y = Matrix::randn(256, 1024, &mut rng, 0.0, 1.0);
+        let x = Matrix::randn(256, 1024, rng, 0.0, 1.0);
+        let y = Matrix::randn(256, 1024, rng, 0.0, 1.0);
         let r1 = b.bench("block_product 256×1024×256 (pjrt)", || {
             be.block_product(&x, &y)
         });
@@ -82,4 +89,9 @@ fn main() {
     } else {
         println!("(artifacts missing — run `make artifacts` for the PJRT comparison)");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt(_b: &Bencher, _rng: &mut Pcg64) {
+    println!("(built without the `pjrt` feature — host-only run; rebuild with --features pjrt for the PJRT comparison)");
 }

@@ -38,7 +38,7 @@ impl Default for Config {
             straggler: StragglerParams::default(),
             rates: WorkerRates::default(),
             backend: "host".into(),
-            artifacts_dir: crate::runtime::PjrtRuntime::default_dir(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
             results_dir: PathBuf::from("results"),
             threads: 0,
             seed: 42,
@@ -118,7 +118,10 @@ impl Config {
     }
 
     /// Build the execution environment. For the PJRT backend the returned
-    /// runtime must outlive the env.
+    /// runtime must outlive the env. Selecting `backend = "pjrt"` in a
+    /// build without the `pjrt` cargo feature is an error (the config
+    /// parser accepts the name so config files stay portable across
+    /// feature sets).
     pub fn build_env(&self) -> anyhow::Result<(Env, Option<crate::runtime::PjrtRuntime>)> {
         let threads = if self.threads == 0 {
             crate::util::threadpool::num_threads()
@@ -129,6 +132,7 @@ impl Config {
             std::sync::Arc<dyn crate::runtime::ComputeBackend>,
             Option<crate::runtime::PjrtRuntime>,
         ) = match self.backend.as_str() {
+            #[cfg(feature = "pjrt")]
             "pjrt" => {
                 let rt = crate::runtime::PjrtRuntime::start(&self.artifacts_dir)?;
                 (
@@ -136,6 +140,10 @@ impl Config {
                     Some(rt),
                 )
             }
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => anyhow::bail!(
+                "backend 'pjrt' requires building with `cargo build --features pjrt`"
+            ),
             _ => (std::sync::Arc::new(crate::runtime::HostBackend), None),
         };
         let env = Env {
@@ -258,5 +266,14 @@ mod tests {
         assert!(rt.is_none());
         assert_eq!(env.backend.name(), "host");
         assert!(env.threads >= 1);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn build_env_pjrt_requires_feature() {
+        let mut c = Config::default();
+        c.set("backend", "pjrt").unwrap();
+        let err = c.build_env().unwrap_err();
+        assert!(err.to_string().contains("--features pjrt"), "{err}");
     }
 }

@@ -10,8 +10,22 @@
 //!   compute / decode phases over a simulated serverless platform + object
 //!   store, with local product codes, peeling decoding and all baselines.
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! The default build is hermetic and offline: all numerics run on the
+//! pure-Rust [`runtime::HostBackend`]. The PJRT path (layers 1–2 on the
+//! hot path) is behind the `pjrt` cargo feature and needs `make
+//! artifacts` first.
+//!
+//! See `DESIGN.md` (repo root) for the system inventory and
+//! `EXPERIMENTS.md` for how each paper figure is regenerated.
+
+// Style lints that dense numeric/index code trips by design: indexed
+// loops mirror the paper's subscript notation, and the decode paths
+// return structured tuples rather than one-off structs.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::if_same_then_else)]
+
 pub mod apps;
 pub mod codes;
 pub mod config;

@@ -9,6 +9,25 @@
 //! total is multiplied by a heavy-tailed factor (LogNormal clipped to
 //! [min, max], default median ≈ 2.8×, tail to 8×) — matching the Fig-1
 //! histogram's far-right bump.
+//!
+//! # Seeding contract (determinism)
+//!
+//! The model is **stateless**: every random draw flows through the
+//! caller-provided [`Pcg64`], and each [`StragglerModel::sample`] call
+//! consumes a fixed draw sequence (invoke jitter, read jitter, compute
+//! jitter, write jitter, straggle Bernoulli, then — only for stragglers —
+//! the slowdown factor). Consequences callers can rely on (verified by
+//! `tests/platform_determinism.rs`):
+//!
+//! - Two runs with equal seeds produce **identical** job timelines and
+//!   straggler sets, bit for bit — on any machine (no time, thread or
+//!   platform dependence).
+//! - Model instances are interchangeable: cloning or rebuilding a model
+//!   never changes the stream; only the `Pcg64` position matters.
+//! - Changing the *number* of draws (e.g. a straggler vs not) shifts the
+//!   stream for subsequent tasks by design; simulations that must be
+//!   comparable across configurations should use separate seeds or
+//!   [`Pcg64::fork`] per phase.
 
 use crate::util::rng::Pcg64;
 

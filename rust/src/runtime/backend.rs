@@ -1,16 +1,19 @@
 //! Compute backends: the numeric operations the coordinator's workers
 //! perform, either through the AOT-compiled PJRT artifacts
-//! ([`PjrtBackend`]) or the pure-Rust host kernels ([`HostBackend`]).
+//! (`PjrtBackend`, behind the `pjrt` feature) or the pure-Rust host
+//! kernels ([`HostBackend`], always available and the default).
 //!
-//! [`PjrtBackend`] resolves artifacts by shape-mangled name
+//! `PjrtBackend` resolves artifacts by shape-mangled name
 //! (`matmul_bt_{m}x{k}x{n}` …). Shapes outside the compiled set fall back
 //! to the host kernels — counted, so benchmarks can verify the hot path
 //! really runs through PJRT.
 
+#[cfg(feature = "pjrt")]
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::linalg::matrix::Matrix;
 use crate::linalg::gemm;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{PjrtHandleSync, Tensor};
 
 /// The worker-side numeric ops (Fig 2's f_enc / f_comp / f_dec payloads).
@@ -62,6 +65,7 @@ impl ComputeBackend for HostBackend {
 }
 
 /// PJRT-backed compute with per-op host fallback for uncompiled shapes.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     handle: PjrtHandleSync,
     host: HostBackend,
@@ -71,6 +75,7 @@ pub struct PjrtBackend {
     pub fallback_ops: AtomicU64,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(handle: PjrtHandleSync) -> PjrtBackend {
         PjrtBackend {
@@ -110,6 +115,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ComputeBackend for PjrtBackend {
     fn block_product(&self, a: &Matrix, b: &Matrix) -> Matrix {
         let artifact = format!("matmul_bt_{}x{}x{}", a.rows, a.cols, b.rows);

@@ -2,7 +2,10 @@
 //! backend — artifacts on the hot path, straggler injection, numerical
 //! verification against the direct product.
 //!
-//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+//! Requires the `pjrt` cargo feature (`cargo test --features pjrt`) and
+//! `make artifacts` (see README §feature matrix). The hermetic
+//! `HostBackend` twin of this suite is `coded_matmul_host.rs`.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

@@ -2,7 +2,9 @@
 //! PJRT CPU client, and agree with the host kernels — the cross-layer
 //! correctness contract (L1 Pallas → L2 JAX → HLO text → L3 Rust).
 //!
-//! Requires `make artifacts` (Makefile runs it before `cargo test`).
+//! Requires the `pjrt` cargo feature (`cargo test --features pjrt`) and
+//! `make artifacts` (see README §feature matrix).
+#![cfg(feature = "pjrt")]
 
 use slec::linalg::{gemm, Matrix};
 use slec::runtime::{ComputeBackend, HostBackend, PjrtBackend, PjrtRuntime, Tensor};

@@ -1,0 +1,152 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build image has no crates.io access, so this crate provides the
+//! exact surface the repository uses — `Error`, `Result`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros — as a path dependency. It is a
+//! drop-in for that subset: swap the `[dependencies]` entry for the real
+//! `anyhow` and nothing else changes.
+//!
+//! Differences from upstream (deliberate, to stay tiny):
+//! - `Error` flattens its source chain into one message at construction
+//!   (upstream keeps the chain and a backtrace).
+//! - No `Context` extension trait; callers here use `map_err` +
+//!   `anyhow!` instead.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error value.
+///
+/// Like upstream `anyhow::Error`, this type does NOT implement
+/// `std::error::Error` — that is what allows the blanket
+/// `From<E: std::error::Error>` below without overlapping
+/// `impl From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (`map_err(Error::msg)`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both print the full (flattened) message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Flatten the source chain into one line, innermost last.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: `", ::std::stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i32> {
+        Ok(s.parse::<i32>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_num("7").unwrap(), 7);
+        let err = parse_num("x").unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("bad thing {} at {}", 3, "here");
+        assert_eq!(e.to_string(), "bad thing 3 at here");
+        let x = 5;
+        let e2 = anyhow!("inline capture {x}");
+        assert_eq!(e2.to_string(), "inline capture 5");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(v: usize) -> Result<usize> {
+            ensure!(v < 10, "too big: {v}");
+            ensure!(v != 3);
+            if v == 4 {
+                bail!("four is right out");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).unwrap_err().to_string().contains("condition failed"));
+        assert!(f(4).unwrap_err().to_string().contains("four"));
+    }
+
+    #[test]
+    fn alternate_display_matches_plain() {
+        let e = anyhow!("msg");
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+    }
+
+    #[test]
+    fn error_msg_accepts_string() {
+        let r: std::result::Result<(), String> = Err("boom".to_string());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(e.to_string(), "boom");
+    }
+}

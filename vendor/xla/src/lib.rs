@@ -1,0 +1,169 @@
+//! Type-level stub of the `xla` crate's PJRT surface.
+//!
+//! The offline build image cannot fetch (or link) the real `xla` crate,
+//! but the `pjrt` cargo feature of `slec` must still *type-check* so the
+//! engine-thread code stays compiling and reviewable. This crate mirrors
+//! exactly the API the runtime uses:
+//!
+//! - [`PjRtClient::cpu`] / [`PjRtClient::compile`]
+//! - [`HloModuleProto::from_text_file`] / [`XlaComputation::from_proto`]
+//! - [`PjRtLoadedExecutable::execute`] → buffers → [`PjRtBuffer::to_literal_sync`]
+//! - [`Literal`] construction (`vec1`, `reshape`) and readback
+//!   (`to_tuple`, `to_vec`)
+//!
+//! Every runtime entry point returns [`Error`] ("PJRT unavailable
+//! offline"); the `slec` engine thread already degrades gracefully when
+//! the client fails to initialize. Deployments with the real PJRT stack
+//! replace this path dependency with the real `xla` crate — no `slec`
+//! source changes required.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error for every stubbed runtime operation.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable(op: &'static str) -> Error {
+        Error {
+            msg: format!(
+                "{op}: PJRT unavailable (offline `xla` stub — link the real xla crate to execute artifacts)"
+            ),
+        }
+    }
+
+    fn invalid(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// A parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact. The stub validates that the file
+    /// exists and is readable, then discards the contents.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        let path = path.as_ref();
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto),
+            Err(e) => Err(Error::invalid(format!(
+                "HloModuleProto::from_text_file: cannot read {}: {e}",
+                path.display()
+            ))),
+        }
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A PJRT client (stub: construction always fails — there is no runtime).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs; returns per-device, per-output buffers.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal (stub: shape-only bookkeeping).
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from host f32 data.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape to the given dims; errors on element-count mismatch, like
+    /// the real crate. This is a *real* validation (not a stubbed-out
+    /// path), so the error names the mismatch rather than blaming the
+    /// missing runtime.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let have: i64 = self.dims.iter().product();
+        let want: i64 = dims.iter().product();
+        if have == want {
+            Ok(Literal {
+                dims: dims.to_vec(),
+            })
+        } else {
+            Err(Error::invalid(format!(
+                "Literal::reshape: element count mismatch ({have} elements in {:?} vs {want} in {dims:?})",
+                self.dims
+            )))
+        }
+    }
+
+    /// Unpack a tuple literal (stub: no data to unpack).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Read back as a host vector (stub: no data).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_math() {
+        let l = Literal::vec1(&[0.0; 12]);
+        assert!(l.reshape(&[3, 4]).is_ok());
+        assert!(l.reshape(&[5, 5]).is_err());
+    }
+}
