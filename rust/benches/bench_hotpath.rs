@@ -60,6 +60,32 @@ fn main() {
         3600.0 / r.summary.p50 / 1e6
     );
 
+    // Discrete-event core: a bounded-pool phase pushes every task through
+    // the queue twice (start + finish) with FIFO dispatch in between.
+    {
+        use slec::platform::event::{run_phase, EventSim, PhaseState, Pool, Termination};
+        let r = b.bench("event core 3600 tasks / 512 workers", || {
+            let mut rng = Pcg64::new(4);
+            let mut sim = EventSim::new(Pool::Workers(512));
+            let mut ph = PhaseState::launch_uniform(
+                &mut sim,
+                &model,
+                &work,
+                3600,
+                0,
+                Termination::WaitAll,
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &model, &mut rng, &mut |_, _| false);
+            black_box(ph.duration())
+        });
+        println!(
+            "{}  → {:.2} M events/s",
+            r.line(),
+            3600.0 / r.summary.p50 / 1e6
+        );
+    }
+
     // PJRT vs host block product (requires the `pjrt` feature and
     // `make artifacts`).
     bench_pjrt(&b, &mut rng);

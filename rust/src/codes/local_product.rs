@@ -61,6 +61,16 @@ impl LocalProductCode {
         (gi * (self.a.l + 1) + r, gj * (self.b.l + 1) + c)
     }
 
+    /// Which local grid (row-major over `ga × gb`) owns flat coded-output
+    /// cell `cell` (row-major over the `ra × rb` coded grid)? Inverse of
+    /// [`LocalProductCode::grid_cell`] at grid granularity — used to
+    /// retest only the affected grid when one result arrives.
+    pub fn grid_of_cell(&self, cell: usize) -> usize {
+        let (_, rb) = self.coded_grid();
+        let (r, c) = (cell / rb, cell % rb);
+        (r / (self.a.l + 1)) * self.b.groups() + c / (self.b.l + 1)
+    }
+
     /// Encode the row-blocks of one input matrix side: returns coded blocks
     /// in coded order. Parities are sums of each group's members.
     pub fn encode_side(layout: LocalLayout, blocks: &[Matrix]) -> Vec<Matrix> {
@@ -162,6 +172,45 @@ fn reconstruct_from_line(
         }
         acc
     }
+}
+
+/// Peeling plan of one local grid `(gi, gj)` from the coded-output
+/// arrival mask alone (no numerics). The single source of truth for
+/// mask-level grid extraction, shared by [`grid_decodable`] and
+/// [`plan_grids`].
+pub fn plan_grid(code: &LocalProductCode, gi: usize, gj: usize, arrived: &[bool]) -> PeelPlan {
+    let (l_a, l_b) = (code.a.l, code.b.l);
+    let (_, rb) = code.coded_grid();
+    let mut present = Vec::with_capacity((l_a + 1) * (l_b + 1));
+    for r in 0..=l_a {
+        for c in 0..=l_b {
+            let (cr, cc) = code.grid_cell(gi, gj, r, c);
+            present.push(arrived[cr * rb + cc]);
+        }
+    }
+    plan_peel(l_a + 1, l_b + 1, &present)
+}
+
+/// Is local grid `g` (row-major over the `ga × gb` grid-of-grids)
+/// peeling-decodable given the coded-output arrival mask? This is the
+/// boolean predicate behind the earliest-decodable termination of both
+/// the coordinator and the scenario runner.
+pub fn grid_decodable(code: &LocalProductCode, g: usize, arrived: &[bool]) -> bool {
+    let gb = code.b.groups();
+    plan_grid(code, g / gb, g % gb, arrived).decodable()
+}
+
+/// Peeling plans for every local grid from an arrival mask alone (no
+/// numerics) — the scenario runner's decode-phase accounting.
+pub fn plan_grids(code: &LocalProductCode, arrived: &[bool]) -> Vec<PeelPlan> {
+    let (ga, gb) = code.groups();
+    let mut plans = Vec::with_capacity(ga * gb);
+    for gi in 0..ga {
+        for gj in 0..gb {
+            plans.push(plan_grid(code, gi, gj, arrived));
+        }
+    }
+    plans
 }
 
 /// Full-output decode: given the coded output grid (row-major

@@ -258,6 +258,79 @@ mod tests {
         assert_eq!(checked, 84); // C(9,3)
     }
 
+    // --- golden-value fixtures: exact peel orders -----------------------
+
+    #[test]
+    fn golden_isolated_straggler_3x3() {
+        let p = grid(3, 3, &[(1, 1)]);
+        let plan = plan_peel(3, 3, &p);
+        assert!(plan.decodable());
+        assert_eq!(
+            plan.steps,
+            vec![Recovery { cell: (1, 1), axis: Axis::Row, reads: 2 }]
+        );
+        assert_eq!(plan.total_reads, 2);
+        assert_eq!(plan.distinct_reads, 2);
+    }
+
+    #[test]
+    fn golden_row_pair_peels_col_then_row() {
+        // (0,0) and (0,1) share row 0, so row 0 cannot peel first; the
+        // planner peels (0,0) via its column, which unlocks row 0 for
+        // (0,1). Costs tie at 2, and the first candidate found wins.
+        let p = grid(3, 3, &[(0, 0), (0, 1)]);
+        let plan = plan_peel(3, 3, &p);
+        assert!(plan.decodable());
+        assert_eq!(
+            plan.steps,
+            vec![
+                Recovery { cell: (0, 0), axis: Axis::Col, reads: 2 },
+                Recovery { cell: (0, 1), axis: Axis::Row, reads: 2 },
+            ]
+        );
+        assert_eq!(plan.total_reads, 4);
+        // Step 2 re-reads the just-recovered (0,0) from worker memory:
+        // only (1,0), (2,0) and (0,2) are fetched from the store.
+        assert_eq!(plan.distinct_reads, 3);
+    }
+
+    #[test]
+    fn golden_whole_row_peels_by_columns_in_order() {
+        // Entire row 1 of a 3×4 grid: every column has exactly one
+        // missing cell and columns are cheaper (2 reads) than the row
+        // alternative (3), so the plan is four column peels left→right.
+        let missing: Vec<(usize, usize)> = (0..4).map(|c| (1, c)).collect();
+        let p = grid(3, 4, &missing);
+        let plan = plan_peel(3, 4, &p);
+        assert!(plan.decodable());
+        let want: Vec<Recovery> = (0..4)
+            .map(|c| Recovery { cell: (1, c), axis: Axis::Col, reads: 2 })
+            .collect();
+        assert_eq!(plan.steps, want);
+        assert_eq!(plan.total_reads, 8);
+    }
+
+    #[test]
+    fn erasures_beyond_local_parities_report_failure() {
+        // One parity per row and per column recovers no line with ≥ 2
+        // erasures: two full rows (or the whole grid) must be reported
+        // undecodable with an empty plan, not silently "recovered".
+        let two_rows: Vec<(usize, usize)> =
+            (0..2).flat_map(|r| (0..3).map(move |c| (r, c))).collect();
+        let p = grid(3, 3, &two_rows);
+        let plan = plan_peel(3, 3, &p);
+        assert!(!plan.decodable());
+        assert!(plan.steps.is_empty());
+        assert_eq!(plan.recovered(), 0);
+        assert_eq!(plan.total_reads, 0);
+        assert_eq!(plan.undecodable.len(), 6);
+
+        let all = grid(3, 3, &(0..3).flat_map(|r| (0..3).map(move |c| (r, c))).collect::<Vec<_>>());
+        let plan = plan_peel(3, 3, &all);
+        assert!(!plan.decodable());
+        assert_eq!(plan.undecodable.len(), 9);
+    }
+
     #[test]
     fn interlocking_three_decodable() {
         // Fig 8-style interlocking configuration in a 3×3 grid.

@@ -20,6 +20,11 @@
 
 use crate::linalg::matrix::Matrix;
 
+/// Past this recovery threshold the real-arithmetic Vandermonde decode is
+/// numerically meaningless (and the paper's master "cannot store" the
+/// blocks): harnesses report virtual time but mark numerics infeasible.
+pub const NUMERIC_CAP: usize = 64;
+
 /// Polynomial code over `s_a × s_b` systematic blocks with `n_workers ≥ K`
 /// total workers.
 #[derive(Debug, Clone)]

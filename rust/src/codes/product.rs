@@ -203,6 +203,71 @@ impl ProductCode {
         (self.row_code.encode(a), self.col_code.encode(b))
     }
 
+    /// Boolean decodability: iterate axis recoveries on the arrival mask
+    /// to fixpoint (the earliest-decodable predicate).
+    pub fn decodable(&self, arrived: &[bool]) -> bool {
+        self.plan_decode(arrived).is_some()
+    }
+
+    /// Mask-level twin of [`ProductCode::decode`]: runs the same
+    /// column-then-row recovery passes over a presence mask and returns
+    /// `(blocks_read, recovered)` with identical accounting, or `None`
+    /// when the pattern is stuck. Used by the scenario runner, which
+    /// simulates timing without materializing matrices.
+    pub fn plan_decode(&self, arrived: &[bool]) -> Option<(usize, usize)> {
+        let (ra, rb) = self.coded_grid();
+        assert_eq!(arrived.len(), ra * rb);
+        let s_a = self.row_code.systematic;
+        let s_b = self.col_code.systematic;
+        let mut have = arrived.to_vec();
+        let mut blocks_read = 0usize;
+        let mut recovered = 0usize;
+        loop {
+            let mut progressed = false;
+            for c in 0..rb {
+                let missing_data = (0..s_a).filter(|&r| !have[r * rb + c]).count();
+                if missing_data == 0 {
+                    continue;
+                }
+                let avail_par = (s_a..ra).filter(|&r| have[r * rb + c]).count();
+                if missing_data <= avail_par {
+                    blocks_read += (0..ra).filter(|&r| have[r * rb + c]).count();
+                    for r in 0..s_a {
+                        if !have[r * rb + c] {
+                            recovered += 1;
+                            progressed = true;
+                        }
+                        have[r * rb + c] = true;
+                    }
+                }
+            }
+            for r in 0..s_a {
+                let missing_data = (0..s_b).filter(|&c| !have[r * rb + c]).count();
+                if missing_data == 0 {
+                    continue;
+                }
+                let avail_par = (s_b..rb).filter(|&c| have[r * rb + c]).count();
+                if missing_data <= avail_par {
+                    blocks_read += (0..rb).filter(|&c| have[r * rb + c]).count();
+                    for c in 0..s_b {
+                        if !have[r * rb + c] {
+                            recovered += 1;
+                            progressed = true;
+                        }
+                        have[r * rb + c] = true;
+                    }
+                }
+            }
+            let all_sys = (0..s_a).all(|r| (0..s_b).all(|c| have[r * rb + c]));
+            if all_sys {
+                return Some((blocks_read, recovered));
+            }
+            if !progressed {
+                return None;
+            }
+        }
+    }
+
     /// Decode the coded output grid (row-major `Option<Matrix>`); uses
     /// column-wise then row-wise MDS recovery passes until fixpoint.
     pub fn decode(&self, coded: &mut [Option<Matrix>]) -> anyhow::Result<ProductDecode> {
@@ -396,6 +461,55 @@ mod tests {
             grid[r * rb + c] = None;
         }
         assert!(pc.decode(&mut grid).is_err());
+    }
+
+    #[test]
+    fn plan_decode_matches_numeric_decode_accounting() {
+        // The mask-level twin must agree with the numeric decoder on
+        // reads/recovered for random straggler patterns (and on being
+        // stuck).
+        let pc = ProductCode::new(4, 2, 3, 2);
+        let a = random_blocks(4, 2, 3, 10);
+        let b = random_blocks(3, 2, 3, 11);
+        let (ra, rb) = pc.coded_grid();
+        let mut rng = Pcg64::new(12);
+        for _ in 0..60 {
+            let drop = rng.index(8);
+            let missing = rng.sample_indices(ra * rb, drop);
+            let mut grid = build_grid(&pc, &a, &b);
+            let mut mask = vec![true; ra * rb];
+            for &m in &missing {
+                grid[m] = None;
+                mask[m] = false;
+            }
+            match pc.plan_decode(&mask) {
+                Some((reads, recovered)) => {
+                    let dec = pc.decode(&mut grid).expect("plan says decodable");
+                    assert_eq!(dec.blocks_read, reads, "missing {missing:?}");
+                    assert_eq!(dec.recovered, recovered, "missing {missing:?}");
+                }
+                None => {
+                    assert!(pc.decode(&mut grid).is_err(), "missing {missing:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decodable_mask_semantics() {
+        let pc = ProductCode::new(3, 1, 3, 1);
+        let (ra, rb) = pc.coded_grid();
+        let all = vec![true; ra * rb];
+        assert!(pc.decodable(&all));
+        // A 2×2 square of missing data cells with 1 parity per axis is the
+        // canonical stuck pattern.
+        let mut mask = all.clone();
+        for &(r, c) in &[(0usize, 0usize), (0, 1), (1, 0), (1, 1)] {
+            mask[r * rb + c] = false;
+        }
+        assert!(!pc.decodable(&mask));
+        // Nothing arrived: undecodable (no parities to work with).
+        assert!(!pc.decodable(&vec![false; ra * rb]));
     }
 
     #[test]

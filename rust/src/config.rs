@@ -151,6 +151,7 @@ impl Config {
             store: std::sync::Arc::new(crate::storage::InMemoryStore::new()),
             model: self.model(),
             threads,
+            pool: None,
         };
         Ok((env, rt))
     }

@@ -5,6 +5,12 @@
 //! iterations); each iteration runs the compute phase over the coded
 //! row-blocks and a cheap vector-decode. The speculative baseline runs the
 //! same row-blocks uncoded with wait-for-q% + relaunch.
+//!
+//! Every phase executes on the discrete-event core
+//! ([`crate::platform::event`]): earliest-decodable cutoffs cancel
+//! straggling tasks (freeing workers on bounded pools), and a recompute
+//! round for an undecodable grid runs as a fresh event-driven phase on the
+//! same virtual clock.
 
 use crate::codes::matvec::CodedMatvec2D;
 use crate::codes::Scheme;
@@ -12,7 +18,8 @@ use crate::coordinator::matmul::Env;
 use crate::coordinator::metrics::{JobReport, PhaseMetrics};
 use crate::linalg::blocked::Partition;
 use crate::linalg::matrix::Matrix;
-use crate::platform::{launch, speculative, WorkProfile};
+use crate::platform::event::{run_phase, PhaseState, Termination};
+use crate::platform::WorkProfile;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::parallel_map;
 
@@ -100,10 +107,19 @@ impl MatvecEngine {
                     bytes_written: (parities * (v_rows / s) * v_cols * 4) as u64 / fleet as u64,
                     write_ops: parities.div_ceil(fleet).max(1) as u64,
                 };
-                let enc_phase = launch(&env.model, &enc_profile, fleet, rng);
-                let out = speculative(&env.model, &enc_profile, &enc_phase, 0.95, rng);
+                let mut sim = env.sim();
+                let mut enc = PhaseState::launch_uniform(
+                    &mut sim,
+                    &env.model,
+                    &enc_profile,
+                    fleet,
+                    0,
+                    Termination::Speculative { wait_frac: 0.95 },
+                    rng,
+                );
+                run_phase(&mut sim, &mut enc, &env.model, rng, &mut |_, _| false);
                 encode_report.tasks = fleet;
-                encode_report.virtual_secs = out.makespan;
+                encode_report.virtual_secs = enc.duration();
                 encode_report.blocks_read = 2 * code.systematic() + code.grids * code.l;
                 // Numerics through the backend.
                 let backend = env.backend.as_ref();
@@ -144,29 +160,46 @@ impl MatvecEngine {
         };
         let profile = WorkProfile::block_matvec(self.v_rows / self.s, self.v_cols);
         let n = self.blocks.len();
-        let phase = launch(&env.model, &profile, n, rng);
-        rep.comp.tasks = n;
-        rep.comp.stragglers = phase.straggled.iter().filter(|&&s| s).count();
+        let mut sim = env.sim();
 
         match (&self.code, self.scheme) {
             (Some(code), _) => {
-                // Earliest time every local grid is peeling-decodable.
-                let mut arrived = vec![false; n];
-                let mut t = 0.0;
+                // Earliest virtual time every local grid is
+                // peeling-decodable, as an event-driven cutoff.
+                let mut comp = PhaseState::launch_uniform(
+                    &mut sim,
+                    &env.model,
+                    &profile,
+                    n,
+                    0,
+                    Termination::EarliestDecodable,
+                    rng,
+                );
                 let mut pending: std::collections::BTreeSet<usize> =
                     (0..code.grids).collect();
-                for &i in &phase.arrival_order() {
-                    arrived[i] = true;
-                    t = phase.finish[i];
-                    let (g, _, _) = code.cell(i);
-                    if pending.contains(&g) && code.grid_decodable(g, &arrived) {
-                        pending.remove(&g);
-                    }
-                    if pending.is_empty() {
-                        break;
-                    }
-                }
-                rep.comp.virtual_secs = t;
+                run_phase(
+                    &mut sim,
+                    &mut comp,
+                    &env.model,
+                    rng,
+                    &mut |mask: &[bool], newly: Option<usize>| {
+                        // Only the arriving block's grid can newly decode.
+                        match newly {
+                            Some(i) => {
+                                let (g, _, _) = code.cell(i);
+                                if pending.contains(&g) && code.grid_decodable(g, mask) {
+                                    pending.remove(&g);
+                                }
+                            }
+                            None => pending.retain(|&g| !code.grid_decodable(g, mask)),
+                        }
+                        pending.is_empty()
+                    },
+                );
+                rep.comp.tasks = n;
+                rep.comp.stragglers = comp.stragglers();
+                rep.comp.virtual_secs = comp.duration();
+                let arrived = comp.arrived_mask();
 
                 // Numerics on arrived blocks.
                 let mut results: Vec<Option<Vec<f32>>> = {
@@ -184,8 +217,9 @@ impl MatvecEngine {
                     Ok(d) => d,
                     Err(stuck) => {
                         // Undecodable grid(s) (Thm-2 tail): recompute the
-                        // missing cells on fresh workers — virtual time is
-                        // a fresh round; numerics are direct gemvs.
+                        // missing cells on fresh workers — a fresh
+                        // event-driven round on the same clock; numerics
+                        // are direct gemvs.
                         let mut missing = 0usize;
                         for &g in &stuck {
                             for r in 0..=code.l {
@@ -200,14 +234,17 @@ impl MatvecEngine {
                             }
                         }
                         rep.dec.relaunched = missing;
-                        let t_rec = crate::platform::recompute_round(
+                        let mut rec = PhaseState::launch_uniform(
+                            &mut sim,
                             &env.model,
                             &profile,
                             missing,
-                            0.0,
+                            0,
+                            Termination::WaitAll,
                             rng,
                         );
-                        rep.dec.virtual_secs += t_rec;
+                        run_phase(&mut sim, &mut rec, &env.model, rng, &mut |_, _| false);
+                        rep.dec.virtual_secs += rec.duration();
                         code.decode(&results)
                             .map_err(|g| anyhow::anyhow!("still undecodable: {g:?}"))?
                     }
@@ -233,14 +270,37 @@ impl MatvecEngine {
                 Ok((blocks.concat(), rep))
             }
             (None, Scheme::Speculative { wait_frac }) => {
-                let out = speculative(&env.model, &profile, &phase, wait_frac, rng);
-                rep.comp.relaunched = out.relaunched;
-                rep.comp.virtual_secs = out.makespan;
+                let mut comp = PhaseState::launch_uniform(
+                    &mut sim,
+                    &env.model,
+                    &profile,
+                    n,
+                    0,
+                    Termination::Speculative { wait_frac },
+                    rng,
+                );
+                run_phase(&mut sim, &mut comp, &env.model, rng, &mut |_, _| false);
+                rep.comp.tasks = n;
+                rep.comp.stragglers = comp.stragglers();
+                rep.comp.relaunched = comp.relaunched;
+                rep.comp.virtual_secs = comp.duration();
                 let y = self.multiply_all(env, x);
                 Ok((y, rep))
             }
             (None, _) => {
-                rep.comp.virtual_secs = phase.wait_all();
+                let mut comp = PhaseState::launch_uniform(
+                    &mut sim,
+                    &env.model,
+                    &profile,
+                    n,
+                    0,
+                    Termination::WaitAll,
+                    rng,
+                );
+                run_phase(&mut sim, &mut comp, &env.model, rng, &mut |_, _| false);
+                rep.comp.tasks = n;
+                rep.comp.stragglers = comp.stragglers();
+                rep.comp.virtual_secs = comp.duration();
                 let y = self.multiply_all(env, x);
                 Ok((y, rep))
             }
@@ -255,7 +315,10 @@ impl MatvecEngine {
         parts.concat()
     }
 
-    /// Aggregate a full job report over `iters` iterations.
+    /// Aggregate a full job report over `iters` iterations. `decode_ok`
+    /// is false when any iteration needed a recompute round (matvec's
+    /// decode phase never relaunches speculatively, so `dec.relaunched`
+    /// is exactly the recompute count).
     pub fn job_report(&self, iters: &[IterationReport]) -> JobReport {
         let mut rep = JobReport::new(self.scheme.name());
         rep.redundancy = self.redundancy();
@@ -267,6 +330,9 @@ impl MatvecEngine {
             rep.comp.relaunched += it.comp.relaunched;
             rep.dec.virtual_secs += it.dec.virtual_secs;
             rep.dec.blocks_read += it.dec.blocks_read;
+            if it.dec.relaunched > 0 {
+                rep.decode_ok = false;
+            }
         }
         rep
     }
@@ -352,6 +418,28 @@ mod tests {
         assert_eq!(job.comp.tasks, 3 * 18);
         // 2-D redundancy: (l+1)²/l² − 1 = 1.25 for l = 2.
         assert!((eng.redundancy() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coded_matvec_exact_on_bounded_pool() {
+        // Worker reuse must not change the numerics, only the clock.
+        let (mut env, a, x) = setup(7);
+        env.pool = Some(3);
+        let truth = gemm::matvec(&a, &x);
+        let mut rng = Pcg64::new(8);
+        let eng = MatvecEngine::new(
+            &env,
+            &a,
+            8,
+            Scheme::LocalProduct { l_a: 2, l_b: 2 },
+            &mut rng,
+        )
+        .unwrap();
+        let (y, rep) = eng.multiply(&env, &x, &mut rng).unwrap();
+        for (got, want) in y.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-3);
+        }
+        assert!(rep.comp.virtual_secs > 0.0);
     }
 
     #[test]

@@ -47,6 +47,13 @@ pub struct JobReport {
     /// (polynomial codes past their conditioning wall — the paper's
     /// "not feasible" regime).
     pub numerics_ok: bool,
+    /// True when the decode phase recovered every straggler from parities
+    /// alone; false when a recompute round was needed. Under the current
+    /// earliest-decodable termination this is an *invariant* (the cutoff
+    /// only fires on decodable masks, so the recompute fallback is
+    /// defensive); cutoff policies that cannot guarantee decodability —
+    /// deadlines, adaptive/partial-work coding — will report false here.
+    pub decode_ok: bool,
 }
 
 impl JobReport {
@@ -59,6 +66,7 @@ impl JobReport {
             redundancy: 0.0,
             rel_err: f64::NAN,
             numerics_ok: true,
+            decode_ok: true,
         }
     }
 
@@ -77,6 +85,7 @@ impl JobReport {
             .field("redundancy", self.redundancy)
             .field("rel_err", self.rel_err)
             .field("numerics_ok", self.numerics_ok)
+            .field("decode_ok", self.decode_ok)
             .field("enc", self.enc.to_json())
             .field("comp", self.comp.to_json())
             .field("dec", self.dec.to_json())

@@ -1,0 +1,864 @@
+//! Deterministic discrete-event simulation core — the execution engine
+//! behind every virtual-time phase in the repo.
+//!
+//! The original phase model ([`super::sim`]) was barrier-synchronous:
+//! sample `n` durations, sort, apply a termination rule. That cannot
+//! express worker *reuse* (a bounded pool of warm workers serving tasks
+//! FIFO), encode/compute overlap, recompute rounds racing the peeling
+//! decoder, or multiple jobs contending for the same fleet. This module
+//! replaces it with a virtual-clock event queue:
+//!
+//! - [`EventSim`] owns the clock, a bounded (or unbounded) worker
+//!   [`Pool`], and a min-heap of task-finish events with deterministic
+//!   `(time, seq)` tie-breaking — two runs with the same seed produce the
+//!   same event order, bit for bit.
+//! - [`PhaseState`] layers the schemes' termination rules on top as
+//!   *event-driven policies* ([`Termination`]): wait-all, wait-k,
+//!   speculative relaunch at the `wait_frac` quantile, and
+//!   earliest-decodable cutoff against an arbitrary predicate.
+//! - [`run_phase`] is the blocking driver used by single-job coordinators;
+//!   multi-job executors (see [`super::scenario`]) instead route each
+//!   [`Completion`] to the owning job's `PhaseState` by hand, which is how
+//!   several jobs share one worker pool.
+//!
+//! Durations are sampled from the [`StragglerModel`] **at submission, in
+//! task order** — never at dispatch — so the sampled timeline is a pure
+//! function of the seed, independent of pool size or event interleaving
+//! (verified by `tests/codes_prop.rs`). With an unbounded pool and a
+//! single phase, completion times coincide exactly with the legacy
+//! barrier-synchronous model, which keeps the paper-shape assertions of
+//! the figure harnesses valid.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::platform::straggler::{StragglerModel, WorkProfile};
+use crate::util::rng::Pcg64;
+
+/// Identifier of one submitted task (index into the sim's task table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskId(pub usize);
+
+/// Worker-pool capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pool {
+    /// Every task gets a fresh worker immediately — the paper's
+    /// "thousands of cloud functions on demand" regime, and the exact
+    /// twin of the legacy barrier-synchronous model.
+    Unbounded,
+    /// At most `n` tasks run concurrently; excess submissions queue FIFO
+    /// and start as workers free up (reuse / heavy-traffic regime).
+    Workers(usize),
+}
+
+impl Pool {
+    /// `None`/0 ⇒ unbounded, `Some(w)` ⇒ bounded at `w`.
+    pub fn from_option(workers: Option<usize>) -> Pool {
+        match workers {
+            None | Some(0) => Pool::Unbounded,
+            Some(w) => Pool::Workers(w),
+        }
+    }
+}
+
+/// One task completion, as returned by [`EventSim::step`].
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub task: TaskId,
+    /// Job tag given at submission (multi-job routing key).
+    pub job: usize,
+    /// Virtual completion time.
+    pub time: f64,
+    /// Straggle flag carried from the sample.
+    pub straggled: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TaskState {
+    Waiting,
+    Running,
+    Done,
+    Cancelled,
+}
+
+#[derive(Debug, Clone)]
+struct TaskRec {
+    job: usize,
+    duration: f64,
+    straggled: bool,
+    state: TaskState,
+    finish: f64,
+}
+
+/// Task-finish event; the heap's `Ord` is *reversed* so Rust's max-heap
+/// pops the earliest `(time, seq)` first. `seq` is the start order, which
+/// makes tie-breaking deterministic and equal to submission order for
+/// simultaneously-started tasks.
+#[derive(Debug, Clone, Copy)]
+struct FinishEvent {
+    time: f64,
+    seq: u64,
+    task: TaskId,
+}
+
+impl PartialEq for FinishEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for FinishEvent {}
+impl Ord for FinishEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for FinishEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The virtual-clock event queue over a worker pool.
+#[derive(Debug)]
+pub struct EventSim {
+    pool: Pool,
+    clock: f64,
+    busy: usize,
+    tasks: Vec<TaskRec>,
+    heap: BinaryHeap<FinishEvent>,
+    fifo: VecDeque<TaskId>,
+    seq: u64,
+}
+
+impl EventSim {
+    pub fn new(pool: Pool) -> EventSim {
+        if let Pool::Workers(n) = pool {
+            assert!(n > 0, "worker pool must be non-empty");
+        }
+        EventSim {
+            pool,
+            clock: 0.0,
+            busy: 0,
+            tasks: Vec::new(),
+            heap: BinaryHeap::new(),
+            fifo: VecDeque::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn unbounded() -> EventSim {
+        EventSim::new(Pool::Unbounded)
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Total tasks ever submitted.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Tasks currently occupying a worker.
+    pub fn busy_workers(&self) -> usize {
+        self.busy
+    }
+
+    fn has_free_worker(&self) -> bool {
+        match self.pool {
+            Pool::Unbounded => true,
+            Pool::Workers(n) => self.busy < n,
+        }
+    }
+
+    /// Submit a task at the current virtual time; it starts immediately if
+    /// a worker is free, otherwise queues FIFO.
+    pub fn submit(&mut self, job: usize, duration: f64, straggled: bool) -> TaskId {
+        assert!(
+            duration.is_finite() && duration >= 0.0,
+            "task duration must be finite and non-negative, got {duration}"
+        );
+        let id = TaskId(self.tasks.len());
+        self.tasks.push(TaskRec {
+            job,
+            duration,
+            straggled,
+            state: TaskState::Waiting,
+            finish: f64::NAN,
+        });
+        if self.has_free_worker() {
+            self.start_task(id);
+        } else {
+            self.fifo.push_back(id);
+        }
+        id
+    }
+
+    fn start_task(&mut self, id: TaskId) {
+        debug_assert_eq!(self.tasks[id.0].state, TaskState::Waiting);
+        self.tasks[id.0].state = TaskState::Running;
+        let fin = self.clock + self.tasks[id.0].duration;
+        self.busy += 1;
+        self.seq += 1;
+        self.heap.push(FinishEvent {
+            time: fin,
+            seq: self.seq,
+            task: id,
+        });
+    }
+
+    /// Cancel a task. A waiting task is dropped from the queue; a running
+    /// task frees its worker immediately (its finish event becomes stale
+    /// and is skipped). Done/cancelled tasks are left untouched.
+    pub fn cancel(&mut self, id: TaskId) {
+        match self.tasks[id.0].state {
+            TaskState::Waiting => self.tasks[id.0].state = TaskState::Cancelled,
+            TaskState::Running => {
+                self.tasks[id.0].state = TaskState::Cancelled;
+                self.release_worker();
+            }
+            TaskState::Done | TaskState::Cancelled => {}
+        }
+    }
+
+    fn release_worker(&mut self) {
+        debug_assert!(self.busy > 0);
+        self.busy -= 1;
+        while let Some(next) = self.fifo.pop_front() {
+            if self.tasks[next.0].state == TaskState::Waiting {
+                self.start_task(next);
+                break;
+            }
+            // Lazily drop queue entries cancelled while waiting.
+        }
+    }
+
+    /// Time of the next live completion event, if any.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        while let Some(ev) = self.heap.peek() {
+            if self.tasks[ev.task.0].state == TaskState::Running {
+                return Some(ev.time);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Jump the clock forward with no event processing (used for job
+    /// arrivals). Must not cross a pending event or move backwards.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t >= self.clock, "clock cannot move backwards");
+        if let Some(next) = self.peek_time() {
+            assert!(t <= next, "advance_to({t}) would skip an event at {next}");
+        }
+        self.clock = t;
+    }
+
+    /// Process the next completion: advances the clock, frees the worker
+    /// and dispatches the longest-waiting queued task. `None` when idle.
+    pub fn step(&mut self) -> Option<Completion> {
+        loop {
+            let ev = self.heap.pop()?;
+            if self.tasks[ev.task.0].state != TaskState::Running {
+                continue; // stale event of a cancelled task
+            }
+            self.clock = ev.time;
+            self.tasks[ev.task.0].state = TaskState::Done;
+            self.tasks[ev.task.0].finish = ev.time;
+            let job = self.tasks[ev.task.0].job;
+            let straggled = self.tasks[ev.task.0].straggled;
+            self.release_worker();
+            return Some(Completion {
+                task: ev.task,
+                job,
+                time: ev.time,
+                straggled,
+            });
+        }
+    }
+
+    /// Drain every pending event.
+    pub fn run_to_idle(&mut self) {
+        while self.step().is_some() {}
+    }
+
+    pub fn is_done(&self, id: TaskId) -> bool {
+        self.tasks[id.0].state == TaskState::Done
+    }
+
+    /// Completion time of a finished task.
+    pub fn finish_time(&self, id: TaskId) -> Option<f64> {
+        if self.tasks[id.0].state == TaskState::Done {
+            Some(self.tasks[id.0].finish)
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase policies
+// ---------------------------------------------------------------------------
+
+/// Termination rule of one phase (the schemes' policies, §II).
+#[derive(Debug, Clone, Copy)]
+pub enum Termination {
+    /// End when every task has completed (uncoded).
+    WaitAll,
+    /// End at the k-th completion (1-based); the rest are abandoned
+    /// (MDS/polynomial recovery threshold).
+    WaitK(usize),
+    /// At the `ceil(n · wait_frac)`-th completion, relaunch every
+    /// unfinished task on a fresh worker without killing the original; a
+    /// logical task completes at its earlier attempt (the paper's §I
+    /// baseline).
+    Speculative { wait_frac: f64 },
+    /// End at the first instant the arrived set satisfies the decodability
+    /// predicate passed to [`PhaseState::on_completion`]; unfinished tasks
+    /// are cancelled, freeing their workers (§II-B).
+    EarliestDecodable,
+}
+
+/// One phase of `n` logical tasks driven through the event queue.
+///
+/// A logical task has a *primary* attempt and (under speculative
+/// execution) possibly one *relaunch*; its completion is the earlier of
+/// the two, and the slower twin is cancelled so bounded pools see the
+/// worker freed.
+pub struct PhaseState {
+    pub job: usize,
+    /// Virtual time the phase was submitted.
+    pub t0: f64,
+    term: Termination,
+    /// Per-logical-task work profile (used to resample relaunches).
+    works: Vec<WorkProfile>,
+    primary: Vec<TaskId>,
+    relaunch: Vec<Option<TaskId>>,
+    completion: Vec<Option<f64>>,
+    straggled: Vec<bool>,
+    /// Logical indices in completion order.
+    arrivals: Vec<usize>,
+    /// TaskId → logical index (covers primaries and relaunches).
+    index_of: HashMap<usize, usize>,
+    done: usize,
+    /// Tasks relaunched by the speculative trigger.
+    pub relaunched: usize,
+    /// Speculative trigger time (NaN until/unless it fires).
+    pub trigger_time: f64,
+    finished: bool,
+    end_time: f64,
+}
+
+impl PhaseState {
+    /// Sample a duration per profile from the model — in task order, at
+    /// submission — and submit all tasks at the current virtual time.
+    pub fn launch(
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        works: &[WorkProfile],
+        job: usize,
+        term: Termination,
+        rng: &mut Pcg64,
+    ) -> PhaseState {
+        let mut durations = Vec::with_capacity(works.len());
+        let mut straggled = Vec::with_capacity(works.len());
+        for w in works {
+            let s = model.sample(w, rng);
+            durations.push(s.total());
+            straggled.push(s.straggled);
+        }
+        PhaseState::from_durations(sim, &durations, &straggled, works.to_vec(), job, term)
+    }
+
+    /// Like [`PhaseState::launch`] with a single profile for `n` tasks.
+    pub fn launch_uniform(
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        work: &WorkProfile,
+        n: usize,
+        job: usize,
+        term: Termination,
+        rng: &mut Pcg64,
+    ) -> PhaseState {
+        PhaseState::launch(sim, model, &vec![*work; n], job, term, rng)
+    }
+
+    /// Submit pre-sampled durations (the legacy-`Phase` bridge).
+    pub fn from_durations(
+        sim: &mut EventSim,
+        durations: &[f64],
+        straggled: &[bool],
+        works: Vec<WorkProfile>,
+        job: usize,
+        term: Termination,
+    ) -> PhaseState {
+        assert_eq!(durations.len(), straggled.len());
+        assert_eq!(durations.len(), works.len());
+        let n = durations.len();
+        if let Termination::WaitK(k) = term {
+            assert!(n == 0 || (k >= 1 && k <= n), "wait-k needs 1 ≤ k ≤ n");
+        }
+        let t0 = sim.now();
+        let mut primary = Vec::with_capacity(n);
+        let mut index_of = HashMap::with_capacity(n);
+        for i in 0..n {
+            let id = sim.submit(job, durations[i], straggled[i]);
+            index_of.insert(id.0, i);
+            primary.push(id);
+        }
+        PhaseState {
+            job,
+            t0,
+            term,
+            works,
+            primary,
+            relaunch: vec![None; n],
+            completion: vec![None; n],
+            straggled: straggled.to_vec(),
+            arrivals: Vec::new(),
+            index_of,
+            done: 0,
+            relaunched: 0,
+            trigger_time: f64::NAN,
+            // An empty phase is complete the moment it is submitted.
+            finished: n == 0,
+            end_time: t0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.primary.len()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Virtual time the phase terminated (valid once finished).
+    pub fn end_time(&self) -> f64 {
+        self.end_time
+    }
+
+    /// Phase makespan under its termination rule.
+    pub fn duration(&self) -> f64 {
+        self.end_time - self.t0
+    }
+
+    /// Straggler count among the primary attempts.
+    pub fn stragglers(&self) -> usize {
+        self.straggled.iter().filter(|&&s| s).count()
+    }
+
+    /// Per-task straggle flags of the primary attempts.
+    pub fn straggled_mask(&self) -> Vec<bool> {
+        self.straggled.clone()
+    }
+
+    /// Which logical tasks completed before termination.
+    pub fn arrived_mask(&self) -> Vec<bool> {
+        self.completion.iter().map(Option::is_some).collect()
+    }
+
+    /// Logical indices in completion order (so far).
+    pub fn arrival_order(&self) -> &[usize] {
+        &self.arrivals
+    }
+
+    /// Per-task completion times; NaN for tasks that never completed
+    /// (abandoned by wait-k / earliest-decodable cutoffs).
+    pub fn completion_times(&self) -> Vec<f64> {
+        self.completion
+            .iter()
+            .map(|c| c.unwrap_or(f64::NAN))
+            .collect()
+    }
+
+    /// Does this completion belong to this phase?
+    pub fn owns(&self, c: &Completion) -> bool {
+        self.index_of.contains_key(&c.task.0)
+    }
+
+    fn finish_at(&mut self, sim: &mut EventSim, t: f64) {
+        self.finished = true;
+        self.end_time = t;
+        // Cutoff policies abandon stragglers, freeing their workers for
+        // whatever runs next on the shared pool.
+        if matches!(
+            self.term,
+            Termination::WaitK(_) | Termination::EarliestDecodable
+        ) {
+            for i in 0..self.n() {
+                if self.completion[i].is_none() {
+                    sim.cancel(self.primary[i]);
+                    if let Some(r) = self.relaunch[i] {
+                        sim.cancel(r);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Feed one completion belonging to this phase. `decodable` is only
+    /// consulted under [`Termination::EarliestDecodable`]; it receives
+    /// the arrival mask plus `Some(index)` of the logical task that just
+    /// completed (`None` only on the up-front zero-requirement probe), so
+    /// incremental predicates can retest just the affected part. Returns
+    /// `true` exactly when this event terminates the phase.
+    pub fn on_completion(
+        &mut self,
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        rng: &mut Pcg64,
+        c: &Completion,
+        decodable: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
+    ) -> bool {
+        let li = match self.index_of.get(&c.task.0) {
+            Some(&li) => li,
+            None => return false, // not ours — caller routed wrongly
+        };
+        if self.finished || self.completion[li].is_some() {
+            return false; // stale twin; cancellation already handled
+        }
+        self.completion[li] = Some(c.time);
+        self.arrivals.push(li);
+        self.done += 1;
+        // The slower twin can no longer contribute: free its worker.
+        if let Some(r) = self.relaunch[li] {
+            if r != c.task {
+                sim.cancel(r);
+            }
+        }
+        if self.primary[li] != c.task {
+            sim.cancel(self.primary[li]);
+        }
+
+        let n = self.n();
+        match self.term {
+            Termination::WaitAll => {
+                if self.done == n {
+                    self.finish_at(sim, c.time);
+                }
+            }
+            Termination::WaitK(k) => {
+                if self.done == k {
+                    self.finish_at(sim, c.time);
+                }
+            }
+            Termination::Speculative { wait_frac } => {
+                let k = ((n as f64 * wait_frac).ceil() as usize).clamp(1, n);
+                if self.done == k && self.trigger_time.is_nan() {
+                    self.trigger_time = c.time;
+                    for i in 0..n {
+                        if self.completion[i].is_none() && self.relaunch[i].is_none() {
+                            let s = model.sample(&self.works[i], rng);
+                            let id = sim.submit(self.job, s.total(), s.straggled);
+                            self.index_of.insert(id.0, i);
+                            self.relaunch[i] = Some(id);
+                            self.relaunched += 1;
+                        }
+                    }
+                }
+                if self.done == n {
+                    self.finish_at(sim, c.time);
+                }
+            }
+            Termination::EarliestDecodable => {
+                let mask = self.arrived_mask();
+                if decodable(&mask, Some(li)) {
+                    self.finish_at(sim, c.time);
+                }
+            }
+        }
+        self.finished
+    }
+}
+
+/// Drive a *single-job* sim until the phase terminates. Every completion
+/// in the sim is assumed to belong to this phase (the coordinator runs
+/// phases sequentially; prior phases leave only stale cancelled events).
+///
+/// Under earliest-decodable the predicate is first consulted on the empty
+/// arrival set (some schemes need nothing), and if it never fires the
+/// phase degenerates to wait-all with every task arrived.
+pub fn run_phase(
+    sim: &mut EventSim,
+    phase: &mut PhaseState,
+    model: &StragglerModel,
+    rng: &mut Pcg64,
+    decodable: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
+) {
+    if phase.is_finished() {
+        return;
+    }
+    if matches!(phase.term, Termination::EarliestDecodable) {
+        let mask = phase.arrived_mask();
+        if decodable(&mask, None) {
+            let t = sim.now();
+            phase.finish_at(sim, t);
+            return;
+        }
+    }
+    while !phase.is_finished() {
+        match sim.step() {
+            Some(c) => {
+                phase.on_completion(sim, model, rng, &c, decodable);
+            }
+            None => {
+                // Predicate never fired: every task arrived already.
+                let t = sim.now();
+                phase.finish_at(sim, t);
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::straggler::{StragglerParams, WorkerRates};
+
+    fn model() -> StragglerModel {
+        StragglerModel::new(StragglerParams::default(), WorkerRates::default())
+    }
+
+    fn work() -> WorkProfile {
+        WorkProfile::block_product(256, 1024, 256)
+    }
+
+    #[test]
+    fn unbounded_pool_matches_sampled_durations() {
+        // With an unbounded pool every task starts at submit time, so
+        // completion times are exactly the sampled durations.
+        let m = model();
+        let w = work();
+        let mut r1 = Pcg64::new(5);
+        let mut r2 = Pcg64::new(5);
+        let durations: Vec<f64> = m.sample_fleet(&w, 40, &mut r1);
+        let mut sim = EventSim::unbounded();
+        let mut ph =
+            PhaseState::launch_uniform(&mut sim, &m, &w, 40, 0, Termination::WaitAll, &mut r2);
+        run_phase(&mut sim, &mut ph, &m, &mut r2, &mut |_, _| false);
+        assert_eq!(ph.completion_times(), durations);
+        let max = durations.iter().copied().fold(0.0, f64::max);
+        assert_eq!(ph.duration(), max);
+    }
+
+    #[test]
+    fn bounded_pool_serializes_fifo() {
+        let mut sim = EventSim::new(Pool::Workers(1));
+        let a = sim.submit(0, 5.0, false);
+        let b = sim.submit(0, 1.0, false);
+        let c1 = sim.step().unwrap();
+        let c2 = sim.step().unwrap();
+        assert_eq!(c1.task, a);
+        assert_eq!(c1.time, 5.0);
+        assert_eq!(c2.task, b);
+        assert_eq!(c2.time, 6.0); // queued behind a despite being shorter
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn two_workers_run_concurrently() {
+        let mut sim = EventSim::new(Pool::Workers(2));
+        sim.submit(0, 5.0, false);
+        sim.submit(0, 1.0, false);
+        sim.submit(0, 1.0, false);
+        let times: Vec<f64> = std::iter::from_fn(|| sim.step().map(|c| c.time)).collect();
+        // Third task starts when the 1-second task finishes.
+        assert_eq!(times, vec![1.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn cancel_running_frees_worker_immediately() {
+        let mut sim = EventSim::new(Pool::Workers(1));
+        let a = sim.submit(0, 100.0, false);
+        let b = sim.submit(0, 1.0, false);
+        sim.cancel(a);
+        let c = sim.step().unwrap();
+        assert_eq!(c.task, b);
+        assert_eq!(c.time, 1.0);
+        assert!(sim.finish_time(a).is_none());
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn cancel_waiting_is_skipped_on_dispatch() {
+        let mut sim = EventSim::new(Pool::Workers(1));
+        sim.submit(0, 2.0, false);
+        let b = sim.submit(0, 9.0, false);
+        let c = sim.submit(0, 3.0, false);
+        sim.cancel(b);
+        let first = sim.step().unwrap();
+        let second = sim.step().unwrap();
+        assert_eq!(first.time, 2.0);
+        assert_eq!(second.task, c);
+        assert_eq!(second.time, 5.0);
+    }
+
+    #[test]
+    fn ties_pop_in_submission_order() {
+        let mut sim = EventSim::unbounded();
+        let a = sim.submit(0, 3.0, false);
+        let b = sim.submit(0, 3.0, false);
+        assert_eq!(sim.step().unwrap().task, a);
+        assert_eq!(sim.step().unwrap().task, b);
+    }
+
+    #[test]
+    fn advance_to_respects_pending_events() {
+        let mut sim = EventSim::unbounded();
+        sim.advance_to(10.0);
+        assert_eq!(sim.now(), 10.0);
+        let t = sim.submit(1, 2.0, false);
+        assert_eq!(sim.peek_time(), Some(12.0));
+        let c = sim.step().unwrap();
+        assert_eq!(c.task, t);
+        assert_eq!(c.job, 1);
+        assert_eq!(c.time, 12.0);
+    }
+
+    #[test]
+    fn speculative_phase_relaunches_and_takes_min() {
+        // Fixed durations: trigger at the 3rd of 5 (wait_frac 0.6) = t=3.
+        let mut sim = EventSim::unbounded();
+        let m = model();
+        let mut rng = Pcg64::new(9);
+        let durations = [1.0, 2.0, 3.0, 50.0, 60.0];
+        let straggled = [false, false, false, true, true];
+        let mut ph = PhaseState::from_durations(
+            &mut sim,
+            &durations,
+            &straggled,
+            vec![work(); 5],
+            0,
+            Termination::Speculative { wait_frac: 0.6 },
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert_eq!(ph.trigger_time, 3.0);
+        assert_eq!(ph.relaunched, 2);
+        let times = ph.completion_times();
+        // Relaunched tasks finish at min(original, 3.0 + fresh).
+        assert!(times[3] <= 50.0 && times[4] <= 60.0);
+        assert!(ph.duration() >= 3.0);
+        assert_eq!(ph.stragglers(), 2);
+    }
+
+    #[test]
+    fn speculative_wait_frac_one_relaunches_nothing() {
+        let mut sim = EventSim::unbounded();
+        let m = model();
+        let mut rng = Pcg64::new(10);
+        let durations = [4.0, 1.0, 2.0];
+        let mut ph = PhaseState::from_durations(
+            &mut sim,
+            &durations,
+            &[false; 3],
+            vec![work(); 3],
+            0,
+            Termination::Speculative { wait_frac: 1.0 },
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert_eq!(ph.relaunched, 0);
+        assert_eq!(ph.duration(), 4.0);
+        assert_eq!(ph.trigger_time, 4.0);
+    }
+
+    #[test]
+    fn earliest_decodable_cancels_stragglers() {
+        let mut sim = EventSim::unbounded();
+        let m = model();
+        let mut rng = Pcg64::new(11);
+        let durations = [5.0, 1.0, 3.0, 9.0];
+        let mut ph = PhaseState::from_durations(
+            &mut sim,
+            &durations,
+            &[false; 4],
+            vec![work(); 4],
+            0,
+            Termination::EarliestDecodable,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |mask, _| {
+            mask.iter().filter(|&&x| x).count() >= 2
+        });
+        assert_eq!(ph.end_time(), 3.0);
+        let mask = ph.arrived_mask();
+        assert_eq!(mask, vec![false, true, true, false]);
+        // The cancelled stragglers left no live events behind.
+        assert!(sim.step().is_none());
+        assert_eq!(sim.busy_workers(), 0);
+    }
+
+    #[test]
+    fn wait_k_terminates_at_kth_and_abandons_rest() {
+        let mut sim = EventSim::unbounded();
+        let m = model();
+        let mut rng = Pcg64::new(12);
+        let durations = [7.0, 2.0, 4.0];
+        let mut ph = PhaseState::from_durations(
+            &mut sim,
+            &durations,
+            &[false; 3],
+            vec![work(); 3],
+            0,
+            Termination::WaitK(2),
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert_eq!(ph.end_time(), 4.0);
+        assert_eq!(ph.arrival_order(), &[1, 2]);
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn empty_phase_finishes_immediately() {
+        let mut sim = EventSim::unbounded();
+        let m = model();
+        let mut rng = Pcg64::new(13);
+        for term in [
+            Termination::WaitAll,
+            Termination::Speculative { wait_frac: 0.5 },
+            Termination::EarliestDecodable,
+        ] {
+            let mut ph = PhaseState::launch(&mut sim, &m, &[], 0, term, &mut rng);
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            assert!(ph.is_finished());
+            assert_eq!(ph.duration(), 0.0);
+            assert_eq!(ph.relaunched, 0);
+        }
+    }
+
+    #[test]
+    fn multi_job_completions_carry_job_tags() {
+        let mut sim = EventSim::new(Pool::Workers(2));
+        sim.submit(7, 2.0, false);
+        sim.submit(8, 1.0, false);
+        sim.submit(7, 1.0, false);
+        let jobs: Vec<usize> = std::iter::from_fn(|| sim.step().map(|c| c.job)).collect();
+        assert_eq!(jobs, vec![8, 7, 7]);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = |seed: u64| -> Vec<f64> {
+            let m = model();
+            let mut rng = Pcg64::new(seed);
+            let mut sim = EventSim::new(Pool::Workers(7));
+            let mut ph = PhaseState::launch_uniform(
+                &mut sim,
+                &m,
+                &work(),
+                30,
+                0,
+                Termination::Speculative { wait_frac: 0.8 },
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            ph.completion_times()
+        };
+        assert_eq!(run(77), run(77));
+    }
+}

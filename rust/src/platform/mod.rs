@@ -1,17 +1,28 @@
 //! Serverless platform simulator — the AWS Lambda substitute.
 //!
-//! Two pieces: the straggler model ([`straggler`]) samples per-job virtual
-//! durations calibrated to the paper's Fig 1 (median ≈135 s, p ≈ 0.02
-//! heavy-tailed stragglers), and the phase simulator ([`sim`]) turns those
-//! samples into phase makespans under each scheme's termination rule
-//! (wait-all / wait-k / speculative relaunch / earliest-decodable).
+//! Three pieces: the straggler model ([`straggler`]) samples per-job
+//! virtual durations calibrated to the paper's Fig 1 (median ≈135 s,
+//! p ≈ 0.02 heavy-tailed stragglers); the discrete-event core ([`event`])
+//! runs a virtual-clock event queue over a bounded pool of reusable
+//! workers, with the schemes' termination rules (wait-all / wait-k /
+//! speculative relaunch / earliest-decodable) as event-driven policies;
+//! and the scenario harness ([`scenario`]) executes declarative JSON
+//! scenarios — scheme × straggler model × workload × worker-pool sweeps,
+//! with multiple jobs contending for one pool — into `JobReport`
+//! summaries for the golden regression suite. The legacy phase API
+//! ([`sim`]) survives as a facade over the event core.
 //!
 //! The simulator manipulates *virtual time only*; the numerics of every
 //! task still execute for real (via the PJRT runtime or host kernels), so
 //! end-to-end results remain verifiable against the uncoded product.
 
+pub mod event;
+pub mod scenario;
 pub mod sim;
 pub mod straggler;
 
+pub use event::{Completion, EventSim, PhaseState, Pool, TaskId, Termination};
 pub use sim::{earliest_decodable, launch, launch_tasks, recompute_round, speculative, Phase};
-pub use straggler::{JobSample, StragglerModel, StragglerParams, WorkProfile, WorkerRates};
+pub use straggler::{
+    JobSample, SlowdownDist, StragglerModel, StragglerParams, WorkProfile, WorkerRates,
+};

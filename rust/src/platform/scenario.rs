@@ -1,0 +1,867 @@
+//! Declarative scenario harness over the discrete-event core.
+//!
+//! A *scenario* is a JSON document (checked into `rust/scenarios/`)
+//! describing a scheme × straggler-model × workload × worker-pool sweep:
+//! one straggler calibration, a worker-pool sweep (`workers`, 0 =
+//! unbounded), and a list of jobs — each a coded-matmul pipeline
+//! (encode → compute → decode → recompute-fallback) with its own scheme,
+//! partitioning, paper-scale dims and arrival time. All jobs of a run
+//! share one [`EventSim`] worker pool, so staggered arrivals genuinely
+//! contend for workers.
+//!
+//! The runner is **timing-only**: decodability and decode accounting come
+//! from the same mask-level predicates the coordinator uses
+//! ([`grid_decodable`], [`ProductCode::plan_decode`], peeling plans), but
+//! no matrices are materialized, so hundreds of scenario jobs run in
+//! milliseconds. Each job yields a [`JobReport`] — the exact metrics
+//! schema of `coordinator::run_matmul` (`rel_err` stays NaN/null) — and
+//! `tests/scenarios_golden.rs` compares the resulting summaries against
+//! checked-in golden files.
+//!
+//! # Determinism
+//!
+//! Each job forks its own [`Pcg64`] stream off the scenario seed (in job
+//! order, before any event is processed) and samples every task duration
+//! at phase submission in task order. Consequently the sampled timeline
+//! of a job is a pure function of `(seed, job index)` — event
+//! interleaving and pool size never shift the draw sequence — and two
+//! runs of a scenario are bit-identical.
+
+use std::collections::BTreeSet;
+
+use crate::codes::local_product::{grid_decodable, plan_grids, LocalProductCode};
+use crate::codes::polynomial::{PolynomialCode, NUMERIC_CAP};
+use crate::codes::product::ProductCode;
+use crate::codes::Scheme;
+use crate::coordinator::matmul::{
+    decode_worker_profiles, polynomial_decode_profile, product_decode_profile,
+};
+use crate::coordinator::metrics::JobReport;
+use crate::platform::event::{Completion, EventSim, PhaseState, Pool, Termination};
+use crate::platform::straggler::{
+    SlowdownDist, StragglerModel, StragglerParams, WorkProfile, WorkerRates,
+};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg64;
+
+/// One job of a scenario.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub scheme: Scheme,
+    pub s_a: usize,
+    pub s_b: usize,
+    /// Virtual (paper-scale) dims `(rows_a, inner, rows_b)`.
+    pub dims: (usize, usize, usize),
+    pub decode_workers: usize,
+    /// 0 ⇒ auto fleet = ceil(compute_tasks / 10) (Remark 1).
+    pub encode_workers: usize,
+    /// Virtual time the job enters the system.
+    pub arrival: f64,
+}
+
+impl JobSpec {
+    /// `(block_rows, inner, block_cols)` of one output block.
+    fn block_dims(&self) -> (usize, usize, usize) {
+        let (m, k, l) = self.dims;
+        (m / self.s_a, k, l / self.s_b)
+    }
+
+    fn comp_profile(&self) -> WorkProfile {
+        let (br, k, bc) = self.block_dims();
+        WorkProfile::block_product(br, k, bc)
+    }
+
+    fn encode_fleet(&self, compute_tasks: usize) -> usize {
+        if self.encode_workers > 0 {
+            self.encode_workers
+        } else {
+            compute_tasks.div_ceil(10).max(1)
+        }
+    }
+}
+
+/// A parsed scenario file.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    pub seed: u64,
+    /// Worker-pool sweep; each entry is one run (0 = unbounded).
+    pub workers: Vec<usize>,
+    pub straggler: StragglerParams,
+    pub rates: WorkerRates,
+    pub jobs: Vec<JobSpec>,
+}
+
+/// Parse a scenario document (see EXPERIMENTS.md §Scenario suite for the
+/// schema).
+pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("scenario needs a string 'name'"))?
+        .to_string();
+    let description = doc
+        .get("description")
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string();
+    let seed = doc
+        .get("seed")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("scenario '{name}' needs an integer 'seed'"))?;
+
+    let workers = match doc.get("workers") {
+        None => vec![0],
+        Some(n @ Json::Num(_)) => vec![n
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("'workers' must be a non-negative integer"))?],
+        Some(Json::Arr(items)) => {
+            let mut ws = Vec::with_capacity(items.len());
+            for it in items {
+                ws.push(
+                    it.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("'workers' entries must be integers"))?,
+                );
+            }
+            anyhow::ensure!(!ws.is_empty(), "'workers' sweep must be non-empty");
+            ws
+        }
+        Some(_) => anyhow::bail!("'workers' must be an integer or an array of integers"),
+    };
+
+    let straggler = parse_straggler(doc.get("straggler"))?;
+
+    let jobs_json = doc
+        .get("jobs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("scenario '{name}' needs a 'jobs' array"))?;
+    anyhow::ensure!(!jobs_json.is_empty(), "scenario '{name}' has no jobs");
+    let mut jobs = Vec::with_capacity(jobs_json.len());
+    for (i, jj) in jobs_json.iter().enumerate() {
+        jobs.push(parse_job(jj).map_err(|e| anyhow::anyhow!("job {i} of '{name}': {e}"))?);
+    }
+
+    Ok(Scenario {
+        name,
+        description,
+        seed,
+        workers,
+        straggler,
+        rates: WorkerRates::default(),
+        jobs,
+    })
+}
+
+fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
+    let mut p = StragglerParams::default();
+    let Some(j) = j else { return Ok(p) };
+    let num = |key: &str| j.get(key).and_then(Json::as_f64);
+    if let Some(v) = num("p") {
+        p.p = v;
+    }
+    if let Some(v) = num("slow_mu") {
+        p.slow_mu = v;
+    }
+    if let Some(v) = num("slow_sigma") {
+        p.slow_sigma = v;
+    }
+    if let Some(v) = num("slow_min") {
+        p.slow_min = v;
+    }
+    if let Some(v) = num("slow_max") {
+        p.slow_max = v;
+    }
+    if let Some(v) = num("jitter_sigma") {
+        p.jitter_sigma = v;
+    }
+    match j.get("dist").and_then(Json::as_str) {
+        None | Some("lognormal") => {}
+        Some("pareto") => {
+            let alpha = num("pareto_alpha").unwrap_or(1.5);
+            p.slow_dist = SlowdownDist::Pareto { alpha };
+        }
+        Some(other) => anyhow::bail!("unknown straggler dist '{other}'"),
+    }
+    Ok(p)
+}
+
+fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
+    let scheme_str = j
+        .get("scheme")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("job needs a 'scheme' string"))?;
+    let scheme = Scheme::parse(scheme_str)?;
+    let s_a = j
+        .get("s_a")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("job needs integer 's_a'"))?;
+    let s_b = j
+        .get("s_b")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("job needs integer 's_b'"))?;
+    let dims = match j.get("dims") {
+        Some(Json::Arr(items)) if items.len() == 3 => {
+            let d: Vec<usize> = items
+                .iter()
+                .map(|it| it.as_usize().unwrap_or(0))
+                .collect();
+            anyhow::ensure!(d.iter().all(|&x| x > 0), "'dims' must be positive");
+            (d[0], d[1], d[2])
+        }
+        Some(Json::Num(_)) => {
+            let n = j.get("dims").unwrap().as_usize().unwrap_or(0);
+            anyhow::ensure!(n > 0, "'dims' must be positive");
+            (n, n, n)
+        }
+        _ => anyhow::bail!("job needs 'dims' (an [m, k, l] array or one cube dim)"),
+    };
+    anyhow::ensure!(s_a > 0 && s_b > 0, "'s_a' and 's_b' must be positive");
+    anyhow::ensure!(dims.0 % s_a == 0, "s_a must divide dims[0]");
+    anyhow::ensure!(dims.2 % s_b == 0, "s_b must divide dims[2]");
+    let decode_workers = j.get("decode_workers").and_then(Json::as_usize).unwrap_or(4);
+    let encode_workers = j.get("encode_workers").and_then(Json::as_usize).unwrap_or(0);
+    let arrival = j.get("arrival").and_then(Json::as_f64).unwrap_or(0.0);
+    anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
+    if let Scheme::LocalProduct { l_a, l_b } = scheme {
+        anyhow::ensure!(l_a > 0 && l_b > 0, "group sizes l_a/l_b must be positive");
+        anyhow::ensure!(s_a % l_a == 0, "s_a % l_a != 0");
+        anyhow::ensure!(s_b % l_b == 0, "s_b % l_b != 0");
+    }
+    if let Scheme::Polynomial { redundancy } = scheme {
+        anyhow::ensure!(
+            redundancy.is_finite() && redundancy >= 0.0,
+            "polynomial redundancy must be a non-negative number"
+        );
+    }
+    Ok(JobSpec {
+        scheme,
+        s_a,
+        s_b,
+        dims,
+        decode_workers,
+        encode_workers,
+        arrival,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Job state machine
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    Encode,
+    Compute,
+    Decode,
+    Recompute,
+}
+
+/// One job's pipeline advancing through the shared event queue; mirrors
+/// the phase structure of `coordinator::matmul` (timing only).
+struct JobRun {
+    index: usize,
+    spec: JobSpec,
+    rng: Pcg64,
+    report: JobReport,
+    stage: Stage,
+    phase: Option<PhaseState>,
+    done: bool,
+    finish: f64,
+    comp_tasks: usize,
+    lp: Option<LocalProductCode>,
+    pc: Option<ProductCode>,
+    /// Local grids not yet decodable (earliest-decodable bookkeeping).
+    pending: BTreeSet<usize>,
+    /// Polynomial recovery threshold K.
+    k_threshold: usize,
+    /// Cells the decode plan could not recover (recompute fallback).
+    undecodable: usize,
+}
+
+impl JobRun {
+    fn new(index: usize, spec: JobSpec, rng: Pcg64) -> anyhow::Result<JobRun> {
+        let mut report = JobReport::new(spec.scheme.name());
+        let mut lp = None;
+        let mut pc = None;
+        let mut k_threshold = 0;
+        let comp_tasks = match spec.scheme {
+            Scheme::Uncoded | Scheme::Speculative { .. } => spec.s_a * spec.s_b,
+            Scheme::LocalProduct { l_a, l_b } => {
+                let code = LocalProductCode::new(spec.s_a, l_a, spec.s_b, l_b);
+                report.redundancy = code.redundancy();
+                report.enc.blocks_read = l_a * code.a.groups() + l_b * code.b.groups();
+                let (ra, rb) = code.coded_grid();
+                lp = Some(code);
+                ra * rb
+            }
+            Scheme::Product { t_a, t_b } => {
+                let code = ProductCode::new(spec.s_a, t_a, spec.s_b, t_b);
+                report.redundancy = code.redundancy();
+                report.enc.blocks_read = t_a * spec.s_a + t_b * spec.s_b;
+                let (ra, rb) = code.coded_grid();
+                pc = Some(code);
+                ra * rb
+            }
+            Scheme::Polynomial { redundancy } => {
+                let k = spec.s_a * spec.s_b;
+                let n_workers = ((k as f64) * (1.0 + redundancy)).ceil() as usize;
+                let code = PolynomialCode::new(spec.s_a, spec.s_b, n_workers);
+                report.redundancy = code.redundancy();
+                report.enc.blocks_read = n_workers * (spec.s_a + spec.s_b);
+                report.numerics_ok = k <= NUMERIC_CAP;
+                k_threshold = k;
+                n_workers
+            }
+        };
+        Ok(JobRun {
+            index,
+            spec,
+            rng,
+            report,
+            stage: Stage::Encode,
+            phase: None,
+            done: false,
+            finish: 0.0,
+            comp_tasks,
+            lp,
+            pc,
+            pending: BTreeSet::new(),
+            k_threshold,
+            undecodable: 0,
+        })
+    }
+
+    /// Begin the pipeline at the job's arrival time (sim clock is there).
+    fn start(&mut self, sim: &mut EventSim, model: &StragglerModel) {
+        match self.spec.scheme {
+            Scheme::Uncoded | Scheme::Speculative { .. } => self.start_compute(sim, model),
+            _ => self.start_encode(sim, model),
+        }
+        self.pump(sim, model);
+    }
+
+    fn start_encode(&mut self, sim: &mut EventSim, model: &StragglerModel) {
+        self.stage = Stage::Encode;
+        let (br, k, _) = self.spec.block_dims();
+        let fleet = self.spec.encode_fleet(self.comp_tasks);
+        let enc_profile = match self.spec.scheme {
+            Scheme::LocalProduct { l_a, l_b } => {
+                let code = self.lp.as_ref().unwrap();
+                WorkProfile::sliced_encode(
+                    code.a.groups() + code.b.groups(),
+                    l_a.max(l_b),
+                    br,
+                    k,
+                    fleet,
+                )
+            }
+            Scheme::Product { t_a, t_b } => WorkProfile::sliced_encode(
+                t_a + t_b,
+                self.spec.s_a.max(self.spec.s_b),
+                br,
+                k,
+                fleet,
+            ),
+            Scheme::Polynomial { .. } => WorkProfile::sliced_encode(
+                2 * self.comp_tasks,
+                self.spec.s_a.max(self.spec.s_b),
+                br,
+                k,
+                fleet,
+            ),
+            _ => unreachable!("uncoded schemes have no encode phase"),
+        };
+        self.phase = Some(PhaseState::launch_uniform(
+            sim,
+            model,
+            &enc_profile,
+            fleet,
+            self.index,
+            Termination::Speculative { wait_frac: 0.95 },
+            &mut self.rng,
+        ));
+    }
+
+    fn start_compute(&mut self, sim: &mut EventSim, model: &StragglerModel) {
+        self.stage = Stage::Compute;
+        let profile = self.spec.comp_profile();
+        let term = match self.spec.scheme {
+            Scheme::Uncoded => Termination::WaitAll,
+            Scheme::Speculative { wait_frac } => Termination::Speculative { wait_frac },
+            Scheme::Polynomial { .. } => Termination::WaitK(self.k_threshold),
+            Scheme::LocalProduct { .. } | Scheme::Product { .. } => {
+                Termination::EarliestDecodable
+            }
+        };
+        if let Some(code) = &self.lp {
+            let (ga, gb) = code.groups();
+            self.pending = (0..ga * gb).collect();
+        }
+        self.phase = Some(PhaseState::launch_uniform(
+            sim,
+            model,
+            &profile,
+            self.comp_tasks,
+            self.index,
+            term,
+            &mut self.rng,
+        ));
+    }
+
+    fn start_decode(&mut self, sim: &mut EventSim, model: &StragglerModel, arrived: &[bool]) {
+        let (br, _, bc) = self.spec.block_dims();
+        match self.spec.scheme {
+            Scheme::Uncoded | Scheme::Speculative { .. } => {
+                self.finish_job(sim.now());
+            }
+            Scheme::LocalProduct { .. } => {
+                let code = self.lp.as_ref().unwrap();
+                let plans = plan_grids(code, arrived);
+                self.undecodable = plans.iter().map(|p| p.undecodable.len()).sum();
+                self.report.dec.blocks_read = plans.iter().map(|p| p.total_reads).sum();
+                self.report.decode_ok = self.undecodable == 0;
+                let profiles = decode_worker_profiles(
+                    plans.iter().flat_map(|p| p.steps.iter().map(|s| s.reads)),
+                    self.spec.decode_workers.max(1),
+                    br,
+                    bc,
+                );
+                self.report.dec.tasks = profiles.len();
+                if profiles.is_empty() {
+                    self.start_recompute(sim, model);
+                } else {
+                    self.stage = Stage::Decode;
+                    self.phase = Some(PhaseState::launch(
+                        sim,
+                        model,
+                        &profiles,
+                        self.index,
+                        Termination::Speculative { wait_frac: 0.8 },
+                        &mut self.rng,
+                    ));
+                }
+            }
+            Scheme::Product { .. } => {
+                let code = self.pc.as_ref().unwrap();
+                let (reads, recovered) = code
+                    .plan_decode(arrived)
+                    .expect("earliest-decodable terminated on a decodable mask");
+                self.report.dec.blocks_read = reads;
+                if reads == 0 {
+                    self.finish_job(sim.now());
+                    return;
+                }
+                // Globally-coupled recovery passes: a single decode worker
+                // (the paper's communication-overhead point, §II-B).
+                let dec_profile = product_decode_profile(reads, recovered, br, bc);
+                self.report.dec.tasks = 1;
+                self.stage = Stage::Decode;
+                self.phase = Some(PhaseState::launch_uniform(
+                    sim,
+                    model,
+                    &dec_profile,
+                    1,
+                    self.index,
+                    Termination::Speculative { wait_frac: 0.8 },
+                    &mut self.rng,
+                ));
+            }
+            Scheme::Polynomial { .. } => {
+                // Every decode worker reads all K blocks; interpolation is
+                // K² block combines split across the workers.
+                let k = self.k_threshold;
+                let workers = self.spec.decode_workers.max(1);
+                let dec_profile = polynomial_decode_profile(k, workers, br, bc);
+                self.report.dec.tasks = workers;
+                self.report.dec.blocks_read = workers * k;
+                self.stage = Stage::Decode;
+                self.phase = Some(PhaseState::launch_uniform(
+                    sim,
+                    model,
+                    &dec_profile,
+                    workers,
+                    self.index,
+                    Termination::WaitAll,
+                    &mut self.rng,
+                ));
+            }
+        }
+    }
+
+    // Defensive fallback, unreachable under earliest-decodable
+    // termination (see `JobReport::decode_ok`): kept for cutoff policies
+    // that cannot guarantee a decodable mask.
+    fn start_recompute(&mut self, sim: &mut EventSim, model: &StragglerModel) {
+        if self.undecodable == 0 {
+            self.finish_job(sim.now());
+            return;
+        }
+        self.stage = Stage::Recompute;
+        let profile = self.spec.comp_profile();
+        self.phase = Some(PhaseState::launch_uniform(
+            sim,
+            model,
+            &profile,
+            self.undecodable,
+            self.index,
+            Termination::WaitAll,
+            &mut self.rng,
+        ));
+    }
+
+    fn finish_job(&mut self, t: f64) {
+        self.done = true;
+        self.finish = t;
+        self.phase = None;
+    }
+
+    /// Route one completion of this job to its live phase.
+    fn on_completion(&mut self, sim: &mut EventSim, model: &StragglerModel, c: &Completion) {
+        if self.done {
+            return;
+        }
+        let mut ps = match self.phase.take() {
+            Some(p) => p,
+            None => return,
+        };
+        if self.stage == Stage::Compute {
+            match self.spec.scheme {
+                Scheme::LocalProduct { .. } => {
+                    let code = *self.lp.as_ref().unwrap();
+                    let mut pending = std::mem::take(&mut self.pending);
+                    ps.on_completion(sim, model, &mut self.rng, c, &mut |mask, newly| {
+                        // Only the arriving cell's grid can newly decode.
+                        match newly {
+                            Some(cell) => {
+                                let g = code.grid_of_cell(cell);
+                                if pending.contains(&g) && grid_decodable(&code, g, mask) {
+                                    pending.remove(&g);
+                                }
+                            }
+                            None => pending.retain(|&g| !grid_decodable(&code, g, mask)),
+                        }
+                        pending.is_empty()
+                    });
+                    self.pending = pending;
+                }
+                Scheme::Product { .. } => {
+                    let code = self.pc.clone().unwrap();
+                    ps.on_completion(sim, model, &mut self.rng, c, &mut |mask, _| {
+                        code.decodable(mask)
+                    });
+                }
+                _ => {
+                    ps.on_completion(sim, model, &mut self.rng, c, &mut |_, _| false);
+                }
+            }
+        } else {
+            ps.on_completion(sim, model, &mut self.rng, c, &mut |_, _| false);
+        }
+        self.phase = Some(ps);
+        self.pump(sim, model);
+    }
+
+    /// Advance through any phases that have reached termination (also
+    /// covers phases that finish at birth, e.g. zero decode work).
+    fn pump(&mut self, sim: &mut EventSim, model: &StragglerModel) {
+        while !self.done {
+            let ps = match self.phase.take() {
+                Some(p) => p,
+                None => break,
+            };
+            if !ps.is_finished() {
+                self.phase = Some(ps);
+                break;
+            }
+            match self.stage {
+                Stage::Encode => {
+                    self.report.enc.tasks = ps.n();
+                    self.report.enc.stragglers = ps.stragglers();
+                    self.report.enc.relaunched = ps.relaunched;
+                    self.report.enc.virtual_secs = ps.duration();
+                    self.start_compute(sim, model);
+                }
+                Stage::Compute => {
+                    self.report.comp.tasks = ps.n();
+                    self.report.comp.stragglers = ps.stragglers();
+                    self.report.comp.relaunched = ps.relaunched;
+                    self.report.comp.virtual_secs = ps.duration();
+                    let mask = ps.arrived_mask();
+                    self.start_decode(sim, model, &mask);
+                }
+                Stage::Decode => {
+                    self.report.dec.relaunched += ps.relaunched;
+                    self.report.dec.virtual_secs += ps.duration();
+                    self.start_recompute(sim, model);
+                }
+                Stage::Recompute => {
+                    self.report.dec.virtual_secs += ps.duration();
+                    self.report.dec.relaunched += self.undecodable;
+                    let t = ps.end_time();
+                    self.finish_job(t);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario executor
+// ---------------------------------------------------------------------------
+
+/// Execute every `workers` run of the scenario and return the summary
+/// document compared by the golden suite.
+pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
+    let model = StragglerModel::new(sc.straggler, sc.rates);
+    let mut runs = Vec::with_capacity(sc.workers.len());
+    for &workers in &sc.workers {
+        let mut sim = EventSim::new(Pool::from_option(Some(workers)));
+        // Fork per-job streams up front, in job order: the timeline of a
+        // job is a function of (seed, job index) only.
+        let mut root = Pcg64::new(sc.seed);
+        let mut jobs: Vec<JobRun> = Vec::with_capacity(sc.jobs.len());
+        for (i, spec) in sc.jobs.iter().enumerate() {
+            jobs.push(JobRun::new(i, spec.clone(), root.fork(i as u64))?);
+        }
+        // Arrival order (ties by job index).
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&x, &y| {
+            jobs[x]
+                .spec
+                .arrival
+                .total_cmp(&jobs[y].spec.arrival)
+                .then(x.cmp(&y))
+        });
+        let mut next_arrival = 0usize;
+        loop {
+            let next_ev = sim.peek_time();
+            let next_arr = if next_arrival < order.len() {
+                Some(jobs[order[next_arrival]].spec.arrival)
+            } else {
+                None
+            };
+            let start_now = match (next_arr, next_ev) {
+                (Some(a), Some(e)) => a <= e,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if start_now {
+                let j = order[next_arrival];
+                next_arrival += 1;
+                let at = jobs[j].spec.arrival.max(sim.now());
+                sim.advance_to(at);
+                jobs[j].start(&mut sim, &model);
+            } else if next_ev.is_some() {
+                let c = sim.step().expect("peeked event must pop");
+                let j = c.job;
+                jobs[j].on_completion(&mut sim, &model, &c);
+            } else {
+                break;
+            }
+        }
+        for job in &jobs {
+            anyhow::ensure!(
+                job.done,
+                "scenario '{}' job {} did not run to completion",
+                sc.name,
+                job.index
+            );
+        }
+
+        let jobs_json: Vec<Json> = jobs
+            .iter()
+            .map(|job| {
+                let mut jj = job.report.to_json();
+                jj.set("arrival", Json::from(job.spec.arrival));
+                jj.set("finish", Json::from(job.finish));
+                jj
+            })
+            .collect();
+        runs.push(
+            obj()
+                .field("workers", workers)
+                .field("jobs", Json::Arr(jobs_json))
+                .build(),
+        );
+    }
+
+    Ok(obj()
+        .field("scenario", sc.name.as_str())
+        .field("seed", sc.seed)
+        .field(
+            "straggler",
+            obj()
+                .field(
+                    "dist",
+                    match sc.straggler.slow_dist {
+                        SlowdownDist::LogNormal => "lognormal",
+                        SlowdownDist::Pareto { .. } => "pareto",
+                    },
+                )
+                .field("p", sc.straggler.p)
+                .build(),
+        )
+        .field("runs", Json::Arr(runs))
+        .build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn scenario_from(src: &str) -> Scenario {
+        parse_scenario(&parse(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_minimal_scenario() {
+        let sc = scenario_from(
+            r#"{
+                "name": "mini",
+                "seed": 3,
+                "jobs": [
+                    {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 1000}
+                ]
+            }"#,
+        );
+        assert_eq!(sc.name, "mini");
+        assert_eq!(sc.workers, vec![0]);
+        assert_eq!(sc.jobs.len(), 1);
+        assert_eq!(sc.jobs[0].dims, (1000, 1000, 1000));
+        assert_eq!(sc.jobs[0].decode_workers, 4);
+        assert_eq!(sc.straggler.slow_dist, SlowdownDist::LogNormal);
+    }
+
+    #[test]
+    fn parses_straggler_and_sweep() {
+        let sc = scenario_from(
+            r#"{
+                "name": "full",
+                "seed": 9,
+                "workers": [0, 50],
+                "straggler": {"dist": "pareto", "pareto_alpha": 1.2, "p": 0.05},
+                "jobs": [
+                    {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4,
+                     "dims": [4000, 2000, 4000], "arrival": 10.5,
+                     "decode_workers": 3, "encode_workers": 2}
+                ]
+            }"#,
+        );
+        assert_eq!(sc.workers, vec![0, 50]);
+        assert_eq!(sc.straggler.p, 0.05);
+        assert_eq!(sc.straggler.slow_dist, SlowdownDist::Pareto { alpha: 1.2 });
+        assert_eq!(sc.jobs[0].arrival, 10.5);
+        assert_eq!(sc.jobs[0].encode_workers, 2);
+    }
+
+    #[test]
+    fn rejects_malformed_scenarios() {
+        let bad = [
+            r#"{"seed": 1, "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "jobs": []}"#,
+            r#"{"name": "x", "seed": 1, "jobs": [{"scheme": "bogus", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "jobs": [{"scheme": "local-product:3x3", "s_a": 4, "s_b": 4, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "straggler": {"dist": "weird"}, "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "jobs": [{"scheme": "uncoded", "s_a": 0, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "workers": 7.5, "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "jobs": [{"scheme": "local-product:0x2", "s_a": 4, "s_b": 4, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "jobs": [{"scheme": "polynomial:-0.5", "s_a": 4, "s_b": 4, "dims": 100}]}"#,
+        ];
+        for src in bad {
+            assert!(
+                parse_scenario(&parse(src).unwrap()).is_err(),
+                "should reject: {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_job_runs_and_is_deterministic() {
+        let sc = scenario_from(
+            r#"{
+                "name": "one",
+                "seed": 17,
+                "jobs": [
+                    {"scheme": "local-product:5x5", "s_a": 10, "s_b": 10,
+                     "dims": [20000, 20000, 20000], "decode_workers": 5}
+                ]
+            }"#,
+        );
+        let a = run_scenario(&sc).unwrap();
+        let b = run_scenario(&sc).unwrap();
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+        let runs = a.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        let jobs = runs[0].get("jobs").unwrap().as_arr().unwrap();
+        let job = &jobs[0];
+        assert_eq!(job.get("scheme").unwrap().as_str(), Some("local-product"));
+        // 12×12 coded grid.
+        assert_eq!(
+            job.get("comp").unwrap().get("tasks").unwrap().as_usize(),
+            Some(144)
+        );
+        assert!(job.get("t_total").unwrap().as_f64().unwrap() > 0.0);
+        assert!(job.get("finish").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn all_schemes_complete_on_shared_bounded_pool() {
+        let sc = scenario_from(
+            r#"{
+                "name": "contention",
+                "seed": 23,
+                "workers": 12,
+                "jobs": [
+                    {"scheme": "uncoded", "s_a": 4, "s_b": 4, "dims": 8000},
+                    {"scheme": "speculative:0.75", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 50},
+                    {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 100},
+                    {"scheme": "product:1x1", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 150},
+                    {"scheme": "polynomial:0.25", "s_a": 2, "s_b": 2, "dims": 8000, "arrival": 200}
+                ]
+            }"#,
+        );
+        let out = run_scenario(&sc).unwrap();
+        let runs = out.get("runs").unwrap().as_arr().unwrap();
+        let jobs = runs[0].get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 5);
+        for job in jobs {
+            let arrival = job.get("arrival").unwrap().as_f64().unwrap();
+            let finish = job.get("finish").unwrap().as_f64().unwrap();
+            assert!(finish > arrival, "{:?}", job.get("scheme"));
+            assert!(job.get("t_total").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // Polynomial at K=4 is numerically feasible.
+        assert_eq!(jobs[4].get("numerics_ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn pool_sweep_produces_one_run_per_width() {
+        let sc = scenario_from(
+            r#"{
+                "name": "sweep",
+                "seed": 29,
+                "workers": [0, 100, 8],
+                "jobs": [
+                    {"scheme": "uncoded", "s_a": 4, "s_b": 4, "dims": 8000}
+                ]
+            }"#,
+        );
+        let out = run_scenario(&sc).unwrap();
+        let runs = out.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 3);
+        let total = |run: &Json| -> f64 {
+            run.get("jobs").unwrap().as_arr().unwrap()[0]
+                .get("t_total")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // Wait-all with a fixed duration set: a pool at least as wide as
+        // the fan-out matches unbounded bit for bit, and a tight pool can
+        // only delay completions (same durations, queued starts).
+        assert_eq!(total(&runs[0]), total(&runs[1]));
+        assert!(total(&runs[2]) >= total(&runs[0]) - 1e-9);
+    }
+}

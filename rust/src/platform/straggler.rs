@@ -31,6 +31,20 @@
 
 use crate::util::rng::Pcg64;
 
+/// Distribution of the straggler slowdown factor. Both draw exactly once
+/// from the RNG stream per straggler, so swapping the distribution never
+/// shifts the draw sequence of the surrounding fields.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SlowdownDist {
+    /// LogNormal(slow_mu, slow_sigma), clamped to [slow_min, slow_max] —
+    /// the Fig-1 calibration.
+    LogNormal,
+    /// Pareto with scale `slow_min` and shape `alpha`, clamped to
+    /// `slow_max` — a heavier tail than Fig 1, used by scenario sweeps to
+    /// stress the schemes beyond the paper's measured Lambda behaviour.
+    Pareto { alpha: f64 },
+}
+
 /// Straggler-injection parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct StragglerParams {
@@ -46,6 +60,8 @@ pub struct StragglerParams {
     /// Multiplicative jitter sigma applied to every job's duration
     /// (system noise for non-stragglers).
     pub jitter_sigma: f64,
+    /// Shape of the slowdown tail.
+    pub slow_dist: SlowdownDist,
 }
 
 impl Default for StragglerParams {
@@ -57,6 +73,7 @@ impl Default for StragglerParams {
             slow_min: 1.8,
             slow_max: 8.0,
             jitter_sigma: 0.08,
+            slow_dist: SlowdownDist::LogNormal,
         }
     }
 }
@@ -123,6 +140,29 @@ impl WorkProfile {
         }
     }
 
+    /// Column-sliced encode-phase profile (Remark 1): the side's parities
+    /// total `groups·l` block-reads of `block_rows × k` each; `fleet`
+    /// workers split the columns evenly, each writing its slice of every
+    /// parity. Shared by the coordinator and the scenario runner.
+    pub fn sliced_encode(
+        groups: usize,
+        l: usize,
+        block_rows: usize,
+        k: usize,
+        fleet: usize,
+    ) -> WorkProfile {
+        let total_read = (groups * l * block_rows * k * 4) as u64;
+        let total_write = (groups * block_rows * k * 4) as u64;
+        WorkProfile {
+            bytes_read: total_read / fleet as u64,
+            // Ranged GETs, split across the fleet like the bytes.
+            read_ops: (groups * l).div_ceil(fleet) as u64,
+            flops: (groups * (l - 1).max(1) * block_rows * k) as f64 / fleet as f64,
+            bytes_written: total_write / fleet as u64,
+            write_ops: groups.div_ceil(fleet) as u64,
+        }
+    }
+
     /// Profile of a block matvec: read block (rows×cols) + vector chunk.
     pub fn block_matvec(rows: usize, cols: usize) -> WorkProfile {
         WorkProfile {
@@ -177,8 +217,14 @@ impl StragglerModel {
             r.cost.read_many(work.write_ops, work.bytes_written) * jitter(rng);
         let straggled = rng.bernoulli(p.p);
         let straggle_factor = if straggled {
-            rng.lognormal(p.slow_mu, p.slow_sigma)
-                .clamp(p.slow_min, p.slow_max)
+            match p.slow_dist {
+                SlowdownDist::LogNormal => rng
+                    .lognormal(p.slow_mu, p.slow_sigma)
+                    .clamp(p.slow_min, p.slow_max),
+                SlowdownDist::Pareto { alpha } => rng
+                    .pareto(p.slow_min.max(1.0), alpha)
+                    .clamp(p.slow_min, p.slow_max),
+            }
         } else {
             1.0
         };
@@ -272,6 +318,36 @@ mod tests {
         assert_eq!(enc.bytes_read, 10 * 512 * 512 * 4);
         let mv = WorkProfile::block_matvec(1000, 2000);
         assert!((mv.flops - 4e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn pareto_slowdown_respects_clamp_and_stream() {
+        let params = StragglerParams {
+            p: 0.3,
+            slow_dist: SlowdownDist::Pareto { alpha: 1.2 },
+            ..Default::default()
+        };
+        let model = StragglerModel::new(params, WorkerRates::default());
+        let mut rng = Pcg64::new(6);
+        let mut straggled = 0;
+        for _ in 0..3000 {
+            let s = model.sample(&fig1_profile(), &mut rng);
+            if s.straggled {
+                straggled += 1;
+                assert!(s.straggle_factor >= params.slow_min);
+                assert!(s.straggle_factor <= params.slow_max);
+            } else {
+                assert_eq!(s.straggle_factor, 1.0);
+            }
+        }
+        assert!(straggled > 0);
+        // Same seed ⇒ same stream, for the alternate distribution too.
+        let mut r1 = Pcg64::new(8);
+        let mut r2 = Pcg64::new(8);
+        assert_eq!(
+            model.sample_fleet(&fig1_profile(), 50, &mut r1),
+            model.sample_fleet(&fig1_profile(), 50, &mut r2)
+        );
     }
 
     #[test]

@@ -211,3 +211,54 @@ fn polynomial_code_decodes_from_any_k_subset() {
         }
     });
 }
+
+#[test]
+fn event_sim_completion_times_invariant_under_pool_size() {
+    // Determinism contract of the discrete-event core: task durations are
+    // sampled at submission in task order, so for a single job the
+    // timeline is a pure function of the seed — (1) any pool at least as
+    // wide as the fan-out reproduces the unbounded completion times bit
+    // for bit, (2) a tight pool only ever delays completions (same
+    // durations, queued starts), and (3) two runs with the same seed and
+    // pool are identical.
+    use slec::platform::event::{run_phase, EventSim, PhaseState, Pool, Termination};
+    use slec::platform::{StragglerModel, WorkProfile};
+
+    proptest(30, 0x9001, |g| {
+        let n = g.usize_in(1, 32);
+        let seed = 0xA11CE ^ (g.case as u64);
+        let model = StragglerModel::new(Default::default(), Default::default());
+        let work = WorkProfile::block_product(256, 1024, 256);
+        let run = |pool: Pool| -> Vec<f64> {
+            let mut rng = Pcg64::new(seed);
+            let mut sim = EventSim::new(pool);
+            let mut ph = PhaseState::launch_uniform(
+                &mut sim,
+                &model,
+                &work,
+                n,
+                0,
+                Termination::WaitAll,
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &model, &mut rng, &mut |_, _| false);
+            ph.completion_times()
+        };
+        let unbounded = run(Pool::Unbounded);
+        let wide = n + g.usize_in(1, 5);
+        for cap in [n, wide, 4 * n] {
+            assert_eq!(run(Pool::Workers(cap)), unbounded, "n={n} cap={cap}");
+        }
+        let cap = (n / 3).max(1);
+        let tight = run(Pool::Workers(cap));
+        for i in 0..n {
+            assert!(
+                tight[i] >= unbounded[i] - 1e-12,
+                "task {i}: tight {} < unbounded {} (n={n} cap={cap})",
+                tight[i],
+                unbounded[i]
+            );
+        }
+        assert_eq!(tight, run(Pool::Workers(cap)));
+    });
+}

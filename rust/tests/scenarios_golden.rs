@@ -1,0 +1,269 @@
+//! Golden regression suite over the declarative scenario harness.
+//!
+//! Every `rust/scenarios/*.json` file is parsed, executed twice through
+//! the discrete-event scenario runner (`platform::scenario`) — the two
+//! runs must be bit-identical — and the resulting per-scenario
+//! `JobReport` summary is compared against the checked-in golden file
+//! `rust/scenarios/golden/<name>.json`.
+//!
+//! Golden semantics (see EXPERIMENTS.md §Scenario suite):
+//! - a golden `null` is a wildcard (field not yet pinned),
+//! - golden objects are compared as *subsets* (extra observed keys are
+//!   fine; missing ones are a failure),
+//! - numbers compare with 1e-6 absolute/relative tolerance so goldens can
+//!   be hand-written or machine-blessed,
+//! - `SLEC_BLESS=1 cargo test --test scenarios_golden` rewrites every
+//!   golden with the full observed values (pinning all timings).
+//!
+//! On a mismatch the observed document and a line-per-field diff are
+//! written to `target/scenario-diffs/` (uploaded as a CI artifact).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use slec::codes::Scheme;
+use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
+use slec::linalg::Matrix;
+use slec::platform::scenario::{parse_scenario, run_scenario, Scenario};
+use slec::util::json::{self, Json};
+use slec::util::rng::Pcg64;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+fn golden_dir() -> PathBuf {
+    scenarios_dir().join("golden")
+}
+
+fn diffs_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("target")
+        .join("scenario-diffs")
+}
+
+fn scenario_files() -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = fs::read_dir(scenarios_dir())
+        .expect("rust/scenarios must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_file() && p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    files.sort();
+    files
+}
+
+fn load_scenario(path: &Path) -> Scenario {
+    let doc = json::load_file(path)
+        .unwrap_or_else(|e| panic!("loading {}: {e}", path.display()));
+    parse_scenario(&doc).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+/// Is `b` within 1e-6 (absolute or relative) of golden value `a`?
+fn num_close(a: f64, b: f64) -> bool {
+    let tol = 1e-6_f64.max(1e-6 * a.abs().max(b.abs()));
+    (a - b).abs() <= tol
+}
+
+/// Golden-vs-observed structural diff. `null` goldens are wildcards and
+/// golden objects match as subsets of the observed object.
+fn diff_json(golden: &Json, got: &Json, path: &str, out: &mut Vec<String>) {
+    match golden {
+        Json::Null => {}
+        Json::Obj(fields) => {
+            if !matches!(got, Json::Obj(_)) {
+                out.push(format!(
+                    "{path}: expected an object, observed {}",
+                    got.to_string_compact()
+                ));
+                return;
+            }
+            for (k, v) in fields {
+                let sub = if path.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{path}.{k}")
+                };
+                match got.get(k) {
+                    Some(g) => diff_json(v, g, &sub, out),
+                    None => out.push(format!("{sub}: missing in observed output")),
+                }
+            }
+        }
+        Json::Arr(items) => match got.as_arr() {
+            None => out.push(format!(
+                "{path}: expected an array, observed {}",
+                got.to_string_compact()
+            )),
+            Some(gs) => {
+                if gs.len() != items.len() {
+                    out.push(format!(
+                        "{path}: golden has {} items, observed {}",
+                        items.len(),
+                        gs.len()
+                    ));
+                    return;
+                }
+                for (i, (v, g)) in items.iter().zip(gs).enumerate() {
+                    diff_json(v, g, &format!("{path}[{i}]"), out);
+                }
+            }
+        },
+        Json::Num(a) => match got.as_f64() {
+            Some(b) if num_close(*a, b) => {}
+            _ => out.push(format!(
+                "{path}: golden {} vs observed {}",
+                golden.to_string_compact(),
+                got.to_string_compact()
+            )),
+        },
+        other => {
+            if other != got {
+                out.push(format!(
+                    "{path}: golden {} vs observed {}",
+                    other.to_string_compact(),
+                    got.to_string_compact()
+                ));
+            }
+        }
+    }
+}
+
+#[test]
+fn scenarios_match_goldens_and_run_deterministically() {
+    let files = scenario_files();
+    assert!(
+        files.len() >= 6,
+        "the scenario suite must cover at least 6 scenarios, found {}",
+        files.len()
+    );
+    let bless = std::env::var("SLEC_BLESS").is_ok();
+    let mut schemes_seen = std::collections::BTreeSet::new();
+    let mut dists_seen = std::collections::BTreeSet::new();
+    let mut failures = Vec::new();
+
+    for path in &files {
+        let stem = path.file_stem().unwrap().to_string_lossy().to_string();
+        let sc = load_scenario(path);
+        for job in &sc.jobs {
+            schemes_seen.insert(job.scheme.name().to_string());
+        }
+
+        // Two consecutive runs must agree bit for bit.
+        let observed = run_scenario(&sc).unwrap_or_else(|e| panic!("running {stem}: {e}"));
+        let rerun = run_scenario(&sc).unwrap();
+        assert_eq!(
+            observed.to_string_pretty(),
+            rerun.to_string_pretty(),
+            "{stem}: two consecutive runs diverged"
+        );
+        dists_seen.insert(
+            observed
+                .get("straggler")
+                .and_then(|s| s.get("dist"))
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string(),
+        );
+
+        let golden_path = golden_dir().join(format!("{stem}.json"));
+        if bless {
+            fs::create_dir_all(golden_dir()).unwrap();
+            fs::write(&golden_path, observed.to_string_pretty()).unwrap();
+            println!("blessed {}", golden_path.display());
+            continue;
+        }
+        let golden = json::load_file(&golden_path).unwrap_or_else(|e| {
+            panic!("{stem}: missing/invalid golden ({e}); run SLEC_BLESS=1 cargo test --test scenarios_golden")
+        });
+        let mut diffs = Vec::new();
+        diff_json(&golden, &observed, "", &mut diffs);
+        if !diffs.is_empty() {
+            // Leave the evidence where CI uploads it as an artifact.
+            let dir = diffs_dir();
+            let _ = fs::create_dir_all(&dir);
+            let _ = fs::write(
+                dir.join(format!("{stem}.observed.json")),
+                observed.to_string_pretty(),
+            );
+            let _ = fs::write(dir.join(format!("{stem}.diff.txt")), diffs.join("\n"));
+            failures.push(format!(
+                "{stem}: {} field(s) diverged from golden (see target/scenario-diffs/{stem}.diff.txt):\n  {}",
+                diffs.len(),
+                diffs.join("\n  ")
+            ));
+        }
+    }
+
+    // Coverage floor from the issue: all five schemes, ≥ 2 straggler models.
+    for scheme in ["uncoded", "speculative", "local-product", "product", "polynomial"] {
+        assert!(
+            schemes_seen.contains(scheme),
+            "scenario suite must cover scheme '{scheme}', saw {schemes_seen:?}"
+        );
+    }
+    assert!(
+        dists_seen.len() >= 2,
+        "scenario suite must span at least two straggler models, saw {dists_seen:?}"
+    );
+
+    assert!(failures.is_empty(), "{}", failures.join("\n"));
+}
+
+#[test]
+fn golden_comparator_semantics() {
+    let golden = json::parse(
+        r#"{"a": null, "b": 1.0, "nested": {"c": true}, "arr": [1, null]}"#,
+    )
+    .unwrap();
+    // Wildcards, tolerance and subset-matching all accept.
+    let ok = json::parse(
+        r#"{"a": 123, "b": 1.0000004, "nested": {"c": true, "extra": 9}, "arr": [1, "x"]}"#,
+    )
+    .unwrap();
+    let mut diffs = Vec::new();
+    diff_json(&golden, &ok, "", &mut diffs);
+    assert!(diffs.is_empty(), "{diffs:?}");
+
+    // Value drift, missing keys and length changes are all caught.
+    let bad = json::parse(r#"{"a": 1, "b": 1.5, "nested": {}, "arr": [1]}"#).unwrap();
+    let mut diffs = Vec::new();
+    diff_json(&golden, &bad, "", &mut diffs);
+    assert_eq!(diffs.len(), 3, "{diffs:?}");
+}
+
+#[test]
+fn coordinator_reports_reproduce_across_runs() {
+    // Acceptance tie-in for the event-core refactor: run_matmul with one
+    // seed yields identical decode_ok, numerics and phase timings on two
+    // consecutive runs, for a coded and an uncoded scheme.
+    let env = Env::host();
+    let mut rng = Pcg64::new(99);
+    let a = Matrix::randn(80, 48, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(80, 48, &mut rng, 0.0, 1.0);
+    for scheme in [
+        Scheme::LocalProduct { l_a: 2, l_b: 2 },
+        Scheme::Uncoded,
+        Scheme::Product { t_a: 1, t_b: 1 },
+    ] {
+        let job = MatmulJob {
+            s_a: 4,
+            s_b: 4,
+            scheme,
+            seed: 1234,
+            job_id: format!("golden-{}", scheme.name()),
+            ..Default::default()
+        };
+        let (c1, r1) = run_matmul(&env, &a, &b, &job).unwrap();
+        let (c2, r2) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert_eq!(r1.decode_ok, r2.decode_ok, "{}", scheme.name());
+        assert_eq!(r1.rel_err.to_bits(), r2.rel_err.to_bits(), "{}", scheme.name());
+        assert_eq!(r1.enc.virtual_secs, r2.enc.virtual_secs);
+        assert_eq!(r1.comp.virtual_secs, r2.comp.virtual_secs);
+        assert_eq!(r1.dec.virtual_secs, r2.dec.virtual_secs);
+        assert_eq!(r1.dec.blocks_read, r2.dec.blocks_read);
+        assert_eq!(c1.data, c2.data, "{}", scheme.name());
+        assert!(r1.rel_err < 1e-3, "{}: rel_err {}", scheme.name(), r1.rel_err);
+    }
+}
