@@ -25,16 +25,16 @@ fn main() {
         let mut total = 0.0;
         let trials = 3;
         for t in 0..trials {
-            let job = MatmulJob {
-                s_a: 20,
-                s_b: 20,
-                scheme: Scheme::LocalProduct { l_a: l, l_b: l },
-                verify: false,
-                seed: 7 + t,
-                job_id: format!("abl-{l}-{t}"),
-                virtual_dims: Some((20_000, 20_000, 20_000)),
-                ..Default::default()
-            };
+            // Resolved through the scheme registry, like the CLI.
+            let scheme = Scheme::parse(&format!("local-product:{l}x{l}")).expect("registry");
+            let job = MatmulJob::builder()
+                .blocks(20, 20)
+                .scheme(scheme)
+                .verify(false)
+                .seed(7 + t)
+                .job_id(format!("abl-{l}-{t}"))
+                .virtual_cube(20_000)
+                .build();
             let (_, r) = run_matmul(&env, &a, &b, &job).expect("run");
             total += r.total_secs();
         }

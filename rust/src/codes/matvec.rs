@@ -314,6 +314,65 @@ impl CodedMatvec2D {
     }
 }
 
+// ---------------------------------------------------------------------------
+// ComputePolicy impls — matvec compute phases through the generic driver
+// ---------------------------------------------------------------------------
+
+use crate::codes::scheme::{ComputePolicy, DecodeProbe};
+use crate::platform::event::Termination;
+
+/// Compute-phase policy of the 2-D product-coded matvec: earliest virtual
+/// time every local grid is peeling-decodable, as an event-driven cutoff.
+#[derive(Debug, Clone, Copy)]
+pub struct Matvec2DPolicy {
+    pub code: CodedMatvec2D,
+}
+
+impl ComputePolicy for Matvec2DPolicy {
+    fn compute_tasks(&self) -> usize {
+        self.code.coded_len()
+    }
+
+    fn compute_termination(&self) -> Termination {
+        Termination::EarliestDecodable
+    }
+
+    fn decode_probe(&self) -> DecodeProbe {
+        // Only the arriving block's grid can newly decode.
+        let code = self.code;
+        let mut pending: std::collections::BTreeSet<usize> = (0..code.grids).collect();
+        Box::new(move |mask: &[bool], newly: Option<usize>| {
+            match newly {
+                Some(i) => {
+                    let (g, _, _) = code.cell(i);
+                    if pending.contains(&g) && code.grid_decodable(g, mask) {
+                        pending.remove(&g);
+                    }
+                }
+                None => pending.retain(|&g| !code.grid_decodable(g, mask)),
+            }
+            pending.is_empty()
+        })
+    }
+}
+
+/// Compute-phase policy of the uncoded / speculative matvec baselines.
+#[derive(Debug, Clone, Copy)]
+pub struct PlainMatvecPolicy {
+    pub tasks: usize,
+    pub termination: Termination,
+}
+
+impl ComputePolicy for PlainMatvecPolicy {
+    fn compute_tasks(&self) -> usize {
+        self.tasks
+    }
+
+    fn compute_termination(&self) -> Termination {
+        self.termination
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

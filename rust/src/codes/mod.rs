@@ -9,7 +9,10 @@ pub mod montecarlo;
 pub mod peeling;
 pub mod polynomial;
 pub mod product;
+pub mod scheme;
 pub mod theory;
+
+pub use scheme::{CodingScheme, ComputePolicy, DecodePlan, DecodeProbe, EncodePlan, JobShape};
 
 /// Straggler-mitigation strategy selector used by the coordinator and the
 /// figure harnesses (Fig 5's four contenders).
@@ -40,38 +43,17 @@ impl Scheme {
     }
 
     /// Parse from a CLI string like `local-product`, `speculative:0.79`,
-    /// `local-product:10x10`, `product:1x1`, `polynomial:0.21`.
+    /// `local-product:10x10`, `product:1x1`, `polynomial:0.21` — resolved
+    /// through the one [`scheme::REGISTRY`] table.
     pub fn parse(s: &str) -> anyhow::Result<Scheme> {
-        let (head, arg) = match s.split_once(':') {
-            Some((h, a)) => (h, Some(a)),
-            None => (s, None),
-        };
-        Ok(match head {
-            "uncoded" => Scheme::Uncoded,
-            "speculative" => Scheme::Speculative {
-                wait_frac: arg.map(|a| a.parse()).transpose()?.unwrap_or(0.79),
-            },
-            "local-product" => {
-                let (la, lb) = parse_pair(arg.unwrap_or("10x10"))?;
-                Scheme::LocalProduct { l_a: la, l_b: lb }
-            }
-            "product" => {
-                let (ta, tb) = parse_pair(arg.unwrap_or("1x1"))?;
-                Scheme::Product { t_a: ta, t_b: tb }
-            }
-            "polynomial" => Scheme::Polynomial {
-                redundancy: arg.map(|a| a.parse()).transpose()?.unwrap_or(0.21),
-            },
-            other => anyhow::bail!("unknown scheme '{other}'"),
-        })
+        scheme::parse(s)
     }
-}
 
-fn parse_pair(s: &str) -> anyhow::Result<(usize, usize)> {
-    let (a, b) = s
-        .split_once('x')
-        .ok_or_else(|| anyhow::anyhow!("expected AxB, got '{s}'"))?;
-    Ok((a.parse()?, b.parse()?))
+    /// Build the pluggable [`CodingScheme`] object for an `s_a × s_b`
+    /// systematic grid, validating parameters against the partitioning.
+    pub fn instantiate(&self, s_a: usize, s_b: usize) -> anyhow::Result<Box<dyn CodingScheme>> {
+        scheme::instantiate(*self, s_a, s_b)
+    }
 }
 
 #[cfg(test)]

@@ -18,7 +18,13 @@
 //! feasible K as far as possible; the instability threshold is measured
 //! in `tests` and reported in EXPERIMENTS.md.
 
+use crate::codes::scheme::{
+    CodingScheme, ComputePolicy, DecodePlan, EncodePlan, JobShape, ENCODE_WAIT_FRAC,
+};
 use crate::linalg::matrix::Matrix;
+use crate::platform::event::Termination;
+use crate::platform::straggler::WorkProfile;
+use crate::runtime::ComputeBackend;
 
 /// Past this recovery threshold the real-arithmetic Vandermonde decode is
 /// numerically meaningless (and the paper's master "cannot store" the
@@ -130,6 +136,157 @@ impl PolynomialCode {
             }
         }
         Ok((blocks, k))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CodingScheme impl — the MDS baseline as a pluggable scheme
+// ---------------------------------------------------------------------------
+
+/// Per-worker decode profile of the polynomial code: every decode worker
+/// reads all K blocks (locality = K) and the K² block combines split
+/// across the fleet.
+pub fn polynomial_decode_profile(
+    k: usize,
+    workers: usize,
+    block_rows: usize,
+    block_cols: usize,
+) -> WorkProfile {
+    let out_bytes = (block_rows * block_cols * 4) as u64;
+    WorkProfile {
+        bytes_read: k as u64 * out_bytes,
+        read_ops: k as u64,
+        flops: (k * k / workers) as f64 * (block_rows * block_cols) as f64,
+        bytes_written: (k / workers).max(1) as u64 * out_bytes,
+        write_ops: (k / workers).max(1) as u64,
+    }
+}
+
+/// The polynomial (MDS) code as a pluggable [`CodingScheme`].
+#[derive(Debug, Clone)]
+pub struct PolynomialScheme {
+    pub code: PolynomialCode,
+}
+
+impl PolynomialScheme {
+    /// Worker count from the redundancy factor: `n = ceil(K·(1 + r))`.
+    pub fn new(s_a: usize, s_b: usize, redundancy: f64) -> anyhow::Result<PolynomialScheme> {
+        anyhow::ensure!(
+            redundancy.is_finite() && redundancy >= 0.0,
+            "polynomial redundancy must be a non-negative number"
+        );
+        let k = s_a * s_b;
+        let n_workers = ((k as f64) * (1.0 + redundancy)).ceil() as usize;
+        Ok(PolynomialScheme {
+            code: PolynomialCode::new(s_a, s_b, n_workers),
+        })
+    }
+}
+
+impl ComputePolicy for PolynomialScheme {
+    fn compute_tasks(&self) -> usize {
+        self.code.n_workers
+    }
+
+    /// MDS termination at the K-th arrival (wait-k as an event policy:
+    /// the cutoff abandons the stragglers).
+    fn compute_termination(&self) -> Termination {
+        Termination::WaitK(self.code.threshold())
+    }
+}
+
+impl CodingScheme for PolynomialScheme {
+    fn name(&self) -> &'static str {
+        "polynomial"
+    }
+
+    fn redundancy(&self) -> f64 {
+        self.code.redundancy()
+    }
+
+    fn encode_plan(&self, shape: &JobShape, fleet: usize) -> Option<EncodePlan> {
+        // Every one of the n_workers coded inputs Ã_k/B̃_k is a weighted
+        // sum of ALL the side's blocks — n× more encode volume than the
+        // local scheme. Column-sliced across a fleet sized like the other
+        // schemes' for a fair comparison.
+        let (s_a, s_b, n) = (self.code.s_a, self.code.s_b, self.code.n_workers);
+        Some(EncodePlan {
+            profile: WorkProfile::sliced_encode(
+                2 * n,
+                s_a.max(s_b),
+                shape.block_rows,
+                shape.inner,
+                fleet,
+            ),
+            termination: Termination::Speculative {
+                wait_frac: ENCODE_WAIT_FRAC,
+            },
+            blocks_read: n * (s_a + s_b),
+        })
+    }
+
+    fn decode_plan(&self, _arrived: &[bool], shape: &JobShape, workers: usize) -> DecodePlan {
+        // EVERY decode worker reads all K blocks (the paper's
+        // communication-overhead point) and the interpolation costs K²
+        // block combines.
+        let k = self.code.threshold();
+        let workers = workers.max(1);
+        DecodePlan {
+            profiles: vec![
+                polynomial_decode_profile(k, workers, shape.block_rows, shape.block_cols);
+                workers
+            ],
+            termination: Termination::WaitAll,
+            blocks_read: workers * k,
+            undecodable: 0,
+        }
+    }
+
+    /// Numerics only below the conditioning wall ([`NUMERIC_CAP`]).
+    fn numerics_feasible(&self) -> bool {
+        self.code.threshold() <= NUMERIC_CAP
+    }
+
+    fn encode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        // Coded inputs are built lazily per arrived task in
+        // `cell_product` — only the first K products are ever needed.
+        (a_blocks.to_vec(), b_blocks.to_vec())
+    }
+
+    fn cell_product(
+        &self,
+        backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+        cell: usize,
+    ) -> Matrix {
+        let at = self.code.encode_a(a_blocks, cell);
+        let bt = self.code.encode_b(b_blocks, cell);
+        backend.block_product(&at, &bt)
+    }
+
+    fn decode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        mut grid: Vec<Option<Matrix>>,
+        arrival_order: &[usize],
+    ) -> anyhow::Result<Vec<Matrix>> {
+        let k = self.code.threshold();
+        anyhow::ensure!(
+            arrival_order.len() == k,
+            "wait-k must deliver exactly K arrivals"
+        );
+        let results: Vec<(usize, Matrix)> = arrival_order
+            .iter()
+            .map(|&w| (w, grid[w].take().expect("arrived cell was computed")))
+            .collect();
+        let (blocks, _) = self.code.decode(&results)?;
+        Ok(blocks)
     }
 }
 

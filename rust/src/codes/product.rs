@@ -9,8 +9,15 @@
 //! row) block of C_coded ... this results in a huge communication
 //! overhead") — which is exactly the effect the Fig-5 comparison measures.
 
+use crate::codes::scheme::{
+    CodingScheme, ComputePolicy, DecodePlan, DecodeProbe, EncodePlan, JobShape,
+    DECODE_WAIT_FRAC, ENCODE_WAIT_FRAC,
+};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::solve::lu_solve;
+use crate::platform::event::Termination;
+use crate::platform::straggler::WorkProfile;
+use crate::runtime::ComputeBackend;
 
 /// MDS code along one axis: `systematic` data blocks + `parities`
 /// Vandermonde parity blocks. Any `systematic` of the `systematic +
@@ -347,6 +354,138 @@ impl ProductCode {
             blocks_read,
             recovered,
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CodingScheme impl — the global-parity baseline as a pluggable scheme
+// ---------------------------------------------------------------------------
+
+/// Decode-phase profile of the product code's single decode worker: the
+/// row/column recovery passes are globally coupled, so one worker reads
+/// every surviving block of the touched lines and rewrites the recovered
+/// cells.
+pub fn product_decode_profile(
+    reads: usize,
+    recovered: usize,
+    block_rows: usize,
+    block_cols: usize,
+) -> WorkProfile {
+    let out_bytes = (block_rows * block_cols * 4) as u64;
+    WorkProfile {
+        bytes_read: reads as u64 * out_bytes,
+        read_ops: reads as u64,
+        flops: (reads * block_rows * block_cols) as f64,
+        bytes_written: (recovered.max(1) as u64) * out_bytes,
+        write_ops: recovered as u64,
+    }
+}
+
+/// The global-parity product code as a pluggable [`CodingScheme`].
+#[derive(Debug, Clone)]
+pub struct ProductScheme {
+    pub code: ProductCode,
+}
+
+impl ProductScheme {
+    pub fn new(s_a: usize, t_a: usize, s_b: usize, t_b: usize) -> ProductScheme {
+        ProductScheme {
+            code: ProductCode::new(s_a, t_a, s_b, t_b),
+        }
+    }
+}
+
+impl ComputePolicy for ProductScheme {
+    fn compute_tasks(&self) -> usize {
+        let (ra, rb) = self.code.coded_grid();
+        ra * rb
+    }
+
+    fn compute_termination(&self) -> Termination {
+        Termination::EarliestDecodable
+    }
+
+    fn decode_probe(&self) -> DecodeProbe {
+        // Global parities couple every cell, so the whole-mask fixpoint is
+        // re-run per completion (no per-grid incremental form exists).
+        let code = self.code.clone();
+        Box::new(move |mask: &[bool], _| code.decodable(mask))
+    }
+}
+
+impl CodingScheme for ProductScheme {
+    fn name(&self) -> &'static str {
+        "product"
+    }
+
+    fn redundancy(&self) -> f64 {
+        self.code.redundancy()
+    }
+
+    fn encode_plan(&self, shape: &JobShape, fleet: usize) -> Option<EncodePlan> {
+        // Each parity reads ALL s blocks of its side (global parities —
+        // the encode-cost handicap vs local codes), column-sliced across
+        // the same small fleet.
+        let (s_a, s_b) = (self.code.row_code.systematic, self.code.col_code.systematic);
+        let (t_a, t_b) = (self.code.row_code.parities, self.code.col_code.parities);
+        Some(EncodePlan {
+            profile: WorkProfile::sliced_encode(
+                t_a + t_b,
+                s_a.max(s_b),
+                shape.block_rows,
+                shape.inner,
+                fleet,
+            ),
+            termination: Termination::Speculative {
+                wait_frac: ENCODE_WAIT_FRAC,
+            },
+            blocks_read: t_a * s_a + t_b * s_b,
+        })
+    }
+
+    fn decode_plan(&self, arrived: &[bool], shape: &JobShape, _workers: usize) -> DecodePlan {
+        // Unlike the local scheme's independent grids, the recovery
+        // passes are globally coupled (a column pass feeds the next row
+        // pass), so decode does not parallelize across workers — the
+        // paper's "huge communication overhead" (§II-B).
+        let (reads, recovered) = self
+            .code
+            .plan_decode(arrived)
+            .expect("earliest-decodable terminated on a decodable mask");
+        if reads == 0 {
+            return DecodePlan::none();
+        }
+        DecodePlan {
+            profiles: vec![product_decode_profile(
+                reads,
+                recovered,
+                shape.block_rows,
+                shape.block_cols,
+            )],
+            termination: Termination::Speculative {
+                wait_frac: DECODE_WAIT_FRAC,
+            },
+            blocks_read: reads,
+            undecodable: 0,
+        }
+    }
+
+    fn encode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        self.code.encode_sides(a_blocks, b_blocks)
+    }
+
+    fn decode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        mut grid: Vec<Option<Matrix>>,
+        _arrival_order: &[usize],
+    ) -> anyhow::Result<Vec<Matrix>> {
+        Ok(self.code.decode(&mut grid)?.systematic)
     }
 }
 

@@ -1,0 +1,633 @@
+//! The pluggable coding-scheme API: one trait, one registry, one driver.
+//!
+//! The paper's framework is scheme-agnostic — encode → compute → decode
+//! phases on serverless workers, with local product codes as one
+//! instantiation among uncoded, speculative, global-parity product and
+//! polynomial codes. This module makes that pluggability explicit:
+//!
+//! - [`ComputePolicy`] is the event-driven compute-phase contract shared
+//!   by the matmul and matvec workloads: task fan-out, [`Termination`]
+//!   rule, and a stateful earliest-decodable probe.
+//! - [`CodingScheme`] extends it with the matmul job surface — encode
+//!   plan, decode plan, and the numeric encode/product/decode hooks — so
+//!   the single generic driver ([`crate::coordinator::driver::run_job`])
+//!   and the timing-only scenario runner ([`crate::platform::scenario`])
+//!   both execute any scheme without per-scheme branches.
+//! - [`REGISTRY`] is the one name → constructor table behind
+//!   [`Scheme::parse`], the CLI's `--scheme help`, scenario JSON dispatch
+//!   and the figure harnesses.
+//!
+//! Adding a sixth scheme is one new file: implement [`CodingScheme`],
+//! add a [`SchemeInfo`] row, and every entry point picks it up (see
+//! DESIGN.md §Adding a scheme for the trait contract and the RNG
+//! draw-order compatibility rules).
+
+use crate::codes::Scheme;
+use crate::linalg::matrix::Matrix;
+use crate::platform::event::Termination;
+use crate::platform::straggler::WorkProfile;
+use crate::runtime::ComputeBackend;
+
+/// Encode phases relaunch stragglers at this quantile (every scheme uses
+/// the same value so sampled timelines stay comparable across schemes).
+pub const ENCODE_WAIT_FRAC: f64 = 0.95;
+
+/// Decode phases (where parallel) relaunch stragglers at this quantile.
+pub const DECODE_WAIT_FRAC: f64 = 0.8;
+
+/// Geometry of one matmul job at *virtual* (simulated) scale: the
+/// systematic output grid is `s_a × s_b` blocks of
+/// `block_rows × block_cols`, with inner dimension `inner`.
+#[derive(Debug, Clone, Copy)]
+pub struct JobShape {
+    pub s_a: usize,
+    pub s_b: usize,
+    pub block_rows: usize,
+    pub inner: usize,
+    pub block_cols: usize,
+}
+
+impl JobShape {
+    /// Shape from full virtual dims `(rows_a, inner, rows_b)`.
+    pub fn new(s_a: usize, s_b: usize, dims: (usize, usize, usize)) -> JobShape {
+        JobShape {
+            s_a,
+            s_b,
+            block_rows: dims.0 / s_a,
+            inner: dims.1,
+            block_cols: dims.2 / s_b,
+        }
+    }
+
+    /// Work profile of one compute-phase block product.
+    pub fn compute_profile(&self) -> WorkProfile {
+        WorkProfile::block_product(self.block_rows, self.inner, self.block_cols)
+    }
+}
+
+/// Timing plan of a scheme's encode phase.
+#[derive(Debug, Clone)]
+pub struct EncodePlan {
+    /// Per-worker profile (the fleet is uniform).
+    pub profile: WorkProfile,
+    /// Phase termination rule (conventionally speculative at
+    /// [`ENCODE_WAIT_FRAC`]).
+    pub termination: Termination,
+    /// Blocks read by the encode workers (report accounting).
+    pub blocks_read: usize,
+}
+
+/// Timing plan of a scheme's decode phase, derived from the compute
+/// phase's arrival mask.
+#[derive(Debug, Clone)]
+pub struct DecodePlan {
+    /// One profile per decode worker with work; empty ⇒ no decode phase.
+    pub profiles: Vec<WorkProfile>,
+    pub termination: Termination,
+    /// Blocks read during recovery (the Fig-5 cost driver).
+    pub blocks_read: usize,
+    /// Output cells no parity can recover — the recompute fallback's task
+    /// count (0 under earliest-decodable termination).
+    pub undecodable: usize,
+}
+
+impl DecodePlan {
+    /// No decode work at all (uncoded schemes, or nothing straggled).
+    pub fn none() -> DecodePlan {
+        DecodePlan {
+            profiles: Vec::new(),
+            termination: Termination::WaitAll,
+            blocks_read: 0,
+            undecodable: 0,
+        }
+    }
+}
+
+/// Stateful decodability predicate consulted by
+/// [`Termination::EarliestDecodable`]: receives the arrival mask plus
+/// `Some(index)` of the task that just completed (`None` on the up-front
+/// zero-requirement probe) and returns `true` when the phase may cut off.
+/// Probes must never draw from the job RNG (draw-order contract).
+pub type DecodeProbe = Box<dyn FnMut(&[bool], Option<usize>) -> bool + Send>;
+
+/// Event-driven compute-phase policy — the sub-trait shared by the matmul
+/// and matvec workloads.
+pub trait ComputePolicy: Send + Sync {
+    /// Compute-phase task fan-out (the coded grid size).
+    fn compute_tasks(&self) -> usize;
+
+    /// Compute-phase termination rule.
+    fn compute_termination(&self) -> Termination;
+
+    /// Fresh decodability probe for one compute phase. Only consulted
+    /// under [`Termination::EarliestDecodable`]; the default never fires.
+    fn decode_probe(&self) -> DecodeProbe {
+        Box::new(|_, _| false)
+    }
+}
+
+/// A pluggable straggler-mitigation scheme for the coded matmul workflow.
+///
+/// The trait splits into a *timing* surface (encode/decode plans,
+/// compute policy) consumed by both the coordinator and the timing-only
+/// scenario runner, and a *numeric* surface (encode/product/decode
+/// through a [`ComputeBackend`]) consumed by the coordinator alone. See
+/// DESIGN.md §Adding a scheme for the full contract.
+pub trait CodingScheme: ComputePolicy {
+    /// Registry name (also the `JobReport` scheme label).
+    fn name(&self) -> &'static str;
+
+    /// Redundant-computation fraction of the scheme.
+    fn redundancy(&self) -> f64 {
+        0.0
+    }
+
+    /// Encode-phase plan for a `fleet`-worker encode fleet; `None` ⇒ the
+    /// scheme has no encode phase (uncoded/speculative).
+    fn encode_plan(&self, shape: &JobShape, fleet: usize) -> Option<EncodePlan> {
+        let _ = (shape, fleet);
+        None
+    }
+
+    /// Decode-phase plan from the compute-phase arrival mask.
+    fn decode_plan(
+        &self,
+        arrived: &[bool],
+        shape: &JobShape,
+        decode_workers: usize,
+    ) -> DecodePlan;
+
+    /// Can the scheme produce real numerics at this size? (Polynomial
+    /// codes past their conditioning wall return `false`; the driver then
+    /// simulates timing only and reports `numerics_ok = false`.)
+    fn numerics_feasible(&self) -> bool {
+        true
+    }
+
+    /// Does the job stage its coded inputs and result blocks in the
+    /// object store? (The paper's serverless dataflow for the local
+    /// scheme; baselines skip it.)
+    fn stages_blocks_in_store(&self) -> bool {
+        false
+    }
+
+    /// Numerically encode both sides through the backend; returns the
+    /// inputs the compute cells draw from. Schemes that encode lazily per
+    /// task (polynomial) return the plain blocks.
+    fn encode_numeric(
+        &self,
+        backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Matrix>);
+
+    /// Numeric result of compute cell `cell`. Default: the cross product
+    /// of the encoded sides over a row-major `… × b_coded.len()` grid.
+    fn cell_product(
+        &self,
+        backend: &dyn ComputeBackend,
+        a_coded: &[Matrix],
+        b_coded: &[Matrix],
+        cell: usize,
+    ) -> Matrix {
+        let rb = b_coded.len();
+        backend.block_product(&a_coded[cell / rb], &b_coded[cell % rb])
+    }
+
+    /// Numeric decode: consume the computed grid (`None` = never
+    /// computed) and return the `s_a × s_b` systematic output blocks in
+    /// row-major order. `arrival_order` lists completed cells in
+    /// completion order (wait-k schemes decode from the first K).
+    fn decode_numeric(
+        &self,
+        backend: &dyn ComputeBackend,
+        grid: Vec<Option<Matrix>>,
+        arrival_order: &[usize],
+    ) -> anyhow::Result<Vec<Matrix>>;
+}
+
+// ---------------------------------------------------------------------------
+// Trivial schemes: uncoded and speculative execution
+// ---------------------------------------------------------------------------
+
+/// No redundancy; the compute phase waits for every worker.
+#[derive(Debug, Clone, Copy)]
+pub struct UncodedScheme {
+    pub s_a: usize,
+    pub s_b: usize,
+}
+
+/// Speculative execution: wait for `wait_frac` of the tasks, then
+/// relaunch the stragglers (first finisher wins) — the paper's §I
+/// baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeculativeScheme {
+    pub s_a: usize,
+    pub s_b: usize,
+    pub wait_frac: f64,
+}
+
+/// Shared numeric path of the uncoded family: every systematic block
+/// product eventually arrives, so decode is a plain unwrap.
+fn unwrap_full_grid(grid: Vec<Option<Matrix>>) -> anyhow::Result<Vec<Matrix>> {
+    grid.into_iter()
+        .enumerate()
+        .map(|(i, c)| c.ok_or_else(|| anyhow::anyhow!("uncoded cell {i} missing")))
+        .collect()
+}
+
+impl ComputePolicy for UncodedScheme {
+    fn compute_tasks(&self) -> usize {
+        self.s_a * self.s_b
+    }
+
+    fn compute_termination(&self) -> Termination {
+        Termination::WaitAll
+    }
+}
+
+impl CodingScheme for UncodedScheme {
+    fn name(&self) -> &'static str {
+        "uncoded"
+    }
+
+    fn decode_plan(&self, _arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
+        DecodePlan::none()
+    }
+
+    fn encode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        (a_blocks.to_vec(), b_blocks.to_vec())
+    }
+
+    fn decode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        grid: Vec<Option<Matrix>>,
+        _arrival_order: &[usize],
+    ) -> anyhow::Result<Vec<Matrix>> {
+        unwrap_full_grid(grid)
+    }
+}
+
+impl ComputePolicy for SpeculativeScheme {
+    fn compute_tasks(&self) -> usize {
+        self.s_a * self.s_b
+    }
+
+    fn compute_termination(&self) -> Termination {
+        Termination::Speculative {
+            wait_frac: self.wait_frac,
+        }
+    }
+}
+
+impl CodingScheme for SpeculativeScheme {
+    fn name(&self) -> &'static str {
+        "speculative"
+    }
+
+    fn decode_plan(&self, _arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
+        DecodePlan::none()
+    }
+
+    fn encode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        (a_blocks.to_vec(), b_blocks.to_vec())
+    }
+
+    fn decode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        grid: Vec<Option<Matrix>>,
+        _arrival_order: &[usize],
+    ) -> anyhow::Result<Vec<Matrix>> {
+        unwrap_full_grid(grid)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instantiation: parsed params → trait objects
+// ---------------------------------------------------------------------------
+
+/// Build the matmul-workload scheme object for an `s_a × s_b` systematic
+/// grid, validating the scheme's parameters against the partitioning.
+pub fn instantiate(
+    scheme: Scheme,
+    s_a: usize,
+    s_b: usize,
+) -> anyhow::Result<Box<dyn CodingScheme>> {
+    Ok(match scheme {
+        Scheme::Uncoded => Box::new(UncodedScheme { s_a, s_b }),
+        Scheme::Speculative { wait_frac } => Box::new(SpeculativeScheme { s_a, s_b, wait_frac }),
+        Scheme::LocalProduct { l_a, l_b } => Box::new(
+            crate::codes::local_product::LocalProductScheme::new(s_a, l_a, s_b, l_b)?,
+        ),
+        Scheme::Product { t_a, t_b } => Box::new(
+            crate::codes::product::ProductScheme::new(s_a, t_a, s_b, t_b),
+        ),
+        Scheme::Polynomial { redundancy } => Box::new(
+            crate::codes::polynomial::PolynomialScheme::new(s_a, s_b, redundancy)?,
+        ),
+    })
+}
+
+/// Build the matvec-workload compute policy (and the 2-D code it decodes
+/// with, when coded) for `s` systematic row-blocks.
+pub fn instantiate_matvec(
+    scheme: Scheme,
+    s: usize,
+) -> anyhow::Result<(
+    Option<crate::codes::matvec::CodedMatvec2D>,
+    Box<dyn ComputePolicy>,
+)> {
+    use crate::codes::matvec::{CodedMatvec2D, Matvec2DPolicy, PlainMatvecPolicy};
+    Ok(match scheme {
+        Scheme::LocalProduct { l_a, l_b } => {
+            // The 2-D matvec construction is square; a rectangular group
+            // spec would silently run a different code than requested.
+            anyhow::ensure!(
+                l_a == l_b,
+                "matvec local-product needs square group sizes, got {l_a}x{l_b}"
+            );
+            let code = CodedMatvec2D::new(s, l_a)?;
+            (Some(code), Box::new(Matvec2DPolicy { code }))
+        }
+        Scheme::Uncoded => (
+            None,
+            Box::new(PlainMatvecPolicy {
+                tasks: s,
+                termination: Termination::WaitAll,
+            }),
+        ),
+        Scheme::Speculative { wait_frac } => (
+            None,
+            Box::new(PlainMatvecPolicy {
+                tasks: s,
+                termination: Termination::Speculative { wait_frac },
+            }),
+        ),
+        other => anyhow::bail!("matvec engine does not support {:?}", other),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// One registered scheme: the name → constructor row behind CLI parsing,
+/// scenario JSON dispatch, `--scheme help`, and the conformance suite.
+pub struct SchemeInfo {
+    /// Registry name (`--scheme <name>[:params]`, scenario `"scheme"`).
+    pub name: &'static str,
+    /// Parameter syntax after the colon, `""` when the scheme takes none.
+    pub params: &'static str,
+    /// Defaults applied when the params are omitted.
+    pub default_params: &'static str,
+    /// Params valid on the conformance suite's small 4×4 systematic grid.
+    pub smoke_params: &'static str,
+    /// One-line description (CLI help and the README scheme table).
+    pub summary: &'static str,
+    parse: fn(Option<&str>) -> anyhow::Result<Scheme>,
+}
+
+impl SchemeInfo {
+    /// Construct the parsed-params [`Scheme`] from an optional arg
+    /// string; an omitted arg is substituted with `default_params` (the
+    /// registry row is the single source of defaults).
+    pub fn parse_args(&self, arg: Option<&str>) -> anyhow::Result<Scheme> {
+        let arg = arg.or(if self.default_params.is_empty() {
+            None
+        } else {
+            Some(self.default_params)
+        });
+        (self.parse)(arg)
+    }
+
+    /// The scheme string the conformance suite runs (`name[:smoke]`).
+    pub fn smoke_spec(&self) -> String {
+        if self.smoke_params.is_empty() {
+            self.name.to_string()
+        } else {
+            format!("{}:{}", self.name, self.smoke_params)
+        }
+    }
+}
+
+fn no_params(scheme: Scheme, name: &str, arg: Option<&str>) -> anyhow::Result<Scheme> {
+    anyhow::ensure!(
+        arg.is_none(),
+        "scheme '{name}' takes no parameters, got ':{}'",
+        arg.unwrap_or_default()
+    );
+    Ok(scheme)
+}
+
+/// Param-taking schemes always receive an arg: [`SchemeInfo::parse_args`]
+/// substitutes `default_params` when the caller omits it.
+fn required(arg: Option<&str>) -> anyhow::Result<&str> {
+    arg.ok_or_else(|| anyhow::anyhow!("scheme parameters missing and no registry default"))
+}
+
+fn parse_pair(s: &str) -> anyhow::Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("expected AxB, got '{s}'"))?;
+    Ok((a.parse()?, b.parse()?))
+}
+
+/// All registered schemes, in paper order (Fig 5's contenders).
+pub static REGISTRY: &[SchemeInfo] = &[
+    SchemeInfo {
+        name: "uncoded",
+        params: "",
+        default_params: "",
+        smoke_params: "",
+        summary: "no redundancy; wait for every worker",
+        parse: |arg| no_params(Scheme::Uncoded, "uncoded", arg),
+    },
+    SchemeInfo {
+        name: "speculative",
+        params: "q",
+        default_params: "0.79",
+        smoke_params: "0.75",
+        summary: "wait for a q-fraction, then relaunch the stragglers",
+        parse: |arg| {
+            Ok(Scheme::Speculative {
+                wait_frac: required(arg)?.parse()?,
+            })
+        },
+    },
+    SchemeInfo {
+        name: "local-product",
+        params: "L_AxL_B",
+        default_params: "10x10",
+        smoke_params: "2x2",
+        summary: "the paper's local product code; per-grid peeling decode",
+        parse: |arg| {
+            let (l_a, l_b) = parse_pair(required(arg)?)?;
+            Ok(Scheme::LocalProduct { l_a, l_b })
+        },
+    },
+    SchemeInfo {
+        name: "product",
+        params: "T_AxT_B",
+        default_params: "1x1",
+        smoke_params: "1x1",
+        summary: "global-parity product code [16]; whole-line MDS recovery",
+        parse: |arg| {
+            let (t_a, t_b) = parse_pair(required(arg)?)?;
+            Ok(Scheme::Product { t_a, t_b })
+        },
+    },
+    SchemeInfo {
+        name: "polynomial",
+        params: "r",
+        default_params: "0.21",
+        smoke_params: "0.25",
+        summary: "polynomial (MDS) code [18]; wait-K, all-K-block decode",
+        parse: |arg| {
+            Ok(Scheme::Polynomial {
+                redundancy: required(arg)?.parse()?,
+            })
+        },
+    },
+];
+
+/// Look a scheme up by registry name.
+pub fn lookup(name: &str) -> Option<&'static SchemeInfo> {
+    REGISTRY.iter().find(|info| info.name == name)
+}
+
+/// Parse a `name[:params]` scheme string through the registry — the one
+/// code path behind [`Scheme::parse`], the CLI and scenario JSON.
+pub fn parse(s: &str) -> anyhow::Result<Scheme> {
+    let (head, arg) = match s.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (s, None),
+    };
+    let info = lookup(head).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scheme '{head}' (known: {})",
+            REGISTRY
+                .iter()
+                .map(|i| i.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })?;
+    info.parse_args(arg)
+}
+
+/// Multi-line scheme listing for `slec run --scheme help`.
+pub fn help_text() -> String {
+    let mut out = String::from("registered schemes (--scheme <name>[:params]):\n");
+    for info in REGISTRY {
+        let spec = if info.params.is_empty() {
+            info.name.to_string()
+        } else {
+            format!("{}[:{}]", info.name, info.params)
+        };
+        out.push_str(&format!("  {spec:<28} {}", info.summary));
+        if !info.default_params.is_empty() {
+            out.push_str(&format!(" (default {})", info.default_params));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for info in REGISTRY {
+            assert!(seen.insert(info.name), "duplicate scheme '{}'", info.name);
+            let scheme = parse(&info.smoke_spec()).unwrap();
+            assert_eq!(scheme.name(), info.name);
+            assert!(help_text().contains(info.name));
+        }
+        assert!(lookup("bogus").is_none());
+    }
+
+    #[test]
+    fn omitted_params_use_the_registry_defaults() {
+        // The registry row is the single source of defaults: the bare
+        // name must parse exactly as `name:default_params` does.
+        for info in REGISTRY {
+            if info.default_params.is_empty() {
+                continue;
+            }
+            let bare = parse(info.name).unwrap();
+            let explicit = parse(&format!("{}:{}", info.name, info.default_params)).unwrap();
+            assert_eq!(bare, explicit, "{}", info.name);
+        }
+        assert_eq!(
+            parse("local-product").unwrap(),
+            Scheme::LocalProduct { l_a: 10, l_b: 10 }
+        );
+    }
+
+    #[test]
+    fn matvec_rejects_rectangular_groups() {
+        let err = instantiate_matvec(Scheme::LocalProduct { l_a: 2, l_b: 4 }, 8)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("square group sizes"), "{err}");
+    }
+
+    #[test]
+    fn uncoded_rejects_parameters() {
+        assert!(parse("uncoded").is_ok());
+        let err = parse("uncoded:3").unwrap_err().to_string();
+        assert!(err.contains("takes no parameters"), "{err}");
+    }
+
+    #[test]
+    fn instantiate_validates_parameters() {
+        assert!(instantiate(Scheme::LocalProduct { l_a: 3, l_b: 3 }, 4, 4).is_err());
+        assert!(instantiate(Scheme::LocalProduct { l_a: 0, l_b: 2 }, 4, 4).is_err());
+        assert!(instantiate(Scheme::Polynomial { redundancy: -0.5 }, 4, 4).is_err());
+        let lp = instantiate(Scheme::LocalProduct { l_a: 2, l_b: 2 }, 4, 4).unwrap();
+        assert_eq!(lp.name(), "local-product");
+        assert_eq!(lp.compute_tasks(), 36);
+        assert!((lp.redundancy() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trivial_schemes_have_no_encode_or_decode_phase() {
+        let shape = JobShape::new(4, 4, (4000, 2000, 4000));
+        for scheme in [Scheme::Uncoded, Scheme::Speculative { wait_frac: 0.5 }] {
+            let s = instantiate(scheme, 4, 4).unwrap();
+            assert!(s.encode_plan(&shape, 2).is_none());
+            let plan = s.decode_plan(&vec![true; 16], &shape, 4);
+            assert!(plan.profiles.is_empty());
+            assert_eq!(plan.undecodable, 0);
+            assert_eq!(s.compute_tasks(), 16);
+            assert!(s.numerics_feasible());
+        }
+    }
+
+    #[test]
+    fn matvec_instantiation_mirrors_engine_support() {
+        assert!(instantiate_matvec(Scheme::Polynomial { redundancy: 0.2 }, 8).is_err());
+        let (code, policy) =
+            instantiate_matvec(Scheme::LocalProduct { l_a: 2, l_b: 2 }, 8).unwrap();
+        assert!(code.is_some());
+        assert_eq!(policy.compute_tasks(), 18); // 2 grids × (2+1)²
+        let (code, policy) = instantiate_matvec(Scheme::Uncoded, 8).unwrap();
+        assert!(code.is_none());
+        assert_eq!(policy.compute_tasks(), 8);
+    }
+}

@@ -146,13 +146,11 @@ impl Config {
             ),
             _ => (std::sync::Arc::new(crate::runtime::HostBackend), None),
         };
-        let env = Env {
-            backend,
-            store: std::sync::Arc::new(crate::storage::InMemoryStore::new()),
-            model: self.model(),
-            threads,
-            pool: None,
-        };
+        let env = Env::builder()
+            .backend(backend)
+            .model(self.model())
+            .threads(threads)
+            .build();
         Ok((env, rt))
     }
 

@@ -1,0 +1,207 @@
+//! The generic job driver: one phase pipeline for every
+//! [`CodingScheme`].
+//!
+//! Where `coordinator/matmul.rs` used to carry a near-duplicate `run_*`
+//! function per scheme, [`run_job`] executes any `&dyn CodingScheme` on
+//! one [`EventSim`]: encode (if the scheme has one) → compute under the
+//! scheme's [`Termination`] policy and decodability probe → decode from
+//! the arrival mask → recompute fallback for undecodable cells. Virtual
+//! time and real numerics advance together, exactly as before the
+//! refactor: the straggler model decides *which* blocks arrive before
+//! the cutoff, and the scheme's numeric hooks must then really
+//! reconstruct the output through the compute backend.
+//!
+//! # RNG draw-order contract
+//!
+//! The sampled timeline of a job is a pure function of its seed, so the
+//! driver draws in a fixed phase order — encode launch, compute launch,
+//! decode launch, recompute launch, each followed by any speculative
+//! relaunch draws — and numeric hooks and decodability probes never
+//! touch the job RNG. This is what keeps golden scenario timelines
+//! bit-identical across refactors (DESIGN.md §Adding a scheme).
+
+use crate::codes::scheme::{CodingScheme, ComputePolicy, JobShape};
+use crate::coordinator::matmul::{Env, MatmulJob};
+use crate::coordinator::metrics::JobReport;
+use crate::linalg::blocked::{assemble_grid, GridShape, Partition};
+use crate::linalg::matrix::Matrix;
+use crate::platform::event::{run_phase, EventSim, PhaseState, Termination};
+use crate::platform::straggler::{StragglerModel, WorkProfile};
+use crate::storage::keys;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::parallel_map;
+
+/// Launch one phase (sampling a duration per profile, in task order, at
+/// submission) and drive the sim until its termination rule fires.
+/// `probe` is only consulted under [`Termination::EarliestDecodable`].
+pub fn drive_phase(
+    sim: &mut EventSim,
+    model: &StragglerModel,
+    works: &[WorkProfile],
+    term: Termination,
+    probe: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
+    rng: &mut Pcg64,
+) -> PhaseState {
+    let mut ps = PhaseState::launch(sim, model, works, 0, term, rng);
+    run_phase(sim, &mut ps, model, rng, probe);
+    ps
+}
+
+/// [`drive_phase`] with the termination rule and decodability probe
+/// supplied by a [`ComputePolicy`] — the shared compute-phase entry of
+/// the matmul and matvec coordinators.
+pub fn drive_policy_phase(
+    sim: &mut EventSim,
+    model: &StragglerModel,
+    works: &[WorkProfile],
+    policy: &dyn ComputePolicy,
+    rng: &mut Pcg64,
+) -> PhaseState {
+    let mut probe = policy.decode_probe();
+    drive_phase(sim, model, works, policy.compute_termination(), &mut *probe, rng)
+}
+
+/// Run one coded matmul job (`C = A·Bᵀ`) under `scheme`. Returns the
+/// output matrix and the phase report; `run_matmul` wraps this with
+/// scheme instantiation and output verification.
+pub fn run_job(
+    env: &Env,
+    a: &Matrix,
+    b: &Matrix,
+    job: &MatmulJob,
+    scheme: &dyn CodingScheme,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(Matrix, JobReport)> {
+    let mut report = JobReport::new(scheme.name());
+    report.redundancy = scheme.redundancy();
+    report.numerics_ok = scheme.numerics_feasible();
+
+    let (vm, vk, vl) = job.vdims(a, b);
+    let shape = JobShape::new(job.s_a, job.s_b, (vm, vk, vl));
+    let pa = Partition::new(a.rows, a.cols, job.s_a);
+    let pb = Partition::new(b.rows, b.cols, job.s_b);
+    let a_blocks = pa.split(a);
+    let b_blocks = pb.split(b);
+
+    let n_tasks = scheme.compute_tasks();
+    // One event simulator per job: the clock carries across phases.
+    let mut sim = env.sim();
+
+    // --- Encode phase (schemes with parities only).
+    let fleet = job.encode_fleet(n_tasks);
+    if let Some(plan) = scheme.encode_plan(&shape, fleet) {
+        let works = vec![plan.profile; fleet];
+        let enc =
+            drive_phase(&mut sim, &env.model, &works, plan.termination, &mut |_, _| false, rng);
+        report.enc.tasks = fleet;
+        report.enc.stragglers = enc.stragglers();
+        report.enc.relaunched = enc.relaunched;
+        report.enc.virtual_secs = enc.duration();
+        report.enc.blocks_read = plan.blocks_read;
+    }
+
+    // Numerics: encode through the backend; the local scheme stashes the
+    // coded blocks in the store (the serverless dataflow — workers
+    // exchange blocks via storage).
+    let backend = env.backend.as_ref();
+    let (a_coded, b_coded) = scheme.encode_numeric(backend, &a_blocks, &b_blocks);
+    if scheme.stages_blocks_in_store() {
+        let store = env.store.as_ref();
+        for (i, blk) in a_coded.iter().enumerate() {
+            crate::storage::put_matrix(store, &keys::coded_block(&job.job_id, "a", i), blk);
+        }
+        for (j, blk) in b_coded.iter().enumerate() {
+            crate::storage::put_matrix(store, &keys::coded_block(&job.job_id, "b", j), blk);
+        }
+    }
+
+    // --- Compute phase under the scheme's termination policy; an
+    // earliest-decodable cutoff cancels stragglers (freeing their workers
+    // on bounded pools).
+    let comp_profile = shape.compute_profile();
+    let comp_works = vec![comp_profile; n_tasks];
+    let mut probe = scheme.decode_probe();
+    let comp = drive_phase(
+        &mut sim,
+        &env.model,
+        &comp_works,
+        scheme.compute_termination(),
+        &mut *probe,
+        rng,
+    );
+    report.comp.tasks = n_tasks;
+    report.comp.stragglers = comp.stragglers();
+    report.comp.relaunched = comp.relaunched;
+    report.comp.virtual_secs = comp.duration();
+    let arrived = comp.arrived_mask();
+    let arrival_order = comp.arrival_order().to_vec();
+
+    // Numerics: compute the arrived products only. The rest are the
+    // stragglers decode must reconstruct.
+    let mut grid: Vec<Option<Matrix>> = if report.numerics_ok {
+        let arrived_ref = &arrived;
+        let a_ref = &a_coded;
+        let b_ref = &b_coded;
+        parallel_map(env.threads, n_tasks, move |cell| {
+            if arrived_ref[cell] {
+                Some(scheme.cell_product(env.backend.as_ref(), a_ref, b_ref, cell))
+            } else {
+                None
+            }
+        })
+    } else {
+        vec![None; n_tasks]
+    };
+
+    // --- Decode phase from the arrival mask.
+    let plan = scheme.decode_plan(&arrived, &shape, job.decode_workers);
+    report.dec.tasks = plan.profiles.len();
+    report.dec.blocks_read = plan.blocks_read;
+    report.decode_ok = plan.undecodable == 0;
+    if !plan.profiles.is_empty() {
+        let term = plan.termination;
+        let dec = drive_phase(&mut sim, &env.model, &plan.profiles, term, &mut |_, _| false, rng);
+        report.dec.relaunched += dec.relaunched;
+        report.dec.virtual_secs += dec.duration();
+    }
+
+    // Recompute fallback: unreachable under earliest-decodable
+    // termination (the cutoff only fires on decodable masks), kept as the
+    // defensive path for cutoff policies that cannot guarantee
+    // decodability (deadlines, Thm-2-tail experiments).
+    if plan.undecodable > 0 {
+        let rec_works = vec![comp_profile; plan.undecodable];
+        let wait_all = Termination::WaitAll;
+        let rec = drive_phase(&mut sim, &env.model, &rec_works, wait_all, &mut |_, _| false, rng);
+        report.dec.virtual_secs += rec.duration();
+        report.dec.relaunched += plan.undecodable;
+        if report.numerics_ok {
+            for (cell, slot) in grid.iter_mut().enumerate() {
+                if slot.is_none() {
+                    *slot = Some(scheme.cell_product(backend, &a_coded, &b_coded, cell));
+                }
+            }
+        }
+    }
+
+    // --- Numeric decode and output assembly.
+    if !report.numerics_ok {
+        return Ok((Matrix::zeros(a.rows, b.rows), report));
+    }
+    let sys = scheme.decode_numeric(backend, grid, &arrival_order)?;
+    if scheme.stages_blocks_in_store() {
+        let store = env.store.as_ref();
+        for (idx, blk) in sys.iter().enumerate() {
+            let (i, j) = (idx / job.s_b, idx % job.s_b);
+            crate::storage::put_matrix(store, &keys::result_block(&job.job_id, i, j), blk);
+        }
+    }
+    let c = assemble_grid(
+        GridShape {
+            rows: job.s_a,
+            cols: job.s_b,
+        },
+        &sys,
+    );
+    Ok((c, report))
+}

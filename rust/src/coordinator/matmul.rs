@@ -1,43 +1,48 @@
 //! The coded matrix-multiplication workflow — the paper's Fig-2 pipeline
 //! (`f_enc → f_comp → f_dec`, all phases on simulated serverless workers)
-//! for every scheme: local product codes (the contribution), speculative
-//! execution, uncoded, global-parity product codes, polynomial codes.
+//! for every registered scheme: local product codes (the contribution),
+//! speculative execution, uncoded, global-parity product codes,
+//! polynomial codes.
 //!
-//! Virtual time and real numerics advance together: the straggler model
-//! decides *which* output blocks arrive before the earliest-decodable
-//! cutoff, and the decode phase must then *really* reconstruct the missing
-//! blocks from parities (through the compute backend, i.e. the PJRT
-//! artifacts) — so every simulated run is also an end-to-end numerical
-//! test against `A·Bᵀ`.
+//! Since the `CodingScheme` refactor this module carries no per-scheme
+//! logic at all: [`run_matmul`] instantiates the job's scheme through the
+//! registry ([`crate::codes::scheme`]) and hands it to the one generic
+//! phase driver ([`crate::coordinator::driver::run_job`]). Virtual time
+//! and real numerics advance together exactly as before — the straggler
+//! model decides *which* output blocks arrive before the cutoff, and the
+//! scheme's decode hook must really reconstruct the missing blocks from
+//! parities through the compute backend — so every simulated run is also
+//! an end-to-end numerical test against `A·Bᵀ`.
 //!
-//! Since the event-core refactor each job runs on one [`EventSim`]: the
-//! virtual clock carries across the encode → compute → decode phases, the
-//! earliest-decodable cutoff and speculative relaunches are event-driven
-//! policies, and [`Env::pool`] can bound the worker fleet, in which case
-//! later phases queue behind still-running tasks (worker reuse). The
-//! default unbounded pool reproduces the historical barrier-synchronous
-//! timings exactly.
+//! Each job runs on one [`EventSim`]: the virtual clock carries across
+//! the encode → compute → decode phases, cutoffs and speculative
+//! relaunches are event-driven policies, and [`Env::pool`] can bound the
+//! worker fleet, in which case later phases queue behind still-running
+//! tasks (worker reuse). The default unbounded pool reproduces the
+//! historical barrier-synchronous timings exactly.
 
 use std::sync::Arc;
 
-use crate::codes::local_product::{grid_decodable, LocalProductCode};
-use crate::codes::peeling::plan_peel;
-use crate::codes::polynomial::PolynomialCode;
-use crate::codes::product::ProductCode;
 use crate::codes::Scheme;
 use crate::coordinator::metrics::JobReport;
-use crate::linalg::blocked::{assemble_grid, GridShape, Partition};
 use crate::linalg::matrix::Matrix;
-use crate::platform::event::{run_phase, EventSim, PhaseState, Pool, Termination};
-use crate::platform::{StragglerModel, WorkProfile};
+use crate::platform::event::{EventSim, Pool};
+use crate::platform::StragglerModel;
 use crate::runtime::ComputeBackend;
-use crate::storage::{keys, InMemoryStore};
+use crate::storage::InMemoryStore;
 use crate::util::rng::Pcg64;
-use crate::util::threadpool::{num_threads, parallel_map};
+use crate::util::threadpool::num_threads;
 
 /// Re-exported for backwards compatibility; see
 /// [`crate::codes::polynomial::NUMERIC_CAP`].
 pub use crate::codes::polynomial::NUMERIC_CAP as POLY_NUMERIC_CAP;
+
+// The per-scheme decode accounting used to live here; it now sits next
+// to each scheme's `CodingScheme` impl. Re-exported so older call sites
+// keep compiling.
+pub use crate::codes::local_product::decode_worker_profiles;
+pub use crate::codes::polynomial::polynomial_decode_profile;
+pub use crate::codes::product::product_decode_profile;
 
 /// Shared execution environment.
 pub struct Env {
@@ -53,27 +58,78 @@ pub struct Env {
     pub pool: Option<usize>,
 }
 
+/// Builder for [`Env`] — the one source of environment defaults
+/// (host backend, fresh store, paper-calibrated straggler model, all
+/// cores, unbounded pool).
+#[derive(Default)]
+pub struct EnvBuilder {
+    backend: Option<Arc<dyn ComputeBackend>>,
+    store: Option<Arc<InMemoryStore>>,
+    model: Option<StragglerModel>,
+    threads: Option<usize>,
+    pool: Option<usize>,
+}
+
+impl EnvBuilder {
+    /// Compute backend (default: the pure-Rust [`crate::runtime::HostBackend`]).
+    pub fn backend(mut self, backend: Arc<dyn ComputeBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Object store (default: a fresh [`InMemoryStore`]).
+    pub fn store(mut self, store: Arc<InMemoryStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Straggler model (default: the paper's AWS-Lambda calibration).
+    pub fn model(mut self, model: StragglerModel) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    /// Host threads for the real numerics (default: all cores).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Bound the simulated worker fleet (default: unbounded).
+    pub fn pool(mut self, workers: usize) -> Self {
+        self.pool = Some(workers);
+        self
+    }
+
+    pub fn build(self) -> Env {
+        Env {
+            backend: self
+                .backend
+                .unwrap_or_else(|| Arc::new(crate::runtime::HostBackend)),
+            store: self.store.unwrap_or_else(|| Arc::new(InMemoryStore::new())),
+            model: self
+                .model
+                .unwrap_or_else(|| StragglerModel::new(Default::default(), Default::default())),
+            threads: self.threads.unwrap_or_else(num_threads),
+            pool: self.pool,
+        }
+    }
+}
+
 impl Env {
+    /// Start building an environment from the defaults.
+    pub fn builder() -> EnvBuilder {
+        EnvBuilder::default()
+    }
+
     /// Host-backend environment with default platform calibration.
     pub fn host() -> Env {
-        Env {
-            backend: Arc::new(crate::runtime::HostBackend),
-            store: Arc::new(InMemoryStore::new()),
-            model: StragglerModel::new(Default::default(), Default::default()),
-            threads: num_threads(),
-            pool: None,
-        }
+        Env::builder().build()
     }
 
     /// Environment with an explicit backend (e.g. PJRT).
     pub fn with_backend(backend: Arc<dyn ComputeBackend>) -> Env {
-        Env {
-            backend,
-            store: Arc::new(InMemoryStore::new()),
-            model: StragglerModel::new(Default::default(), Default::default()),
-            threads: num_threads(),
-            pool: None,
-        }
+        Env::builder().backend(backend).build()
     }
 
     /// Fresh event simulator over this environment's worker pool.
@@ -124,14 +180,80 @@ impl Default for MatmulJob {
     }
 }
 
+/// Builder for [`MatmulJob`] so call sites stop constructing
+/// field-structs by hand. Starts from [`MatmulJob::default`].
+#[derive(Debug, Clone, Default)]
+pub struct MatmulJobBuilder {
+    job: MatmulJob,
+}
+
+impl MatmulJobBuilder {
+    /// Systematic row-blocks per side.
+    pub fn blocks(mut self, s_a: usize, s_b: usize) -> Self {
+        self.job.s_a = s_a;
+        self.job.s_b = s_b;
+        self
+    }
+
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.job.scheme = scheme;
+        self
+    }
+
+    pub fn decode_workers(mut self, n: usize) -> Self {
+        self.job.decode_workers = n;
+        self
+    }
+
+    pub fn encode_workers(mut self, n: usize) -> Self {
+        self.job.encode_workers = n;
+        self
+    }
+
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.job.verify = verify;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.job.seed = seed;
+        self
+    }
+
+    pub fn job_id(mut self, id: impl Into<String>) -> Self {
+        self.job.job_id = id.into();
+        self
+    }
+
+    /// Paper-scale dims `(rows_a, k, rows_b)` for virtual time.
+    pub fn virtual_dims(mut self, dims: (usize, usize, usize)) -> Self {
+        self.job.virtual_dims = Some(dims);
+        self
+    }
+
+    /// Cube virtual dims (`d × d × d`), the common figure-harness case.
+    pub fn virtual_cube(mut self, d: usize) -> Self {
+        self.job.virtual_dims = Some((d, d, d));
+        self
+    }
+
+    pub fn build(self) -> MatmulJob {
+        self.job
+    }
+}
+
 impl MatmulJob {
+    pub fn builder() -> MatmulJobBuilder {
+        MatmulJobBuilder::default()
+    }
+
     /// Virtual-time dims for profile building.
-    fn vdims(&self, a: &Matrix, b: &Matrix) -> (usize, usize, usize) {
+    pub(crate) fn vdims(&self, a: &Matrix, b: &Matrix) -> (usize, usize, usize) {
         self.virtual_dims.unwrap_or((a.rows, a.cols, b.rows))
     }
 
     /// Encode fleet size (Remark 1): explicit or ~10% of compute tasks.
-    fn encode_fleet(&self, compute_tasks: usize) -> usize {
+    pub(crate) fn encode_fleet(&self, compute_tasks: usize) -> usize {
         if self.encode_workers > 0 {
             self.encode_workers
         } else {
@@ -140,680 +262,29 @@ impl MatmulJob {
     }
 }
 
-/// Run the job; returns the output matrix and the phase report.
-pub fn run_matmul(env: &Env, a: &Matrix, b: &Matrix, job: &MatmulJob) -> anyhow::Result<(Matrix, JobReport)> {
+/// Run the job; returns the output matrix and the phase report. All five
+/// schemes (and any future registry entry) execute through the one
+/// generic driver — there is no per-scheme dispatch here.
+pub fn run_matmul(
+    env: &Env,
+    a: &Matrix,
+    b: &Matrix,
+    job: &MatmulJob,
+) -> anyhow::Result<(Matrix, JobReport)> {
     anyhow::ensure!(a.cols == b.cols, "A (m×n) · Bᵀ needs matching n");
     anyhow::ensure!(a.rows % job.s_a == 0, "A rows must divide s_a");
     anyhow::ensure!(b.rows % job.s_b == 0, "B rows must divide s_b");
+    let scheme = job.scheme.instantiate(job.s_a, job.s_b)?;
     let mut rng = Pcg64::new(job.seed);
 
-    let (c, mut report) = match job.scheme {
-        Scheme::Uncoded => run_uncoded(env, a, b, job, &mut rng, None)?,
-        Scheme::Speculative { wait_frac } => {
-            run_uncoded(env, a, b, job, &mut rng, Some(wait_frac))?
-        }
-        Scheme::LocalProduct { l_a, l_b } => run_local_product(env, a, b, job, l_a, l_b, &mut rng)?,
-        Scheme::Product { t_a, t_b } => run_product(env, a, b, job, t_a, t_b, &mut rng)?,
-        Scheme::Polynomial { redundancy } => run_polynomial(env, a, b, job, redundancy, &mut rng)?,
-    };
+    let (c, mut report) =
+        crate::coordinator::driver::run_job(env, a, b, job, scheme.as_ref(), &mut rng)?;
 
     if job.verify && report.numerics_ok {
         let direct = env.backend.block_product(a, b);
         report.rel_err = c.rel_err(&direct);
     }
     Ok((c, report))
-}
-
-// ---------------------------------------------------------------------------
-// Uncoded / speculative
-// ---------------------------------------------------------------------------
-
-fn run_uncoded(
-    env: &Env,
-    a: &Matrix,
-    b: &Matrix,
-    job: &MatmulJob,
-    rng: &mut Pcg64,
-    wait_frac: Option<f64>,
-) -> anyhow::Result<(Matrix, JobReport)> {
-    let mut report = JobReport::new(if wait_frac.is_some() {
-        "speculative"
-    } else {
-        "uncoded"
-    });
-    let pa = Partition::new(a.rows, a.cols, job.s_a);
-    let pb = Partition::new(b.rows, b.cols, job.s_b);
-    let a_blocks = pa.split(a);
-    let b_blocks = pb.split(b);
-
-    // Virtual compute phase over s_a × s_b tasks (profiles at virtual
-    // dims), run through the event queue.
-    let (vm, vk, vl) = job.vdims(a, b);
-    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
-    let n_tasks = job.s_a * job.s_b;
-    let mut sim = env.sim();
-    let term = match wait_frac {
-        None => Termination::WaitAll,
-        Some(f) => Termination::Speculative { wait_frac: f },
-    };
-    let mut comp = PhaseState::launch_uniform(&mut sim, &env.model, &profile, n_tasks, 0, term, rng);
-    run_phase(&mut sim, &mut comp, &env.model, rng, &mut |_, _| false);
-    report.comp.tasks = n_tasks;
-    report.comp.stragglers = comp.stragglers();
-    report.comp.relaunched = comp.relaunched;
-    report.comp.virtual_secs = comp.duration();
-
-    // Numerics: every block is eventually computed.
-    let blocks = compute_products(env, &a_blocks, &b_blocks, |_i, _j| true);
-    let shape = GridShape { rows: job.s_a, cols: job.s_b };
-    let c = assemble_grid(shape, &blocks.into_iter().map(Option::unwrap).collect::<Vec<_>>());
-    Ok((c, report))
-}
-
-// ---------------------------------------------------------------------------
-// Local product code (the paper's scheme)
-// ---------------------------------------------------------------------------
-
-fn run_local_product(
-    env: &Env,
-    a: &Matrix,
-    b: &Matrix,
-    job: &MatmulJob,
-    l_a: usize,
-    l_b: usize,
-    rng: &mut Pcg64,
-) -> anyhow::Result<(Matrix, JobReport)> {
-    anyhow::ensure!(l_a > 0 && l_b > 0, "group sizes l_a/l_b must be positive");
-    anyhow::ensure!(job.s_a % l_a == 0, "s_a ({}) % l_a ({l_a}) != 0", job.s_a);
-    anyhow::ensure!(job.s_b % l_b == 0, "s_b ({}) % l_b ({l_b}) != 0", job.s_b);
-    let mut report = JobReport::new("local-product");
-    let code = LocalProductCode::new(job.s_a, l_a, job.s_b, l_b);
-    report.redundancy = code.redundancy();
-
-    let pa = Partition::new(a.rows, a.cols, job.s_a);
-    let pb = Partition::new(b.rows, b.cols, job.s_b);
-    let a_blocks = pa.split(a);
-    let b_blocks = pb.split(b);
-
-    // One event simulator per job: the clock carries across phases.
-    let mut sim = env.sim();
-
-    // --- Encode phase: column-sliced across a small fleet (Remark 1),
-    // straggler-protected by speculative relaunch.
-    let (vm, vk, vl) = job.vdims(a, b);
-    let (ra, rb) = code.coded_grid();
-    let fleet = job.encode_fleet(ra * rb);
-    let enc_profile = WorkProfile::sliced_encode(
-        code.a.groups() + code.b.groups(),
-        l_a.max(l_b),
-        vm / job.s_a,
-        vk,
-        fleet,
-    );
-    let mut enc = PhaseState::launch_uniform(
-        &mut sim,
-        &env.model,
-        &enc_profile,
-        fleet,
-        0,
-        Termination::Speculative { wait_frac: 0.95 },
-        rng,
-    );
-    run_phase(&mut sim, &mut enc, &env.model, rng, &mut |_, _| false);
-    report.enc.tasks = fleet;
-    report.enc.stragglers = enc.stragglers();
-    report.enc.relaunched = enc.relaunched;
-    report.enc.virtual_secs = enc.duration();
-    report.enc.blocks_read = l_a * code.a.groups() + l_b * code.b.groups();
-
-    // Numerics: encode both sides through the backend, stash in the store
-    // (the serverless dataflow — workers exchange blocks via storage).
-    let backend = &env.backend;
-    let a_coded = encode_side_numeric(backend.as_ref(), code.a, &a_blocks);
-    let b_coded = encode_side_numeric(backend.as_ref(), code.b, &b_blocks);
-    for (i, blk) in a_coded.iter().enumerate() {
-        crate::storage::put_matrix(env.store.as_ref(), &keys::coded_block(&job.job_id, "a", i), blk);
-    }
-    for (j, blk) in b_coded.iter().enumerate() {
-        crate::storage::put_matrix(env.store.as_ref(), &keys::coded_block(&job.job_id, "b", j), blk);
-    }
-
-    // --- Compute phase: (ra × rb) coded block products; the event-driven
-    // earliest-decodable policy cuts off at the first virtual time every
-    // local grid is peeling-decodable, cancelling stragglers (which frees
-    // their workers on bounded pools).
-    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
-    let mut comp = PhaseState::launch_uniform(
-        &mut sim,
-        &env.model,
-        &profile,
-        ra * rb,
-        0,
-        Termination::EarliestDecodable,
-        rng,
-    );
-    report.comp.tasks = ra * rb;
-
-    let (ga, gb) = code.groups();
-    let mut pending: std::collections::BTreeSet<usize> = (0..ga * gb).collect();
-    run_phase(
-        &mut sim,
-        &mut comp,
-        &env.model,
-        rng,
-        &mut |mask: &[bool], newly: Option<usize>| {
-            // A grid's decodability only changes when one of its own
-            // cells arrives: retest just that grid per completion.
-            match newly {
-                Some(cell) => {
-                    let g = code.grid_of_cell(cell);
-                    if pending.contains(&g) && grid_decodable(&code, g, mask) {
-                        pending.remove(&g);
-                    }
-                }
-                None => pending.retain(|&g| !grid_decodable(&code, g, mask)),
-            }
-            pending.is_empty()
-        },
-    );
-    report.comp.stragglers = comp.stragglers();
-    report.comp.virtual_secs = comp.duration();
-    let arrived = comp.arrived_mask();
-
-    // Numerics: compute the arrived products only. The rest are the
-    // stragglers decode must reconstruct.
-    let mut grid: Vec<Option<Matrix>> = {
-        let arrived_ref = &arrived;
-        let a_ref = &a_coded;
-        let b_ref = &b_coded;
-        parallel_map(env.threads, ra * rb, move |cell| {
-            if arrived_ref[cell] {
-                let (i, j) = (cell / rb, cell % rb);
-                Some(env.backend.block_product(&a_ref[i], &b_ref[j]))
-            } else {
-                None
-            }
-        })
-    };
-
-    // --- Decode phase: decode workers peel their grids in parallel.
-    let mut plans = Vec::with_capacity(ga * gb);
-    for gi in 0..ga {
-        for gj in 0..gb {
-            // Extract local grid, decode numerically, write back.
-            let mut cells: Vec<Option<Matrix>> = Vec::with_capacity((l_a + 1) * (l_b + 1));
-            for r in 0..=l_a {
-                for c in 0..=l_b {
-                    let (cr, cc) = code.grid_cell(gi, gj, r, c);
-                    cells.push(grid[cr * rb + cc].take());
-                }
-            }
-            let plan = decode_numeric(env.backend.as_ref(), l_a, l_b, &mut cells);
-            let mut it = cells.into_iter();
-            for r in 0..=l_a {
-                for c in 0..=l_b {
-                    let (cr, cc) = code.grid_cell(gi, gj, r, c);
-                    grid[cr * rb + cc] = it.next().unwrap();
-                }
-            }
-            plans.push(plan);
-        }
-    }
-
-    // Virtual decode time: recovery steps round-robin over decode workers
-    // (Remark 3); each worker's time is sampled from its aggregate
-    // read/write profile.
-    let workers = job.decode_workers.max(1);
-    let dec_profiles = decode_worker_profiles(
-        plans.iter().flat_map(|p| p.steps.iter().map(|s| s.reads)),
-        workers,
-        vm / job.s_a,
-        vl / job.s_b,
-    );
-    report.dec.tasks = dec_profiles.len();
-    report.dec.blocks_read = plans.iter().map(|p| p.total_reads).sum();
-    if !dec_profiles.is_empty() {
-        let mut dec = PhaseState::launch(
-            &mut sim,
-            &env.model,
-            &dec_profiles,
-            0,
-            Termination::Speculative { wait_frac: 0.8 },
-            rng,
-        );
-        run_phase(&mut sim, &mut dec, &env.model, rng, &mut |_, _| false);
-        report.dec.relaunched = dec.relaunched;
-        report.dec.virtual_secs = dec.duration();
-    }
-
-    // Recompute fallback: unreachable under earliest-decodable
-    // termination (the cutoff only fires on decodable masks, and the
-    // wait-all degenerate case has a full mask), kept as the defensive
-    // path for cutoff policies that cannot guarantee decodability
-    // (deadlines, Thm-2-tail experiments with adaptive coding).
-    let undecodable: usize = plans.iter().map(|p| p.undecodable.len()).sum();
-    report.decode_ok = undecodable == 0;
-    if undecodable > 0 {
-        let mut rec = PhaseState::launch_uniform(
-            &mut sim,
-            &env.model,
-            &profile,
-            undecodable,
-            0,
-            Termination::WaitAll,
-            rng,
-        );
-        run_phase(&mut sim, &mut rec, &env.model, rng, &mut |_, _| false);
-        report.dec.virtual_secs += rec.duration();
-        report.dec.relaunched += undecodable;
-        let grid_slice = &mut grid;
-        for cell in 0..ra * rb {
-            if grid_slice[cell].is_none() {
-                let (i, j) = (cell / rb, cell % rb);
-                grid_slice[cell] = Some(env.backend.block_product(&a_coded[i], &b_coded[j]));
-            }
-        }
-    }
-
-    // Extract systematic output.
-    let sys = crate::codes::local_product::extract_systematic(&code, &grid)?;
-    for (idx, blk) in sys.iter().enumerate() {
-        let (i, j) = (idx / job.s_b, idx % job.s_b);
-        crate::storage::put_matrix(env.store.as_ref(), &keys::result_block(&job.job_id, i, j), blk);
-    }
-    let c = assemble_grid(GridShape { rows: job.s_a, cols: job.s_b }, &sys);
-    Ok((c, report))
-}
-
-/// Round-robin recovery steps (each costing `reads` block-reads) over
-/// `workers` decode workers and build one aggregate [`WorkProfile`] per
-/// worker that has any work. Shared accounting for the local-product
-/// decode phase (also mirrored by the scenario runner).
-pub fn decode_worker_profiles(
-    step_reads: impl Iterator<Item = usize>,
-    workers: usize,
-    block_rows: usize,
-    block_cols: usize,
-) -> Vec<WorkProfile> {
-    let out_bytes = (block_rows * block_cols * 4) as u64;
-    let mut per_worker_reads = vec![0usize; workers];
-    let mut per_worker_writes = vec![0usize; workers];
-    let mut next = 0usize;
-    for reads in step_reads {
-        per_worker_reads[next % workers] += reads;
-        per_worker_writes[next % workers] += 1;
-        next += 1;
-    }
-    per_worker_reads
-        .iter()
-        .zip(&per_worker_writes)
-        .filter(|(&reads, _)| reads > 0)
-        .map(|(&reads, &writes)| WorkProfile {
-            bytes_read: reads as u64 * out_bytes,
-            read_ops: reads as u64,
-            flops: (reads * block_rows * block_cols) as f64,
-            bytes_written: writes as u64 * out_bytes,
-            write_ops: writes as u64,
-        })
-        .collect()
-}
-
-/// Decode-phase profile of the product code's single decode worker: the
-/// row/column recovery passes are globally coupled, so one worker reads
-/// every surviving block of the touched lines and rewrites the recovered
-/// cells. Shared by the coordinator and the scenario runner.
-pub fn product_decode_profile(
-    reads: usize,
-    recovered: usize,
-    block_rows: usize,
-    block_cols: usize,
-) -> WorkProfile {
-    let out_bytes = (block_rows * block_cols * 4) as u64;
-    WorkProfile {
-        bytes_read: reads as u64 * out_bytes,
-        read_ops: reads as u64,
-        flops: (reads * block_rows * block_cols) as f64,
-        bytes_written: (recovered.max(1) as u64) * out_bytes,
-        write_ops: recovered as u64,
-    }
-}
-
-/// Per-worker decode profile of the polynomial code: every decode worker
-/// reads all K blocks (locality = K) and the K² block combines split
-/// across the fleet. Shared by the coordinator and the scenario runner.
-pub fn polynomial_decode_profile(
-    k: usize,
-    workers: usize,
-    block_rows: usize,
-    block_cols: usize,
-) -> WorkProfile {
-    let out_bytes = (block_rows * block_cols * 4) as u64;
-    WorkProfile {
-        bytes_read: k as u64 * out_bytes,
-        read_ops: k as u64,
-        flops: (k * k / workers) as f64 * (block_rows * block_cols) as f64,
-        bytes_written: (k / workers).max(1) as u64 * out_bytes,
-        write_ops: (k / workers).max(1) as u64,
-    }
-}
-
-/// Backend-routed side encode (each parity via `stack_sum`).
-fn encode_side_numeric(
-    backend: &dyn ComputeBackend,
-    layout: crate::codes::layout::LocalLayout,
-    blocks: &[Matrix],
-) -> Vec<Matrix> {
-    use crate::codes::layout::CodedBlock;
-    (0..layout.coded_len())
-        .map(|k| match layout.block_at(k) {
-            CodedBlock::Systematic { orig } => blocks[orig].clone(),
-            CodedBlock::Parity { group } => {
-                let members: Vec<&Matrix> =
-                    layout.group_members(group).map(|m| &blocks[m]).collect();
-                backend.stack_sum(&members)
-            }
-        })
-        .collect()
-}
-
-/// Backend-routed peeling decode of one local grid (numeric twin of
-/// [`decode_local_grid`], but every recovery runs through the compute
-/// backend so the PJRT `parity_residual` / `stack_sum` artifacts are on
-/// the decode hot path).
-fn decode_numeric(
-    backend: &dyn ComputeBackend,
-    l_a: usize,
-    l_b: usize,
-    cells: &mut [Option<Matrix>],
-) -> crate::codes::peeling::PeelPlan {
-    use crate::codes::peeling::Axis;
-    let rows = l_a + 1;
-    let cols = l_b + 1;
-    let present: Vec<bool> = cells.iter().map(Option::is_some).collect();
-    let plan = plan_peel(rows, cols, &present);
-    for step in &plan.steps {
-        let (r, c) = step.cell;
-        let line: Vec<usize> = match step.axis {
-            Axis::Row => (0..cols).map(|cc| r * cols + cc).collect(),
-            Axis::Col => (0..rows).map(|rr| rr * cols + c).collect(),
-        };
-        let target = r * cols + c;
-        let parity_idx = *line.last().unwrap();
-        let value = if target == parity_idx {
-            let members: Vec<&Matrix> = line[..line.len() - 1]
-                .iter()
-                .map(|&i| cells[i].as_ref().expect("plan order"))
-                .collect();
-            backend.stack_sum(&members)
-        } else {
-            let parity = cells[parity_idx].as_ref().expect("plan order").clone();
-            let survivors: Vec<&Matrix> = line[..line.len() - 1]
-                .iter()
-                .filter(|&&i| i != target)
-                .map(|&i| cells[i].as_ref().expect("plan order"))
-                .collect();
-            backend.parity_residual(&parity, &survivors)
-        };
-        cells[target] = Some(value);
-    }
-    plan
-}
-
-// ---------------------------------------------------------------------------
-// Product code baseline (global parities)
-// ---------------------------------------------------------------------------
-
-fn run_product(
-    env: &Env,
-    a: &Matrix,
-    b: &Matrix,
-    job: &MatmulJob,
-    t_a: usize,
-    t_b: usize,
-    rng: &mut Pcg64,
-) -> anyhow::Result<(Matrix, JobReport)> {
-    let mut report = JobReport::new("product");
-    let pc = ProductCode::new(job.s_a, t_a, job.s_b, t_b);
-    report.redundancy = pc.redundancy();
-    let pa = Partition::new(a.rows, a.cols, job.s_a);
-    let pb = Partition::new(b.rows, b.cols, job.s_b);
-    let a_blocks = pa.split(a);
-    let b_blocks = pb.split(b);
-
-    let mut sim = env.sim();
-
-    // Encode: each parity reads ALL s blocks of its side (global parities
-    // — the encode-cost handicap vs local codes), column-sliced across
-    // the same small fleet.
-    let (vm, vk, vl) = job.vdims(a, b);
-    let (ra, rb) = pc.coded_grid();
-    let fleet = job.encode_fleet(ra * rb);
-    let enc_profile = WorkProfile::sliced_encode(
-        t_a + t_b,
-        job.s_a.max(job.s_b),
-        vm / job.s_a,
-        vk,
-        fleet,
-    );
-    let mut enc = PhaseState::launch_uniform(
-        &mut sim,
-        &env.model,
-        &enc_profile,
-        fleet,
-        0,
-        Termination::Speculative { wait_frac: 0.95 },
-        rng,
-    );
-    run_phase(&mut sim, &mut enc, &env.model, rng, &mut |_, _| false);
-    report.enc.tasks = fleet;
-    report.enc.virtual_secs = enc.duration();
-    report.enc.blocks_read = t_a * job.s_a + t_b * job.s_b;
-
-    let (ac, bc) = pc.encode_sides(&a_blocks, &b_blocks);
-
-    // Compute phase with event-driven earliest-decodable termination.
-    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
-    let mut comp = PhaseState::launch_uniform(
-        &mut sim,
-        &env.model,
-        &profile,
-        ra * rb,
-        0,
-        Termination::EarliestDecodable,
-        rng,
-    );
-    // Global parities couple every cell, so the whole-mask fixpoint is
-    // re-run per completion (no per-grid incremental form exists).
-    run_phase(&mut sim, &mut comp, &env.model, rng, &mut |mask: &[bool], _| {
-        pc.decodable(mask)
-    });
-    report.comp.tasks = ra * rb;
-    report.comp.stragglers = comp.stragglers();
-    report.comp.virtual_secs = comp.duration();
-    let arrived = comp.arrived_mask();
-
-    // Numerics over arrived cells.
-    let mut grid: Vec<Option<Matrix>> = {
-        let arrived_ref = &arrived;
-        let ac_ref = &ac;
-        let bc_ref = &bc;
-        parallel_map(env.threads, ra * rb, move |cell| {
-            if arrived_ref[cell] {
-                let (i, j) = (cell / rb, cell % rb);
-                Some(env.backend.block_product(&ac_ref[i], &bc_ref[j]))
-            } else {
-                None
-            }
-        })
-    };
-
-    let dec = pc.decode(&mut grid)?;
-    report.dec.blocks_read = dec.blocks_read;
-    if dec.blocks_read > 0 {
-        // Unlike the local scheme's independent grids, the product code's
-        // row/column recovery passes are globally coupled (a column pass
-        // feeds the next row pass), so decode does not parallelize across
-        // workers — the paper's "huge communication overhead" (§II-B).
-        let _ = job.decode_workers;
-        let dec_profile =
-            product_decode_profile(dec.blocks_read, dec.recovered, vm / job.s_a, vl / job.s_b);
-        let mut decp = PhaseState::launch_uniform(
-            &mut sim,
-            &env.model,
-            &dec_profile,
-            1,
-            0,
-            Termination::Speculative { wait_frac: 0.8 },
-            rng,
-        );
-        run_phase(&mut sim, &mut decp, &env.model, rng, &mut |_, _| false);
-        report.dec.tasks = 1;
-        report.dec.relaunched = decp.relaunched;
-        report.dec.virtual_secs = decp.duration();
-    }
-
-    let c = assemble_grid(
-        GridShape { rows: job.s_a, cols: job.s_b },
-        &dec.systematic,
-    );
-    Ok((c, report))
-}
-
-// ---------------------------------------------------------------------------
-// Polynomial code baseline
-// ---------------------------------------------------------------------------
-
-fn run_polynomial(
-    env: &Env,
-    a: &Matrix,
-    b: &Matrix,
-    job: &MatmulJob,
-    redundancy: f64,
-    rng: &mut Pcg64,
-) -> anyhow::Result<(Matrix, JobReport)> {
-    let mut report = JobReport::new("polynomial");
-    anyhow::ensure!(
-        redundancy.is_finite() && redundancy >= 0.0,
-        "polynomial redundancy must be a non-negative number"
-    );
-    let k = job.s_a * job.s_b;
-    let n_workers = ((k as f64) * (1.0 + redundancy)).ceil() as usize;
-    let code = PolynomialCode::new(job.s_a, job.s_b, n_workers);
-    report.redundancy = code.redundancy();
-
-    let pa = Partition::new(a.rows, a.cols, job.s_a);
-    let pb = Partition::new(b.rows, b.cols, job.s_b);
-    let a_blocks = pa.split(a);
-    let b_blocks = pb.split(b);
-
-    let mut sim = env.sim();
-
-    // Encode: every one of the n_workers coded inputs Ã_k/B̃_k is a
-    // weighted sum of ALL the side's blocks — n× more encode volume than
-    // the local scheme. Column-sliced across a fleet sized like the other
-    // schemes' (10% of compute) for a fair comparison.
-    let (vm, vk, vl) = job.vdims(a, b);
-    let fleet = job.encode_fleet(n_workers);
-    let enc_profile = WorkProfile::sliced_encode(
-        2 * n_workers,
-        job.s_a.max(job.s_b),
-        vm / job.s_a,
-        vk,
-        fleet,
-    );
-    let mut enc = PhaseState::launch_uniform(
-        &mut sim,
-        &env.model,
-        &enc_profile,
-        fleet,
-        0,
-        Termination::Speculative { wait_frac: 0.95 },
-        rng,
-    );
-    run_phase(&mut sim, &mut enc, &env.model, rng, &mut |_, _| false);
-    report.enc.tasks = fleet;
-    report.enc.virtual_secs = enc.duration();
-    report.enc.blocks_read = n_workers * (job.s_a + job.s_b);
-
-    // Compute: n_workers tasks; MDS termination at the K-th arrival
-    // (wait-k as an event policy: the cutoff abandons the stragglers).
-    let profile = WorkProfile::block_product(vm / job.s_a, vk, vl / job.s_b);
-    let mut comp = PhaseState::launch_uniform(
-        &mut sim,
-        &env.model,
-        &profile,
-        n_workers,
-        0,
-        Termination::WaitK(k),
-        rng,
-    );
-    run_phase(&mut sim, &mut comp, &env.model, rng, &mut |_, _| false);
-    report.comp.tasks = n_workers;
-    report.comp.stragglers = comp.stragglers();
-    report.comp.virtual_secs = comp.duration();
-
-    // Decode: EVERY decode worker reads all K blocks (the paper's
-    // communication-overhead point) and the interpolation costs K² block
-    // combines.
-    let workers = job.decode_workers.max(1);
-    let dec_profile = polynomial_decode_profile(k, workers, vm / job.s_a, vl / job.s_b);
-    let mut decp = PhaseState::launch_uniform(
-        &mut sim,
-        &env.model,
-        &dec_profile,
-        workers,
-        0,
-        Termination::WaitAll,
-        rng,
-    );
-    run_phase(&mut sim, &mut decp, &env.model, rng, &mut |_, _| false);
-    report.dec.tasks = workers;
-    report.dec.blocks_read = workers * k;
-    report.dec.virtual_secs = decp.duration();
-
-    // Numerics only below the conditioning wall.
-    if k > POLY_NUMERIC_CAP {
-        report.numerics_ok = false;
-        return Ok((Matrix::zeros(a.rows, b.rows), report));
-    }
-    let first_k: Vec<usize> = comp.arrival_order().to_vec();
-    anyhow::ensure!(first_k.len() == k, "wait-k must deliver exactly K arrivals");
-    let results: Vec<(usize, Matrix)> = {
-        let a_ref = &a_blocks;
-        let b_ref = &b_blocks;
-        let code_ref = &code;
-        let first_ref = &first_k;
-        parallel_map(env.threads, k, move |t| {
-            let w = first_ref[t];
-            let at = code_ref.encode_a(a_ref, w);
-            let bt = code_ref.encode_b(b_ref, w);
-            (w, env.backend.block_product(&at, &bt))
-        })
-    };
-    let (blocks, _) = code.decode(&results)?;
-    let c = assemble_grid(GridShape { rows: job.s_a, cols: job.s_b }, &blocks);
-    Ok((c, report))
-}
-
-// ---------------------------------------------------------------------------
-// Shared numeric helpers
-// ---------------------------------------------------------------------------
-
-fn compute_products(
-    env: &Env,
-    a_blocks: &[Matrix],
-    b_blocks: &[Matrix],
-    include: impl Fn(usize, usize) -> bool + Sync,
-) -> Vec<Option<Matrix>> {
-    let sb = b_blocks.len();
-    parallel_map(env.threads, a_blocks.len() * sb, move |cell| {
-        let (i, j) = (cell / sb, cell % sb);
-        if include(i, j) {
-            Some(env.backend.block_product(&a_blocks[i], &b_blocks[j]))
-        } else {
-            None
-        }
-    })
 }
 
 #[cfg(test)]
@@ -980,8 +451,7 @@ mod tests {
         };
         let unbounded = Env::host();
         let (_, r_unb) = run_matmul(&unbounded, &a, &b, &job).unwrap();
-        let mut tight = Env::host();
-        tight.pool = Some(4); // 36 compute tasks over 4 workers
+        let tight = Env::builder().pool(4).build(); // 36 compute tasks over 4 workers
         let (_, r_tight) = run_matmul(&tight, &a, &b, &job).unwrap();
         assert!(r_tight.rel_err < 1e-4, "rel_err={}", r_tight.rel_err);
         // Queued starts only delay a fixed duration set: the encode phase
@@ -993,8 +463,7 @@ mod tests {
         assert!(r_tight.comp.virtual_secs >= r_unb.comp.virtual_secs - 1e-9);
         // And a pool at least as large as every phase's fan-out is
         // time-identical to unbounded.
-        let mut wide = Env::host();
-        wide.pool = Some(100);
+        let wide = Env::builder().pool(100).build();
         let (_, r_wide) = run_matmul(&wide, &a, &b, &job).unwrap();
         assert_eq!(r_wide.comp.virtual_secs, r_unb.comp.virtual_secs);
         assert_eq!(r_wide.enc.virtual_secs, r_unb.enc.virtual_secs);
@@ -1010,5 +479,33 @@ mod tests {
             ..Default::default()
         };
         assert!(run_matmul(&env, &a, &b, &job).is_err());
+    }
+
+    #[test]
+    fn builders_mirror_field_construction() {
+        let job = MatmulJob::builder()
+            .blocks(8, 4)
+            .scheme(Scheme::Product { t_a: 1, t_b: 2 })
+            .decode_workers(3)
+            .encode_workers(2)
+            .verify(false)
+            .seed(99)
+            .job_id("built")
+            .virtual_cube(20_000)
+            .build();
+        assert_eq!(job.s_a, 8);
+        assert_eq!(job.s_b, 4);
+        assert_eq!(job.scheme, Scheme::Product { t_a: 1, t_b: 2 });
+        assert_eq!(job.decode_workers, 3);
+        assert_eq!(job.encode_workers, 2);
+        assert!(!job.verify);
+        assert_eq!(job.seed, 99);
+        assert_eq!(job.job_id, "built");
+        assert_eq!(job.virtual_dims, Some((20_000, 20_000, 20_000)));
+        // Env builder: defaults equal Env::host(), overrides stick.
+        let e = Env::builder().threads(2).pool(7).build();
+        assert_eq!(e.threads, 2);
+        assert_eq!(e.pool, Some(7));
+        assert_eq!(e.backend.name(), Env::host().backend.name());
     }
 }

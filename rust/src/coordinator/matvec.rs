@@ -6,19 +6,23 @@
 //! row-blocks and a cheap vector-decode. The speculative baseline runs the
 //! same row-blocks uncoded with wait-for-q% + relaunch.
 //!
-//! Every phase executes on the discrete-event core
-//! ([`crate::platform::event`]): earliest-decodable cutoffs cancel
-//! straggling tasks (freeing workers on bounded pools), and a recompute
-//! round for an undecodable grid runs as a fresh event-driven phase on the
-//! same virtual clock.
+//! Every phase executes through the same generic driver as the matmul
+//! workload ([`crate::coordinator::driver`]): the scheme's
+//! [`ComputePolicy`] supplies the termination rule and decodability
+//! probe, so `multiply` carries no per-scheme dispatch. Earliest-
+//! decodable cutoffs cancel straggling tasks (freeing workers on bounded
+//! pools), and a recompute round for an undecodable grid runs as a fresh
+//! event-driven phase on the same virtual clock.
 
 use crate::codes::matvec::CodedMatvec2D;
+use crate::codes::scheme::{instantiate_matvec, ComputePolicy};
 use crate::codes::Scheme;
+use crate::coordinator::driver::{drive_phase, drive_policy_phase};
 use crate::coordinator::matmul::Env;
 use crate::coordinator::metrics::{JobReport, PhaseMetrics};
 use crate::linalg::blocked::Partition;
 use crate::linalg::matrix::Matrix;
-use crate::platform::event::{run_phase, PhaseState, Termination};
+use crate::platform::event::Termination;
 use crate::platform::WorkProfile;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::parallel_map;
@@ -30,6 +34,9 @@ pub struct MatvecEngine {
     /// uncoded/speculative.
     blocks: Vec<Matrix>,
     code: Option<CodedMatvec2D>,
+    /// Compute-phase policy (termination + decodability probe) from the
+    /// scheme registry.
+    policy: Box<dyn ComputePolicy>,
     scheme: Scheme,
     s: usize,
     cols: usize,
@@ -81,15 +88,16 @@ impl MatvecEngine {
         anyhow::ensure!(a.rows % s == 0, "rows must divide s");
         let (v_rows, v_cols) = virtual_dims.unwrap_or((a.rows, a.cols));
         anyhow::ensure!(v_rows % s == 0, "virtual rows must divide s");
+        let (code, policy) = instantiate_matvec(scheme, s)?;
         let p = Partition::new(a.rows, a.cols, s);
         let plain = p.split(a);
         let mut encode_report = PhaseMetrics::default();
 
-        let (blocks, code) = match scheme {
-            Scheme::LocalProduct { l_a, .. } => {
+        let blocks = match &code {
+            Some(code) => {
                 // 2-D product-coded matvec ("2D product code similar to
                 // [17]", §IV-A): s = grids·l² systematic blocks.
-                let code = CodedMatvec2D::new(s, l_a)?;
+                //
                 // Encode volume: every systematic block is read twice
                 // (row parity + column parity); the corner is built from
                 // the already-written row parities (l extra reads per
@@ -108,31 +116,30 @@ impl MatvecEngine {
                     write_ops: parities.div_ceil(fleet).max(1) as u64,
                 };
                 let mut sim = env.sim();
-                let mut enc = PhaseState::launch_uniform(
+                let enc = drive_phase(
                     &mut sim,
                     &env.model,
-                    &enc_profile,
-                    fleet,
-                    0,
-                    Termination::Speculative { wait_frac: 0.95 },
+                    &vec![enc_profile; fleet],
+                    Termination::Speculative {
+                        wait_frac: crate::codes::scheme::ENCODE_WAIT_FRAC,
+                    },
+                    &mut |_, _| false,
                     rng,
                 );
-                run_phase(&mut sim, &mut enc, &env.model, rng, &mut |_, _| false);
                 encode_report.tasks = fleet;
                 encode_report.virtual_secs = enc.duration();
-                encode_report.blocks_read = 2 * code.systematic() + code.grids * code.l;
+                encode_report.blocks_read = blocks_read_total;
                 // Numerics through the backend.
                 let backend = env.backend.as_ref();
-                let coded = code.encode(&plain, |members| backend.stack_sum(members));
-                (coded, Some(code))
+                code.encode(&plain, |members| backend.stack_sum(members))
             }
-            Scheme::Uncoded | Scheme::Speculative { .. } => (plain, None),
-            other => anyhow::bail!("matvec engine does not support {:?}", other),
+            None => plain,
         };
 
         Ok(MatvecEngine {
             blocks,
             code,
+            policy,
             scheme,
             s,
             cols: a.cols,
@@ -146,7 +153,9 @@ impl MatvecEngine {
         self.code.map(|c| c.redundancy()).unwrap_or(0.0)
     }
 
-    /// One iteration: `y = A·x` under the engine's scheme.
+    /// One iteration: `y = A·x` under the engine's scheme. The compute
+    /// phase is policy-driven (no scheme dispatch); only the numeric
+    /// decode distinguishes coded from plain engines.
     pub fn multiply(
         &self,
         env: &Env,
@@ -162,149 +171,89 @@ impl MatvecEngine {
         let n = self.blocks.len();
         let mut sim = env.sim();
 
-        match (&self.code, self.scheme) {
-            (Some(code), _) => {
-                // Earliest virtual time every local grid is
-                // peeling-decodable, as an event-driven cutoff.
-                let mut comp = PhaseState::launch_uniform(
-                    &mut sim,
-                    &env.model,
-                    &profile,
-                    n,
-                    0,
-                    Termination::EarliestDecodable,
-                    rng,
-                );
-                let mut pending: std::collections::BTreeSet<usize> =
-                    (0..code.grids).collect();
-                run_phase(
-                    &mut sim,
-                    &mut comp,
-                    &env.model,
-                    rng,
-                    &mut |mask: &[bool], newly: Option<usize>| {
-                        // Only the arriving block's grid can newly decode.
-                        match newly {
-                            Some(i) => {
-                                let (g, _, _) = code.cell(i);
-                                if pending.contains(&g) && code.grid_decodable(g, mask) {
-                                    pending.remove(&g);
-                                }
-                            }
-                            None => pending.retain(|&g| !code.grid_decodable(g, mask)),
-                        }
-                        pending.is_empty()
-                    },
-                );
-                rep.comp.tasks = n;
-                rep.comp.stragglers = comp.stragglers();
-                rep.comp.virtual_secs = comp.duration();
-                let arrived = comp.arrived_mask();
+        let comp = drive_policy_phase(
+            &mut sim,
+            &env.model,
+            &vec![profile; n],
+            self.policy.as_ref(),
+            rng,
+        );
+        rep.comp.tasks = n;
+        rep.comp.stragglers = comp.stragglers();
+        rep.comp.relaunched = comp.relaunched;
+        rep.comp.virtual_secs = comp.duration();
 
-                // Numerics on arrived blocks.
-                let mut results: Vec<Option<Vec<f32>>> = {
-                    let arrived_ref = &arrived;
-                    let blocks = &self.blocks;
-                    parallel_map(env.threads, n, move |i| {
-                        if arrived_ref[i] {
-                            Some(env.backend.gemv(&blocks[i], x))
-                        } else {
-                            None
-                        }
-                    })
-                };
-                let decoded = match code.decode(&results) {
-                    Ok(d) => d,
-                    Err(stuck) => {
-                        // Undecodable grid(s) (Thm-2 tail): recompute the
-                        // missing cells on fresh workers — a fresh
-                        // event-driven round on the same clock; numerics
-                        // are direct gemvs.
-                        let mut missing = 0usize;
-                        for &g in &stuck {
-                            for r in 0..=code.l {
-                                for c in 0..=code.l {
-                                    let posn = code.pos(g, r, c);
-                                    if results[posn].is_none() {
-                                        results[posn] =
-                                            Some(env.backend.gemv(&self.blocks[posn], x));
-                                        missing += 1;
-                                    }
-                                }
+        let Some(code) = &self.code else {
+            let y = self.multiply_all(env, x);
+            return Ok((y, rep));
+        };
+
+        // Numerics on arrived blocks.
+        let arrived = comp.arrived_mask();
+        let mut results: Vec<Option<Vec<f32>>> = {
+            let arrived_ref = &arrived;
+            let blocks = &self.blocks;
+            parallel_map(env.threads, n, move |i| {
+                if arrived_ref[i] {
+                    Some(env.backend.gemv(&blocks[i], x))
+                } else {
+                    None
+                }
+            })
+        };
+        let decoded = match code.decode(&results) {
+            Ok(d) => d,
+            Err(stuck) => {
+                // Undecodable grid(s) (Thm-2 tail): recompute the
+                // missing cells on fresh workers — a fresh
+                // event-driven round on the same clock; numerics
+                // are direct gemvs.
+                let mut missing = 0usize;
+                for &g in &stuck {
+                    for r in 0..=code.l {
+                        for c in 0..=code.l {
+                            let posn = code.pos(g, r, c);
+                            if results[posn].is_none() {
+                                results[posn] =
+                                    Some(env.backend.gemv(&self.blocks[posn], x));
+                                missing += 1;
                             }
                         }
-                        rep.dec.relaunched = missing;
-                        let mut rec = PhaseState::launch_uniform(
-                            &mut sim,
-                            &env.model,
-                            &profile,
-                            missing,
-                            0,
-                            Termination::WaitAll,
-                            rng,
-                        );
-                        run_phase(&mut sim, &mut rec, &env.model, rng, &mut |_, _| false);
-                        rep.dec.virtual_secs += rec.duration();
-                        code.decode(&results)
-                            .map_err(|g| anyhow::anyhow!("still undecodable: {g:?}"))?
                     }
-                };
-                let (blocks, reads, plans) = decoded;
-                rep.dec.blocks_read = reads;
-                // Decode work exists only when something straggled; the
-                // all-arrived common case needs no decode worker at all.
-                if reads > 0 {
-                    // Vector-block decode is "inexpensive ... performed
-                    // over a vector" (§II-A): the long-lived master does
-                    // it while assembling y — no worker invocation, just
-                    // the block reads.
-                    rep.dec.tasks = 1;
-                    let v_block = self.v_rows / self.s;
-                    let _recovered: usize = _plans_len(&plans);
-                    rep.dec.virtual_secs += env.model.rates.cost.read_many_parallel(
-                        reads as u64,
-                        (reads * v_block * 4) as u64,
-                        32,
-                    );
                 }
-                Ok((blocks.concat(), rep))
-            }
-            (None, Scheme::Speculative { wait_frac }) => {
-                let mut comp = PhaseState::launch_uniform(
+                rep.dec.relaunched = missing;
+                let rec = drive_phase(
                     &mut sim,
                     &env.model,
-                    &profile,
-                    n,
-                    0,
-                    Termination::Speculative { wait_frac },
-                    rng,
-                );
-                run_phase(&mut sim, &mut comp, &env.model, rng, &mut |_, _| false);
-                rep.comp.tasks = n;
-                rep.comp.stragglers = comp.stragglers();
-                rep.comp.relaunched = comp.relaunched;
-                rep.comp.virtual_secs = comp.duration();
-                let y = self.multiply_all(env, x);
-                Ok((y, rep))
-            }
-            (None, _) => {
-                let mut comp = PhaseState::launch_uniform(
-                    &mut sim,
-                    &env.model,
-                    &profile,
-                    n,
-                    0,
+                    &vec![profile; missing],
                     Termination::WaitAll,
+                    &mut |_, _| false,
                     rng,
                 );
-                run_phase(&mut sim, &mut comp, &env.model, rng, &mut |_, _| false);
-                rep.comp.tasks = n;
-                rep.comp.stragglers = comp.stragglers();
-                rep.comp.virtual_secs = comp.duration();
-                let y = self.multiply_all(env, x);
-                Ok((y, rep))
+                rep.dec.virtual_secs += rec.duration();
+                code.decode(&results)
+                    .map_err(|g| anyhow::anyhow!("still undecodable: {g:?}"))?
             }
+        };
+        let (blocks, reads, plans) = decoded;
+        rep.dec.blocks_read = reads;
+        // Decode work exists only when something straggled; the
+        // all-arrived common case needs no decode worker at all.
+        if reads > 0 {
+            // Vector-block decode is "inexpensive ... performed
+            // over a vector" (§II-A): the long-lived master does
+            // it while assembling y — no worker invocation, just
+            // the block reads.
+            rep.dec.tasks = 1;
+            let v_block = self.v_rows / self.s;
+            let _recovered: usize = _plans_len(&plans);
+            rep.dec.virtual_secs += env.model.rates.cost.read_many_parallel(
+                reads as u64,
+                (reads * v_block * 4) as u64,
+                32,
+            );
         }
+        Ok((blocks.concat(), rep))
     }
 
     fn multiply_all(&self, env: &Env, x: &[f32]) -> Vec<f32> {
@@ -423,8 +372,8 @@ mod tests {
     #[test]
     fn coded_matvec_exact_on_bounded_pool() {
         // Worker reuse must not change the numerics, only the clock.
-        let (mut env, a, x) = setup(7);
-        env.pool = Some(3);
+        let (_, a, x) = setup(7);
+        let env = Env::builder().pool(3).build();
         let truth = gemm::matvec(&a, &x);
         let mut rng = Pcg64::new(8);
         let eng = MatvecEngine::new(

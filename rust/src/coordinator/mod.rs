@@ -4,11 +4,17 @@
 //! the compute backend: parallel encode, straggler-prone compute with
 //! scheme-specific termination, and parallel local decode with recompute
 //! fallback. End-to-end latency is `T_enc + T_comp + T_dec`.
+//!
+//! Scheme knowledge lives behind the [`crate::codes::scheme::CodingScheme`]
+//! trait; [`driver::run_job`] is the one generic phase driver every
+//! scheme (and workload) executes through.
 
+pub mod driver;
 pub mod matmul;
 pub mod matvec;
 pub mod metrics;
 
-pub use matmul::{run_matmul, Env, MatmulJob};
+pub use driver::run_job;
+pub use matmul::{run_matmul, Env, EnvBuilder, MatmulJob, MatmulJobBuilder};
 pub use matvec::{IterationReport, MatvecEngine};
 pub use metrics::{JobReport, PhaseMetrics, REPORT_HEADERS};

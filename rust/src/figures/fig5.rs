@@ -51,12 +51,16 @@ pub fn run(cfg: &Config, scale: RunScale) -> anyhow::Result<Json> {
     // parities globally (22×22 grid, locality 20 — its Fig-5 handicap).
     let s = 20;
 
-    let schemes: Vec<(&str, Scheme)> = vec![
-        ("local-product", Scheme::LocalProduct { l_a: 10, l_b: 10 }),
-        ("speculative", Scheme::Speculative { wait_frac: 0.79 }),
-        ("product", Scheme::Product { t_a: 2, t_b: 2 }),
-        ("polynomial", Scheme::Polynomial { redundancy: 0.21 }),
-    ];
+    // The four contenders, resolved through the scheme registry (one
+    // table shared with the CLI and scenario JSON).
+    let schemes: Vec<(&'static str, Scheme)> =
+        ["local-product:10x10", "speculative:0.79", "product:2x2", "polynomial:0.21"]
+            .iter()
+            .map(|spec| {
+                let scheme = Scheme::parse(spec)?;
+                Ok((scheme.name(), scheme))
+            })
+            .collect::<anyhow::Result<_>>()?;
 
     let mut dims_out = Vec::new();
     for point in &points {

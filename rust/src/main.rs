@@ -31,7 +31,7 @@ fn common_specs() -> Vec<OptSpec> {
 fn run_specs() -> Vec<OptSpec> {
     let mut s = common_specs();
     s.extend([
-        OptSpec { name: "scheme", help: "uncoded | speculative[:q] | local-product[:AxB] | product[:AxB] | polynomial[:r]", takes_value: true, default: Some("local-product:2x2") },
+        OptSpec { name: "scheme", help: "coding scheme, name[:params]; 'help' lists the registry", takes_value: true, default: Some("local-product:2x2") },
         OptSpec { name: "rows", help: "numeric rows per side", takes_value: true, default: Some("640") },
         OptSpec { name: "k", help: "numeric inner dim", takes_value: true, default: Some("256") },
         OptSpec { name: "blocks", help: "systematic row-blocks per side", takes_value: true, default: Some("10") },
@@ -131,9 +131,16 @@ fn cmd_figures(rest: &[String]) -> anyhow::Result<()> {
 
 fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
     let args = Args::parse(rest, &run_specs()).map_err(anyhow::Error::msg)?;
+    let scheme_arg = args.get("scheme").unwrap();
+    if scheme_arg == "help" {
+        // The listing comes from the scheme registry, not a hardcoded
+        // string: a newly registered scheme shows up here automatically.
+        print!("{}", slec::codes::scheme::help_text());
+        return Ok(());
+    }
     let cfg = build_config(&args)?;
     let (env, _rt) = cfg.build_env()?;
-    let scheme = Scheme::parse(args.get("scheme").unwrap())?;
+    let scheme = Scheme::parse(scheme_arg)?;
     let rows = args.get_usize("rows").map_err(anyhow::Error::msg)?.unwrap();
     let k = args.get_usize("k").map_err(anyhow::Error::msg)?.unwrap();
     let blocks = args.get_usize("blocks").map_err(anyhow::Error::msg)?.unwrap();
@@ -146,17 +153,17 @@ fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
     let mut rng = Pcg64::new(cfg.seed);
     let a = Matrix::randn(rows, k, &mut rng, 0.0, 1.0);
     let b = Matrix::randn(rows, k, &mut rng, 0.0, 1.0);
-    let job = MatmulJob {
-        s_a: blocks,
-        s_b: blocks,
-        scheme,
-        decode_workers,
-        verify: true,
-        seed: cfg.seed,
-        job_id: "cli".into(),
-        virtual_dims: vdim.map(|d| (d, d, d)),
-        encode_workers: 0,
-    };
+    let mut builder = MatmulJob::builder()
+        .blocks(blocks, blocks)
+        .scheme(scheme)
+        .decode_workers(decode_workers)
+        .verify(true)
+        .seed(cfg.seed)
+        .job_id("cli");
+    if let Some(d) = vdim {
+        builder = builder.virtual_cube(d);
+    }
+    let job = builder.build();
     let (_, report) = run_matmul(&env, &a, &b, &job)?;
     println!("{}", render_table(&REPORT_HEADERS, &[report.row()]));
     println!("{}", report.to_json().to_string_pretty());

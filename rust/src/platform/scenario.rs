@@ -9,14 +9,18 @@
 //! share one [`EventSim`] worker pool, so staggered arrivals genuinely
 //! contend for workers.
 //!
-//! The runner is **timing-only**: decodability and decode accounting come
-//! from the same mask-level predicates the coordinator uses
-//! ([`grid_decodable`], [`ProductCode::plan_decode`], peeling plans), but
-//! no matrices are materialized, so hundreds of scenario jobs run in
-//! milliseconds. Each job yields a [`JobReport`] — the exact metrics
-//! schema of `coordinator::run_matmul` (`rel_err` stays NaN/null) — and
+//! The runner is **timing-only** and scheme-agnostic: every job drives a
+//! [`CodingScheme`] object from the registry through the same phase
+//! plans the coordinator uses (encode plan, termination policy,
+//! decodability probe, decode plan), but no matrices are materialized,
+//! so hundreds of scenario jobs run in milliseconds. Each job yields a
+//! [`JobReport`] — the exact metrics schema of
+//! `coordinator::run_matmul` (`rel_err` stays NaN/null) — and
 //! `tests/scenarios_golden.rs` compares the resulting summaries against
 //! checked-in golden files.
+//!
+//! Unknown JSON keys are configuration errors: a typo in a scenario,
+//! straggler or job object fails loudly, naming the bad key.
 //!
 //! # Determinism
 //!
@@ -27,19 +31,12 @@
 //! interleaving and pool size never shift the draw sequence — and two
 //! runs of a scenario are bit-identical.
 
-use std::collections::BTreeSet;
-
-use crate::codes::local_product::{grid_decodable, plan_grids, LocalProductCode};
-use crate::codes::polynomial::{PolynomialCode, NUMERIC_CAP};
-use crate::codes::product::ProductCode;
+use crate::codes::scheme::{CodingScheme, DecodeProbe, JobShape};
 use crate::codes::Scheme;
-use crate::coordinator::matmul::{
-    decode_worker_profiles, polynomial_decode_profile, product_decode_profile,
-};
 use crate::coordinator::metrics::JobReport;
-use crate::platform::event::{Completion, EventSim, PhaseState, Pool, Termination};
+use crate::platform::event::{Completion, EventSim, PhaseState, Pool};
 use crate::platform::straggler::{
-    SlowdownDist, StragglerModel, StragglerParams, WorkProfile, WorkerRates,
+    SlowdownDist, StragglerModel, StragglerParams, WorkerRates,
 };
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg64;
@@ -60,15 +57,8 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
-    /// `(block_rows, inner, block_cols)` of one output block.
-    fn block_dims(&self) -> (usize, usize, usize) {
-        let (m, k, l) = self.dims;
-        (m / self.s_a, k, l / self.s_b)
-    }
-
-    fn comp_profile(&self) -> WorkProfile {
-        let (br, k, bc) = self.block_dims();
-        WorkProfile::block_product(br, k, bc)
+    fn shape(&self) -> JobShape {
+        JobShape::new(self.s_a, self.s_b, self.dims)
     }
 
     fn encode_fleet(&self, compute_tasks: usize) -> usize {
@@ -93,9 +83,28 @@ pub struct Scenario {
     pub jobs: Vec<JobSpec>,
 }
 
+/// Reject unknown keys so config typos fail loudly, naming the bad key.
+fn ensure_known_keys(ctx: &str, j: &Json, known: &[&str]) -> anyhow::Result<()> {
+    if let Some(fields) = j.as_obj() {
+        for (k, _) in fields {
+            anyhow::ensure!(
+                known.contains(&k.as_str()),
+                "unknown {ctx} key '{k}' (known: {})",
+                known.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Parse a scenario document (see EXPERIMENTS.md §Scenario suite for the
 /// schema).
 pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
+    ensure_known_keys(
+        "scenario",
+        doc,
+        &["name", "description", "seed", "workers", "straggler", "jobs"],
+    )?;
     let name = doc
         .get("name")
         .and_then(Json::as_str)
@@ -156,6 +165,25 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
 fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
     let mut p = StragglerParams::default();
     let Some(j) = j else { return Ok(p) };
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "'straggler' must be an object, got {}",
+        j.to_string_compact()
+    );
+    ensure_known_keys(
+        "straggler",
+        j,
+        &[
+            "p",
+            "slow_mu",
+            "slow_sigma",
+            "slow_min",
+            "slow_max",
+            "jitter_sigma",
+            "dist",
+            "pareto_alpha",
+        ],
+    )?;
     let num = |key: &str| j.get(key).and_then(Json::as_f64);
     if let Some(v) = num("p") {
         p.p = v;
@@ -187,6 +215,19 @@ fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
 }
 
 fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
+    ensure_known_keys(
+        "job",
+        j,
+        &[
+            "scheme",
+            "s_a",
+            "s_b",
+            "dims",
+            "decode_workers",
+            "encode_workers",
+            "arrival",
+        ],
+    )?;
     let scheme_str = j
         .get("scheme")
         .and_then(Json::as_str)
@@ -223,17 +264,9 @@ fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
     let encode_workers = j.get("encode_workers").and_then(Json::as_usize).unwrap_or(0);
     let arrival = j.get("arrival").and_then(Json::as_f64).unwrap_or(0.0);
     anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
-    if let Scheme::LocalProduct { l_a, l_b } = scheme {
-        anyhow::ensure!(l_a > 0 && l_b > 0, "group sizes l_a/l_b must be positive");
-        anyhow::ensure!(s_a % l_a == 0, "s_a % l_a != 0");
-        anyhow::ensure!(s_b % l_b == 0, "s_b % l_b != 0");
-    }
-    if let Scheme::Polynomial { redundancy } = scheme {
-        anyhow::ensure!(
-            redundancy.is_finite() && redundancy >= 0.0,
-            "polynomial redundancy must be a non-negative number"
-        );
-    }
+    // Validate the scheme's parameters against the partitioning through
+    // the same registry instantiation the runner uses.
+    scheme.instantiate(s_a, s_b)?;
     Ok(JobSpec {
         scheme,
         s_a,
@@ -257,235 +290,113 @@ enum Stage {
     Recompute,
 }
 
-/// One job's pipeline advancing through the shared event queue; mirrors
-/// the phase structure of `coordinator::matmul` (timing only).
+/// One job's pipeline advancing through the shared event queue; drives
+/// the job's [`CodingScheme`] phase plans (timing only) — the same
+/// contract the coordinator's generic driver executes numerically.
 struct JobRun {
     index: usize,
     spec: JobSpec,
+    scheme: Box<dyn CodingScheme>,
+    shape: JobShape,
     rng: Pcg64,
     report: JobReport,
     stage: Stage,
     phase: Option<PhaseState>,
+    /// Live decodability probe of the compute stage.
+    probe: Option<DecodeProbe>,
     done: bool,
     finish: f64,
-    comp_tasks: usize,
-    lp: Option<LocalProductCode>,
-    pc: Option<ProductCode>,
-    /// Local grids not yet decodable (earliest-decodable bookkeeping).
-    pending: BTreeSet<usize>,
-    /// Polynomial recovery threshold K.
-    k_threshold: usize,
     /// Cells the decode plan could not recover (recompute fallback).
     undecodable: usize,
 }
 
 impl JobRun {
     fn new(index: usize, spec: JobSpec, rng: Pcg64) -> anyhow::Result<JobRun> {
-        let mut report = JobReport::new(spec.scheme.name());
-        let mut lp = None;
-        let mut pc = None;
-        let mut k_threshold = 0;
-        let comp_tasks = match spec.scheme {
-            Scheme::Uncoded | Scheme::Speculative { .. } => spec.s_a * spec.s_b,
-            Scheme::LocalProduct { l_a, l_b } => {
-                let code = LocalProductCode::new(spec.s_a, l_a, spec.s_b, l_b);
-                report.redundancy = code.redundancy();
-                report.enc.blocks_read = l_a * code.a.groups() + l_b * code.b.groups();
-                let (ra, rb) = code.coded_grid();
-                lp = Some(code);
-                ra * rb
-            }
-            Scheme::Product { t_a, t_b } => {
-                let code = ProductCode::new(spec.s_a, t_a, spec.s_b, t_b);
-                report.redundancy = code.redundancy();
-                report.enc.blocks_read = t_a * spec.s_a + t_b * spec.s_b;
-                let (ra, rb) = code.coded_grid();
-                pc = Some(code);
-                ra * rb
-            }
-            Scheme::Polynomial { redundancy } => {
-                let k = spec.s_a * spec.s_b;
-                let n_workers = ((k as f64) * (1.0 + redundancy)).ceil() as usize;
-                let code = PolynomialCode::new(spec.s_a, spec.s_b, n_workers);
-                report.redundancy = code.redundancy();
-                report.enc.blocks_read = n_workers * (spec.s_a + spec.s_b);
-                report.numerics_ok = k <= NUMERIC_CAP;
-                k_threshold = k;
-                n_workers
-            }
-        };
+        let scheme = spec.scheme.instantiate(spec.s_a, spec.s_b)?;
+        let mut report = JobReport::new(scheme.name());
+        report.redundancy = scheme.redundancy();
+        report.numerics_ok = scheme.numerics_feasible();
+        let shape = spec.shape();
         Ok(JobRun {
             index,
             spec,
+            scheme,
+            shape,
             rng,
             report,
             stage: Stage::Encode,
             phase: None,
+            probe: None,
             done: false,
             finish: 0.0,
-            comp_tasks,
-            lp,
-            pc,
-            pending: BTreeSet::new(),
-            k_threshold,
             undecodable: 0,
         })
     }
 
     /// Begin the pipeline at the job's arrival time (sim clock is there).
     fn start(&mut self, sim: &mut EventSim, model: &StragglerModel) {
-        match self.spec.scheme {
-            Scheme::Uncoded | Scheme::Speculative { .. } => self.start_compute(sim, model),
-            _ => self.start_encode(sim, model),
+        let fleet = self.spec.encode_fleet(self.scheme.compute_tasks());
+        match self.scheme.encode_plan(&self.shape, fleet) {
+            Some(plan) => self.start_encode(sim, model, fleet, plan),
+            None => self.start_compute(sim, model),
         }
         self.pump(sim, model);
     }
 
-    fn start_encode(&mut self, sim: &mut EventSim, model: &StragglerModel) {
+    fn start_encode(
+        &mut self,
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        fleet: usize,
+        plan: crate::codes::scheme::EncodePlan,
+    ) {
         self.stage = Stage::Encode;
-        let (br, k, _) = self.spec.block_dims();
-        let fleet = self.spec.encode_fleet(self.comp_tasks);
-        let enc_profile = match self.spec.scheme {
-            Scheme::LocalProduct { l_a, l_b } => {
-                let code = self.lp.as_ref().unwrap();
-                WorkProfile::sliced_encode(
-                    code.a.groups() + code.b.groups(),
-                    l_a.max(l_b),
-                    br,
-                    k,
-                    fleet,
-                )
-            }
-            Scheme::Product { t_a, t_b } => WorkProfile::sliced_encode(
-                t_a + t_b,
-                self.spec.s_a.max(self.spec.s_b),
-                br,
-                k,
-                fleet,
-            ),
-            Scheme::Polynomial { .. } => WorkProfile::sliced_encode(
-                2 * self.comp_tasks,
-                self.spec.s_a.max(self.spec.s_b),
-                br,
-                k,
-                fleet,
-            ),
-            _ => unreachable!("uncoded schemes have no encode phase"),
-        };
+        self.report.enc.blocks_read = plan.blocks_read;
         self.phase = Some(PhaseState::launch_uniform(
             sim,
             model,
-            &enc_profile,
+            &plan.profile,
             fleet,
             self.index,
-            Termination::Speculative { wait_frac: 0.95 },
+            plan.termination,
             &mut self.rng,
         ));
     }
 
     fn start_compute(&mut self, sim: &mut EventSim, model: &StragglerModel) {
         self.stage = Stage::Compute;
-        let profile = self.spec.comp_profile();
-        let term = match self.spec.scheme {
-            Scheme::Uncoded => Termination::WaitAll,
-            Scheme::Speculative { wait_frac } => Termination::Speculative { wait_frac },
-            Scheme::Polynomial { .. } => Termination::WaitK(self.k_threshold),
-            Scheme::LocalProduct { .. } | Scheme::Product { .. } => {
-                Termination::EarliestDecodable
-            }
-        };
-        if let Some(code) = &self.lp {
-            let (ga, gb) = code.groups();
-            self.pending = (0..ga * gb).collect();
-        }
+        self.probe = Some(self.scheme.decode_probe());
         self.phase = Some(PhaseState::launch_uniform(
             sim,
             model,
-            &profile,
-            self.comp_tasks,
+            &self.shape.compute_profile(),
+            self.scheme.compute_tasks(),
             self.index,
-            term,
+            self.scheme.compute_termination(),
             &mut self.rng,
         ));
     }
 
     fn start_decode(&mut self, sim: &mut EventSim, model: &StragglerModel, arrived: &[bool]) {
-        let (br, _, bc) = self.spec.block_dims();
-        match self.spec.scheme {
-            Scheme::Uncoded | Scheme::Speculative { .. } => {
-                self.finish_job(sim.now());
-            }
-            Scheme::LocalProduct { .. } => {
-                let code = self.lp.as_ref().unwrap();
-                let plans = plan_grids(code, arrived);
-                self.undecodable = plans.iter().map(|p| p.undecodable.len()).sum();
-                self.report.dec.blocks_read = plans.iter().map(|p| p.total_reads).sum();
-                self.report.decode_ok = self.undecodable == 0;
-                let profiles = decode_worker_profiles(
-                    plans.iter().flat_map(|p| p.steps.iter().map(|s| s.reads)),
-                    self.spec.decode_workers.max(1),
-                    br,
-                    bc,
-                );
-                self.report.dec.tasks = profiles.len();
-                if profiles.is_empty() {
-                    self.start_recompute(sim, model);
-                } else {
-                    self.stage = Stage::Decode;
-                    self.phase = Some(PhaseState::launch(
-                        sim,
-                        model,
-                        &profiles,
-                        self.index,
-                        Termination::Speculative { wait_frac: 0.8 },
-                        &mut self.rng,
-                    ));
-                }
-            }
-            Scheme::Product { .. } => {
-                let code = self.pc.as_ref().unwrap();
-                let (reads, recovered) = code
-                    .plan_decode(arrived)
-                    .expect("earliest-decodable terminated on a decodable mask");
-                self.report.dec.blocks_read = reads;
-                if reads == 0 {
-                    self.finish_job(sim.now());
-                    return;
-                }
-                // Globally-coupled recovery passes: a single decode worker
-                // (the paper's communication-overhead point, §II-B).
-                let dec_profile = product_decode_profile(reads, recovered, br, bc);
-                self.report.dec.tasks = 1;
-                self.stage = Stage::Decode;
-                self.phase = Some(PhaseState::launch_uniform(
-                    sim,
-                    model,
-                    &dec_profile,
-                    1,
-                    self.index,
-                    Termination::Speculative { wait_frac: 0.8 },
-                    &mut self.rng,
-                ));
-            }
-            Scheme::Polynomial { .. } => {
-                // Every decode worker reads all K blocks; interpolation is
-                // K² block combines split across the workers.
-                let k = self.k_threshold;
-                let workers = self.spec.decode_workers.max(1);
-                let dec_profile = polynomial_decode_profile(k, workers, br, bc);
-                self.report.dec.tasks = workers;
-                self.report.dec.blocks_read = workers * k;
-                self.stage = Stage::Decode;
-                self.phase = Some(PhaseState::launch_uniform(
-                    sim,
-                    model,
-                    &dec_profile,
-                    workers,
-                    self.index,
-                    Termination::WaitAll,
-                    &mut self.rng,
-                ));
-            }
+        let plan = self
+            .scheme
+            .decode_plan(arrived, &self.shape, self.spec.decode_workers);
+        self.undecodable = plan.undecodable;
+        self.report.dec.blocks_read = plan.blocks_read;
+        self.report.dec.tasks = plan.profiles.len();
+        self.report.decode_ok = plan.undecodable == 0;
+        if plan.profiles.is_empty() {
+            self.start_recompute(sim, model);
+        } else {
+            self.stage = Stage::Decode;
+            self.phase = Some(PhaseState::launch(
+                sim,
+                model,
+                &plan.profiles,
+                self.index,
+                plan.termination,
+                &mut self.rng,
+            ));
         }
     }
 
@@ -498,14 +409,13 @@ impl JobRun {
             return;
         }
         self.stage = Stage::Recompute;
-        let profile = self.spec.comp_profile();
         self.phase = Some(PhaseState::launch_uniform(
             sim,
             model,
-            &profile,
+            &self.shape.compute_profile(),
             self.undecodable,
             self.index,
-            Termination::WaitAll,
+            crate::platform::event::Termination::WaitAll,
             &mut self.rng,
         ));
     }
@@ -514,6 +424,7 @@ impl JobRun {
         self.done = true;
         self.finish = t;
         self.phase = None;
+        self.probe = None;
     }
 
     /// Route one completion of this job to its live phase.
@@ -526,35 +437,9 @@ impl JobRun {
             None => return,
         };
         if self.stage == Stage::Compute {
-            match self.spec.scheme {
-                Scheme::LocalProduct { .. } => {
-                    let code = *self.lp.as_ref().unwrap();
-                    let mut pending = std::mem::take(&mut self.pending);
-                    ps.on_completion(sim, model, &mut self.rng, c, &mut |mask, newly| {
-                        // Only the arriving cell's grid can newly decode.
-                        match newly {
-                            Some(cell) => {
-                                let g = code.grid_of_cell(cell);
-                                if pending.contains(&g) && grid_decodable(&code, g, mask) {
-                                    pending.remove(&g);
-                                }
-                            }
-                            None => pending.retain(|&g| !grid_decodable(&code, g, mask)),
-                        }
-                        pending.is_empty()
-                    });
-                    self.pending = pending;
-                }
-                Scheme::Product { .. } => {
-                    let code = self.pc.clone().unwrap();
-                    ps.on_completion(sim, model, &mut self.rng, c, &mut |mask, _| {
-                        code.decodable(mask)
-                    });
-                }
-                _ => {
-                    ps.on_completion(sim, model, &mut self.rng, c, &mut |_, _| false);
-                }
-            }
+            let mut probe = self.probe.take().expect("compute stage keeps its probe");
+            ps.on_completion(sim, model, &mut self.rng, c, &mut *probe);
+            self.probe = Some(probe);
         } else {
             ps.on_completion(sim, model, &mut self.rng, c, &mut |_, _| false);
         }
@@ -587,6 +472,7 @@ impl JobRun {
                     self.report.comp.stragglers = ps.stragglers();
                     self.report.comp.relaunched = ps.relaunched;
                     self.report.comp.virtual_secs = ps.duration();
+                    self.probe = None;
                     let mask = ps.arrived_mask();
                     self.start_decode(sim, model, &mask);
                 }
@@ -768,6 +654,7 @@ mod tests {
             r#"{"name": "x", "seed": 1, "workers": 7.5, "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
             r#"{"name": "x", "seed": 1, "jobs": [{"scheme": "local-product:0x2", "s_a": 4, "s_b": 4, "dims": 100}]}"#,
             r#"{"name": "x", "seed": 1, "jobs": [{"scheme": "polynomial:-0.5", "s_a": 4, "s_b": 4, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "straggler": "pareto", "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
         ];
         for src in bad {
             assert!(
@@ -775,6 +662,45 @@ mod tests {
                 "should reject: {src}"
             );
         }
+    }
+
+    #[test]
+    fn rejects_unknown_keys_naming_the_culprit() {
+        // Top-level typo.
+        let err = parse_scenario(
+            &parse(
+                r#"{"name": "x", "seed": 1, "wrokers": 5,
+                    "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown scenario key 'wrokers'"), "{err}");
+
+        // Straggler typo.
+        let err = parse_scenario(
+            &parse(
+                r#"{"name": "x", "seed": 1, "straggler": {"slowmu": 1.0},
+                    "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown straggler key 'slowmu'"), "{err}");
+
+        // Job typo.
+        let err = parse_scenario(
+            &parse(
+                r#"{"name": "x", "seed": 1,
+                    "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100, "decode_worker": 3}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown job key 'decode_worker'"), "{err}");
     }
 
     #[test]

@@ -561,6 +561,83 @@ pub fn load_file(path: &std::path::Path) -> anyhow::Result<Json> {
     parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
 }
 
+/// Is `b` within 1e-6 (absolute or relative) of golden value `a`?
+fn num_close(a: f64, b: f64) -> bool {
+    let tol = 1e-6_f64.max(1e-6 * a.abs().max(b.abs()));
+    (a - b).abs() <= tol
+}
+
+/// Golden-vs-observed structural diff, shared by the golden regression
+/// suites (`tests/scenarios_golden.rs`, `tests/scheme_conformance.rs`).
+///
+/// Semantics: a golden `null` is a wildcard (field not yet pinned);
+/// golden objects are compared as *subsets* of the observed object
+/// (extra observed keys are fine, missing ones are a failure); numbers
+/// compare with 1e-6 absolute/relative tolerance so goldens can be
+/// hand-written or machine-blessed. One line per divergent field is
+/// appended to `out`.
+pub fn golden_diff(golden: &Json, got: &Json, path: &str, out: &mut Vec<String>) {
+    match golden {
+        Json::Null => {}
+        Json::Obj(fields) => {
+            if !matches!(got, Json::Obj(_)) {
+                out.push(format!(
+                    "{path}: expected an object, observed {}",
+                    got.to_string_compact()
+                ));
+                return;
+            }
+            for (k, v) in fields {
+                let sub = if path.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{path}.{k}")
+                };
+                match got.get(k) {
+                    Some(g) => golden_diff(v, g, &sub, out),
+                    None => out.push(format!("{sub}: missing in observed output")),
+                }
+            }
+        }
+        Json::Arr(items) => match got.as_arr() {
+            None => out.push(format!(
+                "{path}: expected an array, observed {}",
+                got.to_string_compact()
+            )),
+            Some(gs) => {
+                if gs.len() != items.len() {
+                    out.push(format!(
+                        "{path}: golden has {} items, observed {}",
+                        items.len(),
+                        gs.len()
+                    ));
+                    return;
+                }
+                for (i, (v, g)) in items.iter().zip(gs).enumerate() {
+                    golden_diff(v, g, &format!("{path}[{i}]"), out);
+                }
+            }
+        },
+        Json::Num(a) => match got.as_f64() {
+            Some(b) if num_close(*a, b) => {}
+            _ => out.push(format!(
+                "{path}: golden {} vs observed {}",
+                golden.to_string_compact(),
+                got.to_string_compact()
+            )),
+        },
+        other => {
+            if other != got {
+                out.push(format!(
+                    "{path}: golden {} vs observed {}",
+                    other.to_string_compact(),
+                    got.to_string_compact()
+                ));
+            }
+        }
+    }
+}
+
 /// Flatten an object into dotted-path/value pairs (for diffing configs).
 pub fn flatten(v: &Json) -> BTreeMap<String, String> {
     let mut out = BTreeMap::new();

@@ -60,74 +60,11 @@ fn load_scenario(path: &Path) -> Scenario {
     parse_scenario(&doc).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
 }
 
-/// Is `b` within 1e-6 (absolute or relative) of golden value `a`?
-fn num_close(a: f64, b: f64) -> bool {
-    let tol = 1e-6_f64.max(1e-6 * a.abs().max(b.abs()));
-    (a - b).abs() <= tol
-}
-
-/// Golden-vs-observed structural diff. `null` goldens are wildcards and
-/// golden objects match as subsets of the observed object.
+/// Golden-vs-observed structural diff — the shared comparator
+/// (`util::json::golden_diff`): `null` goldens are wildcards, golden
+/// objects match as subsets, numbers at 1e-6 tolerance.
 fn diff_json(golden: &Json, got: &Json, path: &str, out: &mut Vec<String>) {
-    match golden {
-        Json::Null => {}
-        Json::Obj(fields) => {
-            if !matches!(got, Json::Obj(_)) {
-                out.push(format!(
-                    "{path}: expected an object, observed {}",
-                    got.to_string_compact()
-                ));
-                return;
-            }
-            for (k, v) in fields {
-                let sub = if path.is_empty() {
-                    k.clone()
-                } else {
-                    format!("{path}.{k}")
-                };
-                match got.get(k) {
-                    Some(g) => diff_json(v, g, &sub, out),
-                    None => out.push(format!("{sub}: missing in observed output")),
-                }
-            }
-        }
-        Json::Arr(items) => match got.as_arr() {
-            None => out.push(format!(
-                "{path}: expected an array, observed {}",
-                got.to_string_compact()
-            )),
-            Some(gs) => {
-                if gs.len() != items.len() {
-                    out.push(format!(
-                        "{path}: golden has {} items, observed {}",
-                        items.len(),
-                        gs.len()
-                    ));
-                    return;
-                }
-                for (i, (v, g)) in items.iter().zip(gs).enumerate() {
-                    diff_json(v, g, &format!("{path}[{i}]"), out);
-                }
-            }
-        },
-        Json::Num(a) => match got.as_f64() {
-            Some(b) if num_close(*a, b) => {}
-            _ => out.push(format!(
-                "{path}: golden {} vs observed {}",
-                golden.to_string_compact(),
-                got.to_string_compact()
-            )),
-        },
-        other => {
-            if other != got {
-                out.push(format!(
-                    "{path}: golden {} vs observed {}",
-                    other.to_string_compact(),
-                    got.to_string_compact()
-                ));
-            }
-        }
-    }
+    json::golden_diff(golden, got, path, out);
 }
 
 #[test]

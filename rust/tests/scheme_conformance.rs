@@ -1,0 +1,300 @@
+//! Trait-conformance suite over the scheme registry.
+//!
+//! Every scheme registered in `codes::scheme::REGISTRY` is driven through
+//! the one generic phase driver — encode → (straggler-heavy) compute →
+//! decode — and must (a) numerically reproduce `A·Bᵀ` and (b) keep its
+//! `JobReport` draw-for-draw identical to the checked-in golden
+//! (`tests/golden/scheme_conformance.json`, same null-wildcard semantics
+//! as the scenario suite; `SLEC_BLESS=1` re-blesses).
+//!
+//! A test-local sixth scheme (`replicated`) also runs through
+//! `driver::run_job` to prove the driver is genuinely scheme-agnostic:
+//! adding a scheme requires a trait impl and a registry row, not a
+//! coordinator change.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use slec::codes::scheme::{
+    self, CodingScheme, ComputePolicy, DecodePlan, DecodeProbe, JobShape,
+};
+use slec::codes::Scheme;
+use slec::coordinator::driver::run_job;
+use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
+use slec::linalg::gemm::matmul_bt;
+use slec::linalg::Matrix;
+use slec::platform::{StragglerModel, StragglerParams, Termination, WorkerRates};
+use slec::runtime::ComputeBackend;
+use slec::util::json::{self, Json};
+use slec::util::rng::Pcg64;
+
+fn inputs(m: usize, n: usize, l: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Pcg64::new(seed);
+    (
+        Matrix::randn(m, n, &mut rng, 0.0, 1.0),
+        Matrix::randn(l, n, &mut rng, 0.0, 1.0),
+    )
+}
+
+fn smoke_job(spec: &str, seed: u64) -> MatmulJob {
+    MatmulJob::builder()
+        .blocks(4, 4)
+        .scheme(Scheme::parse(spec).expect("registry smoke spec parses"))
+        .seed(seed)
+        .job_id(format!("conf-{}", spec.replace([':', 'x', '.'], "-")))
+        .build()
+}
+
+#[test]
+fn registry_covers_the_papers_contenders() {
+    for name in ["uncoded", "speculative", "local-product", "product", "polynomial"] {
+        assert!(
+            scheme::lookup(name).is_some(),
+            "registry must cover scheme '{name}'"
+        );
+    }
+}
+
+#[test]
+fn every_registered_scheme_encodes_drops_and_decodes() {
+    // Straggler-heavy platform: at p = 0.25 the earliest-decodable /
+    // wait-k cutoffs genuinely abandon workers, so the decode phase must
+    // really reconstruct missing blocks from parities.
+    let env = Env::builder()
+        .model(StragglerModel::new(
+            StragglerParams {
+                p: 0.25,
+                ..Default::default()
+            },
+            WorkerRates::default(),
+        ))
+        .build();
+    let (a, b) = inputs(64, 48, 64, 3);
+    let truth = matmul_bt(&a, &b);
+    let shape = JobShape::new(4, 4, (64, 48, 64));
+
+    for info in scheme::REGISTRY {
+        let spec = info.smoke_spec();
+        let scheme_obj = Scheme::parse(&spec)
+            .unwrap()
+            .instantiate(4, 4)
+            .unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let coded = scheme_obj.encode_plan(&shape, 1).is_some();
+        // Polynomial interpolation over the reals carries ~1e-2 error at
+        // K=16 (the conditioning wall); exact schemes sit at f32 noise.
+        let tol = if info.name == "polynomial" { 5e-2 } else { 1e-3 };
+
+        let mut decode_reads = 0usize;
+        for seed in 0..6 {
+            let job = smoke_job(&spec, 1000 + seed);
+            let (c, report) = run_matmul(&env, &a, &b, &job)
+                .unwrap_or_else(|e| panic!("{spec} seed {seed}: {e}"));
+            assert_eq!(report.scheme, info.name, "{spec}");
+            assert!(report.numerics_ok, "{spec} seed {seed}");
+            assert!(report.decode_ok, "{spec} seed {seed}");
+            assert!(
+                c.rel_err(&truth) < tol,
+                "{spec} seed {seed}: rel_err {}",
+                c.rel_err(&truth)
+            );
+            assert!(report.comp.virtual_secs > 0.0, "{spec} seed {seed}");
+            if coded {
+                assert!(report.enc.virtual_secs > 0.0, "{spec} seed {seed}");
+                assert_eq!(report.redundancy, scheme_obj.redundancy());
+            }
+            decode_reads += report.dec.blocks_read;
+        }
+        // A coded scheme on a straggler-heavy platform must have decoded
+        // something across six seeds (uncoded schemes never read).
+        if coded {
+            assert!(decode_reads > 0, "{spec}: no decode activity in 6 seeds");
+        } else {
+            assert_eq!(decode_reads, 0, "{spec}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden JobReports
+// ---------------------------------------------------------------------------
+
+fn golden_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("scheme_conformance.json")
+}
+
+#[test]
+fn job_reports_match_goldens_draw_for_draw() {
+    // Fixed platform (paper calibration), fixed inputs, fixed seed: the
+    // sampled timeline of each scheme is a pure function of the seed, so
+    // the blessed timings must reproduce bit-for-bit (compared at the
+    // golden suite's 1e-6 tolerance).
+    let env = Env::host();
+    let (a, b) = inputs(64, 48, 64, 3);
+    let mut reports = Vec::new();
+    for info in scheme::REGISTRY {
+        let job = smoke_job(&info.smoke_spec(), 2024);
+        let (_, r1) = run_matmul(&env, &a, &b, &job).unwrap();
+        let (_, r2) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert_eq!(
+            r1.to_json().to_string_pretty(),
+            r2.to_json().to_string_pretty(),
+            "{}: two consecutive runs diverged",
+            info.name
+        );
+        reports.push(r1.to_json());
+    }
+    let observed = json::obj()
+        .field("grid", "4x4 over 64×48·64ᵀ, seed 2024")
+        .field("schemes", Json::Arr(reports))
+        .build();
+
+    if std::env::var("SLEC_BLESS").is_ok() {
+        fs::create_dir_all(golden_path().parent().unwrap()).unwrap();
+        fs::write(&golden_path(), observed.to_string_pretty()).unwrap();
+        println!("blessed {}", golden_path().display());
+        return;
+    }
+    let golden = json::load_file(&golden_path()).unwrap_or_else(|e| {
+        panic!("missing/invalid golden ({e}); run SLEC_BLESS=1 cargo test --test scheme_conformance")
+    });
+    let mut diffs = Vec::new();
+    json::golden_diff(&golden, &observed, "", &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "{} field(s) diverged from golden:\n  {}",
+        diffs.len(),
+        diffs.join("\n  ")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// A sixth scheme is one trait impl — no coordinator change
+// ---------------------------------------------------------------------------
+
+/// r-replication: every output block is computed `copies` times and the
+/// compute phase cuts off as soon as each block has ≥1 arrived copy.
+/// Deliberately NOT in the registry: it exists to prove `run_job` takes
+/// any `&dyn CodingScheme`.
+struct ReplicatedScheme {
+    s_a: usize,
+    s_b: usize,
+    copies: usize,
+}
+
+impl ReplicatedScheme {
+    fn blocks(&self) -> usize {
+        self.s_a * self.s_b
+    }
+}
+
+impl ComputePolicy for ReplicatedScheme {
+    fn compute_tasks(&self) -> usize {
+        self.copies * self.blocks()
+    }
+
+    fn compute_termination(&self) -> Termination {
+        Termination::EarliestDecodable
+    }
+
+    fn decode_probe(&self) -> DecodeProbe {
+        let blocks = self.blocks();
+        Box::new(move |mask, _| {
+            (0..blocks).all(|b| mask.iter().skip(b).step_by(blocks).any(|&x| x))
+        })
+    }
+}
+
+impl CodingScheme for ReplicatedScheme {
+    fn name(&self) -> &'static str {
+        "replicated"
+    }
+
+    fn redundancy(&self) -> f64 {
+        self.copies as f64 - 1.0
+    }
+
+    fn decode_plan(&self, _arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
+        DecodePlan::none()
+    }
+
+    fn encode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        (a_blocks.to_vec(), b_blocks.to_vec())
+    }
+
+    fn cell_product(
+        &self,
+        backend: &dyn ComputeBackend,
+        a_blocks: &[Matrix],
+        b_blocks: &[Matrix],
+        cell: usize,
+    ) -> Matrix {
+        let idx = cell % self.blocks();
+        backend.block_product(&a_blocks[idx / self.s_b], &b_blocks[idx % self.s_b])
+    }
+
+    fn decode_numeric(
+        &self,
+        _backend: &dyn ComputeBackend,
+        mut grid: Vec<Option<Matrix>>,
+        _arrival_order: &[usize],
+    ) -> anyhow::Result<Vec<Matrix>> {
+        let blocks = self.blocks();
+        (0..blocks)
+            .map(|b| {
+                (0..self.copies)
+                    .find_map(|c| grid[c * blocks + b].take())
+                    .ok_or_else(|| anyhow::anyhow!("block {b} lost in every replica"))
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn a_sixth_scheme_runs_through_the_generic_driver() {
+    let env = Env::host();
+    let (a, b) = inputs(32, 24, 32, 9);
+    let truth = matmul_bt(&a, &b);
+    let replicated = ReplicatedScheme {
+        s_a: 4,
+        s_b: 4,
+        copies: 2,
+    };
+    let job = MatmulJob::builder()
+        .blocks(4, 4)
+        .seed(77)
+        .job_id("sixth")
+        .build();
+    let mut rng = Pcg64::new(job.seed);
+    let (c, report) = run_job(&env, &a, &b, &job, &replicated, &mut rng).unwrap();
+    assert_eq!(report.scheme, "replicated");
+    assert_eq!(report.comp.tasks, 32); // 2 copies × 16 blocks
+    assert!((report.redundancy - 1.0).abs() < 1e-12);
+    assert!(report.comp.virtual_secs > 0.0);
+    assert_eq!(report.enc.virtual_secs, 0.0); // replication has no encode
+    assert!(c.rel_err(&truth) < 1e-5, "rel_err {}", c.rel_err(&truth));
+}
+
+// ---------------------------------------------------------------------------
+// README stays in sync with the registry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn readme_scheme_table_lists_every_registered_scheme() {
+    let readme = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("README.md");
+    let text = fs::read_to_string(&readme).expect("README.md at repo root");
+    for info in scheme::REGISTRY {
+        assert!(
+            text.contains(&format!("`{}`", info.name)),
+            "README scheme table is missing registered scheme '{}'",
+            info.name
+        );
+    }
+}
