@@ -1,9 +1,16 @@
 # Convenience targets. The Rust workspace is fully usable without make;
-# `artifacts` is only needed for the PJRT path (see README feature matrix).
+# `make artifacts` regenerates every machine-produced artifact the repo
+# tracks: AOT HLO kernels (PJRT path), quick-mode bench JSON (the perf
+# trajectory seeded by CI's bench-smoke job), and freshly blessed
+# scenario / scheme-conformance goldens.
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test bench artifacts clean-artifacts
+# Derived from the bench sources (same enumeration as CI's bench-smoke
+# job), so a new bench binary is covered with no Makefile edit.
+BENCHES := $(basename $(notdir $(wildcard rust/benches/bench_*.rs)))
+
+.PHONY: all build test bench artifacts aot-artifacts bench-artifacts golden-artifacts clean-artifacts
 
 all: build
 
@@ -16,11 +23,29 @@ test:
 bench:
 	cargo bench
 
+artifacts: aot-artifacts bench-artifacts golden-artifacts
+
 # AOT-lower the L1/L2 kernels to HLO-text artifacts + manifest.json.
 # Needs a Python with JAX (the aot module imports `compile.model`, so run
 # from python/). No-op for the default (HostBackend) build and tests.
-artifacts:
+aot-artifacts:
 	cd python && python3 -m compile.aot --out-dir $(abspath $(ARTIFACTS_DIR))
+
+# Quick-mode run of every bench binary, dropping BENCH_<name>.json into
+# the artifacts dir (same pipeline as CI's bench-smoke job).
+bench-artifacts:
+	mkdir -p $(ARTIFACTS_DIR)
+	@for b in $(BENCHES); do \
+		echo "== $$b"; \
+		SLEC_BENCH_QUICK=1 SLEC_BENCH_DIR=$(abspath $(ARTIFACTS_DIR)) \
+			cargo bench --bench $$b || exit 1; \
+	done
+
+# Re-bless the scenario + scheme-conformance goldens in place (pins the
+# timing fields that stay null until blessed on a machine with a
+# toolchain); review the diff before committing.
+golden-artifacts:
+	SLEC_BLESS=1 cargo test --test scenarios_golden --test scheme_conformance -q
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS_DIR)

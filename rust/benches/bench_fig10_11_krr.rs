@@ -1,18 +1,26 @@
 //! Bench: regenerate Figs 10–11 (KRR-PCG, ADULT-like and EPSILON-like).
 use slec::config::Config;
 use slec::figures::{fig10_11, RunScale};
-use slec::util::bench::banner;
+use slec::util::bench::{banner, run_once, BenchReport};
 
 fn main() {
     banner("Figs 10–11 — KRR with PCG, coded vs speculative");
+    let mut report = BenchReport::new("fig10_11_krr");
     let cfg = Config { results_dir: "results".into(), ..Default::default() };
     for ds in [fig10_11::Dataset::AdultLike, fig10_11::Dataset::EpsilonLike] {
-        let j = fig10_11::run(&cfg, RunScale::Quick, ds).expect("krr");
+        let (j, secs) = run_once(&format!("{ds:?}"), || {
+            fig10_11::run(&cfg, RunScale::Quick, ds).expect("krr")
+        });
+        let savings = j.get("savings_pct").unwrap().as_f64().unwrap();
         println!(
             "{:?}: savings {:.1}% (paper {:.1}%)",
             ds,
-            j.get("savings_pct").unwrap().as_f64().unwrap(),
+            savings,
             j.get("paper_savings_pct").unwrap().as_f64().unwrap()
         );
+        let tag = format!("{ds:?}").to_lowercase();
+        report.value(&format!("{tag}_wall_s"), secs);
+        report.value(&format!("{tag}_savings_pct"), savings);
     }
+    report.write();
 }

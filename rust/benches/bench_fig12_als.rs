@@ -1,14 +1,16 @@
 //! Bench: regenerate Fig 12 (ALS matrix completion).
 use slec::config::Config;
 use slec::figures::{fig12, RunScale};
-use slec::util::bench::banner;
+use slec::util::bench::{banner, run_once, BenchReport};
 
 fn main() {
     banner("Fig 12 — ALS matrix completion, coded vs speculative");
+    let mut report = BenchReport::new("fig12_als");
     let cfg = Config { results_dir: "results".into(), ..Default::default() };
-    let j = fig12::run(&cfg, RunScale::Quick).expect("fig12");
-    println!(
-        "savings {:.1}% (paper 20%)",
-        j.get("savings_pct").unwrap().as_f64().unwrap()
-    );
+    let (j, secs) = run_once("fig12", || fig12::run(&cfg, RunScale::Quick).expect("fig12"));
+    let savings = j.get("savings_pct").unwrap().as_f64().unwrap();
+    println!("savings {savings:.1}% (paper 20%)");
+    report.value("fig12_wall_s", secs);
+    report.value("savings_pct", savings);
+    report.write();
 }

@@ -3,13 +3,15 @@
 use slec::config::Config;
 use slec::figures::{fig1, RunScale};
 use slec::platform::{StragglerModel, WorkProfile};
-use slec::util::bench::{banner, Bencher};
+use slec::util::bench::{banner, run_once, BenchReport, Bencher};
 use slec::util::rng::Pcg64;
 
 fn main() {
     banner("Fig 1 — job-time distribution + sampler throughput");
+    let mut report = BenchReport::new("fig1_job_times");
     let cfg = Config { results_dir: "results".into(), ..Default::default() };
-    fig1::run(&cfg, RunScale::Quick).expect("fig1");
+    let (_, fig_secs) = run_once("fig1", || fig1::run(&cfg, RunScale::Quick).expect("fig1"));
+    report.value("fig1_wall_s", fig_secs);
 
     let model = StragglerModel::new(Default::default(), Default::default());
     let work = WorkProfile::block_product(2048, 16384, 2048);
@@ -19,5 +21,9 @@ fn main() {
         model.sample_fleet(&work, 3600, &mut rng)
     });
     println!("{}", r.line());
-    println!("throughput: {:.1} M samples/s", 3600.0 / r.summary.p50 / 1e6);
+    let throughput = 3600.0 / r.summary.p50 / 1e6;
+    println!("throughput: {throughput:.1} M samples/s");
+    report.push(&r);
+    report.value("sample_throughput_msamples_per_s", throughput);
+    report.write();
 }

@@ -1,13 +1,20 @@
 //! Bench: regenerate Fig 3 (power iteration, coded vs speculative).
 use slec::config::Config;
 use slec::figures::{fig3, RunScale};
-use slec::util::bench::banner;
+use slec::util::bench::{banner, run_once, BenchReport};
 
 fn main() {
     banner("Fig 3 — power iteration, coded vs speculative execution");
+    let mut report = BenchReport::new("fig3_power_iteration");
     let cfg = Config { results_dir: "results".into(), ..Default::default() };
-    let j = fig3::run(&cfg, RunScale::Quick).expect("fig3");
-    let speedup = j.get("spec_total_s").unwrap().as_f64().unwrap()
-        / j.get("coded_total_s").unwrap().as_f64().unwrap();
+    let (j, secs) = run_once("fig3", || fig3::run(&cfg, RunScale::Quick).expect("fig3"));
+    let spec = j.get("spec_total_s").unwrap().as_f64().unwrap();
+    let coded = j.get("coded_total_s").unwrap().as_f64().unwrap();
+    let speedup = spec / coded;
     println!("end-to-end speedup: {speedup:.2}× (paper: ~2×)");
+    report.value("fig3_wall_s", secs);
+    report.value("spec_total_s", spec);
+    report.value("coded_total_s", coded);
+    report.value("speedup", speedup);
+    report.write();
 }

@@ -5,14 +5,16 @@ use slec::config::Config;
 use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
 use slec::figures::{fig5, RunScale};
 use slec::linalg::Matrix;
-use slec::util::bench::banner;
+use slec::util::bench::{banner, run_once, BenchReport};
 use slec::util::rng::Pcg64;
 use slec::util::stats::render_table;
 
 fn main() {
     banner("Fig 5 — matmul schemes vs dimension");
+    let mut report = BenchReport::new("fig5_matmul_schemes");
     let cfg = Config { results_dir: "results".into(), ..Default::default() };
-    fig5::run(&cfg, RunScale::Quick).expect("fig5");
+    let (_, fig_secs) = run_once("fig5", || fig5::run(&cfg, RunScale::Quick).expect("fig5"));
+    report.value("fig5_wall_s", fig_secs);
 
     // Ablation: end-to-end latency vs L at fixed worker budget.
     banner("ablation — latency vs L (virtual 20000², 20 blocks/side)");
@@ -38,12 +40,15 @@ fn main() {
             let (_, r) = run_matmul(&env, &a, &b, &job).expect("run");
             total += r.total_secs();
         }
+        let mean = total / trials as f64;
         let red = slec::codes::layout::product_redundancy(l, l);
+        report.value(&format!("ablation_l{l}_mean_total_s"), mean);
         rows.push(vec![
             format!("{l}"),
             format!("{:.0}%", red * 100.0),
-            format!("{:.1}", total / trials as f64),
+            format!("{mean:.1}"),
         ]);
     }
     println!("{}", render_table(&["L", "redundancy", "mean total (s)"], &rows));
+    report.write();
 }

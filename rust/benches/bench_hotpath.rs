@@ -1,15 +1,18 @@
 //! Hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
 //! host GEMM roofline, peeling-decoder planning throughput, coded
-//! encode/decode numerics, the event-simulation loop, and (with the
-//! `pjrt` feature) PJRT block-product latency vs host.
+//! encode/decode numerics, the event-simulation loop, the sharded
+//! object store, and (with the `pjrt` feature) PJRT block-product
+//! latency vs host.
 use slec::codes::peeling::plan_peel;
 use slec::linalg::{gemm, Matrix, Partition};
 use slec::platform::{launch, StragglerModel, WorkProfile};
-use slec::util::bench::{banner, black_box, Bencher};
+use slec::storage::{MemStore, ObjectStore};
+use slec::util::bench::{banner, black_box, BenchReport, Bencher};
 use slec::util::rng::Pcg64;
 
 fn main() {
-    banner("hot paths — GEMM / peeling / encode-decode / PJRT / event loop");
+    banner("hot paths — GEMM / peeling / encode-decode / store / PJRT / event loop");
+    let mut report = BenchReport::new("hotpath");
     let b = Bencher::default();
     let mut rng = Pcg64::new(1);
 
@@ -20,6 +23,8 @@ fn main() {
         let r = b.bench(&format!("host gemm {n}³"), || gemm::matmul_bt(&a, &bm));
         let gflops = 2.0 * (n as f64).powi(3) / r.summary.p50 / 1e9;
         println!("{}  → {gflops:.2} GFLOP/s", r.line());
+        report.push(&r);
+        report.value(&format!("gemm_{n}_gflops"), gflops);
     }
 
     // Peeling planner throughput (decode-phase planning).
@@ -35,6 +40,7 @@ fn main() {
         r.line(),
         1.0 / r.summary.p50 / 1e6
     );
+    report.push(&r);
 
     // Coded encode numerics at fig-5 block scale.
     let a = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
@@ -45,6 +51,21 @@ fn main() {
         slec::codes::local_product::LocalProductCode::encode_side(layout, &blocks)
     });
     println!("{}", r.line());
+    report.push(&r);
+
+    // Sharded object store: chunked put/get of fig-5-scale blocks.
+    {
+        let store = MemStore::with_config(16, 64 << 10);
+        let blob = Matrix::randn(256, 1024, &mut rng, 0.0, 1.0).to_bytes();
+        let r = b.bench("store put+get 1 MB (16 shards, 64 KB chunks)", || {
+            store.put("bench/blob", blob.clone());
+            black_box(store.get("bench/blob"))
+        });
+        let mbps = blob.len() as f64 * 2.0 / r.summary.p50 / 1e6;
+        println!("{}  → {mbps:.0} MB/s through the store", r.line());
+        report.push(&r);
+        report.value("store_roundtrip_mb_per_s", mbps);
+    }
 
     // Event loop: launch + order statistics over a 3600-worker phase.
     let model = StragglerModel::new(Default::default(), Default::default());
@@ -59,6 +80,7 @@ fn main() {
         r.line(),
         3600.0 / r.summary.p50 / 1e6
     );
+    report.push(&r);
 
     // Discrete-event core: a bounded-pool phase pushes every task through
     // the queue twice (start + finish) with FIFO dispatch in between.
@@ -84,15 +106,17 @@ fn main() {
             r.line(),
             3600.0 / r.summary.p50 / 1e6
         );
+        report.push(&r);
     }
 
     // PJRT vs host block product (requires the `pjrt` feature and
     // `make artifacts`).
-    bench_pjrt(&b, &mut rng);
+    bench_pjrt(&b, &mut report, &mut rng);
+    report.write();
 }
 
 #[cfg(feature = "pjrt")]
-fn bench_pjrt(b: &Bencher, rng: &mut Pcg64) {
+fn bench_pjrt(b: &Bencher, report: &mut BenchReport, rng: &mut Pcg64) {
     use slec::runtime::{ComputeBackend, HostBackend, PjrtBackend, PjrtRuntime};
 
     let dir = PjrtRuntime::default_dir();
@@ -110,6 +134,8 @@ fn bench_pjrt(b: &Bencher, rng: &mut Pcg64) {
         });
         println!("{}", r1.line());
         println!("{}", r2.line());
+        report.push(&r1);
+        report.push(&r2);
         let (ops, fb) = be.counts();
         println!("pjrt ops {ops}, fallbacks {fb}");
     } else {
@@ -118,6 +144,6 @@ fn bench_pjrt(b: &Bencher, rng: &mut Pcg64) {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn bench_pjrt(_b: &Bencher, _rng: &mut Pcg64) {
+fn bench_pjrt(_b: &Bencher, _report: &mut BenchReport, _rng: &mut Pcg64) {
     println!("(built without the `pjrt` feature — host-only run; rebuild with --features pjrt for the PJRT comparison)");
 }

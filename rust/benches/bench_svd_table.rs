@@ -1,14 +1,16 @@
 //! Bench: regenerate the §IV-C SVD table.
 use slec::config::Config;
 use slec::figures::{svd_table, RunScale};
-use slec::util::bench::banner;
+use slec::util::bench::{banner, run_once, BenchReport};
 
 fn main() {
     banner("§IV-C — tall-skinny SVD, coded vs speculative");
+    let mut report = BenchReport::new("svd_table");
     let cfg = Config { results_dir: "results".into(), ..Default::default() };
-    let j = svd_table::run(&cfg, RunScale::Quick).expect("svd");
-    println!(
-        "reduction {:.1}% (paper 26.5%)",
-        j.get("savings_pct").unwrap().as_f64().unwrap()
-    );
+    let (j, secs) = run_once("svd", || svd_table::run(&cfg, RunScale::Quick).expect("svd"));
+    let savings = j.get("savings_pct").unwrap().as_f64().unwrap();
+    println!("reduction {savings:.1}% (paper 26.5%)");
+    report.value("svd_wall_s", secs);
+    report.value("savings_pct", savings);
+    report.write();
 }

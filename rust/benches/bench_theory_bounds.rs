@@ -3,13 +3,16 @@
 use slec::codes::{montecarlo, theory};
 use slec::config::Config;
 use slec::figures::{fig6, fig9, RunScale};
-use slec::util::bench::{banner, Bencher};
+use slec::util::bench::{banner, run_once, BenchReport, Bencher};
 
 fn main() {
     banner("Figs 6 & 9 — theory bounds with Monte-Carlo validation");
+    let mut report = BenchReport::new("theory_bounds");
     let cfg = Config { results_dir: "results".into(), ..Default::default() };
-    fig6::run(&cfg, RunScale::Quick).expect("fig6");
-    fig9::run(&cfg, RunScale::Quick).expect("fig9");
+    let (_, f6) = run_once("fig6", || fig6::run(&cfg, RunScale::Quick).expect("fig6"));
+    let (_, f9) = run_once("fig9", || fig9::run(&cfg, RunScale::Quick).expect("fig9"));
+    report.value("fig6_wall_s", f6);
+    report.value("fig9_wall_s", f9);
 
     let b = Bencher::default();
     let r1 = b.bench("thm2_bound(10,10,0.02)", || theory::thm2_bound(10, 10, 0.02));
@@ -18,8 +21,10 @@ fn main() {
     });
     println!("{}", r1.line());
     println!("{}", r2.line());
-    println!(
-        "MC grid throughput: {:.2} M grids/s",
-        10_000.0 / r2.summary.p50 / 1e6
-    );
+    let throughput = 10_000.0 / r2.summary.p50 / 1e6;
+    println!("MC grid throughput: {throughput:.2} M grids/s");
+    report.push(&r1);
+    report.push(&r2);
+    report.value("mc_throughput_mgrids_per_s", throughput);
+    report.write();
 }

@@ -434,6 +434,10 @@ impl CodingScheme for LocalProductScheme {
         self.code.redundancy()
     }
 
+    fn coded_grid_dims(&self) -> (usize, usize) {
+        self.code.coded_grid()
+    }
+
     fn encode_plan(&self, shape: &JobShape, fleet: usize) -> Option<EncodePlan> {
         // Column-sliced across a small fleet (Remark 1),
         // straggler-protected by speculative relaunch.

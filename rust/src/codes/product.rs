@@ -422,6 +422,10 @@ impl CodingScheme for ProductScheme {
         self.code.redundancy()
     }
 
+    fn coded_grid_dims(&self) -> (usize, usize) {
+        self.code.coded_grid()
+    }
+
     fn encode_plan(&self, shape: &JobShape, fleet: usize) -> Option<EncodePlan> {
         // Each parity reads ALL s blocks of its side (global parities —
         // the encode-cost handicap vs local codes), column-sliced across

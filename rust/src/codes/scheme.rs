@@ -157,6 +157,17 @@ pub trait CodingScheme: ComputePolicy {
         decode_workers: usize,
     ) -> DecodePlan;
 
+    /// Coded compute-grid dims `(rows, cols)` — plan metadata for the
+    /// storage-aware scenario timing model: grid cell `c` reads coded
+    /// a-block `c / cols` and coded b-block `c % cols` (the same
+    /// row-major convention as [`CodingScheme::cell_product`]). 1-D
+    /// schemes (polynomial) keep the `1 × n` default, where cell `c`
+    /// reads coded input pair `c`. Must satisfy
+    /// `rows · cols == compute_tasks()`.
+    fn coded_grid_dims(&self) -> (usize, usize) {
+        (1, self.compute_tasks())
+    }
+
     /// Can the scheme produce real numerics at this size? (Polynomial
     /// codes past their conditioning wall return `false`; the driver then
     /// simulates timing only and reports `numerics_ok = false`.)
@@ -251,6 +262,10 @@ impl CodingScheme for UncodedScheme {
         "uncoded"
     }
 
+    fn coded_grid_dims(&self) -> (usize, usize) {
+        (self.s_a, self.s_b)
+    }
+
     fn decode_plan(&self, _arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
         DecodePlan::none()
     }
@@ -289,6 +304,10 @@ impl ComputePolicy for SpeculativeScheme {
 impl CodingScheme for SpeculativeScheme {
     fn name(&self) -> &'static str {
         "speculative"
+    }
+
+    fn coded_grid_dims(&self) -> (usize, usize) {
+        (self.s_a, self.s_b)
     }
 
     fn decode_plan(&self, _arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
@@ -617,6 +636,22 @@ mod tests {
             assert_eq!(s.compute_tasks(), 16);
             assert!(s.numerics_feasible());
         }
+    }
+
+    #[test]
+    fn coded_grid_dims_cover_the_task_fanout() {
+        // Plan metadata contract: rows · cols == compute_tasks for every
+        // registered scheme (the storage timing model maps cells to
+        // coded-block reads through these dims).
+        for info in REGISTRY {
+            let scheme = parse(&info.smoke_spec()).unwrap();
+            let s = instantiate(scheme, 4, 4).unwrap();
+            let (r, c) = s.coded_grid_dims();
+            assert_eq!(r * c, s.compute_tasks(), "{}", info.name);
+            assert!(r >= 1 && c >= 1, "{}", info.name);
+        }
+        let un = instantiate(Scheme::Uncoded, 3, 5).unwrap();
+        assert_eq!(un.coded_grid_dims(), (3, 5));
     }
 
     #[test]

@@ -13,6 +13,28 @@ use crate::platform::{StragglerModel, StragglerParams, WorkerRates};
 use crate::storage::cost::CostModel;
 use crate::util::json::{obj, Json};
 
+/// Object-store construction settings (see `storage::MemStore` and
+/// `storage::cache::CachedStore`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreSettings {
+    /// Shard count of the in-memory store.
+    pub shards: usize,
+    /// Multipart chunk size in bytes; 0 disables chunking.
+    pub chunk_bytes: usize,
+    /// LRU read-through cache capacity in bytes; 0 disables the cache.
+    pub cache_bytes: usize,
+}
+
+impl Default for StoreSettings {
+    fn default() -> Self {
+        StoreSettings {
+            shards: crate::storage::DEFAULT_SHARDS,
+            chunk_bytes: 0,
+            cache_bytes: 0,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -20,6 +42,8 @@ pub struct Config {
     pub straggler: StragglerParams,
     /// Worker compute/communication rates.
     pub rates: WorkerRates,
+    /// Object-store construction (shards, chunking, cache).
+    pub storage: StoreSettings,
     /// Compute backend: "host" or "pjrt".
     pub backend: String,
     /// Artifacts directory for the PJRT backend.
@@ -37,6 +61,7 @@ impl Default for Config {
         Config {
             straggler: StragglerParams::default(),
             rates: WorkerRates::default(),
+            storage: StoreSettings::default(),
             backend: "host".into(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             results_dir: PathBuf::from("results"),
@@ -63,12 +88,12 @@ impl Config {
             .ok_or_else(|| anyhow::anyhow!("config root must be an object"))?;
         for (key, val) in fields {
             match key.as_str() {
-                "platform" => {
+                "platform" | "storage" => {
                     let sub = val
                         .as_obj()
-                        .ok_or_else(|| anyhow::anyhow!("'platform' must be an object"))?;
+                        .ok_or_else(|| anyhow::anyhow!("'{key}' must be an object"))?;
                     for (k, v) in sub {
-                        self.set(&format!("platform.{k}"), &json_scalar(v))?;
+                        self.set(&format!("{key}.{k}"), &json_scalar(v))?;
                     }
                 }
                 other => self.set(other, &json_scalar(val))?,
@@ -96,6 +121,13 @@ impl Config {
             "platform.flops_per_s" => self.rates.flops_per_s = f64v()?,
             "platform.s3_latency_s" => self.rates.cost.op_latency_s = f64v()?,
             "platform.s3_bandwidth_bps" => self.rates.cost.bandwidth_bps = f64v()?,
+            "storage.shards" => {
+                let shards: usize = value.parse()?;
+                anyhow::ensure!(shards >= 1, "'storage.shards' must be ≥ 1");
+                self.storage.shards = shards;
+            }
+            "storage.chunk_bytes" => self.storage.chunk_bytes = value.parse()?,
+            "storage.cache_bytes" => self.storage.cache_bytes = value.parse()?,
             "backend" => {
                 anyhow::ensure!(
                     value == "host" || value == "pjrt",
@@ -146,8 +178,13 @@ impl Config {
             ),
             _ => (std::sync::Arc::new(crate::runtime::HostBackend), None),
         };
+        let store: std::sync::Arc<dyn crate::storage::ObjectStore> = std::sync::Arc::new(
+            crate::storage::MemStore::with_config(self.storage.shards, self.storage.chunk_bytes),
+        );
         let env = Env::builder()
             .backend(backend)
+            .store(store)
+            .cache_bytes(self.storage.cache_bytes)
             .model(self.model())
             .threads(threads)
             .build();
@@ -170,6 +207,14 @@ impl Config {
                     .field("flops_per_s", self.rates.flops_per_s)
                     .field("s3_latency_s", self.rates.cost.op_latency_s)
                     .field("s3_bandwidth_bps", self.rates.cost.bandwidth_bps)
+                    .build(),
+            )
+            .field(
+                "storage",
+                obj()
+                    .field("shards", self.storage.shards)
+                    .field("chunk_bytes", self.storage.chunk_bytes)
+                    .field("cache_bytes", self.storage.cache_bytes)
                     .build(),
             )
             .field("backend", self.backend.as_str())
@@ -225,6 +270,31 @@ mod tests {
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("platform.p", "abc").is_err());
         assert!(c.set("backend", "gpu").is_err());
+    }
+
+    #[test]
+    fn storage_settings_roundtrip_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.storage, StoreSettings::default());
+        c.set("storage.shards", "4").unwrap();
+        c.set("storage.chunk_bytes", "65536").unwrap();
+        c.set("storage.cache_bytes", "1048576").unwrap();
+        assert_eq!(c.storage.shards, 4);
+        assert_eq!(c.storage.chunk_bytes, 65536);
+        assert_eq!(c.storage.cache_bytes, 1048576);
+        assert!(c.set("storage.shards", "0").is_err());
+        assert!(c.set("storage.nope", "1").is_err());
+        // JSON round-trip carries the storage block.
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.storage.shards, 4);
+        assert_eq!(c2.storage.cache_bytes, 1048576);
+        // And build_env wires the cache through.
+        let (env, _) = c2.build_env().unwrap();
+        assert!(env.cache.is_some());
+        let (env, _) = Config::default().build_env().unwrap();
+        assert!(env.cache.is_none());
     }
 
     #[test]

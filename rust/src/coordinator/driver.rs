@@ -22,11 +22,12 @@
 
 use crate::codes::scheme::{CodingScheme, ComputePolicy, JobShape};
 use crate::coordinator::matmul::{Env, MatmulJob};
-use crate::coordinator::metrics::JobReport;
+use crate::coordinator::metrics::{JobReport, StorageMetrics};
 use crate::linalg::blocked::{assemble_grid, GridShape, Partition};
 use crate::linalg::matrix::Matrix;
 use crate::platform::event::{run_phase, EventSim, PhaseState, Termination};
 use crate::platform::straggler::{StragglerModel, WorkProfile};
+use crate::runtime::manifest::JobManifest;
 use crate::storage::keys;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::parallel_map;
@@ -75,6 +76,12 @@ pub fn run_job(
     let mut report = JobReport::new(scheme.name());
     report.redundancy = scheme.redundancy();
     report.numerics_ok = scheme.numerics_feasible();
+    // Baselines for the per-job storage delta (the store is shared, so
+    // only this job's traffic is attributed to it).
+    let staged = scheme.stages_blocks_in_store();
+    let store_before = env.store.stats();
+    let cache_before = env.cache.as_ref().map(|c| c.stats());
+    let mut manifest = JobManifest::new(&job.job_id);
 
     let (vm, vk, vl) = job.vdims(a, b);
     let shape = JobShape::new(job.s_a, job.s_b, (vm, vk, vl));
@@ -100,18 +107,22 @@ pub fn run_job(
         report.enc.blocks_read = plan.blocks_read;
     }
 
-    // Numerics: encode through the backend; the local scheme stashes the
+    // Numerics: encode through the backend; staging schemes stash the
     // coded blocks in the store (the serverless dataflow — workers
-    // exchange blocks via storage).
+    // exchange blocks via storage) and record them in the job manifest.
     let backend = env.backend.as_ref();
     let (a_coded, b_coded) = scheme.encode_numeric(backend, &a_blocks, &b_blocks);
-    if scheme.stages_blocks_in_store() {
+    if staged {
         let store = env.store.as_ref();
         for (i, blk) in a_coded.iter().enumerate() {
-            crate::storage::put_matrix(store, &keys::coded_block(&job.job_id, "a", i), blk);
+            let key = keys::coded_block(&job.job_id, "a", i);
+            crate::storage::put_matrix(store, &key, blk);
+            manifest.push(key, blk.rows, blk.cols);
         }
         for (j, blk) in b_coded.iter().enumerate() {
-            crate::storage::put_matrix(store, &keys::coded_block(&job.job_id, "b", j), blk);
+            let key = keys::coded_block(&job.job_id, "b", j);
+            crate::storage::put_matrix(store, &key, blk);
+            manifest.push(key, blk.rows, blk.cols);
         }
     }
 
@@ -153,6 +164,29 @@ pub fn run_job(
         vec![None; n_tasks]
     };
 
+    // The workers' block-products land in the store too, and decode
+    // reads them back through the (optionally cached) store — real bytes
+    // on the host path, the paper's S3 round-trip between f_comp and
+    // f_dec. The byte round-trip is exact (f32 wire format), so the
+    // decoded numerics are unchanged.
+    if staged && report.numerics_ok {
+        let store = env.store.as_ref();
+        let rb = b_coded.len();
+        for (cell, slot) in grid.iter().enumerate() {
+            if let Some(m) = slot {
+                let key = keys::out_block(&job.job_id, cell / rb, cell % rb);
+                crate::storage::put_matrix(store, &key, m);
+                manifest.push(key, m.rows, m.cols);
+            }
+        }
+        for (cell, slot) in grid.iter_mut().enumerate() {
+            if slot.is_some() {
+                let key = keys::out_block(&job.job_id, cell / rb, cell % rb);
+                *slot = Some(crate::storage::get_matrix(store, &key)?);
+            }
+        }
+    }
+
     // --- Decode phase from the arrival mask.
     let plan = scheme.decode_plan(&arrived, &shape, job.decode_workers);
     report.dec.tasks = plan.profiles.len();
@@ -186,15 +220,24 @@ pub fn run_job(
 
     // --- Numeric decode and output assembly.
     if !report.numerics_ok {
+        if staged {
+            report.storage = Some(storage_delta(env, &store_before, cache_before));
+        }
         return Ok((Matrix::zeros(a.rows, b.rows), report));
     }
     let sys = scheme.decode_numeric(backend, grid, &arrival_order)?;
-    if scheme.stages_blocks_in_store() {
+    if staged {
         let store = env.store.as_ref();
         for (idx, blk) in sys.iter().enumerate() {
             let (i, j) = (idx / job.s_b, idx % job.s_b);
-            crate::storage::put_matrix(store, &keys::result_block(&job.job_id, i, j), blk);
+            let key = keys::result_block(&job.job_id, i, j);
+            crate::storage::put_matrix(store, &key, blk);
+            manifest.push(key, blk.rows, blk.cols);
         }
+        // The manifest is the workers' lookup contract: everything the
+        // job staged, discoverable from the job id alone.
+        manifest.save(store);
+        report.storage = Some(storage_delta(env, &store_before, cache_before));
     }
     let c = assemble_grid(
         GridShape {
@@ -204,4 +247,33 @@ pub fn run_job(
         &sys,
     );
     Ok((c, report))
+}
+
+/// This job's share of the store/cache counters since `before`.
+fn storage_delta(
+    env: &Env,
+    before: &crate::storage::StatsSnapshot,
+    cache_before: Option<crate::storage::cache::CacheStats>,
+) -> StorageMetrics {
+    let now = env.store.stats();
+    let (cache_hits, cache_misses) = match (env.cache.as_ref(), cache_before) {
+        (Some(cache), Some(b)) => {
+            let c = cache.stats();
+            (
+                c.hits.saturating_sub(b.hits),
+                c.misses.saturating_sub(b.misses),
+            )
+        }
+        _ => (0, 0),
+    };
+    StorageMetrics {
+        puts: now.puts.saturating_sub(before.puts),
+        gets: now.gets.saturating_sub(before.gets),
+        bytes_in: now.bytes_in.saturating_sub(before.bytes_in),
+        bytes_out: now.bytes_out.saturating_sub(before.bytes_out),
+        hits: now.hits.saturating_sub(before.hits),
+        misses: now.misses.saturating_sub(before.misses),
+        cache_hits,
+        cache_misses,
+    }
 }

@@ -29,7 +29,8 @@ use crate::linalg::matrix::Matrix;
 use crate::platform::event::{EventSim, Pool};
 use crate::platform::StragglerModel;
 use crate::runtime::ComputeBackend;
-use crate::storage::InMemoryStore;
+use crate::storage::cache::{BlockCache, CachedStore};
+use crate::storage::{MemStore, ObjectStore};
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::num_threads;
 
@@ -47,7 +48,11 @@ pub use crate::codes::product::product_decode_profile;
 /// Shared execution environment.
 pub struct Env {
     pub backend: Arc<dyn ComputeBackend>,
-    pub store: Arc<InMemoryStore>,
+    /// The simulated S3: a sharded [`MemStore`] by default, optionally
+    /// behind an LRU read-through cache (see [`EnvBuilder::cache_bytes`]).
+    pub store: Arc<dyn ObjectStore>,
+    /// Stats handle of the read-through cache, when one is configured.
+    pub cache: Option<Arc<BlockCache>>,
     pub model: StragglerModel,
     /// Host threads used to execute the real numerics.
     pub threads: usize,
@@ -64,10 +69,11 @@ pub struct Env {
 #[derive(Default)]
 pub struct EnvBuilder {
     backend: Option<Arc<dyn ComputeBackend>>,
-    store: Option<Arc<InMemoryStore>>,
+    store: Option<Arc<dyn ObjectStore>>,
     model: Option<StragglerModel>,
     threads: Option<usize>,
     pool: Option<usize>,
+    cache_bytes: usize,
 }
 
 impl EnvBuilder {
@@ -77,9 +83,16 @@ impl EnvBuilder {
         self
     }
 
-    /// Object store (default: a fresh [`InMemoryStore`]).
-    pub fn store(mut self, store: Arc<InMemoryStore>) -> Self {
+    /// Object store (default: a fresh sharded [`MemStore`]).
+    pub fn store(mut self, store: Arc<dyn ObjectStore>) -> Self {
         self.store = Some(store);
+        self
+    }
+
+    /// Put an LRU read-through cache of `bytes` capacity in front of the
+    /// store (default: none; 0 disables).
+    pub fn cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache_bytes = bytes;
         self
     }
 
@@ -102,11 +115,20 @@ impl EnvBuilder {
     }
 
     pub fn build(self) -> Env {
+        let base: Arc<dyn ObjectStore> = self.store.unwrap_or_else(|| Arc::new(MemStore::new()));
+        let (store, cache) = if self.cache_bytes > 0 {
+            let cached = Arc::new(CachedStore::new(base, self.cache_bytes));
+            let handle = cached.cache();
+            (cached as Arc<dyn ObjectStore>, Some(handle))
+        } else {
+            (base, None)
+        };
         Env {
             backend: self
                 .backend
                 .unwrap_or_else(|| Arc::new(crate::runtime::HostBackend)),
-            store: self.store.unwrap_or_else(|| Arc::new(InMemoryStore::new())),
+            store,
+            cache,
             model: self
                 .model
                 .unwrap_or_else(|| StragglerModel::new(Default::default(), Default::default())),
@@ -468,6 +490,47 @@ mod tests {
         assert_eq!(r_wide.comp.virtual_secs, r_unb.comp.virtual_secs);
         assert_eq!(r_wide.enc.virtual_secs, r_unb.enc.virtual_secs);
         assert_eq!(r_wide.dec.virtual_secs, r_unb.dec.virtual_secs);
+    }
+
+    #[test]
+    fn staging_roundtrips_through_cached_store_with_manifest() {
+        let env = Env::builder().cache_bytes(1 << 20).build();
+        let (a, b) = inputs(64, 48, 64, 9);
+        let job = MatmulJob {
+            s_a: 4,
+            s_b: 4,
+            scheme: Scheme::LocalProduct { l_a: 2, l_b: 2 },
+            seed: 3,
+            job_id: "cached".into(),
+            ..Default::default()
+        };
+        let (_, report) = run_matmul(&env, &a, &b, &job).unwrap();
+        assert!(report.rel_err < 1e-4, "rel_err={}", report.rel_err);
+
+        // The staging scheme attributes its store traffic to the report:
+        // coded inputs + block products + results in, decode reads out.
+        let st = report.storage.expect("staging scheme reports storage");
+        assert!(st.puts > 0 && st.bytes_in > 0);
+        assert!(st.gets > 0 && st.hits == st.gets, "all reads must hit");
+        // Every decode read was cold exactly once (read-through fill).
+        assert_eq!(st.cache_misses, st.gets);
+
+        // Worker block-products are staged under out/ and the manifest
+        // indexes every staged key (itself excluded).
+        assert!(!env.store.list("cached/out/").is_empty());
+        let man = crate::runtime::JobManifest::load(env.store.as_ref(), "cached").unwrap();
+        assert_eq!(man.len(), env.store.list("cached/").len() - 1);
+        assert!(man.get("cached/result/00000x00000").is_some());
+        assert!(man.total_bytes() > 0);
+
+        // The cache actually serves repeats: a second read of the same
+        // object is a hit that never reaches the backing store.
+        let cache = env.cache.as_ref().expect("cache configured");
+        let before = cache.stats();
+        let key = "cached/result/00000x00000";
+        let _ = env.store.get(key);
+        let _ = env.store.get(key);
+        assert!(cache.stats().hits > before.hits);
     }
 
     #[test]

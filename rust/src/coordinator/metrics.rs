@@ -31,6 +31,35 @@ impl PhaseMetrics {
     }
 }
 
+/// Object-store traffic of one job (deltas over the job's lifetime).
+/// `cache_*` stay zero when the environment has no read-through cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StorageMetrics {
+    pub puts: u64,
+    pub gets: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl StorageMetrics {
+    pub fn to_json(&self) -> Json {
+        obj()
+            .field("puts", self.puts)
+            .field("gets", self.gets)
+            .field("bytes_in", self.bytes_in)
+            .field("bytes_out", self.bytes_out)
+            .field("hits", self.hits)
+            .field("misses", self.misses)
+            .field("cache_hits", self.cache_hits)
+            .field("cache_misses", self.cache_misses)
+            .build()
+    }
+}
+
 /// End-to-end report for one coded job.
 #[derive(Debug, Clone)]
 pub struct JobReport {
@@ -54,6 +83,9 @@ pub struct JobReport {
     /// defensive); cutoff policies that cannot guarantee decodability —
     /// deadlines, adaptive/partial-work coding — will report false here.
     pub decode_ok: bool,
+    /// Object-store traffic of this job; `None` for timing-only runs
+    /// (the scenario runner) and schemes that stage nothing.
+    pub storage: Option<StorageMetrics>,
 }
 
 impl JobReport {
@@ -67,6 +99,7 @@ impl JobReport {
             rel_err: f64::NAN,
             numerics_ok: true,
             decode_ok: true,
+            storage: None,
         }
     }
 
@@ -76,7 +109,7 @@ impl JobReport {
     }
 
     pub fn to_json(&self) -> Json {
-        obj()
+        let mut doc = obj()
             .field("scheme", self.scheme.as_str())
             .field("t_enc", self.enc.virtual_secs)
             .field("t_comp", self.comp.virtual_secs)
@@ -89,7 +122,13 @@ impl JobReport {
             .field("enc", self.enc.to_json())
             .field("comp", self.comp.to_json())
             .field("dec", self.dec.to_json())
-            .build()
+            .build();
+        // Appended (not interleaved) so documents without storage data
+        // keep their historical byte-for-byte shape.
+        if let Some(s) = &self.storage {
+            doc.set("storage", s.to_json());
+        }
+        doc
     }
 
     /// One table row: scheme, T_enc, T_comp, T_dec, total.
@@ -126,6 +165,26 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("t_total").unwrap().as_f64(), Some(115.0));
         assert_eq!(j.get("scheme").unwrap().as_str(), Some("local-product"));
+    }
+
+    #[test]
+    fn storage_block_appears_only_when_present() {
+        let mut r = JobReport::new("local-product");
+        assert!(r.to_json().get("storage").is_none());
+        r.storage = Some(StorageMetrics {
+            puts: 3,
+            gets: 7,
+            bytes_in: 100,
+            bytes_out: 250,
+            hits: 7,
+            misses: 0,
+            cache_hits: 2,
+            cache_misses: 5,
+        });
+        let j = r.to_json();
+        let s = j.get("storage").expect("storage block");
+        assert_eq!(s.get("puts").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("cache_misses").unwrap().as_u64(), Some(5));
     }
 
     #[test]

@@ -364,11 +364,46 @@ impl PhaseState {
         term: Termination,
         rng: &mut Pcg64,
     ) -> PhaseState {
+        PhaseState::launch_with_io(sim, model, works, &[], job, term, rng)
+    }
+
+    /// [`PhaseState::launch`] with a deterministic per-task storage
+    /// transfer time added on top of each sampled duration — the
+    /// storage-aware work profiles of the scenario runner (shard
+    /// queueing, cache misses). `io_extra` is either empty (no overlay;
+    /// bit-identical to [`PhaseState::launch`]) or one entry per task.
+    ///
+    /// The overlay is applied *after* sampling, so the RNG draw sequence
+    /// is exactly that of the plain launch path — golden timelines with
+    /// storage off cannot shift. It is also added after the straggle
+    /// factor: shard queueing is a property of the store, not of the
+    /// slow worker, so it is not amplified. Speculative relaunches
+    /// resample without the overlay (by then the read is cache-warm).
+    pub fn launch_with_io(
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        works: &[WorkProfile],
+        io_extra: &[f64],
+        job: usize,
+        term: Termination,
+        rng: &mut Pcg64,
+    ) -> PhaseState {
+        assert!(
+            io_extra.is_empty() || io_extra.len() == works.len(),
+            "io_extra must be empty or one entry per task ({} vs {})",
+            io_extra.len(),
+            works.len()
+        );
         let mut durations = Vec::with_capacity(works.len());
         let mut straggled = Vec::with_capacity(works.len());
-        for w in works {
+        for (i, w) in works.iter().enumerate() {
             let s = model.sample(w, rng);
-            durations.push(s.total());
+            let extra = io_extra.get(i).copied().unwrap_or(0.0);
+            assert!(
+                extra.is_finite() && extra >= 0.0,
+                "storage overlay must be finite and non-negative, got {extra}"
+            );
+            durations.push(s.total() + extra);
             straggled.push(s.straggled);
         }
         PhaseState::from_durations(sim, &durations, &straggled, works.to_vec(), job, term)
@@ -646,6 +681,38 @@ mod tests {
         assert_eq!(ph.completion_times(), durations);
         let max = durations.iter().copied().fold(0.0, f64::max);
         assert_eq!(ph.duration(), max);
+    }
+
+    #[test]
+    fn io_overlay_shifts_durations_without_touching_the_stream() {
+        // Same seed, with and without an overlay: completions differ by
+        // exactly the overlay, and an empty overlay is bit-identical to
+        // the plain launch path (the storage-off golden guarantee).
+        let m = model();
+        let w = work();
+        let run = |io: &[f64], seed: u64| -> Vec<f64> {
+            let mut rng = Pcg64::new(seed);
+            let mut sim = EventSim::unbounded();
+            let mut ph = PhaseState::launch_with_io(
+                &mut sim,
+                &m,
+                &vec![w; 6],
+                io,
+                0,
+                Termination::WaitAll,
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            ph.completion_times()
+        };
+        let plain = run(&[], 21);
+        let zeros = run(&[0.0; 6], 21);
+        assert_eq!(plain, zeros);
+        let io = [5.0, 0.0, 2.5, 0.0, 0.0, 1.0];
+        let shifted = run(&io, 21);
+        for i in 0..6 {
+            assert!((shifted[i] - plain[i] - io[i]).abs() < 1e-12, "task {i}");
+        }
     }
 
     #[test]

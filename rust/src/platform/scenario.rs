@@ -38,6 +38,7 @@ use crate::platform::event::{Completion, EventSim, PhaseState, Pool};
 use crate::platform::straggler::{
     SlowdownDist, StragglerModel, StragglerParams, WorkerRates,
 };
+use crate::storage::{keys, shard_of};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg64;
 
@@ -70,6 +71,29 @@ impl JobSpec {
     }
 }
 
+/// Declarative storage model of a scenario (the optional `storage`
+/// section): a sharded object store serving every job's compute-phase
+/// block reads, with an optional shared read cache.
+///
+/// The overlay is **deterministic and RNG-free**: each compute task's
+/// extra virtual time is derived from shard demand alone (see
+/// [`storage_overlay`]), so a scenario without a `storage` section is
+/// bit-identical to the pre-storage runner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StorageSpec {
+    /// Shard count; block → shard placement is [`shard_of`] over the
+    /// same keys the real `MemStore` would use.
+    pub shards: usize,
+    /// Service bandwidth of one shard, bytes/second.
+    pub shard_bandwidth_bps: f64,
+    /// Extra per-op latency of an uncached read, seconds.
+    pub latency_s: f64,
+    /// Coded blocks the shared read cache can pin per job (flat a-side
+    /// then b-side order); cached blocks are fetched from a shard once
+    /// and served to every other reader for free. 0 = no cache.
+    pub cache_blocks: usize,
+}
+
 /// A parsed scenario file.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -80,6 +104,9 @@ pub struct Scenario {
     pub workers: Vec<usize>,
     pub straggler: StragglerParams,
     pub rates: WorkerRates,
+    /// Optional storage-contention model; `None` = storage-oblivious
+    /// timing (the historical behaviour, golden-pinned).
+    pub storage: Option<StorageSpec>,
     pub jobs: Vec<JobSpec>,
 }
 
@@ -103,7 +130,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
     ensure_known_keys(
         "scenario",
         doc,
-        &["name", "description", "seed", "workers", "straggler", "jobs"],
+        &["name", "description", "seed", "workers", "straggler", "storage", "jobs"],
     )?;
     let name = doc
         .get("name")
@@ -140,6 +167,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
     };
 
     let straggler = parse_straggler(doc.get("straggler"))?;
+    let storage = parse_storage(doc.get("storage"))?;
 
     let jobs_json = doc
         .get("jobs")
@@ -158,8 +186,61 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
         workers,
         straggler,
         rates: WorkerRates::default(),
+        storage,
         jobs,
     })
+}
+
+fn parse_storage(j: Option<&Json>) -> anyhow::Result<Option<StorageSpec>> {
+    let Some(j) = j else { return Ok(None) };
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "'storage' must be an object, got {}",
+        j.to_string_compact()
+    );
+    ensure_known_keys(
+        "storage",
+        j,
+        &["shards", "shard_bandwidth_bps", "latency_s", "cache_blocks"],
+    )?;
+    // Like the unknown-key rule, wrong-typed values are errors — a
+    // quoted number or fractional count must not silently fall back to
+    // a default and get blessed into a golden.
+    let req_f64 = |key: &str, default: f64| -> anyhow::Result<f64> {
+        match j.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'storage.{key}' must be a number")),
+        }
+    };
+    let shards = j
+        .get("shards")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("'storage' needs an integer 'shards'"))?;
+    anyhow::ensure!(shards >= 1, "'storage.shards' must be ≥ 1");
+    let shard_bandwidth_bps = req_f64("shard_bandwidth_bps", 100e6)?;
+    anyhow::ensure!(
+        shard_bandwidth_bps.is_finite() && shard_bandwidth_bps > 0.0,
+        "'storage.shard_bandwidth_bps' must be positive"
+    );
+    let latency_s = req_f64("latency_s", 0.0)?;
+    anyhow::ensure!(
+        latency_s.is_finite() && latency_s >= 0.0,
+        "'storage.latency_s' must be non-negative"
+    );
+    let cache_blocks = match j.get("cache_blocks") {
+        None => 0,
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("'storage.cache_blocks' must be an integer"))?,
+    };
+    Ok(Some(StorageSpec {
+        shards,
+        shard_bandwidth_bps,
+        latency_s,
+        cache_blocks,
+    }))
 }
 
 fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
@@ -279,6 +360,123 @@ fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
 }
 
 // ---------------------------------------------------------------------------
+// Storage overlay
+// ---------------------------------------------------------------------------
+
+/// One job's compute-phase demand on the sharded store, plus the
+/// per-task delay it implies.
+#[derive(Debug, Clone)]
+pub struct StorageLoad {
+    /// Paying (non-cache-served) reads per shard.
+    pub shard_reads: Vec<u64>,
+    /// Bytes those reads pull from each shard.
+    pub shard_bytes: Vec<u64>,
+    /// Deterministic extra virtual seconds per compute task.
+    pub extra_secs: Vec<f64>,
+}
+
+impl StorageLoad {
+    /// Sum of all per-task delays.
+    pub fn total_extra(&self) -> f64 {
+        self.extra_secs.iter().sum()
+    }
+}
+
+/// Deterministic storage-contention overlay of one job's compute phase.
+///
+/// Every compute cell reads its two coded input blocks; blocks are
+/// placed on shards by [`shard_of`] over the real store keys
+/// (`keys::coded_block`), so the simulated hot shards are the ones the
+/// real `MemStore` would hit. A shard is processor-shared: a read of `b`
+/// bytes queueing with `k − 1` other paying reads on its shard is
+/// delayed by `latency_s + (k − 1) · b / shard_bandwidth`. With
+/// `cache_blocks > 0`, the first `cache_blocks` coded blocks (flat
+/// a-side-then-b-side order) are cache-resident: only their first
+/// reader (lowest cell index) pays.
+///
+/// 2-D grids (`coded_grid_dims() == (ra, rb)`, `ra > 1`) follow the
+/// row-major cross-product convention — cell `c` reads a-block `c / rb`
+/// and b-block `c % rb`. `1 × n` grids are treated as 1-D paired codes
+/// (polynomial): cell `c` reads coded input pair `c`, each pair read by
+/// that cell alone.
+///
+/// RNG-free by construction (DESIGN.md §Storage: the overlay must never
+/// draw from the job stream).
+pub fn storage_overlay(
+    spec: &StorageSpec,
+    job_tag: &str,
+    scheme: &dyn CodingScheme,
+    shape: &JobShape,
+) -> StorageLoad {
+    let n = scheme.compute_tasks();
+    let (ra, rb) = scheme.coded_grid_dims();
+    let one_d = ra == 1;
+    let a_bytes = (shape.block_rows * shape.inner * 4) as u64;
+    let b_bytes = (shape.block_cols * shape.inner * 4) as u64;
+
+    // Flat block table: a-side then b-side.
+    struct Block {
+        shard: usize,
+        bytes: u64,
+        readers: u64,
+        cached: bool,
+    }
+    let (n_a, n_b) = if one_d { (n, n) } else { (ra, rb) };
+    let mut blocks = Vec::with_capacity(n_a + n_b);
+    for i in 0..n_a {
+        let key = keys::coded_block(job_tag, "a", i);
+        blocks.push(Block {
+            shard: shard_of(&key, spec.shards),
+            bytes: a_bytes,
+            readers: if one_d { 1 } else { rb as u64 },
+            cached: blocks.len() < spec.cache_blocks,
+        });
+    }
+    for j in 0..n_b {
+        let key = keys::coded_block(job_tag, "b", j);
+        blocks.push(Block {
+            shard: shard_of(&key, spec.shards),
+            bytes: b_bytes,
+            readers: if one_d { 1 } else { ra as u64 },
+            cached: blocks.len() < spec.cache_blocks,
+        });
+    }
+
+    // Shard demand from the paying reads (cached blocks pay once).
+    let mut shard_reads = vec![0u64; spec.shards];
+    let mut shard_bytes = vec![0u64; spec.shards];
+    for b in &blocks {
+        let paying = if b.cached { 1 } else { b.readers };
+        shard_reads[b.shard] += paying;
+        shard_bytes[b.shard] += paying * b.bytes;
+    }
+
+    // Per-cell delay: pay for each block read that reaches a shard.
+    let mut extra_secs = Vec::with_capacity(n);
+    for c in 0..n {
+        let (ai, bi) = if one_d { (c, c) } else { (c / rb, c % rb) };
+        let mut extra = 0.0;
+        for (block, first_reader) in [
+            (&blocks[ai], if one_d { c } else { ai * rb }),
+            (&blocks[n_a + bi], if one_d { c } else { bi }),
+        ] {
+            let pays = !block.cached || c == first_reader;
+            if pays {
+                let queue = shard_reads[block.shard].saturating_sub(1) as f64;
+                extra += spec.latency_s + queue * block.bytes as f64 / spec.shard_bandwidth_bps;
+            }
+        }
+        extra_secs.push(extra);
+    }
+
+    StorageLoad {
+        shard_reads,
+        shard_bytes,
+        extra_secs,
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Job state machine
 // ---------------------------------------------------------------------------
 
@@ -308,15 +506,25 @@ struct JobRun {
     finish: f64,
     /// Cells the decode plan could not recover (recompute fallback).
     undecodable: usize,
+    /// Storage-contention overlay of the compute phase (RNG-free),
+    /// `None` when the scenario has no `storage` section.
+    storage: Option<StorageLoad>,
 }
 
 impl JobRun {
-    fn new(index: usize, spec: JobSpec, rng: Pcg64) -> anyhow::Result<JobRun> {
+    fn new(
+        index: usize,
+        spec: JobSpec,
+        storage: Option<&StorageSpec>,
+        rng: Pcg64,
+    ) -> anyhow::Result<JobRun> {
         let scheme = spec.scheme.instantiate(spec.s_a, spec.s_b)?;
         let mut report = JobReport::new(scheme.name());
         report.redundancy = scheme.redundancy();
         report.numerics_ok = scheme.numerics_feasible();
         let shape = spec.shape();
+        let storage = storage
+            .map(|sp| storage_overlay(sp, &format!("job{index}"), scheme.as_ref(), &shape));
         Ok(JobRun {
             index,
             spec,
@@ -330,6 +538,7 @@ impl JobRun {
             done: false,
             finish: 0.0,
             undecodable: 0,
+            storage,
         })
     }
 
@@ -366,11 +575,20 @@ impl JobRun {
     fn start_compute(&mut self, sim: &mut EventSim, model: &StragglerModel) {
         self.stage = Stage::Compute;
         self.probe = Some(self.scheme.decode_probe());
-        self.phase = Some(PhaseState::launch_uniform(
+        let n = self.scheme.compute_tasks();
+        let works = vec![self.shape.compute_profile(); n];
+        // The storage overlay rides on top of the sampled durations
+        // (empty slice = none): the RNG draw sequence is identical either
+        // way, which is what keeps storage-off goldens bit-identical.
+        let io_extra: &[f64] = match &self.storage {
+            Some(load) => &load.extra_secs,
+            None => &[],
+        };
+        self.phase = Some(PhaseState::launch_with_io(
             sim,
             model,
-            &self.shape.compute_profile(),
-            self.scheme.compute_tasks(),
+            &works,
+            io_extra,
             self.index,
             self.scheme.compute_termination(),
             &mut self.rng,
@@ -508,7 +726,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
         let mut root = Pcg64::new(sc.seed);
         let mut jobs: Vec<JobRun> = Vec::with_capacity(sc.jobs.len());
         for (i, spec) in sc.jobs.iter().enumerate() {
-            jobs.push(JobRun::new(i, spec.clone(), root.fork(i as u64))?);
+            jobs.push(JobRun::new(i, spec.clone(), sc.storage.as_ref(), root.fork(i as u64))?);
         }
         // Arrival order (ties by job index).
         let mut order: Vec<usize> = (0..jobs.len()).collect();
@@ -561,15 +779,49 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
                 let mut jj = job.report.to_json();
                 jj.set("arrival", Json::from(job.spec.arrival));
                 jj.set("finish", Json::from(job.finish));
+                if let Some(load) = &job.storage {
+                    jj.set("storage_extra_secs", Json::from(load.total_extra()));
+                }
                 jj
             })
             .collect();
-        runs.push(
-            obj()
-                .field("workers", workers)
-                .field("jobs", Json::Arr(jobs_json))
-                .build(),
-        );
+        let mut run = obj()
+            .field("workers", workers)
+            .field("jobs", Json::Arr(jobs_json))
+            .build();
+        if let Some(spec) = &sc.storage {
+            // Aggregate shard demand across the run's jobs — the
+            // hot-spotting evidence the contention goldens pin.
+            let mut reads = vec![0u64; spec.shards];
+            let mut bytes = vec![0u64; spec.shards];
+            for job in &jobs {
+                if let Some(load) = &job.storage {
+                    for s in 0..spec.shards {
+                        reads[s] += load.shard_reads[s];
+                        bytes[s] += load.shard_bytes[s];
+                    }
+                }
+            }
+            let hot = (0..spec.shards)
+                .max_by_key(|&s| (bytes[s], std::cmp::Reverse(s)))
+                .unwrap_or(0);
+            run.set(
+                "storage",
+                obj()
+                    .field("shards", spec.shards)
+                    .field(
+                        "shard_reads",
+                        Json::Arr(reads.iter().map(|&r| Json::from(r)).collect()),
+                    )
+                    .field(
+                        "shard_bytes",
+                        Json::Arr(bytes.iter().map(|&b| Json::from(b)).collect()),
+                    )
+                    .field("hot_shard", hot)
+                    .build(),
+            );
+        }
+        runs.push(run);
     }
 
     Ok(obj()
@@ -701,6 +953,149 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("unknown job key 'decode_worker'"), "{err}");
+    }
+
+    #[test]
+    fn parses_storage_section_with_defaults_and_rejects_typos() {
+        let sc = scenario_from(
+            r#"{
+                "name": "st",
+                "seed": 5,
+                "storage": {"shards": 4},
+                "jobs": [
+                    {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 1000}
+                ]
+            }"#,
+        );
+        let spec = sc.storage.expect("storage parsed");
+        assert_eq!(spec.shards, 4);
+        assert!((spec.shard_bandwidth_bps - 100e6).abs() < 1.0);
+        assert_eq!(spec.latency_s, 0.0);
+        assert_eq!(spec.cache_blocks, 0);
+
+        for bad in [
+            r#"{"name": "x", "seed": 1, "storage": {"shards": 0},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "storage": {"shards": 2, "bandwidth": 1},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "storage": 4,
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "storage": {"shards": 2, "shard_bandwidth_bps": -1},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "storage": {"shards": 2, "shard_bandwidth_bps": "25e6"},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            r#"{"name": "x", "seed": 1, "storage": {"shards": 2, "cache_blocks": 2.5},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+        ] {
+            assert!(
+                parse_scenario(&parse(bad).unwrap()).is_err(),
+                "should reject: {bad}"
+            );
+        }
+        // The unknown-key error names the culprit.
+        let err = parse_scenario(
+            &parse(
+                r#"{"name": "x", "seed": 1, "storage": {"shards": 2, "cache_block": 3},
+                    "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown storage key 'cache_block'"), "{err}");
+    }
+
+    #[test]
+    fn storage_overlay_is_deterministic_and_slows_jobs() {
+        let base = r#"{
+            "name": "st-run",
+            "seed": 31,
+            "jobs": [
+                {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 8000},
+                {"scheme": "uncoded", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 40}
+            ]
+        }"#;
+        let with_storage = base.replace(
+            "\"seed\": 31,",
+            "\"seed\": 31, \"storage\": {\"shards\": 2, \"shard_bandwidth_bps\": 20e6},",
+        );
+        let plain = run_scenario(&scenario_from(base)).unwrap();
+        let stressed = run_scenario(&scenario_from(&with_storage)).unwrap();
+        let rerun = run_scenario(&scenario_from(&with_storage)).unwrap();
+        assert_eq!(stressed.to_string_pretty(), rerun.to_string_pretty());
+
+        let comp = |doc: &Json, j: usize| -> f64 {
+            doc.get("runs").unwrap().as_arr().unwrap()[0]
+                .get("jobs")
+                .unwrap()
+                .as_arr()
+                .unwrap()[j]
+                .get("comp")
+                .unwrap()
+                .get("virtual_secs")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // Contention on 2 shards at 20 MB/s can only stretch the compute
+        // phase (every task gains a non-negative deterministic delay).
+        for j in 0..2 {
+            assert!(comp(&stressed, j) >= comp(&plain, j) - 1e-9, "job {j}");
+        }
+        // The run summary carries the shard demand; every coded read is
+        // accounted to some shard.
+        let storage = stressed.get("runs").unwrap().as_arr().unwrap()[0]
+            .get("storage")
+            .expect("storage summary present");
+        let reads: u64 = storage
+            .get("shard_reads")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.as_u64().unwrap())
+            .sum();
+        assert!(reads > 0);
+        assert!(storage.get("hot_shard").unwrap().as_usize().unwrap() < 2);
+        // And the plain run has no storage block at all.
+        assert!(plain.get("runs").unwrap().as_arr().unwrap()[0]
+            .get("storage")
+            .is_none());
+    }
+
+    #[test]
+    fn cache_blocks_reduce_storage_pressure() {
+        let shape = JobShape::new(4, 4, (8000, 8000, 8000));
+        let scheme = Scheme::parse("local-product:2x2")
+            .unwrap()
+            .instantiate(4, 4)
+            .unwrap();
+        let spec = StorageSpec {
+            shards: 2,
+            shard_bandwidth_bps: 20e6,
+            latency_s: 0.01,
+            cache_blocks: 0,
+        };
+        let cold = storage_overlay(&spec, "job0", scheme.as_ref(), &shape);
+        let warm = storage_overlay(
+            &StorageSpec {
+                cache_blocks: 64,
+                ..spec
+            },
+            "job0",
+            scheme.as_ref(),
+            &shape,
+        );
+        assert_eq!(cold.extra_secs.len(), scheme.compute_tasks());
+        assert!(cold.extra_secs.iter().all(|&x| x >= 0.0));
+        // A cache big enough for every coded block leaves one paying
+        // read per block: strictly less shard demand and total delay.
+        let cold_reads: u64 = cold.shard_reads.iter().sum();
+        let warm_reads: u64 = warm.shard_reads.iter().sum();
+        assert!(warm_reads < cold_reads, "{warm_reads} vs {cold_reads}");
+        assert!(warm.total_extra() < cold.total_extra());
+        // 12 coded blocks per side-pair (6 a-blocks + 6 b-blocks).
+        assert_eq!(warm_reads, 12);
     }
 
     #[test]

@@ -1,10 +1,21 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! Rust runtime. Parsed from `artifacts/manifest.json`.
+//! Manifests: the shape/location contracts between producers and
+//! consumers of named binary blobs.
+//!
+//! Two live here:
+//! - [`Manifest`] — the AOT-artifact contract between
+//!   `python/compile/aot.py` and the PJRT runtime, parsed from
+//!   `artifacts/manifest.json`.
+//! - [`JobManifest`] — the per-job block index a coordinator stages into
+//!   the object store (`<job_id>/manifest`) so stateless workers can
+//!   locate a job's coded inputs, block-products and decoded results
+//!   from the job id alone (the paper's Fig-2 dataflow, where S3 is the
+//!   only rendezvous).
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::util::json::{self, Json};
+use crate::storage::ObjectStore;
+use crate::util::json::{self, obj, Json};
 
 /// One AOT-compiled artifact.
 #[derive(Debug, Clone, PartialEq)]
@@ -117,6 +128,157 @@ fn parse_artifact(a: &Json) -> anyhow::Result<ArtifactInfo> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// Per-job block manifests (object-store contract)
+// ---------------------------------------------------------------------------
+
+/// One staged block: its store key, matrix shape, and wire size
+/// (`Matrix::to_bytes`: 16-byte header + 4 bytes per f32 entry).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobBlockInfo {
+    pub key: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub bytes: u64,
+}
+
+/// Index of every block a job staged in the object store.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobManifest {
+    pub job_id: String,
+    blocks: Vec<JobBlockInfo>,
+}
+
+impl JobManifest {
+    pub fn new(job_id: &str) -> JobManifest {
+        JobManifest {
+            job_id: job_id.to_string(),
+            blocks: Vec::new(),
+        }
+    }
+
+    /// Store key the manifest itself lives under.
+    pub fn store_key(job_id: &str) -> String {
+        format!("{job_id}/manifest")
+    }
+
+    /// Record one staged matrix block.
+    pub fn push(&mut self, key: impl Into<String>, rows: usize, cols: usize) {
+        self.blocks.push(JobBlockInfo {
+            key: key.into(),
+            rows,
+            cols,
+            bytes: 16 + (rows * cols * 4) as u64,
+        });
+    }
+
+    pub fn blocks(&self) -> &[JobBlockInfo] {
+        &self.blocks
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Wire bytes of everything listed (the job's storage footprint).
+    pub fn total_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+
+    /// The entry for a key, if staged.
+    pub fn get(&self, key: &str) -> Option<&JobBlockInfo> {
+        self.blocks.iter().find(|b| b.key == key)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let blocks: Vec<Json> = self
+            .blocks
+            .iter()
+            .map(|b| {
+                obj()
+                    .field("key", b.key.as_str())
+                    .field("rows", b.rows)
+                    .field("cols", b.cols)
+                    .field("bytes", b.bytes)
+                    .build()
+            })
+            .collect();
+        obj()
+            .field("format", "job-blocks")
+            .field("job_id", self.job_id.as_str())
+            .field("blocks", Json::Arr(blocks))
+            .build()
+    }
+
+    pub fn from_json(root: &Json) -> anyhow::Result<JobManifest> {
+        let format = root
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("job manifest missing 'format'"))?;
+        anyhow::ensure!(
+            format == "job-blocks",
+            "unsupported job-manifest format '{format}'"
+        );
+        let job_id = root
+            .get("job_id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("job manifest missing 'job_id'"))?
+            .to_string();
+        let mut m = JobManifest {
+            job_id,
+            blocks: Vec::new(),
+        };
+        for b in root
+            .get("blocks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("job manifest missing 'blocks'"))?
+        {
+            let key = b
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("job-manifest block missing 'key'"))?;
+            let dim = |k: &str| -> anyhow::Result<usize> {
+                b.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("block '{key}' missing '{k}'"))
+            };
+            m.push(key, dim("rows")?, dim("cols")?);
+        }
+        Ok(m)
+    }
+
+    /// Serialize into the store under [`JobManifest::store_key`].
+    pub fn save(&self, store: &dyn ObjectStore) {
+        store.put(
+            &Self::store_key(&self.job_id),
+            self.to_json().to_string_pretty().into_bytes(),
+        );
+    }
+
+    /// Fetch + parse a job's manifest from the store.
+    pub fn load(store: &dyn ObjectStore, job_id: &str) -> anyhow::Result<JobManifest> {
+        let blob = store
+            .get(&Self::store_key(job_id))
+            .ok_or_else(|| anyhow::anyhow!("no manifest staged for job '{job_id}'"))?;
+        let text = std::str::from_utf8(&blob)
+            .map_err(|e| anyhow::anyhow!("job '{job_id}' manifest is not UTF-8: {e}"))?;
+        let root = json::parse(text)
+            .map_err(|e| anyhow::anyhow!("job '{job_id}' manifest: {e}"))?;
+        let m = Self::from_json(&root)?;
+        anyhow::ensure!(
+            m.job_id == job_id,
+            "manifest under '{}' names job '{}'",
+            Self::store_key(job_id),
+            m.job_id
+        );
+        Ok(m)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +322,40 @@ mod tests {
         );
         let root = crate::util::json::parse(&dup).unwrap();
         assert!(Manifest::from_json(&root).is_err());
+    }
+
+    #[test]
+    fn job_manifest_roundtrips_through_the_store() {
+        use crate::storage::MemStore;
+        let mut m = JobManifest::new("j7");
+        m.push("j7/coded/a/00000", 16, 64);
+        m.push("j7/out/00000x00001", 16, 16);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.total_bytes(), (16 + 16 * 64 * 4) + (16 + 16 * 16 * 4));
+        assert_eq!(m.get("j7/out/00000x00001").unwrap().rows, 16);
+        assert!(m.get("absent").is_none());
+
+        let store = MemStore::new();
+        m.save(&store);
+        assert_eq!(JobManifest::store_key("j7"), "j7/manifest");
+        let back = JobManifest::load(&store, "j7").unwrap();
+        assert_eq!(back, m);
+        assert!(JobManifest::load(&store, "other").is_err());
+    }
+
+    #[test]
+    fn job_manifest_rejects_malformed_documents() {
+        let bad = [
+            r#"{"job_id": "j", "blocks": []}"#,
+            r#"{"format": "job-blocks", "blocks": []}"#,
+            r#"{"format": "job-blocks", "job_id": "j"}"#,
+            r#"{"format": "hlo-text", "job_id": "j", "blocks": []}"#,
+            r#"{"format": "job-blocks", "job_id": "j", "blocks": [{"rows": 1, "cols": 1}]}"#,
+        ];
+        for src in bad {
+            let root = crate::util::json::parse(src).unwrap();
+            assert!(JobManifest::from_json(&root).is_err(), "{src}");
+        }
     }
 
     #[test]

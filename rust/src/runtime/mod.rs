@@ -23,7 +23,7 @@ pub mod pjrt;
 pub use backend::{ComputeBackend, HostBackend};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
-pub use manifest::{ArtifactInfo, Manifest};
+pub use manifest::{ArtifactInfo, JobBlockInfo, JobManifest, Manifest};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{EngineStats, PjrtHandleSync, PjrtRuntime};
 

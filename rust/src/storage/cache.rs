@@ -1,0 +1,323 @@
+//! LRU read-through block cache over any [`ObjectStore`].
+//!
+//! The paper's decode phase re-reads the same parity blocks from S3 many
+//! times (every peeling step touches a line of blocks); a warm
+//! coordinator-side cache turns those repeats into local hits. The cache
+//! is byte-bounded and strictly *read-through*: `get` fills it, `put` and
+//! `delete` invalidate, so a [`CachedStore`] is always coherent with its
+//! backing store (single-writer workflows, like the job pipeline).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{ObjectStore, StatsSnapshot};
+
+/// Cache counters (monotonic, like [`super::StoreStats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Bytes currently resident.
+    pub bytes: u64,
+}
+
+/// Byte-bounded LRU of shared blobs.
+///
+/// Recency is tracked lazily: each access pushes a `(key, generation)`
+/// pair onto the order queue and bumps the key's generation; eviction
+/// pops from the front, skipping pairs whose generation is stale. This
+/// keeps both `get` and `insert` O(1) amortized with one small mutex.
+pub struct BlockCache {
+    cap_bytes: usize,
+    inner: Mutex<LruInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+#[derive(Default)]
+struct LruInner {
+    map: HashMap<String, (Arc<Vec<u8>>, u64)>,
+    order: VecDeque<(String, u64)>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Drop stale order-queue pairs once the queue outgrows the map; keeps
+/// the lazy-LRU bookkeeping O(resident entries) over long runs.
+fn compact(inner: &mut LruInner) {
+    if inner.order.len() > 4 * inner.map.len() + 64 {
+        let map = &inner.map;
+        inner
+            .order
+            .retain(|(k, generation)| matches!(map.get(k), Some((_, g)) if g == generation));
+    }
+}
+
+impl BlockCache {
+    pub fn new(cap_bytes: usize) -> BlockCache {
+        BlockCache {
+            cap_bytes,
+            inner: Mutex::new(LruInner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    /// Look a key up, refreshing its recency on a hit.
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some((blob, generation)) => {
+                *generation = tick;
+                let blob = Arc::clone(blob);
+                inner.order.push_back((key.to_string(), tick));
+                compact(&mut inner);
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(blob)
+            }
+            None => {
+                drop(inner);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a blob, evicting LRU entries past the byte capacity.
+    /// Blobs larger than the whole cache are not admitted.
+    pub fn insert(&self, key: &str, blob: Arc<Vec<u8>>) {
+        if blob.len() > self.cap_bytes {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some((old, _)) = inner.map.remove(key) {
+            inner.bytes -= old.len();
+        }
+        inner.bytes += blob.len();
+        inner.map.insert(key.to_string(), (blob, tick));
+        inner.order.push_back((key.to_string(), tick));
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        let mut evicted = 0u64;
+        while inner.bytes > self.cap_bytes {
+            let (victim, generation) = inner
+                .order
+                .pop_front()
+                .expect("over-capacity cache must have queued entries");
+            let is_current = matches!(inner.map.get(&victim), Some((_, g)) if *g == generation);
+            if is_current {
+                let (blob, _) = inner.map.remove(&victim).unwrap();
+                inner.bytes -= blob.len();
+                evicted += 1;
+            }
+            // Stale generation: a newer access re-queued the key; skip.
+        }
+        compact(&mut inner);
+        drop(inner);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop a key (store writes/deletes invalidate).
+    pub fn invalidate(&self, key: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((old, _)) = inner.map.remove(key) {
+            inner.bytes -= old.len();
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes: inner.bytes as u64,
+        }
+    }
+
+    /// Number of resident entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An [`ObjectStore`] wrapper serving reads through a [`BlockCache`].
+///
+/// `stats()` delegates to the backing store, so store-level `gets`
+/// count only the reads the cache could not absorb; cache traffic is
+/// reported separately via [`CachedStore::cache`].
+pub struct CachedStore {
+    inner: Arc<dyn ObjectStore>,
+    cache: Arc<BlockCache>,
+}
+
+impl CachedStore {
+    pub fn new(inner: Arc<dyn ObjectStore>, cap_bytes: usize) -> CachedStore {
+        CachedStore {
+            inner,
+            cache: Arc::new(BlockCache::new(cap_bytes)),
+        }
+    }
+
+    /// Shared handle to the cache (for stats reporting).
+    pub fn cache(&self) -> Arc<BlockCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// The backing store.
+    pub fn backing(&self) -> &Arc<dyn ObjectStore> {
+        &self.inner
+    }
+}
+
+impl ObjectStore for CachedStore {
+    fn put(&self, key: &str, value: Vec<u8>) {
+        // Write-invalidate keeps the cache coherent without double
+        // accounting the bytes as reads.
+        self.cache.invalidate(key);
+        self.inner.put(key, value);
+    }
+
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        if let Some(blob) = self.cache.get(key) {
+            return Some(blob);
+        }
+        let blob = self.inner.get(key)?;
+        self.cache.insert(key, Arc::clone(&blob));
+        Some(blob)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.inner.exists(key)
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        self.cache.invalidate(key);
+        self.inner.delete(key)
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        self.inner.list(prefix)
+    }
+
+    fn stats(&self) -> StatsSnapshot {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn blob(n: usize, fill: u8) -> Vec<u8> {
+        vec![fill; n]
+    }
+
+    #[test]
+    fn read_through_fills_and_hits() {
+        let mem = Arc::new(MemStore::new());
+        let s = CachedStore::new(mem.clone(), 1024);
+        s.put("k", blob(10, 1));
+        assert_eq!(s.get("k").unwrap().len(), 10); // miss → fill
+        assert_eq!(s.get("k").unwrap().len(), 10); // hit
+        let cs = s.cache().stats();
+        assert_eq!(cs.hits, 1);
+        assert_eq!(cs.misses, 1);
+        assert_eq!(cs.insertions, 1);
+        // The second read never reached the backing store.
+        assert_eq!(mem.stats().gets, 1);
+        assert_eq!(s.stats().gets, 1);
+    }
+
+    #[test]
+    fn put_invalidates_stale_entry() {
+        let s = CachedStore::new(Arc::new(MemStore::new()), 1024);
+        s.put("k", blob(4, 1));
+        let _ = s.get("k");
+        s.put("k", blob(4, 2));
+        assert_eq!(s.get("k").unwrap().as_slice(), &[2, 2, 2, 2]);
+        s.delete("k");
+        assert!(s.get("k").is_none());
+        // A miss on the backing store must not poison the cache.
+        assert_eq!(s.cache().len(), 0);
+    }
+
+    #[test]
+    fn lru_evicts_cold_entries_in_order() {
+        let c = BlockCache::new(30);
+        c.insert("a", Arc::new(blob(10, 0)));
+        c.insert("b", Arc::new(blob(10, 0)));
+        c.insert("c", Arc::new(blob(10, 0)));
+        // Touch "a" so "b" is now the LRU victim.
+        assert!(c.get("a").is_some());
+        c.insert("d", Arc::new(blob(10, 0)));
+        assert!(c.get("b").is_none(), "b was LRU and must be evicted");
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        assert!(c.get("d").is_some());
+        let st = c.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.bytes, 30);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn accounting_invariants() {
+        let c = BlockCache::new(100);
+        for i in 0..50 {
+            c.insert(&format!("k{i}"), Arc::new(blob(10, 0)));
+            let _ = c.get(&format!("k{i}"));
+            let _ = c.get("never-present");
+            let st = c.stats();
+            assert!(st.bytes <= 100, "capacity respected: {}", st.bytes);
+            assert_eq!(st.hits + st.misses, 2 * (i as u64 + 1));
+            // Residents = insertions − evictions (no invalidations here).
+            assert_eq!(c.len() as u64, st.insertions - st.evictions);
+        }
+    }
+
+    #[test]
+    fn oversize_blobs_are_not_admitted() {
+        let c = BlockCache::new(8);
+        c.insert("big", Arc::new(blob(9, 0)));
+        assert!(c.get("big").is_none());
+        assert_eq!(c.stats().insertions, 0);
+        assert_eq!(c.stats().bytes, 0);
+    }
+
+    #[test]
+    fn reinsert_same_key_does_not_leak_bytes() {
+        let c = BlockCache::new(64);
+        for _ in 0..10 {
+            c.insert("k", Arc::new(blob(16, 0)));
+        }
+        assert_eq!(c.stats().bytes, 16);
+        assert_eq!(c.len(), 1);
+        c.invalidate("k");
+        assert_eq!(c.stats().bytes, 0);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,167 @@
+//! Per-object transfer timing: latency + bandwidth with single-stream
+//! caps.
+//!
+//! The figure harnesses calibrate three distinct S3 regimes (documented
+//! inline in `figures/fig3.rs` and `figures/fig10_11.rs`):
+//!
+//! - **multipart** (`fig1`/`fig5` matmul blocks): many parallel GET
+//!   streams per worker, ~100 MB/s aggregate — the [`cost::CostModel`]
+//!   default.
+//! - **single stream** (`fig3` power-iteration row-blocks): one GET per
+//!   object at ~10 MB/s.
+//! - **KRR row-blocks** (`fig10`/`fig11`): large single-stream reads
+//!   that sustain ~25 MB/s.
+//!
+//! [`TransferModel`] makes the stream structure explicit instead of
+//! collapsing it into one bandwidth number: an object moved over `s`
+//! streams flows at `min(s · single_stream_bps, aggregate_bps)`. The
+//! chunked [`super::MemStore`] maps onto this directly — a multipart
+//! object's chunk count is its stream count.
+//!
+//! [`cost::CostModel`]: super::cost::CostModel
+
+use super::cost::CostModel;
+
+/// S3-like per-worker transfer model with an explicit stream structure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferModel {
+    /// Per-operation request latency in seconds (round-trip).
+    pub op_latency_s: f64,
+    /// Throughput of one GET/PUT stream, bytes/second.
+    pub single_stream_bps: f64,
+    /// Streams one worker can keep in flight for one object.
+    pub max_streams: u64,
+    /// Per-worker NIC/aggregate cap across all streams, bytes/second.
+    pub aggregate_bps: f64,
+}
+
+impl Default for TransferModel {
+    fn default() -> Self {
+        // Lambda↔S3 circa the paper: 60 ms request latency, ~10 MB/s per
+        // stream, up to 10 parts in flight ⇒ the familiar ~100 MB/s
+        // multipart figure of the fig1/fig5 calibration.
+        TransferModel {
+            op_latency_s: 0.060,
+            single_stream_bps: 10e6,
+            max_streams: 10,
+            aggregate_bps: 100e6,
+        }
+    }
+}
+
+impl TransferModel {
+    /// The fig3 calibration: power-iteration row-blocks are one single
+    /// S3 stream (~10 MB/s effective GET throughput).
+    pub fn fig3_single_stream() -> TransferModel {
+        TransferModel {
+            max_streams: 1,
+            ..TransferModel::default()
+        }
+    }
+
+    /// The fig10/fig11 calibration: large KRR row-block objects sustain
+    /// ~25 MB/s on a single stream.
+    pub fn fig10_11_krr() -> TransferModel {
+        TransferModel {
+            single_stream_bps: 25e6,
+            max_streams: 1,
+            aggregate_bps: 25e6,
+            ..TransferModel::default()
+        }
+    }
+
+    /// Effective bandwidth of an object moved over `streams` streams.
+    pub fn effective_bps(&self, streams: u64) -> f64 {
+        let s = streams.clamp(1, self.max_streams.max(1)) as f64;
+        (s * self.single_stream_bps).min(self.aggregate_bps)
+    }
+
+    /// Time to move one object of `bytes` over `streams` parallel
+    /// streams (one request round-trip; parts share it pipelined).
+    pub fn object_time(&self, bytes: u64, streams: u64) -> f64 {
+        self.op_latency_s + bytes as f64 / self.effective_bps(streams)
+    }
+
+    /// Single-stream read/write of one object — the fig3 regime.
+    pub fn single_stream_time(&self, bytes: u64) -> f64 {
+        self.object_time(bytes, 1)
+    }
+
+    /// Multipart transfer of one object split into `part_bytes` chunks
+    /// (how the chunked `MemStore` stores it): the stream count is the
+    /// chunk count, capped at `max_streams`.
+    pub fn multipart_time(&self, bytes: u64, part_bytes: u64) -> f64 {
+        let parts = if part_bytes == 0 {
+            1
+        } else {
+            bytes.div_ceil(part_bytes).max(1)
+        };
+        self.object_time(bytes, parts)
+    }
+
+    /// `n_ops` sequential object reads totalling `bytes`, each over
+    /// `streams` streams (e.g. a decode worker fetching R blocks).
+    pub fn read_many(&self, n_ops: u64, bytes: u64, streams: u64) -> f64 {
+        n_ops as f64 * self.op_latency_s + bytes as f64 / self.effective_bps(streams)
+    }
+
+    /// Collapse to the aggregate [`CostModel`] the straggler sampler
+    /// consumes, at a fixed stream count.
+    pub fn to_cost_model(&self, streams: u64) -> CostModel {
+        CostModel {
+            op_latency_s: self.op_latency_s,
+            bandwidth_bps: self.effective_bps(streams),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_scaling_caps_at_aggregate() {
+        let m = TransferModel::default();
+        assert!((m.effective_bps(1) - 10e6).abs() < 1.0);
+        assert!((m.effective_bps(5) - 50e6).abs() < 1.0);
+        // 10 streams hit the aggregate cap; more streams are clamped.
+        assert!((m.effective_bps(10) - 100e6).abs() < 1.0);
+        assert!((m.effective_bps(64) - 100e6).abs() < 1.0);
+        assert!((m.effective_bps(0) - 10e6).abs() < 1.0); // clamped up
+    }
+
+    #[test]
+    fn object_time_decomposes() {
+        let m = TransferModel {
+            op_latency_s: 0.1,
+            single_stream_bps: 1e6,
+            max_streams: 4,
+            aggregate_bps: 4e6,
+        };
+        // 2 MB over one stream: 0.1 + 2.0.
+        assert!((m.single_stream_time(2_000_000) - 2.1).abs() < 1e-12);
+        // Same object over 4 streams: 0.1 + 0.5.
+        assert!((m.object_time(2_000_000, 4) - 0.6).abs() < 1e-12);
+        // Multipart with 500 KB parts ⇒ 4 streams.
+        assert!((m.multipart_time(2_000_000, 500_000) - 0.6).abs() < 1e-12);
+        // Unchunked store (part_bytes = 0) degenerates to one stream.
+        assert!((m.multipart_time(2_000_000, 0) - 2.1).abs() < 1e-12);
+        // read_many accumulates latency only.
+        assert!((m.read_many(10, 1_000_000, 1) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presets_match_figure_calibrations() {
+        // fig3: single stream at 10 MB/s.
+        let f3 = TransferModel::fig3_single_stream();
+        assert!((f3.effective_bps(10) - 10e6).abs() < 1.0);
+        // fig10/11: 25 MB/s effective GET throughput.
+        let krr = TransferModel::fig10_11_krr();
+        assert!((krr.effective_bps(1) - 25e6).abs() < 1.0);
+        // Default multipart collapses to the CostModel default.
+        let cost = TransferModel::default().to_cost_model(10);
+        let legacy = CostModel::default();
+        assert!((cost.bandwidth_bps - legacy.bandwidth_bps).abs() < 1.0);
+        assert!((cost.op_latency_s - legacy.op_latency_s).abs() < 1e-12);
+    }
+}

@@ -4,9 +4,17 @@
 //! module: warmup, timed iterations, robust stats, and an aligned report.
 //! Figures-style end-to-end benches also use `run_once` for single-shot
 //! wall-clock + simulated-time reporting.
+//!
+//! Two environment variables drive the CI perf-artifact pipeline:
+//! - `SLEC_BENCH_QUICK=1` shrinks every [`Bencher`]'s warmup/iteration
+//!   budget so the whole bench set finishes in CI time.
+//! - `SLEC_BENCH_DIR=<dir>` makes [`BenchReport::write`] drop a
+//!   machine-readable `BENCH_<name>.json` per bench binary — the files
+//!   the `bench-smoke` CI job uploads as the perf trajectory.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 
 /// Result of a timed benchmark.
@@ -53,8 +61,21 @@ pub struct Bencher {
     pub max_total: Duration,
 }
 
+/// Is the quick/CI mode requested? (`SLEC_BENCH_QUICK=1`.)
+pub fn quick_mode() -> bool {
+    std::env::var_os("SLEC_BENCH_QUICK").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
 impl Default for Bencher {
     fn default() -> Self {
+        if quick_mode() {
+            return Bencher {
+                warmup: 0,
+                min_iters: 2,
+                max_iters: 3,
+                max_total: Duration::from_secs(2),
+            };
+        }
         Bencher {
             warmup: 2,
             min_iters: 5,
@@ -67,6 +88,14 @@ impl Default for Bencher {
 impl Bencher {
     /// Fast settings for heavyweight end-to-end benches.
     pub fn end_to_end() -> Self {
+        if quick_mode() {
+            return Bencher {
+                warmup: 0,
+                min_iters: 1,
+                max_iters: 2,
+                max_total: Duration::from_secs(5),
+            };
+        }
         Bencher {
             warmup: 1,
             min_iters: 3,
@@ -104,6 +133,70 @@ pub fn run_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
     let dt = t0.elapsed().as_secs_f64();
     eprintln!("[bench] {name}: {}", fmt_duration(dt));
     (v, dt)
+}
+
+/// Machine-readable bench report: collects [`BenchResult`]s plus named
+/// scalar values (savings %, GFLOP/s, …) and, when `SLEC_BENCH_DIR` is
+/// set, writes them as `<dir>/BENCH_<name>.json` — the perf-trajectory
+/// artifact CI uploads per bench binary.
+pub struct BenchReport {
+    name: String,
+    results: Vec<Json>,
+    values: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            results: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Record a timed result (keeps the human-readable line printing at
+    /// the call site).
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(
+            obj()
+                .field("name", r.name.as_str())
+                .field("iters", r.iters)
+                .field("mean_s", r.summary.mean)
+                .field("p50_s", r.summary.p50)
+                .field("p99_s", r.summary.p99)
+                .build(),
+        );
+    }
+
+    /// Record a named scalar (figure outputs, derived throughputs).
+    pub fn value(&mut self, key: &str, v: f64) {
+        self.values.push((key.to_string(), v));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut values = obj();
+        for (k, v) in &self.values {
+            values = values.field(k, *v);
+        }
+        obj()
+            .field("bench", self.name.as_str())
+            .field("quick", quick_mode())
+            .field("results", Json::Arr(self.results.clone()))
+            .field("values", values.build())
+            .build()
+    }
+
+    /// Write `BENCH_<name>.json` under `$SLEC_BENCH_DIR`; no-op (returns
+    /// `None`) when the variable is unset. I/O failures panic: in CI a
+    /// missing artifact must fail the job, not vanish silently.
+    pub fn write(&self) -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(std::env::var_os("SLEC_BENCH_DIR")?);
+        std::fs::create_dir_all(&dir).expect("create SLEC_BENCH_DIR");
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty()).expect("write bench report");
+        println!("[bench] wrote {}", path.display());
+        Some(path)
+    }
 }
 
 /// Identity function that defeats the optimizer (std::hint::black_box).
@@ -147,6 +240,34 @@ mod tests {
         };
         let r = b.bench("sleepy", || std::thread::sleep(Duration::from_millis(10)));
         assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn report_serializes_results_and_values() {
+        let b = Bencher {
+            warmup: 0,
+            min_iters: 2,
+            max_iters: 2,
+            max_total: Duration::from_secs(1),
+        };
+        let mut report = BenchReport::new("unit");
+        let r = b.bench("noop", || 1 + 1);
+        report.push(&r);
+        report.value("speedup", 2.5);
+        let j = report.to_json();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("unit"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("iters").unwrap().as_usize(), Some(2));
+        assert!(results[0].get("p50_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            j.get("values").unwrap().get("speedup").unwrap().as_f64(),
+            Some(2.5)
+        );
+        // Without SLEC_BENCH_DIR nothing is written.
+        if std::env::var_os("SLEC_BENCH_DIR").is_none() {
+            assert!(report.write().is_none());
+        }
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Property + concurrency tests of the storage subsystem: shard
+//! distribution and chunk round-trips of `MemStore`, concurrent put/get
+//! under the crate threadpool, cache hit/eviction accounting
+//! invariants, and the RNG-free storage overlay of the scenario runner.
+
+use std::sync::Arc;
+
+use slec::codes::Scheme;
+use slec::codes::scheme::JobShape;
+use slec::platform::scenario::{storage_overlay, StorageSpec};
+use slec::storage::cache::{BlockCache, CachedStore};
+use slec::storage::{shard_of, MemStore, ObjectStore};
+use slec::util::prop::proptest;
+use slec::util::threadpool::ThreadPool;
+
+#[test]
+fn chunk_roundtrip_property() {
+    // Any (shards, chunk size, payload) combination round-trips exactly,
+    // overwrites cleanly, and never leaks internal chunk keys.
+    proptest(120, 0xC0FFEE, |g| {
+        let shards = g.usize_in(1, 32);
+        let chunk = if g.bool() { 0 } else { g.usize_in(1, 4096) };
+        let store = MemStore::with_config(shards, chunk);
+        let len = g.usize_in(0, 20_000);
+        let fill = g.usize_in(0, 255) as u8;
+        let blob: Vec<u8> = (0..len).map(|i| fill.wrapping_add(i as u8)).collect();
+        store.put("prop/key", blob.clone());
+        assert_eq!(store.get("prop/key").unwrap().as_slice(), blob.as_slice());
+        assert!(store.exists("prop/key"));
+        assert_eq!(store.list("prop/"), vec!["prop/key"]);
+        // Overwrite with a different size, then delete: nothing remains.
+        let second: Vec<u8> = vec![fill; g.usize_in(0, 9000)];
+        store.put("prop/key", second.clone());
+        assert_eq!(store.get("prop/key").unwrap().as_slice(), second.as_slice());
+        assert!(store.delete("prop/key"));
+        assert!(store.get("prop/key").is_none());
+        assert!(store.list("").is_empty());
+        let st = store.stats();
+        assert_eq!(st.puts, 2);
+        assert_eq!(st.hits, 2);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.bytes_in, (blob.len() + second.len()) as u64);
+        assert_eq!(st.bytes_out, st.bytes_in);
+    });
+}
+
+#[test]
+fn shard_distribution_property() {
+    // Placement is stable, in range, and conserves every byte written;
+    // over many workflow-shaped keys no shard is starved or overloaded
+    // beyond a loose constant factor.
+    proptest(40, 0xD15C, |g| {
+        let shards = g.usize_in(2, 24);
+        let store = MemStore::with_config(shards, 0);
+        let n_keys = g.usize_in(200, 600);
+        let blob_len = g.usize_in(1, 64);
+        for i in 0..n_keys {
+            let key = slec::storage::keys::out_block("prop", i / 17, i % 17 + i);
+            let placed = shard_of(&key, shards);
+            assert_eq!(placed, shard_of(&key, shards));
+            assert!(placed < shards);
+            store.put(&format!("{key}/{i}"), vec![0u8; blob_len]);
+        }
+        let loads = store.shard_loads();
+        assert_eq!(loads.len(), shards);
+        let total: u64 = loads.iter().map(|l| l.bytes).sum();
+        assert_eq!(total, (n_keys * blob_len) as u64);
+        let mean = total as f64 / shards as f64;
+        let max = loads.iter().map(|l| l.bytes).max().unwrap() as f64;
+        assert!(
+            max < 6.0 * mean + 64.0 * blob_len as f64,
+            "one shard absorbed {max} of mean {mean}"
+        );
+    });
+}
+
+#[test]
+fn concurrent_put_get_under_the_threadpool() {
+    // 8 pool workers hammer one chunked store; every read-after-write
+    // observes its own value and the global counters balance.
+    let store = Arc::new(MemStore::with_config(8, 128));
+    let pool = ThreadPool::new(8);
+    let per_worker = 200usize;
+    let handles: Vec<_> = (0..8)
+        .map(|w| {
+            let store = Arc::clone(&store);
+            pool.submit(move || {
+                let mut ok = 0usize;
+                for i in 0..per_worker {
+                    let key = format!("w{w}/obj{i}");
+                    let blob = vec![(w * 31 + i) as u8; 100 + (i % 300)];
+                    store.put(&key, blob.clone());
+                    let back = store.get(&key).expect("own write visible");
+                    assert_eq!(back.as_slice(), blob.as_slice());
+                    ok += 1;
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join()).sum();
+    assert_eq!(total, 8 * per_worker);
+    let st = store.stats();
+    assert_eq!(st.puts, (8 * per_worker) as u64);
+    assert_eq!(st.hits, (8 * per_worker) as u64);
+    assert_eq!(st.misses, 0);
+    assert_eq!(store.list("w3/").len(), per_worker);
+    // Per-shard loads account for every byte that moved.
+    let shard_bytes: u64 = store.shard_loads().iter().map(|l| l.bytes).sum();
+    assert_eq!(shard_bytes, st.bytes_in + st.bytes_out);
+}
+
+#[test]
+fn cache_accounting_invariants_property() {
+    proptest(60, 0xCAC4E, |g| {
+        let cap = g.usize_in(64, 2048);
+        let cache = BlockCache::new(cap);
+        let n_keys = g.usize_in(1, 40);
+        let ops = g.usize_in(10, 200);
+        let mut gets = 0u64;
+        for _ in 0..ops {
+            let k = format!("k{}", g.usize_in(0, n_keys - 1));
+            if g.bool() {
+                cache.insert(&k, Arc::new(vec![0u8; g.usize_in(1, 300)]));
+            } else {
+                let _ = cache.get(&k);
+                gets += 1;
+            }
+            let st = cache.stats();
+            assert!(st.bytes <= cap as u64, "over capacity: {}", st.bytes);
+            assert_eq!(st.hits + st.misses, gets);
+            assert!(st.evictions <= st.insertions);
+        }
+    });
+}
+
+#[test]
+fn cached_store_read_through_is_transparent() {
+    // Whatever the cache capacity, reads through a CachedStore always
+    // return exactly what the backing store holds — eviction and
+    // invalidation can cost time, never correctness.
+    proptest(40, 0x7EA, |g| {
+        let cap = g.usize_in(32, 4096);
+        let mem: Arc<dyn ObjectStore> = Arc::new(MemStore::with_config(4, 64));
+        let store = CachedStore::new(mem, cap);
+        let n_keys = g.usize_in(1, 12);
+        for round in 0..g.usize_in(5, 40) {
+            let i = g.usize_in(0, n_keys - 1);
+            let key = format!("obj{i}");
+            if g.bool() {
+                store.put(&key, vec![(round + i) as u8; g.usize_in(1, 500)]);
+            } else if let Some(blob) = store.get(&key) {
+                // Every byte must match the backing store's truth.
+                let truth = store.backing().get(&key).expect("cache never invents keys");
+                assert_eq!(blob.as_slice(), truth.as_slice());
+            }
+        }
+        let cs = store.cache().stats();
+        assert!(cs.bytes <= cap as u64);
+    });
+}
+
+#[test]
+fn storage_overlay_is_rng_free_and_cache_monotone() {
+    // The scenario overlay: pure function of (spec, tag, scheme, shape),
+    // non-negative, and a bigger cache never increases total delay.
+    let shape = JobShape::new(4, 4, (8000, 8000, 8000));
+    for spec_str in ["local-product:2x2", "product:1x1", "uncoded", "polynomial:0.25"] {
+        let scheme = Scheme::parse(spec_str).unwrap().instantiate(4, 4).unwrap();
+        let mut prev_total = f64::INFINITY;
+        for cache_blocks in [0usize, 2, 6, 64] {
+            let spec = StorageSpec {
+                shards: 4,
+                shard_bandwidth_bps: 25e6,
+                latency_s: 0.05,
+                cache_blocks,
+            };
+            let a = storage_overlay(&spec, "job0", scheme.as_ref(), &shape);
+            let b = storage_overlay(&spec, "job0", scheme.as_ref(), &shape);
+            assert_eq!(a.extra_secs, b.extra_secs, "{spec_str}: overlay must be pure");
+            assert_eq!(a.extra_secs.len(), scheme.compute_tasks());
+            assert!(a.extra_secs.iter().all(|&x| x.is_finite() && x >= 0.0));
+            let reads: u64 = a.shard_reads.iter().sum();
+            assert!(reads > 0, "{spec_str}: some read must pay");
+            let total = a.total_extra();
+            assert!(
+                total <= prev_total + 1e-9,
+                "{spec_str}: cache_blocks={cache_blocks} increased delay ({total} > {prev_total})"
+            );
+            prev_total = total;
+        }
+    }
+}
