@@ -3,12 +3,15 @@
 //! encode/decode numerics, the event-simulation loop, the sharded
 //! object store, and (with the `pjrt` feature) PJRT block-product
 //! latency vs host.
+use slec::codes::local_product::{encode_side_parallel, peel_grid_wavefront, LocalProductCode};
 use slec::codes::peeling::plan_peel;
-use slec::linalg::{gemm, Matrix, Partition};
+use slec::linalg::{gemm, BlockBuf, Matrix, Partition};
 use slec::platform::{launch, StragglerModel, WorkProfile};
+use slec::runtime::HostBackend;
 use slec::storage::{MemStore, ObjectStore};
 use slec::util::bench::{banner, black_box, BenchReport, Bencher};
 use slec::util::rng::Pcg64;
+use slec::util::threadpool::num_threads;
 
 fn main() {
     banner("hot paths — GEMM / peeling / encode-decode / store / PJRT / event loop");
@@ -42,16 +45,85 @@ fn main() {
     );
     report.push(&r);
 
-    // Coded encode numerics at fig-5 block scale.
-    let a = Matrix::randn(640, 256, &mut rng, 0.0, 1.0);
-    let p = Partition::new(640, 256, 10);
-    let blocks = p.split(&a);
-    let layout = slec::codes::layout::LocalLayout::new(10, 10);
-    let r = b.bench("encode_side 10 blocks (64×256)", || {
-        slec::codes::local_product::LocalProductCode::encode_side(layout, &blocks)
-    });
-    println!("{}", r.line());
-    report.push(&r);
+    // --- Encode: serial clone-then-add reference vs the parallel
+    // zero-copy fan-out (the PR's before/after datapoint). Grouped
+    // layout: 4 groups of 5 ⇒ 4 parities over 64×256 blocks.
+    let threads = num_threads();
+    {
+        let a = Matrix::randn(1280, 256, &mut rng, 0.0, 1.0);
+        let p = Partition::new(1280, 256, 20);
+        let blocks = p.split(&a);
+        let bufs: Vec<BlockBuf> = blocks.iter().cloned().map(BlockBuf::new).collect();
+        let layout = slec::codes::layout::LocalLayout::new(20, 5);
+        let coded_bytes = (layout.coded_len() * 64 * 256 * 4) as f64;
+        let r = b.bench("encode_side serial 20 blocks (64×256, L=5)", || {
+            LocalProductCode::encode_side(layout, &blocks)
+        });
+        let serial_mbps = coded_bytes / r.summary.p50 / 1e6;
+        println!("{}  → {serial_mbps:.0} MB/s encoded", r.line());
+        report.push(&r);
+        report.value("encode_serial_mb_per_s", serial_mbps);
+        let r = b.bench(
+            &format!("encode_side_parallel 20 blocks (64×256, L=5, {threads}t)"),
+            || encode_side_parallel(&HostBackend, layout, &bufs, threads),
+        );
+        let par_mbps = coded_bytes / r.summary.p50 / 1e6;
+        println!(
+            "{}  → {par_mbps:.0} MB/s encoded ({:.2}× serial)",
+            r.line(),
+            par_mbps / serial_mbps
+        );
+        report.push(&r);
+        report.value("encode_par_mb_per_s", par_mbps);
+        report.value("encode_speedup", par_mbps / serial_mbps);
+    }
+
+    // --- Decode: wavefront peeling over an 11×11 local grid of 64×64
+    // cells with 10 independent stragglers (all level 0 ⇒ maximum
+    // fan-out), serial (1 thread) vs the pool.
+    {
+        let (l, block) = (10usize, 64usize);
+        let n = (l + 1) * (l + 1);
+        let cells: Vec<Option<BlockBuf>> = (0..n)
+            .map(|i| {
+                // One straggler per row on a moving diagonal: independent
+                // column peels, the paper's common case.
+                let (r, c) = (i / (l + 1), i % (l + 1));
+                if r < 10 && c == r {
+                    None
+                } else {
+                    Some(BlockBuf::new(Matrix::randn(block, block, &mut rng, 0.0, 1.0)))
+                }
+            })
+            .collect();
+        let recovered_bytes = (10 * block * block * 4) as f64;
+        let r = b.bench("peel wavefront 11×11, 10 missing (1t)", || {
+            let mut g = cells.clone();
+            peel_grid_wavefront(&HostBackend, l, l, &mut g, 1);
+            black_box(g)
+        });
+        let serial_mbps = recovered_bytes / r.summary.p50 / 1e6;
+        println!("{}  → {serial_mbps:.0} MB/s recovered", r.line());
+        report.push(&r);
+        report.value("decode_serial_mb_per_s", serial_mbps);
+        let r = b.bench(
+            &format!("peel wavefront 11×11, 10 missing ({threads}t)"),
+            || {
+                let mut g = cells.clone();
+                peel_grid_wavefront(&HostBackend, l, l, &mut g, threads);
+                black_box(g)
+            },
+        );
+        let par_mbps = recovered_bytes / r.summary.p50 / 1e6;
+        println!(
+            "{}  → {par_mbps:.0} MB/s recovered ({:.2}× serial)",
+            r.line(),
+            par_mbps / serial_mbps
+        );
+        report.push(&r);
+        report.value("decode_par_mb_per_s", par_mbps);
+        report.value("decode_speedup", par_mbps / serial_mbps);
+    }
 
     // Sharded object store: chunked put/get of fig-5-scale blocks.
     {
@@ -65,6 +137,21 @@ fn main() {
         println!("{}  → {mbps:.0} MB/s through the store", r.line());
         report.push(&r);
         report.value("store_roundtrip_mb_per_s", mbps);
+    }
+
+    // --- Staging: the zero-copy block surface vs the byte surface at
+    // the same logical size (put_block/get_block are refcount bumps).
+    {
+        let store = MemStore::with_config(16, 64 << 10);
+        let blk = BlockBuf::new(Matrix::randn(256, 1024, &mut rng, 0.0, 1.0));
+        let r = b.bench("store put_block+get_block 1 MB (zero-copy)", || {
+            store.put_block("bench/blk", blk.clone());
+            black_box(store.get_block("bench/blk"))
+        });
+        let mbps = blk.wire_len() as f64 * 2.0 / r.summary.p50 / 1e6;
+        println!("{}  → {mbps:.0} logical MB/s staged", r.line());
+        report.push(&r);
+        report.value("staging_mb_per_s", mbps);
     }
 
     // Event loop: launch + order statistics over a 3600-worker phase.

@@ -11,15 +11,17 @@
 use std::collections::BTreeSet;
 
 use crate::codes::layout::{CodedBlock, LocalLayout};
-use crate::codes::peeling::{plan_peel, Axis, PeelPlan};
+use crate::codes::peeling::{plan_peel, wavefront_levels, Axis, PeelPlan};
 use crate::codes::scheme::{
     CodingScheme, ComputePolicy, DecodePlan, DecodeProbe, EncodePlan, JobShape,
     DECODE_WAIT_FRAC, ENCODE_WAIT_FRAC,
 };
-use crate::linalg::matrix::Matrix;
+use crate::linalg::kernels;
+use crate::linalg::matrix::{BlockBuf, Matrix};
 use crate::platform::event::Termination;
 use crate::platform::straggler::WorkProfile;
 use crate::runtime::ComputeBackend;
+use crate::util::threadpool::{num_threads, parallel_map};
 
 /// Parameters and index math of a local product code over the output of
 /// `C = A·Bᵀ` with `s_a × s_b` systematic blocks.
@@ -81,7 +83,11 @@ impl LocalProductCode {
     }
 
     /// Encode the row-blocks of one input matrix side: returns coded blocks
-    /// in coded order. Parities are sums of each group's members.
+    /// in coded order. Parities are sums of each group's members (the
+    /// [`kernels`] accumulate path; left-to-right member order, so results
+    /// are bit-identical to the historical clone-then-add encode). This is
+    /// the *serial reference* — the coordinator's hot path is the parallel
+    /// zero-copy [`encode_side_parallel`].
     pub fn encode_side(layout: LocalLayout, blocks: &[Matrix]) -> Vec<Matrix> {
         assert_eq!(blocks.len(), layout.systematic);
         let mut out = Vec::with_capacity(layout.coded_len());
@@ -90,11 +96,14 @@ impl LocalProductCode {
                 CodedBlock::Systematic { orig } => out.push(blocks[orig].clone()),
                 CodedBlock::Parity { group } => {
                     let members = layout.group_members(group);
-                    let mut p = blocks[members.start].clone();
-                    for m in members.start + 1..members.end {
-                        p.add_assign(&blocks[m]);
-                    }
-                    out.push(p);
+                    let r0 = members.start;
+                    let slices: Vec<&[f32]> =
+                        members.map(|m| blocks[m].data.as_slice()).collect();
+                    out.push(Matrix::from_vec(
+                        blocks[r0].rows,
+                        blocks[r0].cols,
+                        kernels::sum(&slices),
+                    ));
                 }
             }
         }
@@ -105,11 +114,8 @@ impl LocalProductCode {
     /// *encoding worker* performs).
     pub fn parity_of(blocks: &[Matrix]) -> Matrix {
         assert!(!blocks.is_empty());
-        let mut p = blocks[0].clone();
-        for b in &blocks[1..] {
-            p.add_assign(b);
-        }
-        p
+        let slices: Vec<&[f32]> = blocks.iter().map(|b| b.data.as_slice()).collect();
+        Matrix::from_vec(blocks[0].rows, blocks[0].cols, kernels::sum(&slices))
     }
 }
 
@@ -260,11 +266,13 @@ pub fn decode_coded_output(
 }
 
 /// Extract the systematic `s_a × s_b` output blocks from a (fully decoded)
-/// coded grid.
-pub fn extract_systematic(
+/// coded grid. Generic over the cell type so both owned [`Matrix`] grids
+/// (symbolic path) and shared [`BlockBuf`] grids (numeric path, where
+/// `clone()` is a refcount bump) extract through the one placement rule.
+pub fn extract_systematic<B: Clone>(
     code: &LocalProductCode,
-    coded: &[Option<Matrix>],
-) -> anyhow::Result<Vec<Matrix>> {
+    coded: &[Option<B>],
+) -> anyhow::Result<Vec<B>> {
     let (_, rb) = code.coded_grid();
     let mut out = Vec::with_capacity(code.a.systematic * code.b.systematic);
     for i in 0..code.a.systematic {
@@ -317,62 +325,92 @@ pub fn decode_worker_profiles(
         .collect()
 }
 
-/// Backend-routed side encode (each parity via `stack_sum`).
-fn encode_side_numeric(
+/// Backend-routed **parallel** side encode over shared block handles:
+/// systematic cells are refcount bumps of the input blocks, and every
+/// parity (`stack_sum`, so the PJRT artifacts stay on the hot path) is an
+/// independent task fanned out over `threads`. Member order within a
+/// parity is fixed, so the result is bit-identical to
+/// [`LocalProductCode::encode_side`] at every thread count (pinned by
+/// `tests/codes_prop.rs`).
+pub fn encode_side_parallel(
     backend: &dyn ComputeBackend,
     layout: LocalLayout,
-    blocks: &[Matrix],
-) -> Vec<Matrix> {
-    (0..layout.coded_len())
-        .map(|k| match layout.block_at(k) {
-            CodedBlock::Systematic { orig } => blocks[orig].clone(),
-            CodedBlock::Parity { group } => {
-                let members: Vec<&Matrix> =
-                    layout.group_members(group).map(|m| &blocks[m]).collect();
-                backend.stack_sum(&members)
-            }
-        })
-        .collect()
+    blocks: &[BlockBuf],
+    threads: usize,
+) -> Vec<BlockBuf> {
+    assert_eq!(blocks.len(), layout.systematic);
+    parallel_map(threads, layout.coded_len(), |k| match layout.block_at(k) {
+        CodedBlock::Systematic { orig } => blocks[orig].clone(),
+        CodedBlock::Parity { group } => {
+            let members: Vec<&Matrix> = layout
+                .group_members(group)
+                .map(|m| blocks[m].as_matrix())
+                .collect();
+            BlockBuf::new(backend.stack_sum(&members))
+        }
+    })
 }
 
-/// Backend-routed peeling decode of one local grid (numeric twin of
-/// [`decode_local_grid`], but every recovery runs through the compute
+/// Backend-routed **wavefront** peeling decode of one local grid (numeric
+/// twin of [`decode_local_grid`], every recovery through the compute
 /// backend so the PJRT `parity_residual` / `stack_sum` artifacts are on
 /// the decode hot path).
-fn peel_grid_numeric(
+///
+/// The existing [`PeelPlan`] is untouched — golden peel orders and all
+/// read accounting are exactly the serial plan's. Execution walks the
+/// plan's [`wavefront_levels`]: steps within a level read only original
+/// cells and cells recovered in earlier levels, so each level fans out
+/// over `threads` and writes back when the whole level completes. Values
+/// are bit-identical to serial execution (each step consumes exactly the
+/// cells the serial order would have handed it).
+pub fn peel_grid_wavefront(
     backend: &dyn ComputeBackend,
     l_a: usize,
     l_b: usize,
-    cells: &mut [Option<Matrix>],
+    cells: &mut [Option<BlockBuf>],
+    threads: usize,
 ) {
     let rows = l_a + 1;
     let cols = l_b + 1;
+    assert_eq!(cells.len(), rows * cols);
     let present: Vec<bool> = cells.iter().map(Option::is_some).collect();
     let plan = plan_peel(rows, cols, &present);
-    for step in &plan.steps {
-        let (r, c) = step.cell;
-        let line: Vec<usize> = match step.axis {
-            Axis::Row => (0..cols).map(|cc| r * cols + cc).collect(),
-            Axis::Col => (0..rows).map(|rr| rr * cols + c).collect(),
-        };
-        let target = r * cols + c;
-        let parity_idx = *line.last().unwrap();
-        let value = if target == parity_idx {
-            let members: Vec<&Matrix> = line[..line.len() - 1]
-                .iter()
-                .map(|&i| cells[i].as_ref().expect("plan order"))
-                .collect();
-            backend.stack_sum(&members)
-        } else {
-            let parity = cells[parity_idx].as_ref().expect("plan order").clone();
-            let survivors: Vec<&Matrix> = line[..line.len() - 1]
-                .iter()
-                .filter(|&&i| i != target)
-                .map(|&i| cells[i].as_ref().expect("plan order"))
-                .collect();
-            backend.parity_residual(&parity, &survivors)
-        };
-        cells[target] = Some(value);
+    for level in wavefront_levels(&plan) {
+        let cells_ref: &[Option<BlockBuf>] = cells;
+        let steps = &plan.steps;
+        let level_ref = &level;
+        let recovered: Vec<(usize, BlockBuf)> = parallel_map(threads, level.len(), move |i| {
+            let step = &steps[level_ref[i]];
+            let (r, c) = step.cell;
+            let line: Vec<usize> = match step.axis {
+                Axis::Row => (0..cols).map(|cc| r * cols + cc).collect(),
+                Axis::Col => (0..rows).map(|rr| rr * cols + c).collect(),
+            };
+            let target = r * cols + c;
+            let parity_idx = *line.last().unwrap();
+            let value = if target == parity_idx {
+                let members: Vec<&Matrix> = line[..line.len() - 1]
+                    .iter()
+                    .map(|&i| cells_ref[i].as_ref().expect("wavefront order").as_matrix())
+                    .collect();
+                backend.stack_sum(&members)
+            } else {
+                let parity = cells_ref[parity_idx]
+                    .as_ref()
+                    .expect("wavefront order")
+                    .as_matrix();
+                let survivors: Vec<&Matrix> = line[..line.len() - 1]
+                    .iter()
+                    .filter(|&&i| i != target)
+                    .map(|&i| cells_ref[i].as_ref().expect("wavefront order").as_matrix())
+                    .collect();
+                backend.parity_residual(parity, &survivors)
+            };
+            (target, BlockBuf::new(value))
+        });
+        for (target, value) in recovered {
+            cells[target] = Some(value);
+        }
     }
 }
 
@@ -483,46 +521,72 @@ impl CodingScheme for LocalProductScheme {
     fn encode_numeric(
         &self,
         backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
-    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
+    ) -> (Vec<BlockBuf>, Vec<BlockBuf>) {
+        let threads = num_threads();
         (
-            encode_side_numeric(backend, self.code.a, a_blocks),
-            encode_side_numeric(backend, self.code.b, b_blocks),
+            encode_side_parallel(backend, self.code.a, a_blocks, threads),
+            encode_side_parallel(backend, self.code.b, b_blocks, threads),
         )
     }
 
     fn decode_numeric(
         &self,
         backend: &dyn ComputeBackend,
-        mut grid: Vec<Option<Matrix>>,
+        grid: Vec<Option<BlockBuf>>,
         _arrival_order: &[usize],
-    ) -> anyhow::Result<Vec<Matrix>> {
+    ) -> anyhow::Result<Vec<BlockBuf>> {
         let code = &self.code;
-        let (_, rb) = code.coded_grid();
+        let (ra, rb) = code.coded_grid();
         let (ga, gb) = code.groups();
         let (la, lb) = (code.a.l, code.b.l);
+        let threads = num_threads();
+
+        // Extract every local grid as shared handles (refcount bumps).
+        let mut grids: Vec<Vec<Option<BlockBuf>>> = Vec::with_capacity(ga * gb);
         for gi in 0..ga {
             for gj in 0..gb {
-                // Extract the local grid, peel numerically, write back.
-                let mut cells: Vec<Option<Matrix>> = Vec::with_capacity((la + 1) * (lb + 1));
+                let mut cells: Vec<Option<BlockBuf>> = Vec::with_capacity((la + 1) * (lb + 1));
                 for r in 0..=la {
                     for c in 0..=lb {
                         let (cr, cc) = code.grid_cell(gi, gj, r, c);
-                        cells.push(grid[cr * rb + cc].take());
+                        cells.push(grid[cr * rb + cc].clone());
                     }
                 }
-                peel_grid_numeric(backend, la, lb, &mut cells);
-                let mut it = cells.into_iter();
+                grids.push(cells);
+            }
+        }
+        drop(grid);
+
+        // Grids are independent product codes (§II-B "decodable in
+        // parallel") — fan the grids out over the pool; inside a grid the
+        // wavefront levels parallelize only when this job has a single
+        // grid (no nested oversubscription).
+        let inner_threads = if grids.len() > 1 { 1 } else { threads };
+        let grids_ref = &grids;
+        let decoded: Vec<Vec<Option<BlockBuf>>> =
+            parallel_map(threads, grids.len(), move |g| {
+                let mut cells = grids_ref[g].clone();
+                peel_grid_wavefront(backend, la, lb, &mut cells, inner_threads);
+                cells
+            });
+
+        // Write the decoded grids back into the full coded grid (refcount
+        // bumps) and extract through the one placement rule.
+        let mut coded: Vec<Option<BlockBuf>> = vec![None; ra * rb];
+        for gi in 0..ga {
+            for gj in 0..gb {
+                let cells = &decoded[gi * gb + gj];
                 for r in 0..=la {
                     for c in 0..=lb {
                         let (cr, cc) = code.grid_cell(gi, gj, r, c);
-                        grid[cr * rb + cc] = it.next().unwrap();
+                        coded[cr * rb + cc] = cells[r * (lb + 1) + c].clone();
                     }
                 }
             }
         }
-        extract_systematic(code, &grid)
+        extract_systematic(code, &coded)
     }
 }
 

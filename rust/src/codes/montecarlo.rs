@@ -5,6 +5,7 @@
 
 use crate::codes::peeling::plan_peel;
 use crate::util::rng::Pcg64;
+use crate::util::threadpool::{num_threads, parallel_map};
 
 /// Result of a Monte-Carlo study of one (L_A, L_B, p) design point.
 #[derive(Debug, Clone)]
@@ -35,30 +36,50 @@ impl McResult {
     }
 }
 
-/// Run `trials` independent grids with per-block straggle probability `p`.
+/// Run `trials` independent grids with per-block straggle probability `p`,
+/// fanned out over the host pool (it is the dominant serial loop of
+/// `bench_theory_bounds`). See [`simulate_with_threads`] for the
+/// determinism contract.
 pub fn simulate(l_a: usize, l_b: usize, p: f64, trials: usize, seed: u64) -> McResult {
+    simulate_with_threads(l_a, l_b, p, trials, seed, num_threads())
+}
+
+/// [`simulate`] with an explicit thread count.
+///
+/// Every trial draws from its own RNG stream, forked from the root seed
+/// in trial order *before* the fan-out, and per-trial outcomes are
+/// collected in trial index order — so the result is bit-identical at
+/// every `threads` value (pinned by the `thread_count_invariance` test)
+/// and the aggregation is order-independent by construction.
+pub fn simulate_with_threads(
+    l_a: usize,
+    l_b: usize,
+    p: f64,
+    trials: usize,
+    seed: u64,
+    threads: usize,
+) -> McResult {
     let rows = l_a + 1;
     let cols = l_b + 1;
     let n = rows * cols;
-    let mut rng = Pcg64::new(seed);
-    let mut undecodable = 0usize;
-    let mut reads = Vec::with_capacity(trials);
-    let mut straggler_total = 0usize;
-    let mut present = vec![true; n];
-    for _ in 0..trials {
+    let mut root = Pcg64::new(seed);
+    let streams: Vec<Pcg64> = (0..trials).map(|t| root.fork(t as u64)).collect();
+    // (stragglers, undecodable, total_reads) per trial, in trial order.
+    let outcomes: Vec<(usize, bool, usize)> = parallel_map(threads, trials, |t| {
+        let mut rng = streams[t].clone();
+        let mut present = vec![true; n];
         let mut s = 0usize;
         for cell in present.iter_mut() {
             let straggle = rng.bernoulli(p);
             *cell = !straggle;
             s += straggle as usize;
         }
-        straggler_total += s;
         let plan = plan_peel(rows, cols, &present);
-        if !plan.decodable() {
-            undecodable += 1;
-        }
-        reads.push(plan.total_reads);
-    }
+        (s, !plan.decodable(), plan.total_reads)
+    });
+    let straggler_total: usize = outcomes.iter().map(|o| o.0).sum();
+    let undecodable = outcomes.iter().filter(|o| o.1).count();
+    let mut reads: Vec<usize> = outcomes.iter().map(|o| o.2).collect();
     reads.sort_unstable();
     McResult {
         l_a,
@@ -151,6 +172,19 @@ mod tests {
             "{} vs {expect}",
             mc.mean_stragglers
         );
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        // Per-trial forked streams + index-ordered aggregation: the study
+        // is bit-identical at every thread count.
+        let serial = simulate_with_threads(5, 5, 0.05, 3_000, 99, 1);
+        for threads in [2usize, 4, 8] {
+            let par = simulate_with_threads(5, 5, 0.05, 3_000, 99, threads);
+            assert_eq!(par.pr_undecodable, serial.pr_undecodable, "t={threads}");
+            assert_eq!(par.reads, serial.reads, "t={threads}");
+            assert_eq!(par.mean_stragglers, serial.mean_stragglers, "t={threads}");
+        }
     }
 
     #[test]

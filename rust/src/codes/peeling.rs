@@ -157,6 +157,60 @@ pub fn plan_peel(rows: usize, cols: usize, present: &[bool]) -> PeelPlan {
     }
 }
 
+/// Partition a plan's steps into **wavefront levels** for parallel
+/// numeric execution: a step lands in level `L+1` where `L` is the
+/// deepest level among the previously-recovered cells its constraint
+/// line reads (steps reading only originally-present cells land in level
+/// 0). Steps within one level are mutually independent — each reads only
+/// original cells and cells recovered in strictly earlier levels — so a
+/// decoder may execute a whole level concurrently and still produce
+/// values bit-identical to the serial plan order (the plan itself, and
+/// thus every golden peel order, is untouched; only numeric execution is
+/// scheduled differently).
+///
+/// Returns indices into `plan.steps`, grouped by level; within a level
+/// the original plan order is preserved. The flattened result is a
+/// permutation of `0..plan.steps.len()`.
+pub fn wavefront_levels(plan: &PeelPlan) -> Vec<Vec<usize>> {
+    let (rows, cols) = (plan.rows, plan.cols);
+    // Level at which each cell becomes available; `None` = originally
+    // present (every plan step's line cells are either original or
+    // recovered by an earlier step — `plan_peel` only emits executable
+    // steps).
+    let mut recovered_at: Vec<Option<usize>> = vec![None; rows * cols];
+    let mut levels: Vec<Vec<usize>> = Vec::new();
+    for (si, step) in plan.steps.iter().enumerate() {
+        let (r, c) = step.cell;
+        let mut lvl = 0usize;
+        match step.axis {
+            Axis::Row => {
+                for cc in 0..cols {
+                    if cc != c {
+                        if let Some(l) = recovered_at[r * cols + cc] {
+                            lvl = lvl.max(l + 1);
+                        }
+                    }
+                }
+            }
+            Axis::Col => {
+                for rr in 0..rows {
+                    if rr != r {
+                        if let Some(l) = recovered_at[rr * cols + c] {
+                            lvl = lvl.max(l + 1);
+                        }
+                    }
+                }
+            }
+        }
+        recovered_at[r * cols + c] = Some(lvl);
+        if levels.len() <= lvl {
+            levels.resize_with(lvl + 1, Vec::new);
+        }
+        levels[lvl].push(si);
+    }
+    levels
+}
+
 /// Brute-force decodability oracle for small grids (tests/MC cross-check):
 /// a missing set is decodable iff iterating "recover any cell that is the
 /// only missing one in its row or column" empties it. Peeling is optimal
@@ -434,6 +488,88 @@ mod tests {
             let plan = plan_peel(rows, cols, &p);
             assert!(plan.decodable(), "rows={rows} cols={cols} missing={missing:?}");
         });
+    }
+
+    #[test]
+    fn wavefront_levels_respect_dependencies() {
+        // Property: every step's constraint line reads only cells that are
+        // original or recovered in a strictly earlier level, and the
+        // flattened levels are a permutation of the plan steps.
+        proptest(300, 0xFACADE, |g| {
+            let rows = g.usize_in(2, 8);
+            let cols = g.usize_in(2, 8);
+            let n = rows * cols;
+            let s = g.usize_in(0, n);
+            let missing = g.subset(n, s);
+            let mut p = vec![true; n];
+            for &i in &missing {
+                p[i] = false;
+            }
+            let plan = plan_peel(rows, cols, &p);
+            let levels = wavefront_levels(&plan);
+            let flat: Vec<usize> = levels.iter().flatten().copied().collect();
+            let mut sorted = flat.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..plan.steps.len()).collect::<Vec<_>>());
+
+            // Replay level by level: at each step every other cell of its
+            // line must already be available.
+            let mut have = p.clone();
+            for level in &levels {
+                // Check all of a level against the state BEFORE the level
+                // executes (intra-level steps must not depend on each
+                // other).
+                for &si in level {
+                    let (r, c) = plan.steps[si].cell;
+                    match plan.steps[si].axis {
+                        Axis::Row => {
+                            for cc in 0..cols {
+                                assert!(
+                                    cc == c || have[r * cols + cc],
+                                    "step {si} level-peer dependency at ({r},{cc})"
+                                );
+                            }
+                        }
+                        Axis::Col => {
+                            for rr in 0..rows {
+                                assert!(
+                                    rr == r || have[rr * cols + c],
+                                    "step {si} level-peer dependency at ({rr},{c})"
+                                );
+                            }
+                        }
+                    }
+                }
+                for &si in level {
+                    let (r, c) = plan.steps[si].cell;
+                    have[r * cols + c] = true;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wavefront_level_shapes() {
+        // Isolated stragglers are all level 0; a dependent chain spreads
+        // across levels.
+        let p = grid(3, 4, &(0..4).map(|c| (1, c)).collect::<Vec<_>>());
+        let plan = plan_peel(3, 4, &p);
+        let levels = wavefront_levels(&plan);
+        assert_eq!(levels.len(), 1, "independent column peels are one wave");
+        assert_eq!(levels[0].len(), 4);
+
+        // (0,0) peels via its column first, then (0,1) via row 0 — the row
+        // read includes the just-recovered (0,0), so it must wait a level.
+        let p = grid(3, 3, &[(0, 0), (0, 1)]);
+        let plan = plan_peel(3, 3, &p);
+        let levels = wavefront_levels(&plan);
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0], vec![0]);
+        assert_eq!(levels[1], vec![1]);
+
+        // Empty plan ⇒ no levels.
+        let p = grid(2, 2, &[]);
+        assert!(wavefront_levels(&plan_peel(2, 2, &p)).is_empty());
     }
 
     #[test]

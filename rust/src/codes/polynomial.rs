@@ -21,10 +21,12 @@
 use crate::codes::scheme::{
     CodingScheme, ComputePolicy, DecodePlan, EncodePlan, JobShape, ENCODE_WAIT_FRAC,
 };
-use crate::linalg::matrix::Matrix;
+use crate::linalg::kernels;
+use crate::linalg::matrix::{BlockBuf, Matrix};
 use crate::platform::event::Termination;
 use crate::platform::straggler::WorkProfile;
 use crate::runtime::ComputeBackend;
+use crate::util::threadpool::{num_threads, parallel_map};
 
 /// Past this recovery threshold the real-arithmetic Vandermonde decode is
 /// numerically meaningless (and the paper's master "cannot store" the
@@ -71,14 +73,15 @@ impl PolynomialCode {
         self.n_workers as f64 / self.threshold() as f64 - 1.0
     }
 
-    /// Encode the A side for worker k: Σ_i A_i x_k^i.
-    pub fn encode_a(&self, a_blocks: &[Matrix], k: usize) -> Matrix {
+    /// Encode the A side for worker k: Σ_i A_i x_k^i. Generic so shared
+    /// [`BlockBuf`] handles encode without conversion.
+    pub fn encode_a<B: std::borrow::Borrow<Matrix>>(&self, a_blocks: &[B], k: usize) -> Matrix {
         assert_eq!(a_blocks.len(), self.s_a);
         weighted_sum(a_blocks, |i| self.points[k].powi(i as i32))
     }
 
     /// Encode the B side for worker k: Σ_j B_j x_k^{s_a·j}.
-    pub fn encode_b(&self, b_blocks: &[Matrix], k: usize) -> Matrix {
+    pub fn encode_b<B: std::borrow::Borrow<Matrix>>(&self, b_blocks: &[B], k: usize) -> Matrix {
         assert_eq!(b_blocks.len(), self.s_b);
         weighted_sum(b_blocks, |j| self.points[k].powi((self.s_a * j) as i32))
     }
@@ -113,20 +116,21 @@ impl PolynomialCode {
             .map_err(|e| anyhow::anyhow!("polynomial decode ill-conditioned: {e}"))?;
 
         // Coefficient m (block C at exponent m = i + s_a·j) is
-        // Σ_t vinv[m][t] · R_t.
-        let mut out: Vec<Matrix> = (0..k).map(|_| Matrix::zeros(br, bc)).collect();
-        for m in 0..k {
-            let dst = &mut out[m];
+        // Σ_t vinv[m][t] · R_t — one independent AXPY reduction per
+        // output block, fanned out over the host pool (the paper's
+        // parallel-decoding story; per-block accumulation order is fixed,
+        // so the result is thread-count independent).
+        let out: Vec<Matrix> = parallel_map(num_threads(), k, |m| {
+            let mut dst = Matrix::zeros(br, bc);
             for (t, (_, r)) in use_results.iter().enumerate() {
                 let coef = vinv[m * n + t] as f32;
                 if coef == 0.0 {
                     continue;
                 }
-                for (d, &s) in dst.data.iter_mut().zip(&r.data) {
-                    *d += coef * s;
-                }
+                kernels::axpy(&mut dst.data, coef, &r.data);
             }
-        }
+            dst
+        });
 
         // Reorder exponent m = i + s_a·j into row-major (i, j).
         let mut blocks = Vec::with_capacity(k);
@@ -250,56 +254,65 @@ impl CodingScheme for PolynomialScheme {
     fn encode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
-    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
+    ) -> (Vec<BlockBuf>, Vec<BlockBuf>) {
         // Coded inputs are built lazily per arrived task in
-        // `cell_product` — only the first K products are ever needed.
+        // `cell_product` — only the first K products are ever needed, so
+        // "encoding" here is pure refcount bumps.
         (a_blocks.to_vec(), b_blocks.to_vec())
     }
 
     fn cell_product(
         &self,
         backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
         cell: usize,
-    ) -> Matrix {
+    ) -> BlockBuf {
         let at = self.code.encode_a(a_blocks, cell);
         let bt = self.code.encode_b(b_blocks, cell);
-        backend.block_product(&at, &bt)
+        BlockBuf::new(backend.block_product(&at, &bt))
     }
 
     fn decode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        mut grid: Vec<Option<Matrix>>,
+        mut grid: Vec<Option<BlockBuf>>,
         arrival_order: &[usize],
-    ) -> anyhow::Result<Vec<Matrix>> {
+    ) -> anyhow::Result<Vec<BlockBuf>> {
         let k = self.code.threshold();
         anyhow::ensure!(
             arrival_order.len() == k,
             "wait-k must deliver exactly K arrivals"
         );
+        // Never staged ⇒ sole-owned handles ⇒ `into_matrix` moves.
         let results: Vec<(usize, Matrix)> = arrival_order
             .iter()
-            .map(|&w| (w, grid[w].take().expect("arrived cell was computed")))
+            .map(|&w| {
+                let buf = grid[w].take().expect("arrived cell was computed");
+                (w, buf.into_matrix())
+            })
             .collect();
         let (blocks, _) = self.code.decode(&results)?;
-        Ok(blocks)
+        Ok(blocks.into_iter().map(BlockBuf::new).collect())
     }
 }
 
-fn weighted_sum(blocks: &[Matrix], weight: impl Fn(usize) -> f64) -> Matrix {
-    let mut acc = Matrix::zeros(blocks[0].rows, blocks[0].cols);
+/// `Σ_i weight(i) · blocks[i]` through the AXPY kernel (left-to-right,
+/// zero weights skipped — bit-identical to the historical scalar loop).
+fn weighted_sum<B: std::borrow::Borrow<Matrix>>(
+    blocks: &[B],
+    weight: impl Fn(usize) -> f64,
+) -> Matrix {
+    let first = blocks[0].borrow();
+    let mut acc = Matrix::zeros(first.rows, first.cols);
     for (i, b) in blocks.iter().enumerate() {
         let w = weight(i) as f32;
         if w == 0.0 {
             continue;
         }
-        for (a, &x) in acc.data.iter_mut().zip(&b.data) {
-            *a += w * x;
-        }
+        kernels::axpy(&mut acc.data, w, &b.borrow().data);
     }
     acc
 }

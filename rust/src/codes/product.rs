@@ -13,11 +13,13 @@ use crate::codes::scheme::{
     CodingScheme, ComputePolicy, DecodePlan, DecodeProbe, EncodePlan, JobShape,
     DECODE_WAIT_FRAC, ENCODE_WAIT_FRAC,
 };
-use crate::linalg::matrix::Matrix;
+use crate::linalg::kernels;
+use crate::linalg::matrix::{BlockBuf, Matrix};
 use crate::linalg::solve::lu_solve;
 use crate::platform::event::Termination;
 use crate::platform::straggler::WorkProfile;
 use crate::runtime::ComputeBackend;
+use crate::util::threadpool::{num_threads, parallel_map};
 
 /// MDS code along one axis: `systematic` data blocks + `parities`
 /// Vandermonde parity blocks. Any `systematic` of the `systematic +
@@ -56,26 +58,42 @@ impl MdsAxisCode {
         self.points[p].powi(i as i32)
     }
 
-    /// Compute parity block `p` from all systematic blocks.
-    pub fn parity(&self, p: usize, blocks: &[Matrix]) -> Matrix {
+    /// Compute parity block `p` from all systematic blocks (the
+    /// [`kernels::axpy`] accumulate path; generic so shared
+    /// [`BlockBuf`] handles encode without conversion).
+    pub fn parity<B: std::borrow::Borrow<Matrix>>(&self, p: usize, blocks: &[B]) -> Matrix {
         assert_eq!(blocks.len(), self.systematic);
-        let mut acc = Matrix::zeros(blocks[0].rows, blocks[0].cols);
+        let first = blocks[0].borrow();
+        let mut acc = Matrix::zeros(first.rows, first.cols);
         for (i, b) in blocks.iter().enumerate() {
             let w = self.weight(p, i) as f32;
-            for (a, &x) in acc.data.iter_mut().zip(&b.data) {
-                *a += w * x;
-            }
+            kernels::axpy(&mut acc.data, w, &b.borrow().data);
         }
         acc
     }
 
-    /// Encode a side: systematic blocks followed by parity blocks.
+    /// Encode a side: systematic blocks followed by parity blocks (serial
+    /// reference; the coordinator path is [`MdsAxisCode::encode_parallel`]).
     pub fn encode(&self, blocks: &[Matrix]) -> Vec<Matrix> {
         let mut out = blocks.to_vec();
         for p in 0..self.parities {
             out.push(self.parity(p, blocks));
         }
         out
+    }
+
+    /// Parallel shared-handle encode: the systematic prefix is refcount
+    /// bumps and each (global) parity is an independent task. Bit-identical
+    /// to [`MdsAxisCode::encode`] at every thread count.
+    pub fn encode_parallel(&self, blocks: &[BlockBuf], threads: usize) -> Vec<BlockBuf> {
+        assert_eq!(blocks.len(), self.systematic);
+        parallel_map(threads, self.coded_len(), |k| {
+            if k < self.systematic {
+                blocks[k].clone()
+            } else {
+                BlockBuf::new(self.parity(k - self.systematic, blocks))
+            }
+        })
     }
 
     /// Recover missing systematic blocks along one line.
@@ -117,9 +135,7 @@ impl MdsAxisCode {
             for i in 0..self.systematic {
                 if let Some(d) = &line[i] {
                     let w = self.weight(p, i) as f32;
-                    for (sv, &dv) in s.data.iter_mut().zip(&d.data) {
-                        *sv -= w * dv;
-                    }
+                    kernels::axpy(&mut s.data, -w, &d.data);
                 }
             }
             syndromes.push(s);
@@ -148,9 +164,7 @@ impl MdsAxisCode {
         for (m, rec) in recovered.iter_mut().enumerate() {
             for (pi, syn) in syndromes.iter().enumerate() {
                 let coef = winv[m][pi] as f32;
-                for (rv, &sv) in rec.data.iter_mut().zip(&syn.data) {
-                    *rv += coef * sv;
-                }
+                kernels::axpy(&mut rec.data, coef, &syn.data);
             }
         }
 
@@ -477,19 +491,36 @@ impl CodingScheme for ProductScheme {
     fn encode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
-    ) -> (Vec<Matrix>, Vec<Matrix>) {
-        self.code.encode_sides(a_blocks, b_blocks)
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
+    ) -> (Vec<BlockBuf>, Vec<BlockBuf>) {
+        let threads = num_threads();
+        (
+            self.code.row_code.encode_parallel(a_blocks, threads),
+            self.code.col_code.encode_parallel(b_blocks, threads),
+        )
     }
 
     fn decode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        mut grid: Vec<Option<Matrix>>,
+        grid: Vec<Option<BlockBuf>>,
         _arrival_order: &[usize],
-    ) -> anyhow::Result<Vec<Matrix>> {
-        Ok(self.code.decode(&mut grid)?.systematic)
+    ) -> anyhow::Result<Vec<BlockBuf>> {
+        // The recovery passes mutate cells in place, so materialize owned
+        // matrices; the scheme never stages blocks, so every handle is
+        // sole-owned and `into_matrix` is a move, not a copy.
+        let mut grid: Vec<Option<Matrix>> = grid
+            .into_iter()
+            .map(|slot| slot.map(BlockBuf::into_matrix))
+            .collect();
+        Ok(self
+            .code
+            .decode(&mut grid)?
+            .systematic
+            .into_iter()
+            .map(BlockBuf::new)
+            .collect())
     }
 }
 

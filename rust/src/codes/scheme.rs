@@ -23,7 +23,7 @@
 //! draw-order compatibility rules).
 
 use crate::codes::Scheme;
-use crate::linalg::matrix::Matrix;
+use crate::linalg::matrix::BlockBuf;
 use crate::platform::event::Termination;
 use crate::platform::straggler::WorkProfile;
 use crate::runtime::ComputeBackend;
@@ -184,37 +184,47 @@ pub trait CodingScheme: ComputePolicy {
 
     /// Numerically encode both sides through the backend; returns the
     /// inputs the compute cells draw from. Schemes that encode lazily per
-    /// task (polynomial) return the plain blocks.
+    /// task (polynomial) return the plain blocks. Blocks are shared
+    /// [`BlockBuf`] handles: systematic coded cells are refcount bumps of
+    /// the input blocks, and the driver stages the returned handles into
+    /// the object store without copying.
     fn encode_numeric(
         &self,
         backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
-    ) -> (Vec<Matrix>, Vec<Matrix>);
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
+    ) -> (Vec<BlockBuf>, Vec<BlockBuf>);
 
     /// Numeric result of compute cell `cell`. Default: the cross product
     /// of the encoded sides over a row-major `… × b_coded.len()` grid.
     fn cell_product(
         &self,
         backend: &dyn ComputeBackend,
-        a_coded: &[Matrix],
-        b_coded: &[Matrix],
+        a_coded: &[BlockBuf],
+        b_coded: &[BlockBuf],
         cell: usize,
-    ) -> Matrix {
+    ) -> BlockBuf {
         let rb = b_coded.len();
-        backend.block_product(&a_coded[cell / rb], &b_coded[cell % rb])
+        BlockBuf::new(backend.block_product(
+            a_coded[cell / rb].as_matrix(),
+            b_coded[cell % rb].as_matrix(),
+        ))
     }
 
     /// Numeric decode: consume the computed grid (`None` = never
     /// computed) and return the `s_a × s_b` systematic output blocks in
     /// row-major order. `arrival_order` lists completed cells in
-    /// completion order (wait-k schemes decode from the first K).
+    /// completion order (wait-k schemes decode from the first K). Grid
+    /// cells arrive as shared [`BlockBuf`] handles (the driver re-reads
+    /// staged block-products from the store as refcount bumps);
+    /// already-present systematic outputs should be returned as clones of
+    /// those handles, not copies.
     fn decode_numeric(
         &self,
         backend: &dyn ComputeBackend,
-        grid: Vec<Option<Matrix>>,
+        grid: Vec<Option<BlockBuf>>,
         arrival_order: &[usize],
-    ) -> anyhow::Result<Vec<Matrix>>;
+    ) -> anyhow::Result<Vec<BlockBuf>>;
 }
 
 // ---------------------------------------------------------------------------
@@ -240,7 +250,7 @@ pub struct SpeculativeScheme {
 
 /// Shared numeric path of the uncoded family: every systematic block
 /// product eventually arrives, so decode is a plain unwrap.
-fn unwrap_full_grid(grid: Vec<Option<Matrix>>) -> anyhow::Result<Vec<Matrix>> {
+fn unwrap_full_grid(grid: Vec<Option<BlockBuf>>) -> anyhow::Result<Vec<BlockBuf>> {
     grid.into_iter()
         .enumerate()
         .map(|(i, c)| c.ok_or_else(|| anyhow::anyhow!("uncoded cell {i} missing")))
@@ -273,18 +283,19 @@ impl CodingScheme for UncodedScheme {
     fn encode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
-    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
+    ) -> (Vec<BlockBuf>, Vec<BlockBuf>) {
+        // Shared handles: "encoding" an uncoded job is pure refcount bumps.
         (a_blocks.to_vec(), b_blocks.to_vec())
     }
 
     fn decode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        grid: Vec<Option<Matrix>>,
+        grid: Vec<Option<BlockBuf>>,
         _arrival_order: &[usize],
-    ) -> anyhow::Result<Vec<Matrix>> {
+    ) -> anyhow::Result<Vec<BlockBuf>> {
         unwrap_full_grid(grid)
     }
 }
@@ -317,18 +328,18 @@ impl CodingScheme for SpeculativeScheme {
     fn encode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
-    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
+    ) -> (Vec<BlockBuf>, Vec<BlockBuf>) {
         (a_blocks.to_vec(), b_blocks.to_vec())
     }
 
     fn decode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        grid: Vec<Option<Matrix>>,
+        grid: Vec<Option<BlockBuf>>,
         _arrival_order: &[usize],
-    ) -> anyhow::Result<Vec<Matrix>> {
+    ) -> anyhow::Result<Vec<BlockBuf>> {
         unwrap_full_grid(grid)
     }
 }

@@ -24,13 +24,13 @@ use crate::codes::scheme::{CodingScheme, ComputePolicy, JobShape};
 use crate::coordinator::matmul::{Env, MatmulJob};
 use crate::coordinator::metrics::{JobReport, StorageMetrics};
 use crate::linalg::blocked::{assemble_grid, GridShape, Partition};
-use crate::linalg::matrix::Matrix;
+use crate::linalg::matrix::{BlockBuf, Matrix};
 use crate::platform::event::{run_phase, EventSim, PhaseState, Termination};
 use crate::platform::straggler::{StragglerModel, WorkProfile};
 use crate::runtime::manifest::JobManifest;
 use crate::storage::keys;
 use crate::util::rng::Pcg64;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_for, parallel_map};
 
 /// Launch one phase (sampling a duration per profile, in task order, at
 /// submission) and drive the sim until its termination rule fires.
@@ -87,8 +87,11 @@ pub fn run_job(
     let shape = JobShape::new(job.s_a, job.s_b, (vm, vk, vl));
     let pa = Partition::new(a.rows, a.cols, job.s_a);
     let pb = Partition::new(b.rows, b.cols, job.s_b);
-    let a_blocks = pa.split(a);
-    let b_blocks = pb.split(b);
+    // Shared block handles: from here on every hand-off — encode
+    // systematic cells, store staging, decode grid extraction — is a
+    // refcount bump, not a payload copy.
+    let a_blocks: Vec<BlockBuf> = pa.split(a).into_iter().map(BlockBuf::new).collect();
+    let b_blocks: Vec<BlockBuf> = pb.split(b).into_iter().map(BlockBuf::new).collect();
 
     let n_tasks = scheme.compute_tasks();
     // One event simulator per job: the clock carries across phases.
@@ -107,23 +110,36 @@ pub fn run_job(
         report.enc.blocks_read = plan.blocks_read;
     }
 
-    // Numerics: encode through the backend; staging schemes stash the
-    // coded blocks in the store (the serverless dataflow — workers
-    // exchange blocks via storage) and record them in the job manifest.
+    // Numerics: encode through the backend (parallel per-parity fan-out
+    // inside the scheme); staging schemes stash the coded blocks in the
+    // store (the serverless dataflow — workers exchange blocks via
+    // storage) and record them in the job manifest. Staging hands the
+    // store the blocks' shared payloads (`put_block`): zero copies, the
+    // store's byte counters still report the logical wire size. Manifest
+    // entries are recorded serially (deterministic order); the store
+    // writes fan out over the host pool.
     let backend = env.backend.as_ref();
     let (a_coded, b_coded) = scheme.encode_numeric(backend, &a_blocks, &b_blocks);
     if staged {
         let store = env.store.as_ref();
-        for (i, blk) in a_coded.iter().enumerate() {
-            let key = keys::coded_block(&job.job_id, "a", i);
-            crate::storage::put_matrix(store, &key, blk);
-            manifest.push(key, blk.rows, blk.cols);
+        let to_stage: Vec<(String, &BlockBuf)> = a_coded
+            .iter()
+            .enumerate()
+            .map(|(i, blk)| (keys::coded_block(&job.job_id, "a", i), blk))
+            .chain(
+                b_coded
+                    .iter()
+                    .enumerate()
+                    .map(|(j, blk)| (keys::coded_block(&job.job_id, "b", j), blk)),
+            )
+            .collect();
+        for (key, blk) in &to_stage {
+            manifest.push(key.clone(), blk.rows, blk.cols);
         }
-        for (j, blk) in b_coded.iter().enumerate() {
-            let key = keys::coded_block(&job.job_id, "b", j);
-            crate::storage::put_matrix(store, &key, blk);
-            manifest.push(key, blk.rows, blk.cols);
-        }
+        parallel_for(env.threads, to_stage.len(), |i| {
+            let (key, blk) = &to_stage[i];
+            store.put_block(key, (*blk).clone());
+        });
     }
 
     // --- Compute phase under the scheme's termination policy; an
@@ -149,7 +165,7 @@ pub fn run_job(
 
     // Numerics: compute the arrived products only. The rest are the
     // stragglers decode must reconstruct.
-    let mut grid: Vec<Option<Matrix>> = if report.numerics_ok {
+    let mut grid: Vec<Option<BlockBuf>> = if report.numerics_ok {
         let arrived_ref = &arrived;
         let a_ref = &a_coded;
         let b_ref = &b_coded;
@@ -165,25 +181,35 @@ pub fn run_job(
     };
 
     // The workers' block-products land in the store too, and decode
-    // reads them back through the (optionally cached) store — real bytes
-    // on the host path, the paper's S3 round-trip between f_comp and
-    // f_dec. The byte round-trip is exact (f32 wire format), so the
-    // decoded numerics are unchanged.
+    // reads them back through the (optionally cached) store — the
+    // paper's S3 round-trip between f_comp and f_dec. Both directions
+    // are refcount bumps on the shared handles (`put_block` /
+    // `get_block`): the round-trip is exact by construction and the
+    // store/cache counters account the same logical wire bytes as the
+    // historical serialize-and-parse path.
     if staged && report.numerics_ok {
         let store = env.store.as_ref();
         let rb = b_coded.len();
-        for (cell, slot) in grid.iter().enumerate() {
-            if let Some(m) = slot {
-                let key = keys::out_block(&job.job_id, cell / rb, cell % rb);
-                crate::storage::put_matrix(store, &key, m);
-                manifest.push(key, m.rows, m.cols);
-            }
+        let out_keys: Vec<(usize, String)> = grid
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.is_some())
+            .map(|(cell, _)| (cell, keys::out_block(&job.job_id, cell / rb, cell % rb)))
+            .collect();
+        for (cell, key) in &out_keys {
+            let m = grid[*cell].as_ref().expect("filtered to arrived cells");
+            manifest.push(key.clone(), m.rows, m.cols);
         }
-        for (cell, slot) in grid.iter_mut().enumerate() {
-            if slot.is_some() {
-                let key = keys::out_block(&job.job_id, cell / rb, cell % rb);
-                *slot = Some(crate::storage::get_matrix(store, &key)?);
-            }
+        parallel_for(env.threads, out_keys.len(), |i| {
+            let (cell, key) = &out_keys[i];
+            let blk = grid[*cell].as_ref().expect("filtered to arrived cells");
+            store.put_block(key, blk.clone());
+        });
+        for (cell, key) in &out_keys {
+            let blk = store
+                .get_block(key)
+                .ok_or_else(|| anyhow::anyhow!("missing staged block-product: {key}"))?;
+            grid[*cell] = Some(blk);
         }
     }
 
@@ -228,12 +254,15 @@ pub fn run_job(
     let sys = scheme.decode_numeric(backend, grid, &arrival_order)?;
     if staged {
         let store = env.store.as_ref();
-        for (idx, blk) in sys.iter().enumerate() {
-            let (i, j) = (idx / job.s_b, idx % job.s_b);
-            let key = keys::result_block(&job.job_id, i, j);
-            crate::storage::put_matrix(store, &key, blk);
-            manifest.push(key, blk.rows, blk.cols);
+        let result_keys: Vec<String> = (0..sys.len())
+            .map(|idx| keys::result_block(&job.job_id, idx / job.s_b, idx % job.s_b))
+            .collect();
+        for (key, blk) in result_keys.iter().zip(&sys) {
+            manifest.push(key.clone(), blk.rows, blk.cols);
         }
+        parallel_for(env.threads, sys.len(), |idx| {
+            store.put_block(&result_keys[idx], sys[idx].clone());
+        });
         // The manifest is the workers' lookup contract: everything the
         // job staged, discoverable from the job id alone.
         manifest.save(store);

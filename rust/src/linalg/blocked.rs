@@ -120,12 +120,15 @@ impl GridShape {
 }
 
 /// Assemble a full output matrix from a row-major grid of equally-shaped
-/// blocks.
-pub fn assemble_grid(shape: GridShape, blocks: &[Matrix]) -> Matrix {
+/// blocks. Generic over owned [`Matrix`] grids and shared
+/// [`crate::linalg::matrix::BlockBuf`] grids (the zero-copy pipeline
+/// assembles straight from the staged handles).
+pub fn assemble_grid<B: std::borrow::Borrow<Matrix>>(shape: GridShape, blocks: &[B]) -> Matrix {
     assert_eq!(blocks.len(), shape.n());
-    let (br, bc) = blocks[0].shape();
+    let (br, bc) = blocks[0].borrow().shape();
     let mut out = Matrix::zeros(shape.rows * br, shape.cols * bc);
     for (idx, b) in blocks.iter().enumerate() {
+        let b = b.borrow();
         assert_eq!(b.shape(), (br, bc), "grid block {idx} shape mismatch");
         let (r, c) = shape.rc(idx);
         out.paste(r * br, c * bc, b);

@@ -34,12 +34,43 @@ pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = A · B` with plain orientations (m×k)·(k×n). Implemented via the
-/// dot-friendly kernel against Bᵀ.
+/// `C = A · B` with plain orientations (m×k)·(k×n).
+///
+/// Historically implemented as `matmul_bt(a, &b.transpose())`, which hid
+/// an O(kn) transpose allocation + copy on every plain-orientation call.
+/// Now a direct ikj kernel: each row of C accumulates `a[i][kk] ·
+/// b.row(kk)` via the in-place AXPY kernel, so B streams row-major with
+/// no transpose and no scratch matrix. Parallel over row panels of A.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.rows, "A (m×k) · B (k×n) needs matching k");
-    let bt = b.transpose();
-    matmul_bt(a, &bt)
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    let threads = crate::util::threadpool::num_threads();
+    const PANEL: usize = 64;
+    let panels = m.div_ceil(PANEL);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    parallel_for(threads, panels, |p| {
+        let r0 = p * PANEL;
+        let r1 = (r0 + PANEL).min(m);
+        // SAFETY: panels write disjoint row ranges of c.
+        let c_panel =
+            unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(r0 * n), (r1 - r0) * n) };
+        gemm_nn_panel(&a.data[r0 * k..r1 * k], &b.data, c_panel, r1 - r0, n, k);
+    });
+    c
+}
+
+/// Panel kernel for plain orientations: `c[mp×n] += a_panel[mp×k] ·
+/// b[k×n]`, row-of-B streaming (ikj order, AXPY inner loop).
+fn gemm_nn_panel(a: &[f32], b: &[f32], c: &mut [f32], mp: usize, n: usize, k: usize) {
+    for i in 0..mp {
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            // No zero-skip: 0·Inf/0·NaN must propagate exactly like the
+            // transpose-based path and the naive oracle.
+            crate::linalg::kernels::axpy(c_row, a[i * k + kk], &b[kk * n..(kk + 1) * n]);
+        }
+    }
 }
 
 struct SendPtr(*mut f32);
@@ -203,11 +234,19 @@ mod tests {
     #[test]
     fn matmul_plain_matches_naive() {
         let mut rng = Pcg64::new(2);
-        let a = Matrix::randn(31, 17, &mut rng, 0.0, 1.0);
-        let b = Matrix::randn(17, 23, &mut rng, 0.0, 1.0);
-        let fast = matmul(&a, &b);
-        let slow = matmul_naive(&a, &b);
-        assert!(fast.rel_err(&slow) < 1e-5);
+        // Shapes straddling the 64-row panel width exercise both the
+        // parallel fan-out and the single-panel path of the nn kernel.
+        for (m, k, n) in [(1, 1, 1), (31, 17, 23), (64, 9, 40), (130, 65, 70)] {
+            let a = Matrix::randn(m, k, &mut rng, 0.0, 1.0);
+            let b = Matrix::randn(k, n, &mut rng, 0.0, 1.0);
+            let fast = matmul(&a, &b);
+            let slow = matmul_naive(&a, &b);
+            assert!(
+                fast.rel_err(&slow) < 1e-5,
+                "({m},{k},{n}) err={}",
+                fast.rel_err(&slow)
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! In-place, SIMD-friendly slice kernels for the coded hot paths.
+//!
+//! Parity encode and peeling recovery are pure streaming arithmetic over
+//! equally-shaped `f32` blocks (`parity = Σ members`,
+//! `missing = parity − Σ survivors`). The historical implementations went
+//! through `Matrix::clone` + `add_assign`, paying one allocation *and* one
+//! extra memory pass per operand. These kernels follow the same
+//! bounds-check-free slice style as `gemm::gemm_bt_panel`: equal lengths
+//! are asserted once, then the loops run over `chunks_exact` windows that
+//! LLVM keeps fully vectorized.
+//!
+//! Operand order is part of the contract: every multi-operand kernel
+//! accumulates left to right, exactly like the serial clone-then-add code
+//! it replaced, so encode/decode results stay **bit-identical** (the
+//! parallel-vs-serial property tests in `tests/codes_prop.rs` pin this).
+
+const LANES: usize = 8;
+
+/// `y[i] += x[i]`.
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "kernel operand length mismatch");
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yy, xx) in (&mut yc).zip(&mut xc) {
+        for (a, b) in yy.iter_mut().zip(xx) {
+            *a += *b;
+        }
+    }
+    for (a, b) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += *b;
+    }
+}
+
+/// `y[i] -= x[i]`.
+pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "kernel operand length mismatch");
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yy, xx) in (&mut yc).zip(&mut xc) {
+        for (a, b) in yy.iter_mut().zip(xx) {
+            *a -= *b;
+        }
+    }
+    for (a, b) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a -= *b;
+    }
+}
+
+/// AXPY: `y[i] += alpha · x[i]`.
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "kernel operand length mismatch");
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yy, xx) in (&mut yc).zip(&mut xc) {
+        for (a, b) in yy.iter_mut().zip(xx) {
+            *a += alpha * *b;
+        }
+    }
+    for (a, b) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += alpha * *b;
+    }
+}
+
+/// `out = terms[0] + terms[1] + …` into a caller-owned buffer (cleared
+/// first) — the parity-encode kernel. `terms` must be non-empty and
+/// equally sized.
+pub fn sum_into(out: &mut Vec<f32>, terms: &[&[f32]]) {
+    assert!(!terms.is_empty(), "sum_into needs at least one term");
+    out.clear();
+    out.extend_from_slice(terms[0]);
+    for t in &terms[1..] {
+        add_assign(out, t);
+    }
+}
+
+/// `Σ terms` as a fresh buffer.
+pub fn sum(terms: &[&[f32]]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(terms.first().map_or(0, |t| t.len()));
+    sum_into(&mut out, terms);
+    out
+}
+
+/// `base − Σ subs` as a fresh buffer — the peeling-recovery kernel
+/// (`missing = parity − Σ survivors`).
+pub fn residual(base: &[f32], subs: &[&[f32]]) -> Vec<f32> {
+    let mut out = base.to_vec();
+    for s in subs {
+        sub_assign(&mut out, s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_assign_cover_remainders() {
+        // Lengths straddling the unroll width exercise both loop halves.
+        for n in [0usize, 1, 7, 8, 9, 31, 64] {
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut y = vec![1.0f32; n];
+            add_assign(&mut y, &x);
+            for (i, &v) in y.iter().enumerate() {
+                assert_eq!(v, 1.0 + i as f32, "n={n} i={i}");
+            }
+            sub_assign(&mut y, &x);
+            assert!(y.iter().all(|&v| v == 1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_loop() {
+        let x: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let mut y: Vec<f32> = (0..37).map(|i| (i as f32).cos()).collect();
+        let want: Vec<f32> = y.iter().zip(&x).map(|(yy, xx)| yy + 2.5 * xx).collect();
+        axpy(&mut y, 2.5, &x);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn sum_and_residual_are_left_to_right() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [10.0f32, 20.0, 30.0];
+        let c = [100.0f32, 200.0, 300.0];
+        let s = sum(&[&a, &b, &c]);
+        assert_eq!(s, vec![111.0, 222.0, 333.0]);
+        let r = residual(&s, &[&a, &b]);
+        assert_eq!(r, vec![100.0, 200.0, 300.0]);
+        // Identical to the clone-then-add path it replaced, bit for bit.
+        let mut manual = a.to_vec();
+        add_assign(&mut manual, &b);
+        add_assign(&mut manual, &c);
+        assert_eq!(s, manual);
+    }
+
+    #[test]
+    fn sum_into_reuses_the_buffer() {
+        let a = [1.0f32; 16];
+        let b = [2.0f32; 16];
+        let mut buf = Vec::new();
+        sum_into(&mut buf, &[&a, &b]);
+        assert_eq!(buf, vec![3.0; 16]);
+        let cap = buf.capacity();
+        sum_into(&mut buf, &[&b, &b]);
+        assert_eq!(buf, vec![4.0; 16]);
+        assert_eq!(buf.capacity(), cap, "no reallocation on reuse");
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let mut y = vec![0.0f32; 4];
+        add_assign(&mut y, &[0.0; 5]);
+    }
+}

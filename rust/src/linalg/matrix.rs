@@ -141,20 +141,16 @@ impl Matrix {
         Matrix::from_vec(self.rows, self.cols, data)
     }
 
-    /// In-place `self += other`.
+    /// In-place `self += other` (the [`crate::linalg::kernels`] path).
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        crate::linalg::kernels::add_assign(&mut self.data, &other.data);
     }
 
-    /// In-place `self -= other`.
+    /// In-place `self -= other` (the [`crate::linalg::kernels`] path).
     pub fn sub_assign(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a -= b;
-        }
+        crate::linalg::kernels::sub_assign(&mut self.data, &other.data);
     }
 
     /// Scalar multiply.
@@ -216,6 +212,112 @@ impl Matrix {
             data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
         }
         Ok(Matrix { rows, cols, data })
+    }
+}
+
+/// Shared immutable block: an `Arc`-backed [`Matrix`] whose payload (the
+/// row-major little-endian `f32` slice) is exactly the wire payload of
+/// [`Matrix::to_bytes`]. `BlockBuf` is the currency of the zero-copy
+/// block pipeline:
+///
+/// - `clone()` is a refcount bump — systematic cells of an encode, grid
+///   extraction in the peeling decoder, and staging the same block into
+///   the object store all share one allocation.
+/// - [`crate::storage::ObjectStore::put_block`] /
+///   [`crate::storage::ObjectStore::get_block`] hand the same allocation
+///   to and from the store (the store's byte counters still report the
+///   logical wire size, [`BlockBuf::wire_len`]).
+/// - Numeric kernels read through [`BlockBuf::as_matrix`] /
+///   [`BlockBuf::as_slice`] without copying; only genuinely *new* values
+///   (parities, recovered cells) allocate.
+///
+/// The payload is immutable by construction; to mutate, materialize a
+/// [`Matrix`] via [`BlockBuf::into_matrix`] (zero-copy when this handle
+/// is the sole owner) or [`BlockBuf::to_matrix`] (always a deep copy).
+#[derive(Debug, Clone)]
+pub struct BlockBuf {
+    inner: std::sync::Arc<Matrix>,
+}
+
+impl BlockBuf {
+    /// Wrap a matrix (no copy; the matrix moves into the shared buffer).
+    pub fn new(m: Matrix) -> BlockBuf {
+        BlockBuf {
+            inner: std::sync::Arc::new(m),
+        }
+    }
+
+    /// Borrow the underlying matrix.
+    #[inline]
+    pub fn as_matrix(&self) -> &Matrix {
+        &self.inner
+    }
+
+    /// Borrow the f32 payload.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.inner.data
+    }
+
+    /// Unwrap into an owned matrix: zero-copy when this handle is the
+    /// sole owner, a deep copy otherwise.
+    pub fn into_matrix(self) -> Matrix {
+        std::sync::Arc::try_unwrap(self.inner).unwrap_or_else(|shared| (*shared).clone())
+    }
+
+    /// Deep-copy into an owned matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        (*self.inner).clone()
+    }
+
+    /// Do two handles share one allocation? (The zero-copy assertion used
+    /// by the storage round-trip tests.)
+    pub fn ptr_eq(a: &BlockBuf, b: &BlockBuf) -> bool {
+        std::sync::Arc::ptr_eq(&a.inner, &b.inner)
+    }
+
+    /// Logical wire size in bytes (16-byte dims header + 4 bytes per
+    /// element) — what the store's `bytes_in`/`bytes_out` counters report
+    /// for a staged block even though no bytes are copied.
+    pub fn wire_len(&self) -> usize {
+        16 + self.inner.data.len() * 4
+    }
+
+    /// Serialize to the [`Matrix::to_bytes`] wire format (allocates; only
+    /// the byte-oriented compatibility paths need this).
+    pub fn to_wire(&self) -> Vec<u8> {
+        self.inner.to_bytes()
+    }
+
+    /// Parse a wire-format blob (see [`Matrix::from_bytes`]).
+    pub fn from_wire(bytes: &[u8]) -> anyhow::Result<BlockBuf> {
+        Ok(BlockBuf::new(Matrix::from_bytes(bytes)?))
+    }
+}
+
+impl From<Matrix> for BlockBuf {
+    fn from(m: Matrix) -> BlockBuf {
+        BlockBuf::new(m)
+    }
+}
+
+impl std::ops::Deref for BlockBuf {
+    type Target = Matrix;
+
+    fn deref(&self) -> &Matrix {
+        &self.inner
+    }
+}
+
+impl std::borrow::Borrow<Matrix> for BlockBuf {
+    fn borrow(&self) -> &Matrix {
+        &self.inner
+    }
+}
+
+impl PartialEq for BlockBuf {
+    fn eq(&self, other: &BlockBuf) -> bool {
+        BlockBuf::ptr_eq(self, other) || self.inner == other.inner
     }
 }
 
@@ -340,6 +442,38 @@ mod tests {
         let mut b = m.to_bytes();
         b.pop();
         assert!(Matrix::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn blockbuf_shares_and_unwraps() {
+        let mut rng = Pcg64::new(5);
+        let m = Matrix::randn(6, 4, &mut rng, 0.0, 1.0);
+        let b = BlockBuf::new(m.clone());
+        let b2 = b.clone();
+        assert!(BlockBuf::ptr_eq(&b, &b2));
+        assert_eq!(b.as_matrix(), &m);
+        assert_eq!(b.as_slice(), m.data.as_slice());
+        assert_eq!(b.rows, 6); // Deref to Matrix
+        assert_eq!(b.wire_len(), 16 + 24 * 4);
+        // Shared handle: into_matrix deep-copies; sole owner: moves.
+        let copied = b2.into_matrix();
+        assert_eq!(copied, m);
+        let sole = BlockBuf::new(m.clone());
+        assert_eq!(sole.into_matrix(), m);
+    }
+
+    #[test]
+    fn blockbuf_wire_roundtrip_is_the_matrix_format() {
+        let mut rng = Pcg64::new(6);
+        let m = Matrix::randn(3, 5, &mut rng, 0.0, 1.0);
+        let b = BlockBuf::new(m.clone());
+        let wire = b.to_wire();
+        assert_eq!(wire, m.to_bytes());
+        assert_eq!(wire.len(), b.wire_len());
+        let back = BlockBuf::from_wire(&wire).unwrap();
+        assert!(!BlockBuf::ptr_eq(&b, &back));
+        assert_eq!(back, b);
+        assert!(BlockBuf::from_wire(&wire[..7]).is_err());
     }
 
     #[test]

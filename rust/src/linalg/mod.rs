@@ -9,8 +9,9 @@
 pub mod blocked;
 pub mod eigen;
 pub mod gemm;
+pub mod kernels;
 pub mod matrix;
 pub mod solve;
 
 pub use blocked::{assemble_grid, pad_rows, unpad_rows, GridShape, Partition};
-pub use matrix::Matrix;
+pub use matrix::{BlockBuf, Matrix};

@@ -40,19 +40,27 @@ impl ComputeBackend for HostBackend {
 
     fn stack_sum(&self, blocks: &[&Matrix]) -> Matrix {
         assert!(!blocks.is_empty());
-        let mut acc = blocks[0].clone();
         for b in &blocks[1..] {
-            acc.add_assign(b);
+            assert_eq!(b.shape(), blocks[0].shape());
         }
-        acc
+        let slices: Vec<&[f32]> = blocks.iter().map(|b| b.data.as_slice()).collect();
+        Matrix::from_vec(
+            blocks[0].rows,
+            blocks[0].cols,
+            crate::linalg::kernels::sum(&slices),
+        )
     }
 
     fn parity_residual(&self, parity: &Matrix, survivors: &[&Matrix]) -> Matrix {
-        let mut acc = parity.clone();
         for b in survivors {
-            acc.sub_assign(b);
+            assert_eq!(b.shape(), parity.shape());
         }
-        acc
+        let slices: Vec<&[f32]> = survivors.iter().map(|b| b.data.as_slice()).collect();
+        Matrix::from_vec(
+            parity.rows,
+            parity.cols,
+            crate::linalg::kernels::residual(&parity.data, &slices),
+        )
     }
 
     fn gemv(&self, a: &Matrix, x: &[f32]) -> Vec<f32> {

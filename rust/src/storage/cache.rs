@@ -12,6 +12,40 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::{ObjectStore, StatsSnapshot};
+use crate::linalg::matrix::BlockBuf;
+
+/// One cached payload: raw bytes, or a shared matrix-block handle (the
+/// zero-copy pipeline caches the handle itself — a hit is a refcount
+/// bump, never a payload copy). Byte accounting uses the logical wire
+/// size either way, so the byte bound means the same thing for both.
+#[derive(Clone)]
+pub enum Cached {
+    Bytes(Arc<Vec<u8>>),
+    Block(BlockBuf),
+}
+
+impl Cached {
+    /// Logical byte size (wire size for blocks).
+    pub fn len(&self) -> usize {
+        match self {
+            Cached::Bytes(b) => b.len(),
+            Cached::Block(b) => b.wire_len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize raw bytes (allocates for a block — the byte-surface
+    /// compatibility path only).
+    pub fn into_bytes(self) -> Arc<Vec<u8>> {
+        match self {
+            Cached::Bytes(b) => b,
+            Cached::Block(b) => Arc::new(b.to_wire()),
+        }
+    }
+}
 
 /// Cache counters (monotonic, like [`super::StoreStats`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -41,7 +75,7 @@ pub struct BlockCache {
 
 #[derive(Default)]
 struct LruInner {
-    map: HashMap<String, (Arc<Vec<u8>>, u64)>,
+    map: HashMap<String, (Cached, u64)>,
     order: VecDeque<(String, u64)>,
     bytes: usize,
     tick: u64,
@@ -74,20 +108,27 @@ impl BlockCache {
         self.cap_bytes
     }
 
-    /// Look a key up, refreshing its recency on a hit.
+    /// Look a key up as raw bytes, refreshing its recency on a hit (a
+    /// cached block materializes its wire format — the byte-surface
+    /// compatibility path; zero-copy readers use [`BlockCache::get_entry`]).
     pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        self.get_entry(key).map(Cached::into_bytes)
+    }
+
+    /// Look a key up, refreshing its recency on a hit.
+    pub fn get_entry(&self, key: &str) -> Option<Cached> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
         match inner.map.get_mut(key) {
-            Some((blob, generation)) => {
+            Some((entry, generation)) => {
                 *generation = tick;
-                let blob = Arc::clone(blob);
+                let entry = entry.clone();
                 inner.order.push_back((key.to_string(), tick));
                 compact(&mut inner);
                 drop(inner);
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(blob)
+                Some(entry)
             }
             None => {
                 drop(inner);
@@ -97,10 +138,15 @@ impl BlockCache {
         }
     }
 
-    /// Insert a blob, evicting LRU entries past the byte capacity.
-    /// Blobs larger than the whole cache are not admitted.
+    /// Insert a byte blob (see [`BlockCache::insert_entry`]).
     pub fn insert(&self, key: &str, blob: Arc<Vec<u8>>) {
-        if blob.len() > self.cap_bytes {
+        self.insert_entry(key, Cached::Bytes(blob));
+    }
+
+    /// Insert a payload, evicting LRU entries past the byte capacity.
+    /// Payloads larger than the whole cache are not admitted.
+    pub fn insert_entry(&self, key: &str, entry: Cached) {
+        if entry.len() > self.cap_bytes {
             return;
         }
         let mut inner = self.inner.lock().unwrap();
@@ -109,8 +155,8 @@ impl BlockCache {
         if let Some((old, _)) = inner.map.remove(key) {
             inner.bytes -= old.len();
         }
-        inner.bytes += blob.len();
-        inner.map.insert(key.to_string(), (blob, tick));
+        inner.bytes += entry.len();
+        inner.map.insert(key.to_string(), (entry, tick));
         inner.order.push_back((key.to_string(), tick));
         self.insertions.fetch_add(1, Ordering::Relaxed);
         let mut evicted = 0u64;
@@ -201,12 +247,37 @@ impl ObjectStore for CachedStore {
     }
 
     fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
-        if let Some(blob) = self.cache.get(key) {
-            return Some(blob);
+        if let Some(entry) = self.cache.get_entry(key) {
+            return Some(entry.into_bytes());
         }
         let blob = self.inner.get(key)?;
         self.cache.insert(key, Arc::clone(&blob));
         Some(blob)
+    }
+
+    fn put_block(&self, key: &str, block: BlockBuf) {
+        self.cache.invalidate(key);
+        self.inner.put_block(key, block);
+    }
+
+    fn get_block(&self, key: &str) -> Option<BlockBuf> {
+        if let Some(entry) = self.cache.get_entry(key) {
+            return match entry {
+                // Cached handle: the hit is a refcount bump.
+                Cached::Block(b) => Some(b),
+                // Key was cached through the byte surface: parse once and
+                // upgrade the entry so later block hits are refcount bumps
+                // again.
+                Cached::Bytes(b) => {
+                    let block = BlockBuf::from_wire(&b).ok()?;
+                    self.cache.insert_entry(key, Cached::Block(block.clone()));
+                    Some(block)
+                }
+            };
+        }
+        let block = self.inner.get_block(key)?;
+        self.cache.insert_entry(key, Cached::Block(block.clone()));
+        Some(block)
     }
 
     fn exists(&self, key: &str) -> bool {
@@ -306,6 +377,34 @@ mod tests {
         assert!(c.get("big").is_none());
         assert_eq!(c.stats().insertions, 0);
         assert_eq!(c.stats().bytes, 0);
+    }
+
+    #[test]
+    fn cached_block_reads_are_refcount_bumps() {
+        use crate::linalg::Matrix;
+        use crate::util::rng::Pcg64;
+
+        let mem = Arc::new(MemStore::new());
+        let s = CachedStore::new(mem.clone(), 1 << 20);
+        let mut rng = Pcg64::new(4);
+        let blk = crate::linalg::BlockBuf::new(Matrix::randn(6, 6, &mut rng, 0.0, 1.0));
+        s.put_block("b", blk.clone());
+        let first = s.get_block("b").unwrap(); // miss → fill from the store
+        let second = s.get_block("b").unwrap(); // hit → cached handle
+        assert!(crate::linalg::BlockBuf::ptr_eq(&first, &blk));
+        assert!(crate::linalg::BlockBuf::ptr_eq(&second, &blk));
+        let cs = s.cache().stats();
+        assert_eq!((cs.hits, cs.misses), (1, 1));
+        assert_eq!(cs.bytes, blk.wire_len() as u64);
+        // The second read never reached the backing store.
+        assert_eq!(mem.stats().gets, 1);
+        // Byte-surface read of the cached block materializes the wire
+        // format without touching the store.
+        assert_eq!(s.get("b").unwrap().as_slice(), blk.to_wire().as_slice());
+        assert_eq!(mem.stats().gets, 1);
+        // A write invalidates the cached handle.
+        s.put_block("b", blk.clone());
+        assert_eq!(s.cache().len(), 0);
     }
 
     #[test]

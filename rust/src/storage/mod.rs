@@ -25,6 +25,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::linalg::matrix::BlockBuf;
+
 /// Operation counters exposed by every store.
 #[derive(Debug, Default)]
 pub struct StoreStats {
@@ -66,6 +68,17 @@ impl StoreStats {
 
 /// Blob store abstraction. Payloads are shared (`Arc<Vec<u8>>`) so
 /// many simulated workers can read the same block without copying.
+///
+/// Matrix blocks additionally move through the **zero-copy block
+/// surface** ([`ObjectStore::put_block`] / [`ObjectStore::get_block`]):
+/// a [`BlockBuf`]'s shared payload is handed to and from the store as a
+/// refcount bump, while `puts`/`gets`/`bytes_in`/`bytes_out` keep
+/// reporting the *logical* wire size ([`BlockBuf::wire_len`]) so traffic
+/// accounting is representation-independent. The default methods fall
+/// back to serialize/parse through the byte surface, so third-party
+/// stores stay correct without opting in; [`MemStore`] overrides both
+/// with genuinely shared storage, and byte-oriented `get`s of a
+/// block-staged key materialize the wire format on demand.
 pub trait ObjectStore: Send + Sync {
     fn put(&self, key: &str, value: Vec<u8>);
     fn get(&self, key: &str) -> Option<Arc<Vec<u8>>>;
@@ -74,6 +87,17 @@ pub trait ObjectStore: Send + Sync {
     /// Keys with the given prefix, sorted.
     fn list(&self, prefix: &str) -> Vec<String>;
     fn stats(&self) -> StatsSnapshot;
+
+    /// Stage a matrix block. Default: serialize through [`ObjectStore::put`].
+    fn put_block(&self, key: &str, block: BlockBuf) {
+        self.put(key, block.to_wire());
+    }
+
+    /// Fetch a matrix block. Default: parse through [`ObjectStore::get`]
+    /// (a non-wire payload reads as absent).
+    fn get_block(&self, key: &str) -> Option<BlockBuf> {
+        self.get(key).and_then(|b| BlockBuf::from_wire(&b).ok())
+    }
 }
 
 /// Default shard count of [`MemStore::new`].
@@ -101,13 +125,32 @@ fn chunk_key(key: &str, i: usize) -> String {
 }
 
 /// One stored record: a small object inline in its home shard, a large
-/// object as a manifest plus chunks spread across shards, or one such
-/// chunk (internal key, invisible to `list`/`exists`).
+/// object as a manifest plus chunks spread across shards, one such chunk
+/// (internal key, invisible to `list`/`exists`), or a zero-copy matrix
+/// block sharing its payload with the writer.
 #[derive(Debug, Clone)]
 enum Entry {
     Inline(Arc<Vec<u8>>),
     Manifest { len: usize, chunks: usize },
     Chunk(Arc<Vec<u8>>),
+    Block(BlockBuf),
+}
+
+/// What [`MemStore::fetch`] found under a key: raw bytes or a shared
+/// block handle.
+enum Payload {
+    Bytes(Arc<Vec<u8>>),
+    Block(BlockBuf),
+}
+
+impl Payload {
+    /// Logical byte size (wire size for blocks).
+    fn len(&self) -> usize {
+        match self {
+            Payload::Bytes(b) => b.len(),
+            Payload::Block(b) => b.wire_len(),
+        }
+    }
 }
 
 /// Per-shard traffic counters (reads + writes that touched the shard).
@@ -194,6 +237,59 @@ impl MemStore {
             .fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
+    /// Entry lookup with per-shard load accounting (no global counters):
+    /// raw bytes for inline objects, the shared handle for zero-copy
+    /// blocks, reassembled bytes for multipart objects (`None` on a torn
+    /// overwrite in flight).
+    fn fetch(&self, key: &str) -> Option<Payload> {
+        let home = shard_of(key, self.n_shards());
+        let entry = self.shards[home].read().unwrap().get(key).cloned();
+        match entry {
+            Some(Entry::Inline(b)) => {
+                self.touch(home, b.len());
+                Some(Payload::Bytes(b))
+            }
+            Some(Entry::Block(b)) => {
+                self.touch(home, b.wire_len());
+                Some(Payload::Block(b))
+            }
+            Some(Entry::Manifest { len, chunks }) => {
+                let mut out = Vec::with_capacity(len);
+                for i in 0..chunks {
+                    let ck = chunk_key(key, i);
+                    let s = shard_of(&ck, self.n_shards());
+                    match self.shards[s].read().unwrap().get(&ck) {
+                        Some(Entry::Chunk(part)) => {
+                            self.touch(s, part.len());
+                            out.extend_from_slice(part);
+                        }
+                        // Torn overwrite in flight: treat as absent.
+                        _ => return None,
+                    }
+                }
+                Some(Payload::Bytes(Arc::new(out)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Global get accounting shared by `get`/`get_block`: one `gets`
+    /// tick, then a hit moving `len` logical bytes or a miss.
+    fn count_get(&self, found_len: Option<usize>) {
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        match found_len {
+            Some(len) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .bytes_out
+                    .fetch_add(len as u64, Ordering::Relaxed);
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// Remove `key` and any chunks it owned. Never holds two shard locks
     /// at once.
     fn remove_entry(&self, key: &str) -> bool {
@@ -201,7 +297,7 @@ impl MemStore {
         let old = self.shards[home].write().unwrap().remove(key);
         match old {
             None => false,
-            Some(Entry::Inline(_)) | Some(Entry::Chunk(_)) => true,
+            Some(Entry::Inline(_)) | Some(Entry::Chunk(_)) | Some(Entry::Block(_)) => true,
             Some(Entry::Manifest { chunks, .. }) => {
                 for i in 0..chunks {
                     let ck = chunk_key(key, i);
@@ -257,59 +353,57 @@ impl ObjectStore for MemStore {
     }
 
     fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
-        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        let payload = self.fetch(key);
+        self.count_get(payload.as_ref().map(Payload::len));
+        payload.map(|p| match p {
+            Payload::Bytes(b) => b,
+            // Byte-oriented read of a block-staged key: materialize the
+            // wire format on demand (the only remaining copy path).
+            Payload::Block(b) => Arc::new(b.to_wire()),
+        })
+    }
+
+    /// Zero-copy block staging: the shared payload moves into the store
+    /// as a refcount bump. Blocks are never chunked — the handle is one
+    /// allocation by construction — so the whole logical wire size is
+    /// attributed to the home shard.
+    fn put_block(&self, key: &str, block: BlockBuf) {
+        debug_assert!(
+            !key.contains(CHUNK_SEP),
+            "user keys must not contain the internal chunk separator"
+        );
+        let wire = block.wire_len();
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_in.fetch_add(wire as u64, Ordering::Relaxed);
+        // Drop any previous version first so overwrites never leave
+        // stale chunks behind.
+        self.remove_entry(key);
         let home = shard_of(key, self.n_shards());
-        let entry = self.shards[home].read().unwrap().get(key).cloned();
-        let blob = match entry {
-            Some(Entry::Inline(b)) => {
-                self.touch(home, b.len());
-                Some(b)
-            }
-            Some(Entry::Manifest { len, chunks }) => {
-                let mut out = Vec::with_capacity(len);
-                let mut complete = true;
-                for i in 0..chunks {
-                    let ck = chunk_key(key, i);
-                    let s = shard_of(&ck, self.n_shards());
-                    match self.shards[s].read().unwrap().get(&ck) {
-                        Some(Entry::Chunk(part)) => {
-                            self.touch(s, part.len());
-                            out.extend_from_slice(part);
-                        }
-                        _ => {
-                            // Torn overwrite in flight: treat as absent.
-                            complete = false;
-                            break;
-                        }
-                    }
-                }
-                if complete {
-                    Some(Arc::new(out))
-                } else {
-                    None
-                }
-            }
-            _ => None,
-        };
-        match &blob {
-            Some(b) => {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                self.stats
-                    .bytes_out
-                    .fetch_add(b.len() as u64, Ordering::Relaxed);
-            }
-            None => {
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-        blob
+        self.touch(home, wire);
+        self.shards[home]
+            .write()
+            .unwrap()
+            .insert(key.to_string(), Entry::Block(block));
+    }
+
+    /// Zero-copy block fetch: a block-staged key returns the shared
+    /// handle (refcount bump); a byte-staged key parses the wire format.
+    /// Either way the counters report the logical wire size, and a
+    /// non-wire byte payload counts as a miss (hit ⇒ `Some`, like `get`).
+    fn get_block(&self, key: &str) -> Option<BlockBuf> {
+        let block = self.fetch(key).and_then(|p| match p {
+            Payload::Block(b) => Some(b),
+            Payload::Bytes(b) => BlockBuf::from_wire(&b).ok(),
+        });
+        self.count_get(block.as_ref().map(BlockBuf::wire_len));
+        block
     }
 
     fn exists(&self, key: &str) -> bool {
         let home = shard_of(key, self.n_shards());
         matches!(
             self.shards[home].read().unwrap().get(key),
-            Some(Entry::Inline(_)) | Some(Entry::Manifest { .. })
+            Some(Entry::Inline(_)) | Some(Entry::Manifest { .. }) | Some(Entry::Block(_))
         )
     }
 
@@ -328,7 +422,10 @@ impl ObjectStore for MemStore {
                     .iter()
                     .filter(|(k, e)| {
                         k.starts_with(prefix)
-                            && matches!(e, Entry::Inline(_) | Entry::Manifest { .. })
+                            && matches!(
+                                e,
+                                Entry::Inline(_) | Entry::Manifest { .. } | Entry::Block(_)
+                            )
                     })
                     .map(|(k, _)| k.clone())
                     .collect::<Vec<_>>()
@@ -367,17 +464,23 @@ pub mod keys {
     }
 }
 
-/// Store a matrix under a key (wire format from `Matrix::to_bytes`).
+/// Store a matrix under a key through the zero-copy block surface. The
+/// owned-`&Matrix` signature forces one payload copy here (into the
+/// shared handle); callers that already hold a [`BlockBuf`] should call
+/// [`ObjectStore::put_block`] directly, which copies nothing.
 pub fn put_matrix(store: &dyn ObjectStore, key: &str, m: &crate::linalg::Matrix) {
-    store.put(key, m.to_bytes());
+    store.put_block(key, BlockBuf::new(m.clone()));
 }
 
-/// Fetch + parse a matrix.
+/// Fetch a matrix through the block surface (parses the wire format only
+/// when the key was byte-staged). The owned-`Matrix` return forces a copy
+/// when the store still shares the payload; callers that can work with a
+/// shared handle should call [`ObjectStore::get_block`] directly.
 pub fn get_matrix(store: &dyn ObjectStore, key: &str) -> anyhow::Result<crate::linalg::Matrix> {
-    let blob = store
-        .get(key)
+    let block = store
+        .get_block(key)
         .ok_or_else(|| anyhow::anyhow!("missing object: {key}"))?;
-    crate::linalg::Matrix::from_bytes(&blob)
+    Ok(block.into_matrix())
 }
 
 #[cfg(test)]
@@ -514,6 +617,56 @@ mod tests {
         assert_eq!(s.stats().puts, 800);
         assert_eq!(s.stats().hits, 800);
         assert_eq!(s.list("t3/").len(), 100);
+    }
+
+    #[test]
+    fn block_staging_is_zero_copy_and_counts_logical_bytes() {
+        let s = MemStore::with_config(4, 32); // chunking must not apply to blocks
+        let mut rng = Pcg64::new(2);
+        let blk = BlockBuf::new(Matrix::randn(8, 8, &mut rng, 0.0, 1.0));
+        s.put_block("blk", blk.clone());
+        let back = s.get_block("blk").unwrap();
+        // The store handed back the very allocation we staged.
+        assert!(BlockBuf::ptr_eq(&blk, &back));
+        assert!(s.exists("blk"));
+        assert_eq!(s.list(""), vec!["blk"]);
+        // Counters report the logical wire size in both directions even
+        // though no payload bytes moved.
+        let st = s.stats();
+        assert_eq!(st.puts, 1);
+        assert_eq!(st.gets, 1);
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.bytes_in, blk.wire_len() as u64);
+        assert_eq!(st.bytes_out, blk.wire_len() as u64);
+        assert!(s.delete("blk"));
+        assert!(s.get_block("blk").is_none());
+    }
+
+    #[test]
+    fn byte_and_block_surfaces_interoperate() {
+        let s = MemStore::new();
+        let mut rng = Pcg64::new(3);
+        let blk = BlockBuf::new(Matrix::randn(5, 7, &mut rng, 0.0, 1.0));
+        // Block-staged key read through the byte surface materializes the
+        // wire format on demand.
+        s.put_block("b", blk.clone());
+        assert_eq!(s.get("b").unwrap().as_slice(), blk.to_wire().as_slice());
+        // Byte-staged wire format read through the block surface parses.
+        s.put("w", blk.to_wire());
+        let parsed = s.get_block("w").unwrap();
+        assert!(!BlockBuf::ptr_eq(&blk, &parsed));
+        assert_eq!(parsed.as_matrix(), blk.as_matrix());
+        // Non-wire bytes read as absent on the block surface (but the
+        // byte surface still sees them).
+        s.put("junk", vec![1, 2, 3]);
+        assert!(s.get_block("junk").is_none());
+        assert!(s.get("junk").is_some());
+        // Overwriting a block with bytes (and back) never leaves both.
+        s.put("b", vec![9; 4]);
+        assert_eq!(s.get("b").unwrap().as_slice(), &[9; 4]);
+        s.put_block("w", blk.clone());
+        assert!(BlockBuf::ptr_eq(&s.get_block("w").unwrap(), &blk));
+        assert_eq!(s.list("").len(), 3);
     }
 
     #[test]

@@ -132,7 +132,13 @@ pub fn parallel_for(threads: usize, n: usize, f: impl Fn(usize) + Sync) {
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
+/// Like [`parallel_for`], degenerate fan-outs (one thread or ≤1 item)
+/// run inline — no thread spawn, no mutex.
 pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     {
         let slots = std::sync::Mutex::new(&mut out);
@@ -140,7 +146,6 @@ pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + 
         // indices so a striped approach is fine. We avoid unsafe by using a
         // per-index mutex-free trick: collect (i, T) pairs per thread.
         let counter = AtomicUsize::new(0);
-        let threads = threads.max(1).min(n.max(1));
         thread::scope(|s| {
             let mut handles = Vec::new();
             for _ in 0..threads {

@@ -262,3 +262,151 @@ fn event_sim_completion_times_invariant_under_pool_size() {
         assert_eq!(tight, run(Pool::Workers(cap)));
     });
 }
+
+// ---------------------------------------------------------------------------
+// Parallel zero-copy pipeline: bit-identity with the serial references
+// ---------------------------------------------------------------------------
+
+/// Serial reference for the wavefront decoder: execute the peel plan's
+/// steps one at a time, in plan order, through the same backend ops.
+fn peel_grid_serial(
+    backend: &dyn slec::runtime::ComputeBackend,
+    rows: usize,
+    cols: usize,
+    cells: &mut [Option<Matrix>],
+) {
+    use slec::codes::peeling::{plan_peel, Axis};
+    let present: Vec<bool> = cells.iter().map(Option::is_some).collect();
+    let plan = plan_peel(rows, cols, &present);
+    for step in &plan.steps {
+        let (r, c) = step.cell;
+        let line: Vec<usize> = match step.axis {
+            Axis::Row => (0..cols).map(|cc| r * cols + cc).collect(),
+            Axis::Col => (0..rows).map(|rr| rr * cols + c).collect(),
+        };
+        let target = r * cols + c;
+        let parity_idx = *line.last().unwrap();
+        let value = if target == parity_idx {
+            let members: Vec<&Matrix> = line[..line.len() - 1]
+                .iter()
+                .map(|&i| cells[i].as_ref().expect("plan order"))
+                .collect();
+            backend.stack_sum(&members)
+        } else {
+            let parity = cells[parity_idx].as_ref().expect("plan order");
+            let survivors: Vec<&Matrix> = line[..line.len() - 1]
+                .iter()
+                .filter(|&&i| i != target)
+                .map(|&i| cells[i].as_ref().expect("plan order"))
+                .collect();
+            backend.parity_residual(parity, &survivors)
+        };
+        cells[target] = Some(value);
+    }
+}
+
+#[test]
+fn parallel_encode_is_bit_identical_and_zero_copy() {
+    // The parallel shared-handle encodes must match the serial references
+    // bit for bit at every thread count, and systematic cells must be
+    // refcount bumps of the inputs, not copies.
+    use slec::codes::local_product::encode_side_parallel;
+    use slec::codes::product::MdsAxisCode;
+    use slec::linalg::BlockBuf;
+    use slec::runtime::HostBackend;
+
+    proptest(20, 0xE2C0DE, |g| {
+        let s = g.usize_in(2, 8);
+        let l = g.usize_in(1, s.min(4));
+        let rows = g.usize_in(2, 6);
+        let cols = g.usize_in(2, 9);
+        let mut rng = Pcg64::new(0xBEEF ^ g.case as u64);
+        let blocks: Vec<Matrix> = (0..s)
+            .map(|_| Matrix::randn(rows, cols, &mut rng, 0.0, 1.0))
+            .collect();
+        let bufs: Vec<BlockBuf> = blocks.iter().cloned().map(BlockBuf::new).collect();
+
+        // Local product code side (grouped parities).
+        if s % l == 0 {
+            let layout = slec::codes::layout::LocalLayout::new(s, l);
+            let serial =
+                slec::codes::local_product::LocalProductCode::encode_side(layout, &blocks);
+            for threads in [1usize, 2, 7] {
+                let par = encode_side_parallel(&HostBackend, layout, &bufs, threads);
+                assert_eq!(par.len(), serial.len());
+                for (k, (p, sref)) in par.iter().zip(&serial).enumerate() {
+                    assert_eq!(p.as_matrix(), sref, "local cell {k} (t={threads})");
+                }
+                // Systematic cells share the input allocations.
+                for (k, p) in par.iter().enumerate() {
+                    if let slec::codes::layout::CodedBlock::Systematic { orig } =
+                        layout.block_at(k)
+                    {
+                        assert!(BlockBuf::ptr_eq(p, &bufs[orig]), "cell {k} copied");
+                    }
+                }
+            }
+        }
+
+        // Global MDS axis code (Vandermonde parities).
+        let parities = g.usize_in(1, 3);
+        let mds = MdsAxisCode::new(s, parities);
+        let serial = mds.encode(&blocks);
+        for threads in [1usize, 3, 8] {
+            let par = mds.encode_parallel(&bufs, threads);
+            assert_eq!(par.len(), serial.len());
+            for (k, (p, sref)) in par.iter().zip(&serial).enumerate() {
+                assert_eq!(p.as_matrix(), sref, "mds cell {k} (t={threads})");
+            }
+            for (k, p) in par.iter().take(s).enumerate() {
+                assert!(BlockBuf::ptr_eq(p, &bufs[k]), "systematic cell {k} copied");
+            }
+        }
+    });
+}
+
+#[test]
+fn wavefront_decode_is_bit_identical_to_serial_plan_order() {
+    // Wavefront execution of the peel plan must produce exactly the bytes
+    // the serial plan-order execution produces, for random straggler
+    // patterns (decodable or not — both replays execute the same plan) at
+    // every thread count.
+    use slec::codes::local_product::peel_grid_wavefront;
+    use slec::linalg::BlockBuf;
+    use slec::runtime::HostBackend;
+
+    proptest(40, 0xABE5EED, |g| {
+        let l_a = g.usize_in(1, 5);
+        let l_b = g.usize_in(1, 5);
+        let (rows, cols) = (l_a + 1, l_b + 1);
+        let n = rows * cols;
+        let kills = g.usize_in(0, n / 2);
+        let missing = g.subset(n, kills);
+        let mut rng = Pcg64::new(0xD1CE ^ g.case as u64);
+        let mut serial: Vec<Option<Matrix>> = (0..n)
+            .map(|_| Some(Matrix::randn(3, 4, &mut rng, 0.0, 1.0)))
+            .collect();
+        for &i in &missing {
+            serial[i] = None;
+        }
+        let shared: Vec<Option<BlockBuf>> = serial
+            .iter()
+            .map(|slot| slot.clone().map(BlockBuf::new))
+            .collect();
+
+        peel_grid_serial(&HostBackend, rows, cols, &mut serial);
+        for threads in [1usize, 2, 8] {
+            let mut cells = shared.clone();
+            peel_grid_wavefront(&HostBackend, l_a, l_b, &mut cells, threads);
+            for (i, (w, sref)) in cells.iter().zip(&serial).enumerate() {
+                match (w, sref) {
+                    (Some(wv), Some(sv)) => {
+                        assert_eq!(wv.as_matrix(), sv, "cell {i} differs (t={threads})")
+                    }
+                    (None, None) => {}
+                    _ => panic!("cell {i} presence differs (t={threads})"),
+                }
+            }
+        }
+    });
+}

@@ -22,7 +22,7 @@ use slec::codes::Scheme;
 use slec::coordinator::driver::run_job;
 use slec::coordinator::matmul::{run_matmul, Env, MatmulJob};
 use slec::linalg::gemm::matmul_bt;
-use slec::linalg::Matrix;
+use slec::linalg::{BlockBuf, Matrix};
 use slec::platform::{StragglerModel, StragglerParams, Termination, WorkerRates};
 use slec::runtime::ComputeBackend;
 use slec::util::json::{self, Json};
@@ -223,29 +223,32 @@ impl CodingScheme for ReplicatedScheme {
     fn encode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
-    ) -> (Vec<Matrix>, Vec<Matrix>) {
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
+    ) -> (Vec<BlockBuf>, Vec<BlockBuf>) {
         (a_blocks.to_vec(), b_blocks.to_vec())
     }
 
     fn cell_product(
         &self,
         backend: &dyn ComputeBackend,
-        a_blocks: &[Matrix],
-        b_blocks: &[Matrix],
+        a_blocks: &[BlockBuf],
+        b_blocks: &[BlockBuf],
         cell: usize,
-    ) -> Matrix {
+    ) -> BlockBuf {
         let idx = cell % self.blocks();
-        backend.block_product(&a_blocks[idx / self.s_b], &b_blocks[idx % self.s_b])
+        BlockBuf::new(backend.block_product(
+            a_blocks[idx / self.s_b].as_matrix(),
+            b_blocks[idx % self.s_b].as_matrix(),
+        ))
     }
 
     fn decode_numeric(
         &self,
         _backend: &dyn ComputeBackend,
-        mut grid: Vec<Option<Matrix>>,
+        mut grid: Vec<Option<BlockBuf>>,
         _arrival_order: &[usize],
-    ) -> anyhow::Result<Vec<Matrix>> {
+    ) -> anyhow::Result<Vec<BlockBuf>> {
         let blocks = self.blocks();
         (0..blocks)
             .map(|b| {

@@ -191,3 +191,94 @@ fn storage_overlay_is_rng_free_and_cache_monotone() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Zero-copy block staging
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_copy_staging_roundtrips_exactly() {
+    // For any store geometry: a staged block comes back as the same
+    // allocation (refcount bump), the byte surface materializes exactly
+    // the wire format, and the counters report logical wire bytes as if
+    // the payload had been copied.
+    use slec::linalg::{BlockBuf, Matrix};
+    use slec::util::rng::Pcg64;
+
+    proptest(60, 0x0C0B1, |g| {
+        let shards = g.usize_in(1, 32);
+        let chunk = if g.bool() { 0 } else { g.usize_in(32, 4096) };
+        let store = MemStore::with_config(shards, chunk);
+        let rows = g.usize_in(1, 24);
+        let cols = g.usize_in(1, 24);
+        let mut rng = Pcg64::new(0x57A6E ^ g.case as u64);
+        let blk = BlockBuf::new(Matrix::randn(rows, cols, &mut rng, 0.0, 1.0));
+
+        store.put_block("prop/blk", blk.clone());
+        let back = store.get_block("prop/blk").unwrap();
+        assert!(BlockBuf::ptr_eq(&blk, &back), "staging copied the payload");
+        assert_eq!(store.get("prop/blk").unwrap().as_slice(), blk.to_wire());
+
+        // Accounting: 1 put of wire_len in, 2 reads of wire_len out.
+        let st = store.stats();
+        assert_eq!(st.puts, 1);
+        assert_eq!(st.bytes_in, blk.wire_len() as u64);
+        assert_eq!(st.bytes_out, 2 * blk.wire_len() as u64);
+        assert_eq!((st.hits, st.misses), (2, 0));
+
+        // The block surface round-trips through byte staging too.
+        store.put("prop/wire", blk.to_wire());
+        let parsed = store.get_block("prop/wire").unwrap();
+        assert!(!BlockBuf::ptr_eq(&blk, &parsed));
+        assert_eq!(parsed.as_matrix(), blk.as_matrix());
+    });
+}
+
+#[test]
+fn cached_staging_stays_zero_copy_and_coherent() {
+    // Read-through caching of block handles: hits are refcount bumps of
+    // the very allocation the writer staged, writes invalidate, and the
+    // cache's byte bound is expressed in logical wire bytes.
+    use slec::linalg::{BlockBuf, Matrix};
+    use slec::util::rng::Pcg64;
+
+    proptest(40, 0x0CAC4E, |g| {
+        let mem = Arc::new(MemStore::with_config(g.usize_in(1, 8), 0));
+        let cap = g.usize_in(200, 1 << 16);
+        let store = CachedStore::new(mem.clone(), cap);
+        let mut rng = Pcg64::new(0xCAFE ^ g.case as u64);
+        let n = g.usize_in(1, 12);
+        let blocks: Vec<BlockBuf> = (0..n)
+            .map(|_| {
+                BlockBuf::new(Matrix::randn(
+                    g.usize_in(1, 8),
+                    g.usize_in(1, 8),
+                    &mut rng,
+                    0.0,
+                    1.0,
+                ))
+            })
+            .collect();
+        for (i, b) in blocks.iter().enumerate() {
+            store.put_block(&format!("blk/{i}"), b.clone());
+        }
+        for (i, b) in blocks.iter().enumerate() {
+            let first = store.get_block(&format!("blk/{i}")).unwrap();
+            let second = store.get_block(&format!("blk/{i}")).unwrap();
+            assert!(BlockBuf::ptr_eq(&first, b));
+            assert!(BlockBuf::ptr_eq(&second, b));
+        }
+        // Second reads that hit the cache never reached the backing
+        // store; admission is bounded by the wire-byte capacity.
+        let cache_hits = store.cache().stats().hits;
+        let backing_gets = mem.stats().gets;
+        assert_eq!(cache_hits + backing_gets, 2 * n as u64);
+        assert!(store.cache().stats().bytes <= cap as u64);
+        // Overwrite invalidates: the next read sees the new handle.
+        if n > 0 {
+            let fresh = BlockBuf::new(Matrix::randn(3, 3, &mut rng, 0.0, 1.0));
+            store.put_block("blk/0", fresh.clone());
+            assert!(BlockBuf::ptr_eq(&store.get_block("blk/0").unwrap(), &fresh));
+        }
+    });
+}

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Warn-only perf-regression guard for the bench-smoke CI job.
+
+Compares the `values` section of a fresh BENCH_<name>.json against the
+committed baseline (artifacts/bench-baseline.json). A metric regresses
+when `current < baseline * (1 - tolerance)`; the tolerance is generous
+because shared CI runners are noisy. Regressions are reported as GitHub
+`::warning::` annotations and the exit code is always 0 — the guard
+informs reviewers, it does not gate merges. Baseline entries that are
+null (not yet blessed) or missing from the fresh run are skipped with a
+note.
+
+Usage: bench_guard.py <baseline.json> <fresh BENCH_*.json>
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} <baseline.json> <bench.json>", file=sys.stderr)
+        return 2
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    try:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except FileNotFoundError:
+        print(f"::warning::bench guard: {fresh_path} missing — bench did not run?")
+        return 0
+
+    tol = float(baseline.get("tolerance", 0.5))
+    base_values = baseline.get("values", {})
+    fresh_values = fresh.get("values", {})
+    if fresh.get("quick"):
+        print("note: fresh run is SLEC_BENCH_QUICK — numbers are smoke-grade")
+
+    unblessed, regressed, ok = [], [], []
+    for key, base in sorted(base_values.items()):
+        if base is None:
+            unblessed.append(key)
+            continue
+        cur = fresh_values.get(key)
+        if cur is None:
+            print(f"::warning::bench guard: metric '{key}' absent from {fresh_path}")
+            continue
+        floor = base * (1.0 - tol)
+        if cur < floor:
+            regressed.append(key)
+            print(
+                f"::warning::perf regression: {key} = {cur:.3g} "
+                f"< {floor:.3g} (baseline {base:.3g}, tolerance {tol:.0%})"
+            )
+        else:
+            ok.append(key)
+            print(f"ok: {key} = {cur:.3g} (baseline {base:.3g})")
+
+    if unblessed:
+        print(f"unblessed (skipped): {', '.join(unblessed)}")
+    print(
+        f"bench guard: {len(ok)} ok, {len(regressed)} regressed, "
+        f"{len(unblessed)} unblessed"
+    )
+    return 0  # warn-only by design
+
+
+if __name__ == "__main__":
+    sys.exit(main())
