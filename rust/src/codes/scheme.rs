@@ -276,8 +276,13 @@ impl CodingScheme for UncodedScheme {
         (self.s_a, self.s_b)
     }
 
-    fn decode_plan(&self, _arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
-        DecodePlan::none()
+    fn decode_plan(&self, arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
+        // No parity exists: any cell missing at termination (a worker
+        // churn casualty) is unrecoverable, not silently complete.
+        DecodePlan {
+            undecodable: arrived.iter().filter(|&&a| !a).count(),
+            ..DecodePlan::none()
+        }
     }
 
     fn encode_numeric(
@@ -321,8 +326,13 @@ impl CodingScheme for SpeculativeScheme {
         (self.s_a, self.s_b)
     }
 
-    fn decode_plan(&self, _arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
-        DecodePlan::none()
+    fn decode_plan(&self, arrived: &[bool], _shape: &JobShape, _workers: usize) -> DecodePlan {
+        // Speculation re-executes but cannot reconstruct: cells still
+        // missing at termination stay undecodable, like the uncoded case.
+        DecodePlan {
+            undecodable: arrived.iter().filter(|&&a| !a).count(),
+            ..DecodePlan::none()
+        }
     }
 
     fn encode_numeric(

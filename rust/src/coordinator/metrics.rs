@@ -60,6 +60,44 @@ impl StorageMetrics {
     }
 }
 
+/// Fault-injection outcome of one job — only emitted when the scenario's
+/// `"failures"` section is present, so fault-free reports keep their
+/// historical byte-for-byte shape.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultMetrics {
+    /// Failed attempts observed (every worker death, retried or not).
+    pub deaths: u64,
+    /// Re-dispatches performed after failures.
+    pub retries: u64,
+    /// Logical tasks that exhausted their retry budget (permanent loss).
+    pub exhausted: u64,
+    /// True when some phase ended without all the work it wanted — the
+    /// graceful-degradation flag (`decode_ok` goes false with it).
+    pub degraded: bool,
+    /// Attempts dispatched per worker class, in model order; empty for a
+    /// homogeneous fleet.
+    pub classes: Vec<(String, u64)>,
+}
+
+impl FaultMetrics {
+    pub fn to_json(&self) -> Json {
+        let mut doc = obj()
+            .field("deaths", self.deaths)
+            .field("retries", self.retries)
+            .field("exhausted", self.exhausted)
+            .field("degraded", self.degraded)
+            .build();
+        if !self.classes.is_empty() {
+            let mut by_class = obj().build();
+            for (name, count) in &self.classes {
+                by_class.set(name, Json::from(*count));
+            }
+            doc.set("classes", by_class);
+        }
+        doc
+    }
+}
+
 /// End-to-end report for one coded job.
 #[derive(Debug, Clone)]
 pub struct JobReport {
@@ -86,6 +124,9 @@ pub struct JobReport {
     /// Object-store traffic of this job; `None` for timing-only runs
     /// (the scenario runner) and schemes that stage nothing.
     pub storage: Option<StorageMetrics>,
+    /// Fault-injection outcome; `None` when the run has no `"failures"`
+    /// section (keeps pre-churn reports byte-identical).
+    pub faults: Option<FaultMetrics>,
 }
 
 impl JobReport {
@@ -100,6 +141,7 @@ impl JobReport {
             numerics_ok: true,
             decode_ok: true,
             storage: None,
+            faults: None,
         }
     }
 
@@ -127,6 +169,9 @@ impl JobReport {
         // keep their historical byte-for-byte shape.
         if let Some(s) = &self.storage {
             doc.set("storage", s.to_json());
+        }
+        if let Some(f) = &self.faults {
+            doc.set("faults", f.to_json());
         }
         doc
     }
@@ -185,6 +230,29 @@ mod tests {
         let s = j.get("storage").expect("storage block");
         assert_eq!(s.get("puts").unwrap().as_u64(), Some(3));
         assert_eq!(s.get("cache_misses").unwrap().as_u64(), Some(5));
+    }
+
+    #[test]
+    fn faults_block_appears_only_when_present() {
+        let mut r = JobReport::new("uncoded");
+        assert!(r.to_json().get("faults").is_none());
+        r.faults = Some(FaultMetrics {
+            deaths: 4,
+            retries: 3,
+            exhausted: 1,
+            degraded: true,
+            classes: vec![("warm".into(), 10), ("cold".into(), 2)],
+        });
+        let j = r.to_json();
+        let f = j.get("faults").expect("faults block");
+        assert_eq!(f.get("deaths").unwrap().as_u64(), Some(4));
+        assert_eq!(f.get("degraded").unwrap().as_bool(), Some(true));
+        let c = f.get("classes").expect("classes map");
+        assert_eq!(c.get("warm").unwrap().as_u64(), Some(10));
+        assert_eq!(c.get("cold").unwrap().as_u64(), Some(2));
+        // A homogeneous fleet omits the classes map entirely.
+        r.faults.as_mut().unwrap().classes.clear();
+        assert!(r.to_json().get("faults").unwrap().get("classes").is_none());
     }
 
     #[test]

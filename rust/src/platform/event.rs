@@ -32,7 +32,7 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
-use crate::platform::straggler::{StragglerModel, WorkProfile};
+use crate::platform::straggler::{FailureModel, StragglerModel, WorkProfile};
 use crate::util::rng::Pcg64;
 
 /// Identifier of one submitted task (index into the sim's task table).
@@ -71,6 +71,9 @@ pub struct Completion {
     pub time: f64,
     /// Straggle flag carried from the sample.
     pub straggled: bool,
+    /// `true` when this is a *failure* event: the attempt's worker died
+    /// at its injected kill time and produced no result.
+    pub failed: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +82,8 @@ enum TaskState {
     Running,
     Done,
     Cancelled,
+    /// The attempt's worker died mid-flight (injected kill).
+    Failed,
 }
 
 #[derive(Debug, Clone)]
@@ -88,6 +93,9 @@ struct TaskRec {
     straggled: bool,
     state: TaskState,
     finish: f64,
+    /// Seconds after dispatch at which the worker dies; `None` = the
+    /// attempt is allowed to run to completion.
+    kill: Option<f64>,
 }
 
 /// Task-finish event; the heap's `Ord` is *reversed* so Rust's max-heap
@@ -131,6 +139,10 @@ pub struct EventSim {
     heap: BinaryHeap<FinishEvent>,
     fifo: VecDeque<TaskId>,
     seq: u64,
+    /// Workers permanently lost to injected deaths. Bounded pools shrink
+    /// by this amount, clamped so at least one worker survives (the
+    /// platform re-provisions the last slot — the sim must stay live).
+    lost: usize,
 }
 
 impl EventSim {
@@ -146,6 +158,7 @@ impl EventSim {
             heap: BinaryHeap::new(),
             fifo: VecDeque::new(),
             seq: 0,
+            lost: 0,
         }
     }
 
@@ -168,20 +181,46 @@ impl EventSim {
         self.busy
     }
 
+    /// Workers permanently lost to injected deaths so far.
+    pub fn lost_workers(&self) -> usize {
+        self.lost
+    }
+
     fn has_free_worker(&self) -> bool {
         match self.pool {
             Pool::Unbounded => true,
-            Pool::Workers(n) => self.busy < n,
+            Pool::Workers(n) => self.busy + self.lost < n,
         }
     }
 
     /// Submit a task at the current virtual time; it starts immediately if
     /// a worker is free, otherwise queues FIFO.
     pub fn submit(&mut self, job: usize, duration: f64, straggled: bool) -> TaskId {
+        self.submit_attempt(job, duration, straggled, None)
+    }
+
+    /// [`EventSim::submit`] with an injected kill time: if
+    /// `kill_after < duration`, the attempt's worker dies `kill_after`
+    /// seconds after *dispatch* (not submission — a queued task has no
+    /// worker yet) and [`EventSim::step`] reports a failed
+    /// [`Completion`] instead of a result.
+    pub fn submit_attempt(
+        &mut self,
+        job: usize,
+        duration: f64,
+        straggled: bool,
+        kill_after: Option<f64>,
+    ) -> TaskId {
         assert!(
             duration.is_finite() && duration >= 0.0,
             "task duration must be finite and non-negative, got {duration}"
         );
+        if let Some(k) = kill_after {
+            assert!(
+                k.is_finite() && k >= 0.0,
+                "kill time must be finite and non-negative, got {k}"
+            );
+        }
         let id = TaskId(self.tasks.len());
         self.tasks.push(TaskRec {
             job,
@@ -189,6 +228,7 @@ impl EventSim {
             straggled,
             state: TaskState::Waiting,
             finish: f64::NAN,
+            kill: kill_after,
         });
         if self.has_free_worker() {
             self.start_task(id);
@@ -198,10 +238,23 @@ impl EventSim {
         id
     }
 
+    /// Does the attempt die before it can finish?
+    fn dies(rec: &TaskRec) -> bool {
+        matches!(rec.kill, Some(k) if k < rec.duration)
+    }
+
     fn start_task(&mut self, id: TaskId) {
         debug_assert_eq!(self.tasks[id.0].state, TaskState::Waiting);
         self.tasks[id.0].state = TaskState::Running;
-        let fin = self.clock + self.tasks[id.0].duration;
+        let rec = &self.tasks[id.0];
+        // A dying attempt's only event is its kill; the finish it will
+        // never reach is not scheduled at all.
+        let runs_for = if Self::dies(rec) {
+            rec.kill.unwrap()
+        } else {
+            rec.duration
+        };
+        let fin = self.clock + runs_for;
         self.busy += 1;
         self.seq += 1;
         self.heap.push(FinishEvent {
@@ -213,7 +266,10 @@ impl EventSim {
 
     /// Cancel a task. A waiting task is dropped from the queue; a running
     /// task frees its worker immediately (its finish event becomes stale
-    /// and is skipped). Done/cancelled tasks are left untouched.
+    /// and is skipped). Done, failed and cancelled tasks are left
+    /// untouched — cancelling an already-failed attempt (e.g. a twin
+    /// race under speculative relaunch) is a no-op, never a double
+    /// worker release.
     pub fn cancel(&mut self, id: TaskId) {
         match self.tasks[id.0].state {
             TaskState::Waiting => self.tasks[id.0].state = TaskState::Cancelled,
@@ -221,19 +277,50 @@ impl EventSim {
                 self.tasks[id.0].state = TaskState::Cancelled;
                 self.release_worker();
             }
-            TaskState::Done | TaskState::Cancelled => {}
+            TaskState::Done | TaskState::Cancelled | TaskState::Failed => {}
         }
+    }
+
+    /// A live task is one that can still produce an event (queued or
+    /// running) — re-dispatch policies use this to see whether a failed
+    /// logical task is still covered by a twin attempt.
+    pub fn is_live(&self, id: TaskId) -> bool {
+        matches!(
+            self.tasks[id.0].state,
+            TaskState::Waiting | TaskState::Running
+        )
     }
 
     fn release_worker(&mut self) {
         debug_assert!(self.busy > 0);
         self.busy -= 1;
-        while let Some(next) = self.fifo.pop_front() {
-            if self.tasks[next.0].state == TaskState::Waiting {
-                self.start_task(next);
-                break;
+        self.dispatch_waiting();
+    }
+
+    /// A worker died: it leaves the pool instead of returning to it.
+    /// Bounded pools shrink (clamped to keep one worker), so the loss is
+    /// permanent capacity, not a freed slot.
+    fn kill_worker(&mut self) {
+        debug_assert!(self.busy > 0);
+        self.busy -= 1;
+        if let Pool::Workers(n) = self.pool {
+            if self.lost + 1 < n {
+                self.lost += 1;
             }
-            // Lazily drop queue entries cancelled while waiting.
+        }
+        self.dispatch_waiting();
+    }
+
+    fn dispatch_waiting(&mut self) {
+        while self.has_free_worker() {
+            match self.fifo.pop_front() {
+                Some(next) if self.tasks[next.0].state == TaskState::Waiting => {
+                    self.start_task(next)
+                }
+                // Lazily drop queue entries cancelled while waiting.
+                Some(_) => continue,
+                None => break,
+            }
         }
     }
 
@@ -258,8 +345,10 @@ impl EventSim {
         self.clock = t;
     }
 
-    /// Process the next completion: advances the clock, frees the worker
-    /// and dispatches the longest-waiting queued task. `None` when idle.
+    /// Process the next completion: advances the clock, frees (or, on a
+    /// death, removes) the worker and dispatches the longest-waiting
+    /// queued task. `None` when idle. A dying attempt surfaces as a
+    /// `failed` completion at its kill time.
     pub fn step(&mut self) -> Option<Completion> {
         loop {
             let ev = self.heap.pop()?;
@@ -267,16 +356,23 @@ impl EventSim {
                 continue; // stale event of a cancelled task
             }
             self.clock = ev.time;
-            self.tasks[ev.task.0].state = TaskState::Done;
-            self.tasks[ev.task.0].finish = ev.time;
+            let failed = Self::dies(&self.tasks[ev.task.0]);
             let job = self.tasks[ev.task.0].job;
             let straggled = self.tasks[ev.task.0].straggled;
-            self.release_worker();
+            if failed {
+                self.tasks[ev.task.0].state = TaskState::Failed;
+                self.kill_worker();
+            } else {
+                self.tasks[ev.task.0].state = TaskState::Done;
+                self.tasks[ev.task.0].finish = ev.time;
+                self.release_worker();
+            }
             return Some(Completion {
                 task: ev.task,
                 job,
                 time: ev.time,
                 straggled,
+                failed,
             });
         }
     }
@@ -351,6 +447,30 @@ pub struct PhaseState {
     pub trigger_time: f64,
     finished: bool,
     end_time: f64,
+    /// Failure model used to resample retries/relaunches; `None` on the
+    /// legacy fault-free paths (bit-identical to the pre-churn engine).
+    faults: Option<FailureModel>,
+    /// Per-task correlated-slowdown multiplier (empty ⇒ all 1.0).
+    cohort: Vec<f64>,
+    /// Retries consumed per logical task.
+    attempts: Vec<u32>,
+    /// Logical tasks abandoned after exhausting their retry budget.
+    dead: Vec<bool>,
+    n_dead: usize,
+    /// Failed attempts observed (every worker death, retried or not).
+    pub deaths: usize,
+    /// Re-dispatches performed after failures.
+    pub retries: usize,
+    /// Logical tasks that exhausted their retry budget.
+    pub exhausted: usize,
+    /// Attempts dispatched per worker class (index = class index in the
+    /// failure model; empty when the model defines no classes).
+    pub class_counts: Vec<u64>,
+    /// The phase ended without all the work it wanted: some logical task
+    /// died permanently (wait-all / speculative settle on a partial set,
+    /// or wait-k became infeasible). Decoders must treat missing cells as
+    /// unrecoverable.
+    pub degraded: bool,
 }
 
 impl PhaseState {
@@ -388,25 +508,96 @@ impl PhaseState {
         term: Termination,
         rng: &mut Pcg64,
     ) -> PhaseState {
+        PhaseState::launch_churn(sim, model, works, io_extra, None, &[], job, term, rng)
+    }
+
+    /// The full-fat launch path: [`PhaseState::launch_with_io`] plus an
+    /// optional [`FailureModel`] (worker classes, injected deaths) and a
+    /// per-task correlated-slowdown multiplier (`cohort`; empty ⇒ all
+    /// 1.0, applied after the straggle factor, before the io overlay).
+    ///
+    /// RNG draw-order contract: with `faults = None` (or an inert model)
+    /// and an empty cohort this is **bit-identical** to the plain launch
+    /// paths — [`StragglerModel::sample_attempt`] consumes exactly the
+    /// draws of `sample()` and multiplies by 1.0, which is an f64
+    /// identity. Fault-free goldens therefore cannot shift.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_churn(
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        works: &[WorkProfile],
+        io_extra: &[f64],
+        faults: Option<&FailureModel>,
+        cohort: &[f64],
+        job: usize,
+        term: Termination,
+        rng: &mut Pcg64,
+    ) -> PhaseState {
         assert!(
             io_extra.is_empty() || io_extra.len() == works.len(),
             "io_extra must be empty or one entry per task ({} vs {})",
             io_extra.len(),
             works.len()
         );
-        let mut durations = Vec::with_capacity(works.len());
-        let mut straggled = Vec::with_capacity(works.len());
+        assert!(
+            cohort.is_empty() || cohort.len() == works.len(),
+            "cohort must be empty or one entry per task ({} vs {})",
+            cohort.len(),
+            works.len()
+        );
+        let n = works.len();
+        if let Termination::WaitK(k) = term {
+            assert!(n == 0 || (k >= 1 && k <= n), "wait-k needs 1 ≤ k ≤ n");
+        }
+        let t0 = sim.now();
+        let n_classes = faults.map(|f| f.classes.len()).unwrap_or(0);
+        let mut primary = Vec::with_capacity(n);
+        let mut straggled = Vec::with_capacity(n);
+        let mut index_of = HashMap::with_capacity(n);
+        let mut class_counts = vec![0u64; n_classes];
         for (i, w) in works.iter().enumerate() {
-            let s = model.sample(w, rng);
+            let cm = cohort.get(i).copied().unwrap_or(1.0);
+            let s = model.sample_attempt(w, faults, cm, rng);
             let extra = io_extra.get(i).copied().unwrap_or(0.0);
             assert!(
                 extra.is_finite() && extra >= 0.0,
                 "storage overlay must be finite and non-negative, got {extra}"
             );
-            durations.push(s.total() + extra);
+            if let Some(ci) = s.class {
+                class_counts[ci] += 1;
+            }
+            let id = sim.submit_attempt(job, s.duration + extra, s.straggled, s.kill_after);
+            index_of.insert(id.0, i);
+            primary.push(id);
             straggled.push(s.straggled);
         }
-        PhaseState::from_durations(sim, &durations, &straggled, works.to_vec(), job, term)
+        PhaseState {
+            job,
+            t0,
+            term,
+            works: works.to_vec(),
+            primary,
+            relaunch: vec![None; n],
+            completion: vec![None; n],
+            straggled,
+            arrivals: Vec::new(),
+            index_of,
+            done: 0,
+            relaunched: 0,
+            trigger_time: f64::NAN,
+            finished: n == 0,
+            end_time: t0,
+            faults: faults.cloned(),
+            cohort: cohort.to_vec(),
+            attempts: vec![0; n],
+            dead: vec![false; n],
+            n_dead: 0,
+            deaths: 0,
+            retries: 0,
+            exhausted: 0,
+            class_counts,
+            degraded: false,
+        }
     }
 
     /// Like [`PhaseState::launch`] with a single profile for `n` tasks.
@@ -462,6 +653,16 @@ impl PhaseState {
             // An empty phase is complete the moment it is submitted.
             finished: n == 0,
             end_time: t0,
+            faults: None,
+            cohort: Vec::new(),
+            attempts: vec![0; n],
+            dead: vec![false; n],
+            n_dead: 0,
+            deaths: 0,
+            retries: 0,
+            exhausted: 0,
+            class_counts: Vec::new(),
+            degraded: false,
         }
     }
 
@@ -551,6 +752,9 @@ impl PhaseState {
         c: &Completion,
         decodable: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
     ) -> bool {
+        if c.failed {
+            return self.on_failure(sim, model, rng, c);
+        }
         let li = match self.index_of.get(&c.task.0) {
             Some(&li) => li,
             None => return false, // not ours — caller routed wrongly
@@ -562,6 +766,7 @@ impl PhaseState {
         self.arrivals.push(li);
         self.done += 1;
         // The slower twin can no longer contribute: free its worker.
+        // (Cancelling a twin that already *failed* is a no-op in the sim.)
         if let Some(r) = self.relaunch[li] {
             if r != c.task {
                 sim.cancel(r);
@@ -587,10 +792,20 @@ impl PhaseState {
                 let k = ((n as f64 * wait_frac).ceil() as usize).clamp(1, n);
                 if self.done == k && self.trigger_time.is_nan() {
                     self.trigger_time = c.time;
+                    let faults = self.faults.clone();
                     for i in 0..n {
-                        if self.completion[i].is_none() && self.relaunch[i].is_none() {
-                            let s = model.sample(&self.works[i], rng);
-                            let id = sim.submit(self.job, s.total(), s.straggled);
+                        if self.completion[i].is_none()
+                            && self.relaunch[i].is_none()
+                            && !self.dead[i]
+                        {
+                            let cm = self.cohort.get(i).copied().unwrap_or(1.0);
+                            let s =
+                                model.sample_attempt(&self.works[i], faults.as_ref(), cm, rng);
+                            if let Some(ci) = s.class {
+                                self.class_counts[ci] += 1;
+                            }
+                            let id =
+                                sim.submit_attempt(self.job, s.duration, s.straggled, s.kill_after);
                             self.index_of.insert(id.0, i);
                             self.relaunch[i] = Some(id);
                             self.relaunched += 1;
@@ -608,7 +823,98 @@ impl PhaseState {
                 }
             }
         }
+        if !self.finished {
+            // A phase carrying permanent deaths can no longer rely on
+            // `done == n`; re-test the settle condition on every event.
+            self.check_settled(sim, c.time);
+        }
         self.finished
+    }
+
+    /// Handle a *failed* completion (worker death). The logical task is
+    /// re-dispatched with a resampled duration plus deterministic
+    /// exponential backoff while retries remain; afterwards it is marked
+    /// permanently dead and the settle condition is re-checked so the
+    /// phase degrades instead of hanging. Returns `true` exactly when
+    /// this failure terminates (degrades) the phase.
+    fn on_failure(
+        &mut self,
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        rng: &mut Pcg64,
+        c: &Completion,
+    ) -> bool {
+        let li = match self.index_of.get(&c.task.0) {
+            Some(&li) => li,
+            None => return false,
+        };
+        if self.finished || self.completion[li].is_some() || self.dead[li] {
+            return false; // phase over or logical task already settled
+        }
+        self.deaths += 1;
+        // Under speculative execution the logical task may still be
+        // covered by its other attempt; only re-dispatch once both twins
+        // are gone.
+        let twin = if self.primary[li] == c.task {
+            self.relaunch[li]
+        } else {
+            Some(self.primary[li])
+        };
+        if let Some(t) = twin {
+            if sim.is_live(t) {
+                return false;
+            }
+        }
+        let fm = self
+            .faults
+            .clone()
+            .expect("failed completion implies an active failure model");
+        if self.attempts[li] < fm.max_retries {
+            self.attempts[li] += 1;
+            self.retries += 1;
+            // Deterministic exponential backoff: the retry's duration (and
+            // any injected kill) is shifted by backoff_s · 2^(attempt-1).
+            let backoff = fm.backoff_s * (1u64 << (self.attempts[li] - 1).min(20)) as f64;
+            let cm = self.cohort.get(li).copied().unwrap_or(1.0);
+            let s = model.sample_attempt(&self.works[li], Some(&fm), cm, rng);
+            if let Some(ci) = s.class {
+                self.class_counts[ci] += 1;
+            }
+            let id = sim.submit_attempt(
+                self.job,
+                backoff + s.duration,
+                s.straggled,
+                s.kill_after.map(|k| backoff + k),
+            );
+            self.index_of.insert(id.0, li);
+            if self.primary[li] == c.task {
+                self.primary[li] = id;
+            } else {
+                self.relaunch[li] = Some(id);
+            }
+            return false;
+        }
+        self.dead[li] = true;
+        self.n_dead += 1;
+        self.exhausted += 1;
+        self.check_settled(sim, c.time);
+        self.finished
+    }
+
+    /// Degrade-instead-of-hang: once permanent deaths exist, the phase
+    /// ends when every logical task has either completed or died, or when
+    /// a wait-k target has become unreachable.
+    fn check_settled(&mut self, sim: &mut EventSim, t: f64) {
+        if self.finished || self.n_dead == 0 {
+            return;
+        }
+        let n = self.n();
+        let settled = self.done + self.n_dead == n;
+        let infeasible = matches!(self.term, Termination::WaitK(k) if n - self.n_dead < k);
+        if settled || infeasible {
+            self.degraded = true;
+            self.finish_at(sim, t);
+        }
     }
 }
 
@@ -906,6 +1212,290 @@ mod tests {
         sim.submit(7, 1.0, false);
         let jobs: Vec<usize> = std::iter::from_fn(|| sim.step().map(|c| c.job)).collect();
         assert_eq!(jobs, vec![8, 7, 7]);
+    }
+
+    fn churn_model(death_p: f64, max_retries: u32) -> FailureModel {
+        FailureModel {
+            death_p,
+            max_retries,
+            backoff_s: 0.5,
+            ..FailureModel::default()
+        }
+    }
+
+    #[test]
+    fn killed_attempt_fails_at_kill_time_and_shrinks_bounded_pool() {
+        let mut sim = EventSim::new(Pool::Workers(2));
+        let doomed = sim.submit_attempt(0, 10.0, false, Some(3.0));
+        sim.submit(0, 5.0, false);
+        let queued = sim.submit(0, 1.0, false); // waits for a slot
+        let c = sim.step().unwrap();
+        assert_eq!(c.task, doomed);
+        assert!(c.failed);
+        assert_eq!(c.time, 3.0); // kill time, not the 10 s duration
+        assert_eq!(sim.lost_workers(), 1);
+        assert!(sim.finish_time(doomed).is_none());
+        // The pool shrank to one worker: the queued task must wait for
+        // the 5 s survivor, not take over the dead worker's slot.
+        let c2 = sim.step().unwrap();
+        assert!(!c2.failed);
+        assert_eq!(c2.time, 5.0);
+        let c3 = sim.step().unwrap();
+        assert_eq!(c3.task, queued);
+        assert_eq!(c3.time, 6.0);
+        assert_eq!(sim.busy_workers(), 0);
+    }
+
+    #[test]
+    fn kill_at_or_after_duration_is_a_normal_completion() {
+        let mut sim = EventSim::unbounded();
+        let a = sim.submit_attempt(0, 4.0, false, Some(4.0));
+        let b = sim.submit_attempt(0, 4.0, false, Some(9.0));
+        let c1 = sim.step().unwrap();
+        let c2 = sim.step().unwrap();
+        assert!(!c1.failed && !c2.failed);
+        assert_eq!(sim.finish_time(a), Some(4.0));
+        assert_eq!(sim.finish_time(b), Some(4.0));
+        assert_eq!(sim.lost_workers(), 0);
+    }
+
+    #[test]
+    fn cancel_of_failed_attempt_is_noop_no_double_release() {
+        let mut sim = EventSim::new(Pool::Workers(2));
+        let doomed = sim.submit_attempt(0, 10.0, false, Some(1.0));
+        sim.submit(0, 5.0, false);
+        let c = sim.step().unwrap();
+        assert!(c.failed && c.task == doomed);
+        assert_eq!(sim.busy_workers(), 1);
+        // Cancelling the already-failed attempt (the speculative twin
+        // race) must not release a second worker slot — twice over.
+        sim.cancel(doomed);
+        sim.cancel(doomed);
+        assert_eq!(sim.busy_workers(), 1);
+        let c2 = sim.step().unwrap();
+        assert!(!c2.failed);
+        sim.cancel(c2.task); // double-cancel a Done task: also a no-op
+        assert_eq!(sim.busy_workers(), 0);
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn lost_workers_clamp_keeps_one_survivor() {
+        let mut sim = EventSim::new(Pool::Workers(2));
+        for _ in 0..4 {
+            sim.submit_attempt(0, 10.0, false, Some(1.0));
+        }
+        let survivor = sim.submit(0, 2.0, false);
+        let mut failures = 0;
+        let mut finished = Vec::new();
+        while let Some(c) = sim.step() {
+            if c.failed {
+                failures += 1;
+            } else {
+                finished.push(c.task);
+            }
+        }
+        // All four doomed attempts die, but the pool never shrinks to
+        // zero: the last slot is re-provisioned and the survivor runs.
+        assert_eq!(failures, 4);
+        assert_eq!(sim.lost_workers(), 1);
+        assert_eq!(finished, vec![survivor]);
+        assert_eq!(sim.busy_workers(), 0);
+    }
+
+    #[test]
+    fn certain_death_exhausts_retries_and_degrades_wait_all() {
+        let m = model();
+        let fm = churn_model(1.0, 2);
+        let mut rng = Pcg64::new(31);
+        let mut sim = EventSim::new(Pool::Workers(3));
+        let n = 6;
+        let mut ph = PhaseState::launch_churn(
+            &mut sim,
+            &m,
+            &vec![work(); n],
+            &[],
+            Some(&fm),
+            &[],
+            0,
+            Termination::WaitAll,
+            &mut rng,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert!(ph.is_finished());
+        assert!(ph.degraded, "wait-all with universal death must degrade");
+        assert_eq!(ph.arrival_order().len(), 0);
+        // Every task burns its initial attempt plus max_retries retries.
+        assert_eq!(ph.exhausted, n);
+        assert_eq!(ph.retries, 2 * n);
+        assert_eq!(ph.deaths, 3 * n);
+        assert!(ph.attempts.iter().all(|&a| a <= fm.max_retries));
+        assert_eq!(sim.busy_workers(), 0);
+        assert!(sim.step().is_none(), "no live events after degradation");
+    }
+
+    #[test]
+    fn wait_k_degrades_once_infeasible_and_cancels_survivors() {
+        let m = model();
+        let fm = churn_model(1.0, 0); // first death is permanent
+        let mut rng = Pcg64::new(32);
+        let mut sim = EventSim::unbounded();
+        let n = 5;
+        let mut ph = PhaseState::launch_churn(
+            &mut sim,
+            &m,
+            &vec![work(); n],
+            &[],
+            Some(&fm),
+            &[],
+            0,
+            Termination::WaitK(n), // needs everyone: first death kills it
+            &mut rng,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert!(ph.degraded);
+        assert_eq!(ph.retries, 0);
+        assert!(ph.exhausted >= 1);
+        // The cutoff cancelled every still-live attempt.
+        assert_eq!(sim.busy_workers(), 0);
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn wait_k_with_slack_survives_deaths_with_retries_recorded() {
+        let m = model();
+        let fm = churn_model(0.4, 2);
+        let mut rng = Pcg64::new(33);
+        let mut sim = EventSim::new(Pool::Workers(8));
+        let n = 20;
+        let mut ph = PhaseState::launch_churn(
+            &mut sim,
+            &m,
+            &vec![work(); n],
+            &[],
+            Some(&fm),
+            &[],
+            0,
+            Termination::WaitK(5),
+            &mut rng,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert!(ph.is_finished());
+        assert!(!ph.degraded, "k=5 of 20 has plenty of slack");
+        assert_eq!(ph.arrival_order().len(), 5);
+        assert!(ph.deaths > 0, "death_p=0.4 over 20 tasks must kill some");
+        assert!(ph.attempts.iter().all(|&a| a <= fm.max_retries));
+        // Completed logical tasks appear in arrival_order exactly once.
+        let mut seen = std::collections::HashSet::new();
+        for &i in ph.arrival_order() {
+            assert!(seen.insert(i), "task {i} arrived twice");
+        }
+        assert_eq!(sim.busy_workers(), 0);
+    }
+
+    #[test]
+    fn speculative_churn_settles_without_leaking_workers() {
+        let m = model();
+        let fm = churn_model(0.5, 1);
+        let run = |seed: u64| -> (Vec<u64>, usize, usize, usize, bool) {
+            let mut rng = Pcg64::new(seed);
+            let mut sim = EventSim::new(Pool::Workers(6));
+            let mut ph = PhaseState::launch_churn(
+                &mut sim,
+                &m,
+                &vec![work(); 24],
+                &[],
+                Some(&fm),
+                &[],
+                0,
+                Termination::Speculative { wait_frac: 0.6 },
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            assert!(ph.is_finished());
+            assert_eq!(sim.busy_workers(), 0);
+            assert!(ph.attempts.iter().all(|&a| a <= fm.max_retries));
+            (
+                // Exhausted tasks carry NaN times: compare raw bits so
+                // the equality below is a real bit-identity check.
+                ph.completion_times().iter().map(|t| t.to_bits()).collect(),
+                ph.deaths,
+                ph.retries,
+                ph.relaunched,
+                ph.degraded,
+            )
+        };
+        // Deterministic twice over, including the failure bookkeeping.
+        assert_eq!(run(34), run(34));
+    }
+
+    #[test]
+    fn inert_failure_model_is_bit_identical_to_plain_launch() {
+        // `faults: Some(inert)` must consume the same RNG stream and
+        // produce the same timeline as the fault-free path — the golden
+        // compatibility contract.
+        let m = model();
+        let inert = FailureModel::default();
+        let run = |faults: Option<&FailureModel>| -> Vec<f64> {
+            let mut rng = Pcg64::new(35);
+            let mut sim = EventSim::new(Pool::Workers(5));
+            let mut ph = PhaseState::launch_churn(
+                &mut sim,
+                &m,
+                &vec![work(); 16],
+                &[],
+                faults,
+                &[],
+                0,
+                Termination::Speculative { wait_frac: 0.8 },
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            ph.completion_times()
+        };
+        let plain = run(None);
+        let gated = run(Some(&inert));
+        assert_eq!(plain, gated);
+    }
+
+    #[test]
+    fn cohort_multiplier_slows_members_only() {
+        let m = model();
+        let n = 8;
+        let run = |cohort: &[f64]| -> Vec<f64> {
+            let mut rng = Pcg64::new(36);
+            let mut sim = EventSim::unbounded();
+            let mut ph = PhaseState::launch_churn(
+                &mut sim,
+                &m,
+                &vec![work(); n],
+                &[],
+                None,
+                cohort,
+                0,
+                Termination::WaitAll,
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            ph.completion_times()
+        };
+        let base = run(&[]);
+        let mut cohort = vec![1.0; n];
+        cohort[2] = 3.0;
+        cohort[5] = 3.0;
+        let slowed = run(&cohort);
+        for i in 0..n {
+            if cohort[i] == 1.0 {
+                assert_eq!(slowed[i], base[i], "non-members must be untouched");
+            } else {
+                assert!(
+                    (slowed[i] - 3.0 * base[i]).abs() < 1e-9,
+                    "member {i}: {} vs 3×{}",
+                    slowed[i],
+                    base[i]
+                );
+            }
+        }
     }
 
     #[test]

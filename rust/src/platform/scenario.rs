@@ -33,10 +33,11 @@
 
 use crate::codes::scheme::{CodingScheme, DecodeProbe, JobShape};
 use crate::codes::Scheme;
-use crate::coordinator::metrics::JobReport;
+use crate::coordinator::metrics::{FaultMetrics, JobReport};
 use crate::platform::event::{Completion, EventSim, PhaseState, Pool};
 use crate::platform::straggler::{
-    SlowdownDist, StragglerModel, StragglerParams, WorkerRates,
+    CorrelatedSlowdown, FailureModel, SlowdownDist, StragglerModel, StragglerParams,
+    WorkerClass, WorkerRates,
 };
 use crate::storage::{keys, shard_of};
 use crate::util::json::{obj, Json};
@@ -55,6 +56,9 @@ pub struct JobSpec {
     pub encode_workers: usize,
     /// Virtual time the job enters the system.
     pub arrival: f64,
+    /// Per-job failure model; **fully replaces** the scenario-level one
+    /// when present (no field merging). `None` = inherit.
+    pub failures: Option<FailureModel>,
 }
 
 impl JobSpec {
@@ -107,6 +111,10 @@ pub struct Scenario {
     /// Optional storage-contention model; `None` = storage-oblivious
     /// timing (the historical behaviour, golden-pinned).
     pub storage: Option<StorageSpec>,
+    /// Optional fault-injection model (the `"failures"` section);
+    /// `None` = immortal homogeneous fleet (the historical behaviour,
+    /// golden-pinned — absent ⇒ zero extra RNG draws).
+    pub failures: Option<FailureModel>,
     pub jobs: Vec<JobSpec>,
 }
 
@@ -130,7 +138,16 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
     ensure_known_keys(
         "scenario",
         doc,
-        &["name", "description", "seed", "workers", "straggler", "storage", "jobs"],
+        &[
+            "name",
+            "description",
+            "seed",
+            "workers",
+            "straggler",
+            "storage",
+            "failures",
+            "jobs",
+        ],
     )?;
     let name = doc
         .get("name")
@@ -168,6 +185,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
 
     let straggler = parse_straggler(doc.get("straggler"))?;
     let storage = parse_storage(doc.get("storage"))?;
+    let failures = parse_failures(doc.get("failures"), storage.as_ref())?;
 
     let jobs_json = doc
         .get("jobs")
@@ -176,7 +194,10 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
     anyhow::ensure!(!jobs_json.is_empty(), "scenario '{name}' has no jobs");
     let mut jobs = Vec::with_capacity(jobs_json.len());
     for (i, jj) in jobs_json.iter().enumerate() {
-        jobs.push(parse_job(jj).map_err(|e| anyhow::anyhow!("job {i} of '{name}': {e}"))?);
+        jobs.push(
+            parse_job(jj, storage.as_ref())
+                .map_err(|e| anyhow::anyhow!("job {i} of '{name}': {e}"))?,
+        );
     }
 
     Ok(Scenario {
@@ -187,6 +208,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
         straggler,
         rates: WorkerRates::default(),
         storage,
+        failures,
         jobs,
     })
 }
@@ -243,6 +265,162 @@ fn parse_storage(j: Option<&Json>) -> anyhow::Result<Option<StorageSpec>> {
     }))
 }
 
+/// Parse the optional `"failures"` section (scenario- or job-level).
+/// Strict like `parse_storage`: unknown keys and wrong-typed values are
+/// errors, so a typo cannot silently produce an immortal fleet and get
+/// blessed into a golden.
+fn parse_failures(
+    j: Option<&Json>,
+    storage: Option<&StorageSpec>,
+) -> anyhow::Result<Option<FailureModel>> {
+    let Some(j) = j else { return Ok(None) };
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "'failures' must be an object, got {}",
+        j.to_string_compact()
+    );
+    ensure_known_keys(
+        "failures",
+        j,
+        &["death_p", "death_frac", "max_retries", "backoff_s", "classes", "correlated"],
+    )?;
+    let mut fm = FailureModel::default();
+    if let Some(v) = j.get("death_p") {
+        fm.death_p = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'failures.death_p' must be a number"))?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&fm.death_p),
+            "'failures.death_p' must be in [0, 1]"
+        );
+    }
+    if let Some(v) = j.get("death_frac") {
+        let pair = v
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .and_then(|a| Some((a[0].as_f64()?, a[1].as_f64()?)))
+            .ok_or_else(|| {
+                anyhow::anyhow!("'failures.death_frac' must be a [lo, hi] number pair")
+            })?;
+        anyhow::ensure!(
+            0.0 <= pair.0 && pair.0 <= pair.1 && pair.1 <= 1.0,
+            "'failures.death_frac' needs 0 ≤ lo ≤ hi ≤ 1"
+        );
+        fm.death_frac = pair;
+    }
+    if let Some(v) = j.get("max_retries") {
+        let r = v
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("'failures.max_retries' must be an integer"))?;
+        anyhow::ensure!(r <= 16, "'failures.max_retries' must be ≤ 16");
+        fm.max_retries = r as u32;
+    }
+    if let Some(v) = j.get("backoff_s") {
+        fm.backoff_s = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'failures.backoff_s' must be a number"))?;
+        anyhow::ensure!(
+            fm.backoff_s.is_finite() && fm.backoff_s >= 0.0,
+            "'failures.backoff_s' must be non-negative"
+        );
+    }
+    if let Some(v) = j.get("classes") {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'failures.classes' must be an array"))?;
+        for c in arr {
+            ensure_known_keys(
+                "worker class",
+                c,
+                &["name", "weight", "invoke_mult", "flops_mult"],
+            )?;
+            let name = c
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("worker class needs a string 'name'"))?
+                .to_string();
+            let num = |key: &str, default: f64| -> anyhow::Result<f64> {
+                let x = match c.get(key) {
+                    None => default,
+                    Some(v) => v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("worker class '{name}' '{key}' must be a number")
+                    })?,
+                };
+                anyhow::ensure!(
+                    x.is_finite() && x > 0.0,
+                    "worker class '{name}' '{key}' must be positive"
+                );
+                Ok(x)
+            };
+            fm.classes.push(WorkerClass {
+                weight: num("weight", 1.0)?,
+                invoke_mult: num("invoke_mult", 1.0)?,
+                flops_mult: num("flops_mult", 1.0)?,
+                name,
+            });
+        }
+    }
+    if let Some(v) = j.get("correlated") {
+        anyhow::ensure!(
+            v.as_obj().is_some(),
+            "'failures.correlated' must be an object"
+        );
+        ensure_known_keys("correlated", v, &["cohorts", "slow_cohort", "factor", "by"])?;
+        let by_shard = match v.get("by").and_then(Json::as_str) {
+            None | Some("round_robin") => false,
+            Some("shard") => true,
+            Some(other) => {
+                anyhow::bail!("unknown 'correlated.by' '{other}' (round_robin, shard)")
+            }
+        };
+        let cohorts = if by_shard {
+            anyhow::ensure!(
+                v.get("cohorts").is_none(),
+                "'correlated.cohorts' is implied by the storage shard count under by = \"shard\""
+            );
+            storage
+                .ok_or_else(|| {
+                    anyhow::anyhow!("'correlated.by' = \"shard\" requires a 'storage' section")
+                })?
+                .shards
+        } else {
+            let c = v
+                .get("cohorts")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("'correlated' needs an integer 'cohorts'"))?;
+            anyhow::ensure!(c >= 1, "'correlated.cohorts' must be ≥ 1");
+            c
+        };
+        let slow_cohort = match v.get("slow_cohort") {
+            None => 0,
+            Some(s) => s
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("'correlated.slow_cohort' must be an integer"))?,
+        };
+        anyhow::ensure!(
+            slow_cohort < cohorts,
+            "'correlated.slow_cohort' must be < cohorts ({cohorts})"
+        );
+        let factor = match v.get("factor") {
+            None => 2.0,
+            Some(f) => f
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'correlated.factor' must be a number"))?,
+        };
+        anyhow::ensure!(
+            factor.is_finite() && factor >= 1.0,
+            "'correlated.factor' must be ≥ 1"
+        );
+        fm.correlated = Some(CorrelatedSlowdown {
+            cohorts,
+            slow_cohort,
+            factor,
+            by_shard,
+        });
+    }
+    Ok(Some(fm))
+}
+
 fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
     let mut p = StragglerParams::default();
     let Some(j) = j else { return Ok(p) };
@@ -295,7 +473,7 @@ fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
     Ok(p)
 }
 
-fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
+fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec> {
     ensure_known_keys(
         "job",
         j,
@@ -307,6 +485,7 @@ fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
             "decode_workers",
             "encode_workers",
             "arrival",
+            "failures",
         ],
     )?;
     let scheme_str = j
@@ -345,6 +524,7 @@ fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
     let encode_workers = j.get("encode_workers").and_then(Json::as_usize).unwrap_or(0);
     let arrival = j.get("arrival").and_then(Json::as_f64).unwrap_or(0.0);
     anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
+    let failures = parse_failures(j.get("failures"), storage)?;
     // Validate the scheme's parameters against the partitioning through
     // the same registry instantiation the runner uses.
     scheme.instantiate(s_a, s_b)?;
@@ -356,6 +536,7 @@ fn parse_job(j: &Json) -> anyhow::Result<JobSpec> {
         decode_workers,
         encode_workers,
         arrival,
+        failures,
     })
 }
 
@@ -509,6 +690,12 @@ struct JobRun {
     /// Storage-contention overlay of the compute phase (RNG-free),
     /// `None` when the scenario has no `storage` section.
     storage: Option<StorageLoad>,
+    /// Effective failure model: the job-level override when present,
+    /// else the scenario default. `None` = immortal fleet.
+    faults: Option<FailureModel>,
+    /// Some phase of this job settled without all its work (permanent
+    /// worker deaths): the job's output is incomplete by construction.
+    fault_degraded: bool,
 }
 
 impl JobRun {
@@ -516,6 +703,7 @@ impl JobRun {
         index: usize,
         spec: JobSpec,
         storage: Option<&StorageSpec>,
+        failures: Option<&FailureModel>,
         rng: Pcg64,
     ) -> anyhow::Result<JobRun> {
         let scheme = spec.scheme.instantiate(spec.s_a, spec.s_b)?;
@@ -525,6 +713,7 @@ impl JobRun {
         let shape = spec.shape();
         let storage = storage
             .map(|sp| storage_overlay(sp, &format!("job{index}"), scheme.as_ref(), &shape));
+        let faults = spec.failures.clone().or_else(|| failures.cloned());
         Ok(JobRun {
             index,
             spec,
@@ -539,7 +728,67 @@ impl JobRun {
             finish: 0.0,
             undecodable: 0,
             storage,
+            faults,
+            fault_degraded: false,
         })
+    }
+
+    /// Per-task correlated-slowdown multipliers of one phase (empty =
+    /// none). RNG-free and derived purely from the phase's task indices —
+    /// the same determinism rule as the storage overlay. `shard_aligned`
+    /// is true only for the compute phase, whose task ↔ grid-cell ↔
+    /// storage-shard correspondence is meaningful.
+    fn cohort_mults(&self, phase_tasks: usize, shard_aligned: bool) -> Vec<f64> {
+        let Some(fm) = &self.faults else { return Vec::new() };
+        let Some(corr) = fm.correlated else { return Vec::new() };
+        if corr.by_shard && !shard_aligned {
+            // A hot shard slows its readers; phases that don't read the
+            // coded grid (encode/decode/recompute) are unaffected.
+            return Vec::new();
+        }
+        let tag = format!("job{}", self.index);
+        let (ra, rb) = self.scheme.coded_grid_dims();
+        let one_d = ra == 1;
+        (0..phase_tasks)
+            .map(|i| {
+                let cohort = if corr.by_shard {
+                    // Cohort = shard of the cell's a-side coded block,
+                    // over the same keys the MemStore would hash.
+                    let ai = if one_d { i } else { i / rb };
+                    shard_of(&keys::coded_block(&tag, "a", ai), corr.cohorts)
+                } else {
+                    i % corr.cohorts
+                };
+                if cohort == corr.slow_cohort {
+                    corr.factor
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+
+    /// Fold one finished phase's fault counters into the job report.
+    /// Emitted only when a failure feature is on, so fault-free reports
+    /// keep their historical shape byte for byte.
+    fn absorb_faults(&mut self, ps: &PhaseState) {
+        let Some(fm) = &self.faults else { return };
+        if !fm.any() {
+            return;
+        }
+        let class_names: Vec<String> = fm.classes.iter().map(|c| c.name.clone()).collect();
+        let f = self.report.faults.get_or_insert_with(|| FaultMetrics {
+            classes: class_names.into_iter().map(|n| (n, 0)).collect(),
+            ..Default::default()
+        });
+        f.deaths += ps.deaths as u64;
+        f.retries += ps.retries as u64;
+        f.exhausted += ps.exhausted as u64;
+        f.degraded |= ps.degraded;
+        for (slot, &n) in f.classes.iter_mut().zip(ps.class_counts.iter()) {
+            slot.1 += n;
+        }
+        self.fault_degraded |= ps.degraded;
     }
 
     /// Begin the pipeline at the job's arrival time (sim clock is there).
@@ -561,11 +810,15 @@ impl JobRun {
     ) {
         self.stage = Stage::Encode;
         self.report.enc.blocks_read = plan.blocks_read;
-        self.phase = Some(PhaseState::launch_uniform(
+        let works = vec![plan.profile; fleet];
+        let cohort = self.cohort_mults(fleet, false);
+        self.phase = Some(PhaseState::launch_churn(
             sim,
             model,
-            &plan.profile,
-            fleet,
+            &works,
+            &[],
+            self.faults.as_ref(),
+            &cohort,
             self.index,
             plan.termination,
             &mut self.rng,
@@ -584,11 +837,14 @@ impl JobRun {
             Some(load) => &load.extra_secs,
             None => &[],
         };
-        self.phase = Some(PhaseState::launch_with_io(
+        let cohort = self.cohort_mults(n, true);
+        self.phase = Some(PhaseState::launch_churn(
             sim,
             model,
             &works,
             io_extra,
+            self.faults.as_ref(),
+            &cohort,
             self.index,
             self.scheme.compute_termination(),
             &mut self.rng,
@@ -607,10 +863,14 @@ impl JobRun {
             self.start_recompute(sim, model);
         } else {
             self.stage = Stage::Decode;
-            self.phase = Some(PhaseState::launch(
+            let cohort = self.cohort_mults(plan.profiles.len(), false);
+            self.phase = Some(PhaseState::launch_churn(
                 sim,
                 model,
                 &plan.profiles,
+                &[],
+                self.faults.as_ref(),
+                &cohort,
                 self.index,
                 plan.termination,
                 &mut self.rng,
@@ -627,11 +887,15 @@ impl JobRun {
             return;
         }
         self.stage = Stage::Recompute;
-        self.phase = Some(PhaseState::launch_uniform(
+        let works = vec![self.shape.compute_profile(); self.undecodable];
+        let cohort = self.cohort_mults(self.undecodable, false);
+        self.phase = Some(PhaseState::launch_churn(
             sim,
             model,
-            &self.shape.compute_profile(),
-            self.undecodable,
+            &works,
+            &[],
+            self.faults.as_ref(),
+            &cohort,
             self.index,
             crate::platform::event::Termination::WaitAll,
             &mut self.rng,
@@ -643,6 +907,12 @@ impl JobRun {
         self.finish = t;
         self.phase = None;
         self.probe = None;
+        if self.fault_degraded {
+            // Permanent worker deaths left some cell unrecovered in at
+            // least one phase: the output is incomplete regardless of
+            // what the decode plan said about the cells that did arrive.
+            self.report.decode_ok = false;
+        }
     }
 
     /// Route one completion of this job to its live phase.
@@ -677,6 +947,7 @@ impl JobRun {
                 self.phase = Some(ps);
                 break;
             }
+            self.absorb_faults(&ps);
             match self.stage {
                 Stage::Encode => {
                     self.report.enc.tasks = ps.n();
@@ -726,7 +997,13 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
         let mut root = Pcg64::new(sc.seed);
         let mut jobs: Vec<JobRun> = Vec::with_capacity(sc.jobs.len());
         for (i, spec) in sc.jobs.iter().enumerate() {
-            jobs.push(JobRun::new(i, spec.clone(), sc.storage.as_ref(), root.fork(i as u64))?);
+            jobs.push(JobRun::new(
+                i,
+                spec.clone(),
+                sc.storage.as_ref(),
+                sc.failures.as_ref(),
+                root.fork(i as u64),
+            )?);
         }
         // Arrival order (ties by job index).
         let mut order: Vec<usize> = (0..jobs.len()).collect();
@@ -818,6 +1095,31 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
                         Json::Arr(bytes.iter().map(|&b| Json::from(b)).collect()),
                     )
                     .field("hot_shard", hot)
+                    .build(),
+            );
+        }
+        // Run-level churn summary — present exactly when some job ran
+        // with an active failure model (fault-free runs keep their
+        // historical byte shape).
+        if jobs.iter().any(|j| j.report.faults.is_some()) {
+            let fsum = |f: fn(&FaultMetrics) -> u64| -> u64 {
+                jobs.iter()
+                    .filter_map(|j| j.report.faults.as_ref())
+                    .map(f)
+                    .sum()
+            };
+            let degraded_jobs = jobs
+                .iter()
+                .filter(|j| j.report.faults.as_ref().is_some_and(|f| f.degraded))
+                .count();
+            run.set(
+                "faults",
+                obj()
+                    .field("deaths", fsum(|f| f.deaths))
+                    .field("retries", fsum(|f| f.retries))
+                    .field("exhausted", fsum(|f| f.exhausted))
+                    .field("degraded_jobs", degraded_jobs)
+                    .field("lost_workers", sim.lost_workers())
                     .build(),
             );
         }
@@ -1003,6 +1305,168 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("unknown storage key 'cache_block'"), "{err}");
+    }
+
+    #[test]
+    fn parses_failures_section_with_defaults_and_rejects_typos() {
+        let sc = scenario_from(
+            r#"{
+                "name": "churn",
+                "seed": 7,
+                "storage": {"shards": 4},
+                "failures": {
+                    "death_p": 0.1,
+                    "death_frac": [0.2, 0.8],
+                    "max_retries": 3,
+                    "backoff_s": 2.0,
+                    "classes": [
+                        {"name": "warm", "weight": 0.7},
+                        {"name": "cold", "weight": 0.3, "invoke_mult": 4.0, "flops_mult": 0.5}
+                    ],
+                    "correlated": {"slow_cohort": 1, "factor": 2.5, "by": "shard"}
+                },
+                "jobs": [
+                    {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 1000,
+                     "failures": {"death_p": 0.5, "max_retries": 1}}
+                ]
+            }"#,
+        );
+        let fm = sc.failures.as_ref().expect("failures parsed");
+        assert_eq!(fm.death_p, 0.1);
+        assert_eq!(fm.death_frac, (0.2, 0.8));
+        assert_eq!(fm.max_retries, 3);
+        assert_eq!(fm.classes.len(), 2);
+        assert_eq!(fm.classes[1].name, "cold");
+        assert_eq!(fm.classes[0].invoke_mult, 1.0); // default
+        let corr = fm.correlated.expect("correlated parsed");
+        assert!(corr.by_shard);
+        assert_eq!(corr.cohorts, 4); // implied by storage shards
+        assert_eq!(corr.slow_cohort, 1);
+        // The job-level override fully replaces the scenario model.
+        let jf = sc.jobs[0].failures.as_ref().expect("job failures");
+        assert_eq!(jf.death_p, 0.5);
+        assert!(jf.classes.is_empty());
+
+        for bad in [
+            // Unknown key.
+            r#"{"name": "x", "seed": 1, "failures": {"deathp": 0.1},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Out-of-range probability.
+            r#"{"name": "x", "seed": 1, "failures": {"death_p": 1.5},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Bad kill window.
+            r#"{"name": "x", "seed": 1, "failures": {"death_frac": [0.9, 0.1]},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Wrong-typed retries.
+            r#"{"name": "x", "seed": 1, "failures": {"max_retries": 1.5},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Class without a name.
+            r#"{"name": "x", "seed": 1, "failures": {"classes": [{"weight": 1.0}]},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Shard cohorts without a storage section.
+            r#"{"name": "x", "seed": 1, "failures": {"correlated": {"by": "shard"}},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Explicit cohorts are forbidden under by = shard.
+            r#"{"name": "x", "seed": 1, "storage": {"shards": 2},
+                "failures": {"correlated": {"by": "shard", "cohorts": 3}},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // slow_cohort out of range.
+            r#"{"name": "x", "seed": 1, "failures": {"correlated": {"cohorts": 2, "slow_cohort": 2}},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Not an object.
+            r#"{"name": "x", "seed": 1, "failures": 0.5,
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+        ] {
+            assert!(
+                parse_scenario(&parse(bad).unwrap()).is_err(),
+                "should reject: {bad}"
+            );
+        }
+        let err = parse_scenario(
+            &parse(
+                r#"{"name": "x", "seed": 1, "failures": {"death_P": 0.1},
+                    "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown failures key 'death_P'"), "{err}");
+    }
+
+    #[test]
+    fn inert_failures_section_is_byte_identical_to_absent() {
+        // The RNG draw-order satellite: a `"failures"` section with every
+        // feature off draws nothing extra, so the whole summary document
+        // matches the no-failures run byte for byte — including the
+        // absence of fault metrics.
+        let base = r#"{
+            "name": "draw-order",
+            "seed": 41,
+            "workers": [0, 10],
+            "jobs": [
+                {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 8000},
+                {"scheme": "speculative:0.75", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 30}
+            ]
+        }"#;
+        let with_inert = base.replace("\"seed\": 41,", "\"seed\": 41, \"failures\": {},");
+        let plain = run_scenario(&scenario_from(base)).unwrap();
+        let inert = run_scenario(&scenario_from(&with_inert)).unwrap();
+        assert_eq!(plain.to_string_pretty(), inert.to_string_pretty());
+    }
+
+    #[test]
+    fn churn_scenario_records_faults_and_degrades_uncoded() {
+        let src = r#"{
+            "name": "churn-run",
+            "seed": 53,
+            "workers": 16,
+            "failures": {
+                "death_p": 0.25,
+                "max_retries": 2,
+                "backoff_s": 1.0,
+                "classes": [
+                    {"name": "warm", "weight": 0.7},
+                    {"name": "cold", "weight": 0.3, "invoke_mult": 3.0, "flops_mult": 0.8}
+                ],
+                "correlated": {"cohorts": 4, "slow_cohort": 0, "factor": 2.0}
+            },
+            "jobs": [
+                {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 8000},
+                {"scheme": "uncoded", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 100,
+                 "failures": {"death_p": 0.9, "max_retries": 0}}
+            ]
+        }"#;
+        let sc = scenario_from(src);
+        let a = run_scenario(&sc).unwrap();
+        let b = run_scenario(&sc).unwrap();
+        assert_eq!(
+            a.to_string_pretty(),
+            b.to_string_pretty(),
+            "churn runs must be bit-identical"
+        );
+        let run = &a.get("runs").unwrap().as_arr().unwrap()[0];
+        let jobs = run.get("jobs").unwrap().as_arr().unwrap();
+        // Both jobs carry a faults block with per-class counts.
+        let coded = jobs[0].get("faults").expect("coded job faults");
+        let classes = coded.get("classes").expect("class counts");
+        let warm = classes.get("warm").unwrap().as_u64().unwrap();
+        let cold = classes.get("cold").unwrap().as_u64().unwrap();
+        assert!(warm + cold > 0, "attempts must be classed");
+        // The uncoded job at death_p=0.9 with no retries cannot finish
+        // whole: it must degrade gracefully, not hang.
+        let unc = &jobs[1];
+        assert_eq!(unc.get("scheme").unwrap().as_str(), Some("uncoded"));
+        assert_eq!(unc.get("decode_ok").unwrap().as_bool(), Some(false));
+        let uf = unc.get("faults").expect("uncoded job faults");
+        assert_eq!(uf.get("degraded").unwrap().as_bool(), Some(true));
+        assert!(uf.get("deaths").unwrap().as_u64().unwrap() > 0);
+        // No per-class map for the override (homogeneous fleet).
+        assert!(uf.get("classes").is_none());
+        // Run-level aggregate exists and adds up.
+        let agg = run.get("faults").expect("run-level faults");
+        assert!(agg.get("deaths").unwrap().as_u64().unwrap() > 0);
+        assert!(agg.get("degraded_jobs").unwrap().as_u64().unwrap() >= 1);
     }
 
     #[test]

@@ -129,12 +129,14 @@ impl WorkProfile {
     }
 
     /// Profile of a parity-encode task: read `l` blocks of `rows×cols`,
-    /// sum them, write one block.
+    /// sum them, write one block. Summing `l` blocks costs `l − 1` block
+    /// additions — zero for the degenerate `l ≤ 1` copy-through cases
+    /// (saturating, so `l == 0` cannot underflow).
     pub fn encode_parity(l: usize, rows: usize, cols: usize) -> WorkProfile {
         WorkProfile {
             bytes_read: (l * rows * cols * 4) as u64,
             read_ops: l as u64,
-            flops: ((l - 1) * rows * cols) as f64,
+            flops: (l.saturating_sub(1) * rows * cols) as f64,
             bytes_written: (rows * cols * 4) as u64,
             write_ops: 1,
         }
@@ -151,14 +153,21 @@ impl WorkProfile {
         k: usize,
         fleet: usize,
     ) -> WorkProfile {
+        // A 0-worker fleet is a caller bug upstream; clamp rather than
+        // divide by zero so a defensive profile stays finite.
+        let fleet = fleet.max(1);
         let total_read = (groups * l * block_rows * k * 4) as u64;
         let total_write = (groups * block_rows * k * 4) as u64;
         WorkProfile {
-            bytes_read: total_read / fleet as u64,
+            // Ceiling split: the straggler-bound worker carries the
+            // remainder bytes instead of them vanishing from the model.
+            bytes_read: total_read.div_ceil(fleet as u64),
             // Ranged GETs, split across the fleet like the bytes.
             read_ops: (groups * l).div_ceil(fleet) as u64,
-            flops: (groups * (l - 1).max(1) * block_rows * k) as f64 / fleet as f64,
-            bytes_written: total_write / fleet as u64,
+            // Summing l blocks is l − 1 additions; l ≤ 1 means the single
+            // data block is copied through with no arithmetic at all.
+            flops: (groups * l.saturating_sub(1) * block_rows * k) as f64 / fleet as f64,
+            bytes_written: total_write.div_ceil(fleet as u64),
             write_ops: groups.div_ceil(fleet) as u64,
         }
     }
@@ -173,6 +182,114 @@ impl WorkProfile {
             write_ops: 1,
         }
     }
+}
+
+/// One worker class of a heterogeneous fleet (cold-start model): a
+/// provisioned / warm / cold tier drawn per attempt at pool admission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerClass {
+    pub name: String,
+    /// Unnormalized admission weight (categorical draw).
+    pub weight: f64,
+    /// Multiplier on the invocation latency (cold starts ≫ 1,
+    /// provisioned concurrency ≪ 1).
+    pub invoke_mult: f64,
+    /// Multiplier on effective compute throughput (≥ 1 = faster tier).
+    pub flops_mult: f64,
+}
+
+/// Correlated slowdown: one cohort of the fleet (an AZ, or the readers
+/// of one hot storage shard) runs `factor`× slower than the rest. The
+/// cohort assignment is deterministic and RNG-free — it multiplies the
+/// sampled duration without touching the draw stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CorrelatedSlowdown {
+    /// Number of cohorts tasks are assigned to.
+    pub cohorts: usize,
+    /// Index of the slow cohort (< `cohorts`).
+    pub slow_cohort: usize,
+    /// Duration multiplier applied to the slow cohort's members.
+    pub factor: f64,
+    /// `true`: cohort = storage shard of the task's a-side input block
+    /// (hooked to the sharded-MemStore placement; `cohorts` = shard
+    /// count). `false`: round-robin over task index (an AZ-style
+    /// worker-side cohort).
+    pub by_shard: bool,
+}
+
+/// Fault-injection parameters layered on top of the straggler model
+/// (the scenario `"failures"` section).
+///
+/// # RNG gating (determinism)
+///
+/// [`StragglerModel::sample_attempt`] draws **zero** extra values when
+/// the model is inactive ([`FailureModel::is_active`] false): the draw
+/// stream is then bit-identical to [`StragglerModel::sample`]. When
+/// active, each attempt draws (in order, after the base sample): the
+/// worker-class categorical (only if `classes` is non-empty), the death
+/// Bernoulli (only if `death_p > 0`), and — only for dying attempts —
+/// the kill-fraction uniform. Correlated slowdowns never draw.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureModel {
+    /// Probability an attempt's worker dies mid-flight.
+    pub death_p: f64,
+    /// Kill time as a uniform fraction of the attempt's duration,
+    /// drawn from `[death_frac.0, death_frac.1)`.
+    pub death_frac: (f64, f64),
+    /// Re-dispatch bound per logical task (attempts beyond the first).
+    pub max_retries: u32,
+    /// Base re-dispatch backoff; retry `r` (1-based) is delayed by
+    /// `backoff_s · 2^(r−1)` virtual seconds, charged to the attempt.
+    pub backoff_s: f64,
+    /// Cold-start worker classes; empty = homogeneous fleet (no draw).
+    pub classes: Vec<WorkerClass>,
+    /// Optional correlated-slowdown cohort.
+    pub correlated: Option<CorrelatedSlowdown>,
+}
+
+impl Default for FailureModel {
+    fn default() -> Self {
+        FailureModel {
+            death_p: 0.0,
+            death_frac: (0.1, 0.9),
+            max_retries: 2,
+            backoff_s: 1.0,
+            classes: Vec::new(),
+            correlated: None,
+        }
+    }
+}
+
+impl FailureModel {
+    /// True when sampling an attempt consumes extra RNG draws (deaths
+    /// or worker classes). Inactive models leave the stream untouched.
+    pub fn is_active(&self) -> bool {
+        self.death_p > 0.0 || !self.classes.is_empty()
+    }
+
+    /// True when *any* failure feature is on — including draw-free
+    /// correlated slowdowns. Gates fault-metrics emission.
+    pub fn any(&self) -> bool {
+        self.is_active() || self.correlated.is_some()
+    }
+
+    fn class_weights(&self) -> Vec<f64> {
+        self.classes.iter().map(|c| c.weight).collect()
+    }
+}
+
+/// One sampled attempt under an optional [`FailureModel`]: the final
+/// duration (class and cohort effects applied), plus the injected kill
+/// time when the attempt's worker dies before finishing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttemptSample {
+    pub duration: f64,
+    pub straggled: bool,
+    /// Index into `FailureModel::classes`; `None` for homogeneous fleets.
+    pub class: Option<usize>,
+    /// Seconds after dispatch at which the worker dies (< `duration`);
+    /// `None` = the attempt runs to completion.
+    pub kill_after: Option<f64>,
 }
 
 /// A sampled job execution in virtual time.
@@ -242,6 +359,61 @@ impl StragglerModel {
     /// durations.
     pub fn sample_fleet(&self, work: &WorkProfile, n: usize, rng: &mut Pcg64) -> Vec<f64> {
         (0..n).map(|_| self.sample(work, rng).total()).collect()
+    }
+
+    /// Sample one attempt under an optional [`FailureModel`].
+    ///
+    /// The base draw sequence is exactly [`StragglerModel::sample`];
+    /// with `faults` `None` or inactive, no extra value is drawn and
+    /// `duration == sample().total() * cohort_mult` bit for bit
+    /// (`cohort_mult == 1.0` is the identity). Worker-class effects
+    /// rescale the invoke and compute components before the straggle
+    /// factor; the cohort multiplier applies to the whole duration.
+    pub fn sample_attempt(
+        &self,
+        work: &WorkProfile,
+        faults: Option<&FailureModel>,
+        cohort_mult: f64,
+        rng: &mut Pcg64,
+    ) -> AttemptSample {
+        let s = self.sample(work, rng);
+        let fm = match faults {
+            Some(fm) if fm.is_active() => fm,
+            _ => {
+                return AttemptSample {
+                    duration: s.total() * cohort_mult,
+                    straggled: s.straggled,
+                    class: None,
+                    kill_after: None,
+                }
+            }
+        };
+        let class = if fm.classes.is_empty() {
+            None
+        } else {
+            Some(rng.categorical(&fm.class_weights()))
+        };
+        let mut duration = match class {
+            None => s.total(),
+            Some(ci) => {
+                let c = &fm.classes[ci];
+                (s.invoke * c.invoke_mult + s.io_read + s.compute / c.flops_mult + s.io_write)
+                    * s.straggle_factor
+            }
+        };
+        duration *= cohort_mult;
+        let kill_after = if fm.death_p > 0.0 && rng.bernoulli(fm.death_p) {
+            let (lo, hi) = fm.death_frac;
+            Some(duration * rng.uniform(lo, hi))
+        } else {
+            None
+        };
+        AttemptSample {
+            duration,
+            straggled: s.straggled,
+            class,
+            kill_after,
+        }
     }
 }
 
@@ -358,5 +530,121 @@ mod tests {
         let a = model.sample_fleet(&fig1_profile(), 100, &mut r1);
         let b = model.sample_fleet(&fig1_profile(), 100, &mut r2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn encode_parity_degenerate_group_sizes() {
+        // l == 0 must not underflow (debug panic pre-fix) and l ≤ 1 is
+        // a copy-through: no additions at all.
+        let none = WorkProfile::encode_parity(0, 512, 512);
+        assert_eq!(none.flops, 0.0);
+        assert_eq!(none.bytes_read, 0);
+        let copy = WorkProfile::encode_parity(1, 512, 512);
+        assert_eq!(copy.flops, 0.0);
+        assert_eq!(copy.bytes_read, 512 * 512 * 4);
+        assert_eq!(copy.bytes_written, 512 * 512 * 4);
+    }
+
+    #[test]
+    fn sliced_encode_non_divisible_fleet_keeps_remainder() {
+        // 2 groups × l=3 × 100×7 blocks over a fleet of 5: totals are
+        // not divisible, and the per-worker share must round *up* so the
+        // remainder bytes don't vanish from the model.
+        let p = WorkProfile::sliced_encode(2, 3, 100, 7, 5);
+        let total_read = (2 * 3 * 100 * 7 * 4) as u64;
+        let total_write = (2 * 100 * 7 * 4) as u64;
+        assert_eq!(p.bytes_read, total_read.div_ceil(5));
+        assert!(p.bytes_read * 5 >= total_read);
+        assert_eq!(p.bytes_written, total_write.div_ceil(5));
+        assert!(p.bytes_written * 5 >= total_write);
+        // l = 1 copy-through: zero flops (was 1 full block-add pre-fix),
+        // and l = 0 must not underflow.
+        assert_eq!(WorkProfile::sliced_encode(4, 1, 100, 7, 2).flops, 0.0);
+        assert_eq!(WorkProfile::sliced_encode(4, 0, 100, 7, 2).flops, 0.0);
+        // A zero fleet is clamped, not a division by zero.
+        let clamped = WorkProfile::sliced_encode(2, 3, 100, 7, 0);
+        assert_eq!(clamped.bytes_read, total_read);
+        // Divisible splits are exact (the golden-pinned regime).
+        let even = WorkProfile::sliced_encode(4, 2, 100, 8, 4);
+        assert_eq!(even.bytes_read * 4, (4 * 2 * 100 * 8 * 4) as u64);
+    }
+
+    #[test]
+    fn sample_attempt_without_faults_matches_sample_stream() {
+        // The churn-capable sampler must be a bit-identical superset of
+        // the plain one when no failure model is present or active —
+        // that is what keeps pre-churn goldens byte-identical.
+        let model = StragglerModel::new(StragglerParams::default(), WorkerRates::default());
+        let w = fig1_profile();
+        let inert = FailureModel::default();
+        assert!(!inert.is_active());
+        let mut r1 = Pcg64::new(15);
+        let mut r2 = Pcg64::new(15);
+        let mut r3 = Pcg64::new(15);
+        for _ in 0..200 {
+            let plain = model.sample(&w, &mut r1);
+            let none = model.sample_attempt(&w, None, 1.0, &mut r2);
+            let quiet = model.sample_attempt(&w, Some(&inert), 1.0, &mut r3);
+            assert_eq!(none.duration.to_bits(), plain.total().to_bits());
+            assert_eq!(quiet.duration.to_bits(), plain.total().to_bits());
+            assert_eq!(none.straggled, plain.straggled);
+            assert!(none.class.is_none() && none.kill_after.is_none());
+            assert!(quiet.class.is_none() && quiet.kill_after.is_none());
+        }
+        // And the three streams stay aligned afterwards.
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn sample_attempt_draws_classes_and_kills() {
+        let model = StragglerModel::new(StragglerParams::default(), WorkerRates::default());
+        let w = fig1_profile();
+        let fm = FailureModel {
+            death_p: 0.3,
+            death_frac: (0.2, 0.8),
+            classes: vec![
+                WorkerClass {
+                    name: "warm".into(),
+                    weight: 0.7,
+                    invoke_mult: 1.0,
+                    flops_mult: 1.0,
+                },
+                WorkerClass {
+                    name: "cold".into(),
+                    weight: 0.3,
+                    invoke_mult: 4.0,
+                    flops_mult: 0.5,
+                },
+            ],
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(16);
+        let (mut deaths, mut cold) = (0, 0);
+        for _ in 0..4000 {
+            let s = model.sample_attempt(&w, Some(&fm), 1.0, &mut rng);
+            assert!(s.duration.is_finite() && s.duration > 0.0);
+            match s.class {
+                Some(1) => cold += 1,
+                Some(0) => {}
+                other => panic!("unexpected class {other:?}"),
+            }
+            if let Some(k) = s.kill_after {
+                deaths += 1;
+                // The kill always strikes mid-flight.
+                assert!(k > 0.0 && k < s.duration);
+                assert!(k >= 0.2 * s.duration - 1e-9 && k <= 0.8 * s.duration + 1e-9);
+            }
+        }
+        let death_rate = deaths as f64 / 4000.0;
+        let cold_rate = cold as f64 / 4000.0;
+        assert!((death_rate - 0.3).abs() < 0.03, "death rate {death_rate}");
+        assert!((cold_rate - 0.3).abs() < 0.03, "cold rate {cold_rate}");
+        // Cohort multiplier scales the duration without extra draws.
+        let mut ra = Pcg64::new(17);
+        let mut rb = Pcg64::new(17);
+        let a = model.sample_attempt(&w, Some(&fm), 1.0, &mut ra);
+        let b = model.sample_attempt(&w, Some(&fm), 2.5, &mut rb);
+        assert!((b.duration - 2.5 * a.duration).abs() < 1e-9 * b.duration);
+        assert_eq!(ra.next_u64(), rb.next_u64());
     }
 }

@@ -1,0 +1,240 @@
+//! Fault-injection integration suite: worker churn at Monte-Carlo scale.
+//!
+//! The unit tests in `platform::event` pin the kill/retry/settle
+//! mechanics on handfuls of tasks; this suite stresses the same
+//! machinery at the fleet sizes the paper simulates (10k+ invocations)
+//! and checks the invariants that must hold *statistically but
+//! exactly* under any seed:
+//!
+//! - every logical task either lands in `arrival_order` exactly once or
+//!   is recorded as exhausted — never both, never neither;
+//! - `deaths == retries + exhausted` under wait-all (each failed attempt
+//!   is either re-dispatched or a permanent loss);
+//! - re-dispatches never exceed `max_retries` per task;
+//! - the phase degrades if and only if some task was permanently lost;
+//! - the whole run is bit-identical when repeated with the same seed.
+//!
+//! Plus the end-to-end acceptance run of `scenarios/worker-churn.json`:
+//! coded jobs ride out the churn with retries recorded, the uncoded job
+//! degrades gracefully instead of hanging.
+
+use std::path::Path;
+
+use slec::platform::event::{run_phase, EventSim, PhaseState, Pool, Termination};
+use slec::platform::scenario::{parse_scenario, run_scenario};
+use slec::platform::straggler::{
+    FailureModel, StragglerModel, StragglerParams, WorkProfile, WorkerClass, WorkerRates,
+};
+use slec::util::json::{self, Json};
+use slec::util::rng::Pcg64;
+
+fn model() -> StragglerModel {
+    StragglerModel::new(StragglerParams::default(), WorkerRates::default())
+}
+
+fn churn(death_p: f64, max_retries: u32) -> FailureModel {
+    FailureModel {
+        death_p,
+        max_retries,
+        backoff_s: 0.5,
+        classes: vec![
+            WorkerClass {
+                name: "warm".into(),
+                weight: 0.7,
+                invoke_mult: 1.0,
+                flops_mult: 1.0,
+            },
+            WorkerClass {
+                name: "cold".into(),
+                weight: 0.3,
+                invoke_mult: 3.0,
+                flops_mult: 0.8,
+            },
+        ],
+        ..FailureModel::default()
+    }
+}
+
+/// Run one wait-all churn phase and return everything observable.
+#[allow(clippy::type_complexity)]
+fn run_churn_phase(
+    seed: u64,
+    n: usize,
+    pool: Pool,
+    fm: &FailureModel,
+    term: Termination,
+) -> (PhaseState, usize) {
+    let model = model();
+    let mut rng = Pcg64::new(seed);
+    let mut sim = EventSim::new(pool);
+    let works = vec![WorkProfile::block_product(250, 1000, 250); n];
+    let mut ph = PhaseState::launch_churn(&mut sim, &model, &works, &[], Some(fm), &[], 0, term, &mut rng);
+    run_phase(&mut sim, &mut ph, &model, &mut rng, &mut |_, _| false);
+    assert!(ph.is_finished(), "churn phase must always terminate");
+    assert_eq!(sim.busy_workers(), 0, "no worker slot may leak");
+    (ph, sim.lost_workers())
+}
+
+/// Exact bookkeeping invariants of one finished wait-all churn phase.
+fn assert_waitall_invariants(ph: &PhaseState, n: usize, fm: &FailureModel) {
+    // Every task lands in arrival_order exactly once, or is exhausted.
+    let mut seen = vec![false; n];
+    for &i in ph.arrival_order() {
+        assert!(!seen[i], "task {i} arrived twice");
+        seen[i] = true;
+    }
+    assert_eq!(
+        ph.arrival_order().len() + ph.exhausted,
+        n,
+        "every task completes or exhausts"
+    );
+    // Each failed attempt was either re-dispatched or a permanent loss.
+    assert_eq!(ph.deaths, ph.retries + ph.exhausted);
+    // The retry budget is a hard bound.
+    assert!(ph.retries <= n * fm.max_retries as usize);
+    // Every attempt (primary + retries) drew exactly one worker class.
+    let attempts: u64 = ph.class_counts.iter().sum();
+    assert_eq!(attempts as usize, n + ph.retries);
+    // Graceful degradation fires iff something was permanently lost.
+    assert_eq!(ph.degraded, ph.exhausted > 0);
+}
+
+#[test]
+fn monte_carlo_churn_ten_thousand_tasks() {
+    let fm = churn(0.08, 2);
+    let n = 10_000;
+    let run = |seed: u64| {
+        let (ph, lost) = run_churn_phase(seed, n, Pool::Workers(2048), &fm, Termination::WaitAll);
+        assert_waitall_invariants(&ph, n, &fm);
+        assert!(lost < 2048, "the lost-worker clamp keeps the pool alive");
+        // Completion times carry NaN for exhausted tasks; compare raw
+        // bits so bit-identity still means what it says.
+        let time_bits: Vec<u64> = ph.completion_times().iter().map(|t| t.to_bits()).collect();
+        (
+            time_bits,
+            ph.arrival_order().to_vec(),
+            ph.deaths,
+            ph.retries,
+            ph.exhausted,
+            ph.class_counts.clone(),
+            ph.degraded,
+            ph.duration(),
+            lost,
+        )
+    };
+    let a = run(2024);
+    // At death_p = 8% over ~11k attempts the churn is actually exercised:
+    // P(zero deaths) < 1e-300.
+    assert!(a.2 > 300, "expected heavy churn, saw {} deaths", a.2);
+    assert!(a.3 > 200, "expected re-dispatches, saw {} retries", a.3);
+    // Both classes drawn at scale.
+    assert!(a.5.iter().all(|&c| c > 0), "class counts {:?}", a.5);
+    // The whole run — times, order, bookkeeping — is bit-identical.
+    let b = run(2024);
+    assert_eq!(a, b, "same seed must reproduce the run bit-for-bit");
+}
+
+#[test]
+fn churn_invariants_hold_across_seeds() {
+    // Hostile regime: every 4th attempt dies and only one retry is
+    // allowed, so exhaustion is common — the bookkeeping must stay
+    // exact under any seed.
+    let fm = churn(0.25, 1);
+    for seed in 0..25u64 {
+        let (ph, _) = run_churn_phase(seed, 200, Pool::Workers(32), &fm, Termination::WaitAll);
+        assert_waitall_invariants(&ph, 200, &fm);
+    }
+}
+
+#[test]
+fn wait_k_churn_finishes_or_degrades_across_seeds() {
+    let fm = churn(0.3, 1);
+    let (n, k) = (50, 40);
+    for seed in 100..120u64 {
+        let (ph, _) = run_churn_phase(seed, n, Pool::Workers(16), &fm, Termination::WaitK(k));
+        let mut seen = vec![false; n];
+        for &i in ph.arrival_order() {
+            assert!(!seen[i], "seed {seed}: task {i} arrived twice");
+            seen[i] = true;
+        }
+        if ph.degraded {
+            // Infeasible or settled short: fewer than k arrivals, but
+            // the phase still terminated instead of hanging.
+            assert!(ph.arrival_order().len() < k, "seed {seed}");
+            assert!(ph.exhausted > 0, "seed {seed}");
+        } else {
+            // The cutoff fired normally at the k-th arrival.
+            assert_eq!(ph.arrival_order().len(), k, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn unbounded_pool_churn_keeps_exact_books_at_scale() {
+    let fm = churn(0.15, 3);
+    let (ph, lost) = run_churn_phase(7, 4000, Pool::Unbounded, &fm, Termination::WaitAll);
+    assert_waitall_invariants(&ph, 4000, &fm);
+    assert_eq!(lost, 0, "an unbounded pool never shrinks");
+    assert!(ph.deaths > 100);
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end acceptance: the worker-churn scenario.
+// ---------------------------------------------------------------------------
+
+fn run_worker_churn() -> Json {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios/worker-churn.json");
+    let doc = json::load_file(&path).expect("scenarios/worker-churn.json must exist");
+    let sc = parse_scenario(&doc).expect("worker-churn must parse");
+    run_scenario(&sc).expect("worker-churn must run")
+}
+
+#[test]
+fn worker_churn_scenario_is_bit_identical_across_runs() {
+    let a = run_worker_churn();
+    let b = run_worker_churn();
+    assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+}
+
+#[test]
+fn worker_churn_coded_jobs_survive_while_uncoded_degrades() {
+    let out = run_worker_churn();
+    let runs = out.get("runs").and_then(Json::as_arr).expect("runs");
+    assert_eq!(runs.len(), 2);
+    for run in runs {
+        let jobs = run.get("jobs").and_then(Json::as_arr).expect("jobs");
+        assert_eq!(jobs.len(), 5);
+        // The four coded/speculative jobs ride out the churn.
+        for job in &jobs[..4] {
+            let scheme = job.get("scheme").and_then(Json::as_str).unwrap();
+            assert_eq!(
+                job.get("decode_ok").and_then(Json::as_bool),
+                Some(true),
+                "{scheme} must complete despite churn"
+            );
+            let faults = job.get("faults").expect("coded jobs record faults");
+            assert_eq!(faults.get("degraded").and_then(Json::as_bool), Some(false));
+            // The heterogeneous fleet is recorded per class.
+            let classes = faults.get("classes").expect("classes map");
+            for name in ["provisioned", "warm", "cold"] {
+                assert!(classes.get(name).is_some(), "{scheme} missing class {name}");
+            }
+        }
+        // The uncoded job (death_p 0.55, one retry) loses blocks for good:
+        // it reports the loss instead of hanging or lying.
+        let uncoded = &jobs[4];
+        assert_eq!(uncoded.get("scheme").and_then(Json::as_str), Some("uncoded"));
+        assert_eq!(uncoded.get("decode_ok").and_then(Json::as_bool), Some(false));
+        let faults = uncoded.get("faults").expect("uncoded faults block");
+        assert_eq!(faults.get("degraded").and_then(Json::as_bool), Some(true));
+        assert!(faults.get("deaths").and_then(Json::as_u64).unwrap() > 0);
+        assert!(faults.get("exhausted").and_then(Json::as_u64).unwrap() > 0);
+        // Its per-job override replaces the fleet model: no classes map.
+        assert!(faults.get("classes").is_none());
+        // Run-level aggregate rolls the jobs up.
+        let agg = run.get("faults").expect("run-level faults aggregate");
+        assert!(agg.get("deaths").and_then(Json::as_u64).unwrap() > 0);
+        assert!(agg.get("retries").and_then(Json::as_u64).unwrap() > 0);
+        assert!(agg.get("degraded_jobs").and_then(Json::as_u64).unwrap() >= 1);
+    }
+}

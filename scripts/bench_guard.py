@@ -1,25 +1,161 @@
 #!/usr/bin/env python3
-"""Warn-only perf-regression guard for the bench-smoke CI job.
+"""Direction-aware perf-regression guard for the bench-smoke CI job.
 
 Compares the `values` section of a fresh BENCH_<name>.json against the
-committed baseline (artifacts/bench-baseline.json). A metric regresses
-when `current < baseline * (1 - tolerance)`; the tolerance is generous
-because shared CI runners are noisy. Regressions are reported as GitHub
-`::warning::` annotations and the exit code is always 0 — the guard
-informs reviewers, it does not gate merges. Baseline entries that are
-null (not yet blessed) or missing from the fresh run are skipped with a
-note.
+committed baseline (artifacts/bench-baseline.json).
 
-Usage: bench_guard.py <baseline.json> <fresh BENCH_*.json>
+The original guard treated every metric as a throughput ("bigger is
+better") and only warned when `current < baseline * (1 - tolerance)`.
+That check is *inverted* for time-valued metrics: a `_secs` latency that
+doubles sailed straight through, while a latency that *improved* enough
+would have tripped the warning. This version resolves a direction per
+metric and applies the floor/ceiling on the right side:
+
+- explicit: `baseline["directions"][key]` is "higher" or "lower";
+- suffix convention otherwise: keys ending in `_secs`, `_ms`, `_ns` or
+  `_latency` are lower-is-better; keys ending in `_per_s`, `_mb_per_s`,
+  `_gb_per_s`, `_gflops`, `_speedup` or `_ops` are higher-is-better;
+- anything else defaults to higher-is-better with a note, so a typo'd
+  key is visible in the log rather than silently guessed.
+
+A higher-is-better metric regresses when
+`current < baseline * (1 - tolerance)`; a lower-is-better metric when
+`current > baseline * (1 + tolerance)`.
+
+Enforcement: metrics listed in `baseline["enforce"]` (and actually
+blessed, i.e. non-null) fail the job with exit 1 on regression. All
+other regressions are GitHub `::warning::` annotations only — stable
+metrics graduate into `enforce` once their blessed numbers prove quiet;
+noisy ones stay warn-only. Null (unblessed) baselines and metrics
+missing from the fresh run are skipped with a note, so the guard is a
+no-op until numbers are blessed.
+
+Usage:
+    bench_guard.py <baseline.json> <fresh BENCH_*.json>
+    bench_guard.py --self-test
 """
 
 import json
 import sys
 
+LOWER_SUFFIXES = ("_secs", "_ms", "_ns", "_latency")
+HIGHER_SUFFIXES = ("_per_s", "_mb_per_s", "_gb_per_s", "_gflops", "_speedup", "_ops")
+
+
+def direction_of(key: str, overrides: dict) -> str:
+    """Resolve 'higher' or 'lower' (is better) for a metric key."""
+    explicit = overrides.get(key)
+    if explicit in ("higher", "lower"):
+        return explicit
+    if explicit is not None:
+        print(f"::warning::bench guard: bad direction '{explicit}' for '{key}', "
+              "expected 'higher' or 'lower'; using suffix convention")
+    if key.endswith(LOWER_SUFFIXES):
+        return "lower"
+    if key.endswith(HIGHER_SUFFIXES):
+        return "higher"
+    print(f"note: no direction for '{key}' (no override, unknown suffix); "
+          "assuming higher-is-better")
+    return "higher"
+
+
+def regressed(cur: float, base: float, tol: float, direction: str) -> bool:
+    if direction == "lower":
+        return cur > base * (1.0 + tol)
+    return cur < base * (1.0 - tol)
+
+
+def guard(baseline: dict, fresh: dict, fresh_path: str = "<fresh>") -> int:
+    tol = float(baseline.get("tolerance", 0.5))
+    overrides = baseline.get("directions") or {}
+    enforce = set(baseline.get("enforce") or [])
+    base_values = baseline.get("values", {})
+    fresh_values = fresh.get("values", {})
+    if fresh.get("quick"):
+        print("note: fresh run is SLEC_BENCH_QUICK — numbers are smoke-grade")
+
+    unblessed, warned, failed, ok = [], [], [], []
+    for key, base in sorted(base_values.items()):
+        if base is None:
+            unblessed.append(key)
+            continue
+        cur = fresh_values.get(key)
+        if cur is None:
+            print(f"::warning::bench guard: metric '{key}' absent from {fresh_path}")
+            continue
+        direction = direction_of(key, overrides)
+        if regressed(cur, base, tol, direction):
+            bound = base * (1.0 - tol) if direction == "higher" else base * (1.0 + tol)
+            side = "<" if direction == "higher" else ">"
+            msg = (f"perf regression: {key} = {cur:.3g} {side} {bound:.3g} "
+                   f"(baseline {base:.3g}, tolerance {tol:.0%}, {direction}-is-better)")
+            if key in enforce:
+                failed.append(key)
+                print(f"::error::{msg}")
+            else:
+                warned.append(key)
+                print(f"::warning::{msg}")
+        else:
+            ok.append(key)
+            print(f"ok: {key} = {cur:.3g} (baseline {base:.3g}, {direction}-is-better)")
+
+    if unblessed:
+        print(f"unblessed (skipped): {', '.join(unblessed)}")
+    print(f"bench guard: {len(ok)} ok, {len(warned)} warned, "
+          f"{len(failed)} failed, {len(unblessed)} unblessed")
+    return 1 if failed else 0
+
+
+def self_test() -> int:
+    """Pin the direction logic — run in CI before the real guard."""
+    cases = [
+        # (name, key, overrides, cur, base, expect_regressed)
+        ("throughput drop trips", "encode_mb_per_s", {}, 40.0, 100.0, True),
+        ("throughput ok", "encode_mb_per_s", {}, 95.0, 100.0, False),
+        ("throughput gain never trips", "encode_mb_per_s", {}, 300.0, 100.0, False),
+        # The inverted cases the old guard got wrong:
+        ("latency doubling trips", "decode_secs", {}, 2.0, 0.9, True),
+        ("latency ok", "decode_secs", {}, 1.0, 0.9, False),
+        ("latency improvement never trips", "decode_secs", {}, 0.1, 0.9, False),
+        ("speedup is higher-better", "encode_speedup", {}, 1.0, 4.0, True),
+        ("gflops is higher-better", "gemm_1024_gflops", {}, 10.0, 100.0, True),
+        ("override beats suffix", "weird_secs", {"weird_secs": "higher"}, 1.0, 10.0, True),
+        ("override lower", "score", {"score": "lower"}, 100.0, 10.0, True),
+        ("unknown suffix defaults higher", "mystery", {}, 1.0, 10.0, True),
+    ]
+    tol = 0.5
+    bad = 0
+    for name, key, overrides, cur, base, expect in cases:
+        got = regressed(cur, base, tol, direction_of(key, overrides))
+        status = "pass" if got == expect else "FAIL"
+        if got != expect:
+            bad += 1
+        print(f"self-test {status}: {name} ({key}: {cur} vs {base})")
+    # End-to-end: an enforced blessed regression must exit non-zero,
+    # a warn-only one must not.
+    baseline = {
+        "tolerance": 0.5,
+        "values": {"a_mb_per_s": 100.0, "b_secs": 1.0, "c_mb_per_s": None},
+        "enforce": ["a_mb_per_s"],
+    }
+    fresh = {"values": {"a_mb_per_s": 10.0, "b_secs": 50.0}}
+    if guard(baseline, fresh) != 1:
+        print("self-test FAIL: enforced regression did not fail the guard")
+        bad += 1
+    baseline["enforce"] = []
+    if guard(baseline, fresh) != 0:
+        print("self-test FAIL: warn-only regression must not fail the guard")
+        bad += 1
+    print(f"self-test: {bad} failure(s)")
+    return 1 if bad else 0
+
 
 def main() -> int:
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        return self_test()
     if len(sys.argv) != 3:
-        print(f"usage: {sys.argv[0]} <baseline.json> <bench.json>", file=sys.stderr)
+        print(f"usage: {sys.argv[0]} <baseline.json> <bench.json> | --self-test",
+              file=sys.stderr)
         return 2
     baseline_path, fresh_path = sys.argv[1], sys.argv[2]
     with open(baseline_path) as f:
@@ -30,40 +166,7 @@ def main() -> int:
     except FileNotFoundError:
         print(f"::warning::bench guard: {fresh_path} missing — bench did not run?")
         return 0
-
-    tol = float(baseline.get("tolerance", 0.5))
-    base_values = baseline.get("values", {})
-    fresh_values = fresh.get("values", {})
-    if fresh.get("quick"):
-        print("note: fresh run is SLEC_BENCH_QUICK — numbers are smoke-grade")
-
-    unblessed, regressed, ok = [], [], []
-    for key, base in sorted(base_values.items()):
-        if base is None:
-            unblessed.append(key)
-            continue
-        cur = fresh_values.get(key)
-        if cur is None:
-            print(f"::warning::bench guard: metric '{key}' absent from {fresh_path}")
-            continue
-        floor = base * (1.0 - tol)
-        if cur < floor:
-            regressed.append(key)
-            print(
-                f"::warning::perf regression: {key} = {cur:.3g} "
-                f"< {floor:.3g} (baseline {base:.3g}, tolerance {tol:.0%})"
-            )
-        else:
-            ok.append(key)
-            print(f"ok: {key} = {cur:.3g} (baseline {base:.3g})")
-
-    if unblessed:
-        print(f"unblessed (skipped): {', '.join(unblessed)}")
-    print(
-        f"bench guard: {len(ok)} ok, {len(regressed)} regressed, "
-        f"{len(unblessed)} unblessed"
-    )
-    return 0  # warn-only by design
+    return guard(baseline, fresh, fresh_path)
 
 
 if __name__ == "__main__":
