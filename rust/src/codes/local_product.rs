@@ -444,22 +444,28 @@ impl ComputePolicy for LocalProductScheme {
 
     fn decode_probe(&self) -> DecodeProbe {
         // A grid's decodability only changes when one of its own cells
-        // arrives: retest just that grid per completion.
+        // arrives: retest just that grid per completion. A `None` hint is
+        // a pure feasibility query over a hypothetical mask — answer it
+        // without touching the pending set.
         let code = self.code;
         let (ga, gb) = code.groups();
         let mut pending: BTreeSet<usize> = (0..ga * gb).collect();
-        Box::new(move |mask: &[bool], newly: Option<usize>| {
-            match newly {
-                Some(cell) => {
-                    let g = code.grid_of_cell(cell);
-                    if pending.contains(&g) && grid_decodable(&code, g, mask) {
-                        pending.remove(&g);
-                    }
+        Box::new(move |mask: &[bool], newly: Option<usize>| match newly {
+            Some(cell) => {
+                let g = code.grid_of_cell(cell);
+                if pending.contains(&g) && grid_decodable(&code, g, mask) {
+                    pending.remove(&g);
                 }
-                None => pending.retain(|&g| !grid_decodable(&code, g, mask)),
+                pending.is_empty()
             }
-            pending.is_empty()
+            None => pending.iter().all(|&g| grid_decodable(&code, g, mask)),
         })
+    }
+
+    fn partial_credit(&self) -> bool {
+        // Local decode is an AXPY reduction over block-product summands:
+        // the durable prefix of a straggler's product is usable as-is.
+        true
     }
 }
 

@@ -338,21 +338,25 @@ impl ComputePolicy for Matvec2DPolicy {
     }
 
     fn decode_probe(&self) -> DecodeProbe {
-        // Only the arriving block's grid can newly decode.
+        // Only the arriving block's grid can newly decode. A `None` hint
+        // is a pure feasibility query — answer without mutating the
+        // pending set.
         let code = self.code;
         let mut pending: std::collections::BTreeSet<usize> = (0..code.grids).collect();
-        Box::new(move |mask: &[bool], newly: Option<usize>| {
-            match newly {
-                Some(i) => {
-                    let (g, _, _) = code.cell(i);
-                    if pending.contains(&g) && code.grid_decodable(g, mask) {
-                        pending.remove(&g);
-                    }
+        Box::new(move |mask: &[bool], newly: Option<usize>| match newly {
+            Some(i) => {
+                let (g, _, _) = code.cell(i);
+                if pending.contains(&g) && code.grid_decodable(g, mask) {
+                    pending.remove(&g);
                 }
-                None => pending.retain(|&g| !code.grid_decodable(g, mask)),
+                pending.is_empty()
             }
-            pending.is_empty()
+            None => pending.iter().all(|&g| code.grid_decodable(g, mask)),
         })
+    }
+
+    fn partial_credit(&self) -> bool {
+        true
     }
 }
 

@@ -422,8 +422,15 @@ impl ComputePolicy for ProductScheme {
     fn decode_probe(&self) -> DecodeProbe {
         // Global parities couple every cell, so the whole-mask fixpoint is
         // re-run per completion (no per-grid incremental form exists).
+        // Stateless, so `None`-hint feasibility queries are pure for free.
         let code = self.code.clone();
         Box::new(move |mask: &[bool], _| code.decodable(mask))
+    }
+
+    fn partial_credit(&self) -> bool {
+        // The peeling decode is a chain of AXPY subtractions over
+        // block-product summands — partial products substitute cleanly.
+        true
     }
 }
 

@@ -105,8 +105,11 @@ impl DecodePlan {
 
 /// Stateful decodability predicate consulted by
 /// [`Termination::EarliestDecodable`]: receives the arrival mask plus
-/// `Some(index)` of the task that just completed (`None` on the up-front
-/// zero-requirement probe) and returns `true` when the phase may cut off.
+/// `Some(index)` of the task that just arrived (or was partially
+/// credited) and returns `true` when the phase may cut off. A `None`
+/// hint is a **pure feasibility query** over an arbitrary hypothetical
+/// mask — the up-front zero-requirement probe and the post-death
+/// infeasibility re-check — and must not mutate the probe's state.
 /// Probes must never draw from the job RNG (draw-order contract).
 pub type DecodeProbe = Box<dyn FnMut(&[bool], Option<usize>) -> bool + Send>;
 
@@ -123,6 +126,15 @@ pub trait ComputePolicy: Send + Sync {
     /// under [`Termination::EarliestDecodable`]; the default never fires.
     fn decode_probe(&self) -> DecodeProbe {
         Box::new(|_, _| false)
+    }
+
+    /// Can this policy consume a straggler's *partial* block-product?
+    /// Linear schemes whose decode is an AXPY reduction over summands can
+    /// (a prefix of a block product is a usable summand); `false` —
+    /// the safe default — makes the scenario runner discard straggler
+    /// work even when the `"progress"` section asks to exploit it.
+    fn partial_credit(&self) -> bool {
+        false
     }
 }
 

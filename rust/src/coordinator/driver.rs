@@ -16,9 +16,18 @@
 //! The sampled timeline of a job is a pure function of its seed, so the
 //! driver draws in a fixed phase order — encode launch, compute launch,
 //! decode launch, recompute launch, each followed by any speculative
-//! relaunch draws — and numeric hooks and decodability probes never
-//! touch the job RNG. This is what keeps golden scenario timelines
-//! bit-identical across refactors (DESIGN.md §Adding a scheme).
+//! relaunch or remainder-steal draws — and numeric hooks and
+//! decodability probes never touch the job RNG. Probes must also honour
+//! the pure-`None`-hint rule (DESIGN.md §Progress events): a
+//! `probe(mask, None)` call is a stateless feasibility query over an
+//! arbitrary hypothetical mask, asked by infeasibility checks and
+//! partial-credit retests; only `probe(mask, Some(cell))` records an
+//! arrival. Schemes whose decode consumes partial block-products opt in
+//! via [`ComputePolicy::partial_credit`]; the driver itself runs real
+//! numerics on fully-arrived blocks only, so partial credit is a
+//! timing-layer feature here. This is what keeps golden scenario
+//! timelines bit-identical across refactors (DESIGN.md §Adding a
+//! scheme).
 
 use crate::codes::scheme::{CodingScheme, ComputePolicy, JobShape};
 use crate::coordinator::matmul::{Env, MatmulJob};

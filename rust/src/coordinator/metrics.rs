@@ -71,6 +71,10 @@ pub struct FaultMetrics {
     pub retries: u64,
     /// Logical tasks that exhausted their retry budget (permanent loss).
     pub exhausted: u64,
+    /// Deaths absorbed by a live twin attempt (speculative relaunch or
+    /// stolen remainder): no re-dispatch was needed, so
+    /// `deaths == retries + exhausted + absorbed` holds exactly.
+    pub absorbed: u64,
     /// True when some phase ended without all the work it wanted — the
     /// graceful-degradation flag (`decode_ok` goes false with it).
     pub degraded: bool,
@@ -85,6 +89,7 @@ impl FaultMetrics {
             .field("deaths", self.deaths)
             .field("retries", self.retries)
             .field("exhausted", self.exhausted)
+            .field("absorbed", self.absorbed)
             .field("degraded", self.degraded)
             .build();
         if !self.classes.is_empty() {
@@ -95,6 +100,30 @@ impl FaultMetrics {
             doc.set("classes", by_class);
         }
         doc
+    }
+}
+
+/// Sub-task progress outcome of one job — only emitted when the
+/// scenario's `"progress"` section is present, so progress-free reports
+/// keep their historical byte-for-byte shape.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ProgressMetrics {
+    /// Mid-task progress slices observed across all primary attempts.
+    pub slices_arrived: u64,
+    /// Flops of straggler partial work the job actually used (kept
+    /// slices of stolen/retried remainders plus credited stragglers).
+    pub exploited_flops: f64,
+    /// Lagging tasks whose uncompleted remainder was re-dispatched.
+    pub remainders_stolen: u64,
+}
+
+impl ProgressMetrics {
+    pub fn to_json(&self) -> Json {
+        obj()
+            .field("slices_arrived", self.slices_arrived)
+            .field("exploited_flops", self.exploited_flops)
+            .field("remainders_stolen", self.remainders_stolen)
+            .build()
     }
 }
 
@@ -127,6 +156,9 @@ pub struct JobReport {
     /// Fault-injection outcome; `None` when the run has no `"failures"`
     /// section (keeps pre-churn reports byte-identical).
     pub faults: Option<FaultMetrics>,
+    /// Sub-task progress outcome; `None` when the run has no
+    /// `"progress"` section (keeps pre-progress reports byte-identical).
+    pub progress: Option<ProgressMetrics>,
 }
 
 impl JobReport {
@@ -142,6 +174,7 @@ impl JobReport {
             decode_ok: true,
             storage: None,
             faults: None,
+            progress: None,
         }
     }
 
@@ -172,6 +205,9 @@ impl JobReport {
         }
         if let Some(f) = &self.faults {
             doc.set("faults", f.to_json());
+        }
+        if let Some(p) = &self.progress {
+            doc.set("progress", p.to_json());
         }
         doc
     }
@@ -238,14 +274,16 @@ mod tests {
         assert!(r.to_json().get("faults").is_none());
         r.faults = Some(FaultMetrics {
             deaths: 4,
-            retries: 3,
+            retries: 2,
             exhausted: 1,
+            absorbed: 1,
             degraded: true,
             classes: vec![("warm".into(), 10), ("cold".into(), 2)],
         });
         let j = r.to_json();
         let f = j.get("faults").expect("faults block");
         assert_eq!(f.get("deaths").unwrap().as_u64(), Some(4));
+        assert_eq!(f.get("absorbed").unwrap().as_u64(), Some(1));
         assert_eq!(f.get("degraded").unwrap().as_bool(), Some(true));
         let c = f.get("classes").expect("classes map");
         assert_eq!(c.get("warm").unwrap().as_u64(), Some(10));
@@ -253,6 +291,22 @@ mod tests {
         // A homogeneous fleet omits the classes map entirely.
         r.faults.as_mut().unwrap().classes.clear();
         assert!(r.to_json().get("faults").unwrap().get("classes").is_none());
+    }
+
+    #[test]
+    fn progress_block_appears_only_when_present() {
+        let mut r = JobReport::new("local-product");
+        assert!(r.to_json().get("progress").is_none());
+        r.progress = Some(ProgressMetrics {
+            slices_arrived: 96,
+            exploited_flops: 1.5e9,
+            remainders_stolen: 2,
+        });
+        let j = r.to_json();
+        let p = j.get("progress").expect("progress block");
+        assert_eq!(p.get("slices_arrived").unwrap().as_u64(), Some(96));
+        assert_eq!(p.get("remainders_stolen").unwrap().as_u64(), Some(2));
+        assert_eq!(p.get("exploited_flops").unwrap().as_f64(), Some(1.5e9));
     }
 
     #[test]

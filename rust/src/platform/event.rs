@@ -74,6 +74,10 @@ pub struct Completion {
     /// `true` when this is a *failure* event: the attempt's worker died
     /// at its injected kill time and produced no result.
     pub failed: bool,
+    /// `Some(frac)` when this is a mid-task *progress* event: the attempt
+    /// has durably completed `frac` of its work and keeps running (its
+    /// worker is not released). `None` for real completions and failures.
+    pub progress: Option<f64>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,6 +100,9 @@ struct TaskRec {
     /// Seconds after dispatch at which the worker dies; `None` = the
     /// attempt is allowed to run to completion.
     kill: Option<f64>,
+    /// Progress slices this attempt is split into (1 = no progress
+    /// events, the historical behaviour).
+    slices: usize,
 }
 
 /// Task-finish event; the heap's `Ord` is *reversed* so Rust's max-heap
@@ -107,6 +114,9 @@ struct FinishEvent {
     time: f64,
     seq: u64,
     task: TaskId,
+    /// `Some(frac)` for a mid-task progress slice, `None` for the
+    /// attempt's terminal event (finish or kill).
+    progress: Option<f64>,
 }
 
 impl PartialEq for FinishEvent {
@@ -211,6 +221,23 @@ impl EventSim {
         straggled: bool,
         kill_after: Option<f64>,
     ) -> TaskId {
+        self.submit_sliced(job, duration, straggled, kill_after, 1)
+    }
+
+    /// [`EventSim::submit_attempt`] split into `slices` equal progress
+    /// slices: [`EventSim::step`] surfaces a progress [`Completion`] at
+    /// each interior slice boundary (`frac = s/slices`) before the
+    /// terminal event. A dying attempt only emits the slices it durably
+    /// finished *before* its kill time — partial work survives the worker,
+    /// the rest dies with it. `slices = 1` is the historical behaviour.
+    pub fn submit_sliced(
+        &mut self,
+        job: usize,
+        duration: f64,
+        straggled: bool,
+        kill_after: Option<f64>,
+        slices: usize,
+    ) -> TaskId {
         assert!(
             duration.is_finite() && duration >= 0.0,
             "task duration must be finite and non-negative, got {duration}"
@@ -221,6 +248,7 @@ impl EventSim {
                 "kill time must be finite and non-negative, got {k}"
             );
         }
+        assert!(slices >= 1, "an attempt needs at least one slice");
         let id = TaskId(self.tasks.len());
         self.tasks.push(TaskRec {
             job,
@@ -229,6 +257,7 @@ impl EventSim {
             state: TaskState::Waiting,
             finish: f64::NAN,
             kill: kill_after,
+            slices,
         });
         if self.has_free_worker() {
             self.start_task(id);
@@ -247,20 +276,41 @@ impl EventSim {
         debug_assert_eq!(self.tasks[id.0].state, TaskState::Waiting);
         self.tasks[id.0].state = TaskState::Running;
         let rec = &self.tasks[id.0];
-        // A dying attempt's only event is its kill; the finish it will
-        // never reach is not scheduled at all.
+        // A dying attempt's terminal event is its kill; the finish it
+        // will never reach is not scheduled at all.
         let runs_for = if Self::dies(rec) {
             rec.kill.unwrap()
         } else {
             rec.duration
         };
+        let (slices, duration) = (rec.slices, rec.duration);
         let fin = self.clock + runs_for;
         self.busy += 1;
+        // Interior slice boundaries are scheduled first, in ascending
+        // order, so one attempt's seqs ascend with its event times. Only
+        // slices strictly before the terminal event exist: a dying
+        // attempt keeps its durable pre-kill slices and nothing more.
+        if slices > 1 && duration > 0.0 {
+            for s in 1..slices {
+                let frac = s as f64 / slices as f64;
+                let t = self.clock + duration * frac;
+                if t < fin {
+                    self.seq += 1;
+                    self.heap.push(FinishEvent {
+                        time: t,
+                        seq: self.seq,
+                        task: id,
+                        progress: Some(frac),
+                    });
+                }
+            }
+        }
         self.seq += 1;
         self.heap.push(FinishEvent {
             time: fin,
             seq: self.seq,
             task: id,
+            progress: None,
         });
     }
 
@@ -348,7 +398,10 @@ impl EventSim {
     /// Process the next completion: advances the clock, frees (or, on a
     /// death, removes) the worker and dispatches the longest-waiting
     /// queued task. `None` when idle. A dying attempt surfaces as a
-    /// `failed` completion at its kill time.
+    /// `failed` completion at its kill time. A sliced attempt surfaces a
+    /// *progress* completion (`progress = Some(frac)`) at each interior
+    /// slice boundary: the clock advances but the attempt keeps running
+    /// and its worker stays busy.
     pub fn step(&mut self) -> Option<Completion> {
         loop {
             let ev = self.heap.pop()?;
@@ -356,9 +409,19 @@ impl EventSim {
                 continue; // stale event of a cancelled task
             }
             self.clock = ev.time;
-            let failed = Self::dies(&self.tasks[ev.task.0]);
             let job = self.tasks[ev.task.0].job;
             let straggled = self.tasks[ev.task.0].straggled;
+            if let Some(frac) = ev.progress {
+                return Some(Completion {
+                    task: ev.task,
+                    job,
+                    time: ev.time,
+                    straggled,
+                    failed: false,
+                    progress: Some(frac),
+                });
+            }
+            let failed = Self::dies(&self.tasks[ev.task.0]);
             if failed {
                 self.tasks[ev.task.0].state = TaskState::Failed;
                 self.kill_worker();
@@ -373,6 +436,7 @@ impl EventSim {
                 time: ev.time,
                 straggled,
                 failed,
+                progress: None,
             });
         }
     }
@@ -417,6 +481,61 @@ pub enum Termination {
     /// predicate passed to [`PhaseState::on_completion`]; unfinished tasks
     /// are cancelled, freeing their workers (§II-B).
     EarliestDecodable,
+}
+
+/// Sub-task progress configuration (the optional `"progress"` scenario
+/// section). Progress events split every *primary* attempt into `slices`
+/// equal pieces; the mid-phase reactions below ride on those events.
+/// Secondary attempts (retries, speculative relaunches, stolen
+/// remainders) run unsliced — they exist to finish, not to report.
+///
+/// RNG draw-order contract: slicing itself consumes **zero** extra draws
+/// (boundaries are derived from the already-sampled duration), so any
+/// config with `steal_after == 0.0` leaves the draw sequence of a
+/// fault-free run untouched. Work stealing resamples one attempt per
+/// stolen remainder — exactly like a speculative relaunch — at the
+/// instant the triggering slice arrives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProgressCfg {
+    /// Progress slices per primary attempt; 1 disables progress events.
+    pub slices: usize,
+    /// Work exploitation: keep a straggler's durable slices. Stolen
+    /// remainders and retries then carry only the *uncompleted* fraction
+    /// of the work profile, and the kept fraction is credited to
+    /// `exploited_flops` when the remainder lands. Off ⇒ every secondary
+    /// attempt recomputes the block from scratch (discard semantics).
+    pub exploit: bool,
+    /// Remainder re-dispatch deadline, as a multiple of the median
+    /// primary completion: once the ⌈n/2⌉-th task has finished at
+    /// `t_med`, a lagging task whose slice arrives after
+    /// `t0 + steal_after·(t_med − t0)` has its remainder re-dispatched
+    /// onto a fresh worker (work stealing). `0.0` disables stealing.
+    pub steal_after: f64,
+    /// Partial-credit threshold for earliest-decodable phases under
+    /// `exploit`: a task whose durable fraction reaches `credit_frac`
+    /// counts toward the decodability predicate before it completes
+    /// (overlap — decode starts while compute still runs). `1.0`
+    /// disables partial credit.
+    pub credit_frac: f64,
+}
+
+impl Default for ProgressCfg {
+    fn default() -> Self {
+        ProgressCfg {
+            slices: 1,
+            exploit: false,
+            steal_after: 0.0,
+            credit_frac: 1.0,
+        }
+    }
+}
+
+impl ProgressCfg {
+    /// Does this config change anything observable? All reactions are
+    /// driven by slice events, so one slice per attempt is inert.
+    pub fn any(&self) -> bool {
+        self.slices > 1
+    }
 }
 
 /// One phase of `n` logical tasks driven through the event queue.
@@ -468,9 +587,33 @@ pub struct PhaseState {
     pub class_counts: Vec<u64>,
     /// The phase ended without all the work it wanted: some logical task
     /// died permanently (wait-all / speculative settle on a partial set,
-    /// or wait-k became infeasible). Decoders must treat missing cells as
-    /// unrecoverable.
+    /// or wait-k / earliest-decodable became infeasible). Decoders must
+    /// treat missing cells as unrecoverable.
     pub degraded: bool,
+    /// Progress configuration; `None` ⇒ no slice events, bit-identical
+    /// to the pre-progress engine.
+    progress: Option<ProgressCfg>,
+    /// Durable fraction of each logical task delivered by slices so far.
+    slice_frac: Vec<f64>,
+    /// Partially-credited tasks (earliest-decodable `credit_frac`).
+    credited: Vec<bool>,
+    /// Attempt id → durable fraction the remainder attempt *preserves*:
+    /// when that attempt completes, the preserved fraction is exploited
+    /// work (slices the phase never recomputed).
+    remainder_of: HashMap<usize, f64>,
+    /// Work-stealing deadline; NaN until armed at the median arrival.
+    steal_deadline: f64,
+    /// Progress slices observed across all primaries.
+    pub slices_arrived: u64,
+    /// Flops of straggler partial work the phase actually used (kept
+    /// slices of stolen/retried remainders + credited stragglers).
+    pub exploited_flops: f64,
+    /// Lagging tasks whose uncompleted remainder was re-dispatched.
+    pub remainders_stolen: u64,
+    /// Deaths absorbed by a live twin attempt: no re-dispatch was needed,
+    /// so they are neither retries nor exhaustions —
+    /// `deaths == retries + exhausted + absorbed` always holds.
+    pub absorbed: usize,
 }
 
 impl PhaseState {
@@ -533,6 +676,28 @@ impl PhaseState {
         term: Termination,
         rng: &mut Pcg64,
     ) -> PhaseState {
+        PhaseState::launch_full(sim, model, works, io_extra, faults, cohort, None, job, term, rng)
+    }
+
+    /// [`PhaseState::launch_churn`] plus an optional [`ProgressCfg`]:
+    /// primaries are submitted sliced, so the sim streams progress events
+    /// through [`PhaseState::on_completion`] between dispatch and
+    /// completion. `progress = None` (or an inert config) is
+    /// bit-identical to [`PhaseState::launch_churn`] — slice boundaries
+    /// are derived from the sampled durations, never drawn.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_full(
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        works: &[WorkProfile],
+        io_extra: &[f64],
+        faults: Option<&FailureModel>,
+        cohort: &[f64],
+        progress: Option<&ProgressCfg>,
+        job: usize,
+        term: Termination,
+        rng: &mut Pcg64,
+    ) -> PhaseState {
         assert!(
             io_extra.is_empty() || io_extra.len() == works.len(),
             "io_extra must be empty or one entry per task ({} vs {})",
@@ -551,6 +716,7 @@ impl PhaseState {
         }
         let t0 = sim.now();
         let n_classes = faults.map(|f| f.classes.len()).unwrap_or(0);
+        let slices = progress.map(|p| p.slices.max(1)).unwrap_or(1);
         let mut primary = Vec::with_capacity(n);
         let mut straggled = Vec::with_capacity(n);
         let mut index_of = HashMap::with_capacity(n);
@@ -566,7 +732,7 @@ impl PhaseState {
             if let Some(ci) = s.class {
                 class_counts[ci] += 1;
             }
-            let id = sim.submit_attempt(job, s.duration + extra, s.straggled, s.kill_after);
+            let id = sim.submit_sliced(job, s.duration + extra, s.straggled, s.kill_after, slices);
             index_of.insert(id.0, i);
             primary.push(id);
             straggled.push(s.straggled);
@@ -597,6 +763,15 @@ impl PhaseState {
             exhausted: 0,
             class_counts,
             degraded: false,
+            progress: progress.copied(),
+            slice_frac: vec![0.0; n],
+            credited: vec![false; n],
+            remainder_of: HashMap::new(),
+            steal_deadline: f64::NAN,
+            slices_arrived: 0,
+            exploited_flops: 0.0,
+            remainders_stolen: 0,
+            absorbed: 0,
         }
     }
 
@@ -622,6 +797,23 @@ impl PhaseState {
         job: usize,
         term: Termination,
     ) -> PhaseState {
+        PhaseState::from_durations_progress(sim, durations, straggled, works, None, job, term)
+    }
+
+    /// [`PhaseState::from_durations`] with a progress config — the
+    /// deterministic unit-test surface for slice streaming, work
+    /// stealing and partial credit. Stolen remainders still resample
+    /// their duration from the model/RNG handed to
+    /// [`PhaseState::on_completion`].
+    pub fn from_durations_progress(
+        sim: &mut EventSim,
+        durations: &[f64],
+        straggled: &[bool],
+        works: Vec<WorkProfile>,
+        progress: Option<&ProgressCfg>,
+        job: usize,
+        term: Termination,
+    ) -> PhaseState {
         assert_eq!(durations.len(), straggled.len());
         assert_eq!(durations.len(), works.len());
         let n = durations.len();
@@ -629,10 +821,11 @@ impl PhaseState {
             assert!(n == 0 || (k >= 1 && k <= n), "wait-k needs 1 ≤ k ≤ n");
         }
         let t0 = sim.now();
+        let slices = progress.map(|p| p.slices.max(1)).unwrap_or(1);
         let mut primary = Vec::with_capacity(n);
         let mut index_of = HashMap::with_capacity(n);
         for i in 0..n {
-            let id = sim.submit(job, durations[i], straggled[i]);
+            let id = sim.submit_sliced(job, durations[i], straggled[i], None, slices);
             index_of.insert(id.0, i);
             primary.push(id);
         }
@@ -663,6 +856,15 @@ impl PhaseState {
             exhausted: 0,
             class_counts: Vec::new(),
             degraded: false,
+            progress: progress.copied(),
+            slice_frac: vec![0.0; n],
+            credited: vec![false; n],
+            remainder_of: HashMap::new(),
+            steal_deadline: f64::NAN,
+            slices_arrived: 0,
+            exploited_flops: 0.0,
+            remainders_stolen: 0,
+            absorbed: 0,
         }
     }
 
@@ -699,6 +901,18 @@ impl PhaseState {
         self.completion.iter().map(Option::is_some).collect()
     }
 
+    /// Arrival mask plus partially-credited stragglers — the mask the
+    /// decodability predicate (and downstream decode planning) sees under
+    /// work exploitation. Identical to [`PhaseState::arrived_mask`]
+    /// whenever partial credit is off.
+    pub fn credit_mask(&self) -> Vec<bool> {
+        self.completion
+            .iter()
+            .zip(&self.credited)
+            .map(|(c, &cr)| c.is_some() || cr)
+            .collect()
+    }
+
     /// Logical indices in completion order (so far).
     pub fn arrival_order(&self) -> &[usize] {
         &self.arrivals
@@ -721,6 +935,13 @@ impl PhaseState {
     fn finish_at(&mut self, sim: &mut EventSim, t: f64) {
         self.finished = true;
         self.end_time = t;
+        // Credited-but-incomplete stragglers contributed their durable
+        // slices to the decode: that work was used, not discarded.
+        for i in 0..self.n() {
+            if self.credited[i] && self.completion[i].is_none() {
+                self.exploited_flops += self.slice_frac[i] * self.works[i].flops;
+            }
+        }
         // Cutoff policies abandon stragglers, freeing their workers for
         // whatever runs next on the shared pool.
         if matches!(
@@ -740,10 +961,16 @@ impl PhaseState {
 
     /// Feed one completion belonging to this phase. `decodable` is only
     /// consulted under [`Termination::EarliestDecodable`]; it receives
-    /// the arrival mask plus `Some(index)` of the logical task that just
-    /// completed (`None` only on the up-front zero-requirement probe), so
-    /// incremental predicates can retest just the affected part. Returns
-    /// `true` exactly when this event terminates the phase.
+    /// the arrival mask (plus credited stragglers under partial credit)
+    /// and `Some(index)` of the logical task that just arrived, so
+    /// incremental predicates can retest just the affected part. A
+    /// `None` hint is a **pure feasibility query** (the up-front
+    /// zero-requirement probe and the infeasibility re-check after
+    /// permanent deaths): the predicate must answer for an arbitrary
+    /// hypothetical mask without mutating its own state. Progress events
+    /// (`c.progress = Some(frac)`) are routed to the mid-phase reactions
+    /// of [`ProgressCfg`]. Returns `true` exactly when this event
+    /// terminates the phase.
     pub fn on_completion(
         &mut self,
         sim: &mut EventSim,
@@ -752,8 +979,11 @@ impl PhaseState {
         c: &Completion,
         decodable: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
     ) -> bool {
+        if let Some(frac) = c.progress {
+            return self.on_progress(sim, model, rng, c, frac, decodable);
+        }
         if c.failed {
-            return self.on_failure(sim, model, rng, c);
+            return self.on_failure(sim, model, rng, c, decodable);
         }
         let li = match self.index_of.get(&c.task.0) {
             Some(&li) => li,
@@ -765,6 +995,11 @@ impl PhaseState {
         self.completion[li] = Some(c.time);
         self.arrivals.push(li);
         self.done += 1;
+        // A completing remainder attempt seals the exploitation: the
+        // durable fraction it preserved was never recomputed anywhere.
+        if let Some(&kept) = self.remainder_of.get(&c.task.0) {
+            self.exploited_flops += kept * self.works[li].flops;
+        }
         // The slower twin can no longer contribute: free its worker.
         // (Cancelling a twin that already *failed* is a no-op in the sim.)
         if let Some(r) = self.relaunch[li] {
@@ -774,6 +1009,14 @@ impl PhaseState {
         }
         if self.primary[li] != c.task {
             sim.cancel(self.primary[li]);
+        }
+        // Arm the work-stealing deadline off the median primary: stable
+        // against stragglers, and by then enough mass has arrived to know
+        // what "on time" means for this phase.
+        if let Some(cfg) = self.progress {
+            if cfg.steal_after > 0.0 && self.steal_deadline.is_nan() && 2 * self.done >= self.n() {
+                self.steal_deadline = self.t0 + cfg.steal_after * (c.time - self.t0);
+            }
         }
 
         let n = self.n();
@@ -788,36 +1031,14 @@ impl PhaseState {
                     self.finish_at(sim, c.time);
                 }
             }
-            Termination::Speculative { wait_frac } => {
-                let k = ((n as f64 * wait_frac).ceil() as usize).clamp(1, n);
-                if self.done == k && self.trigger_time.is_nan() {
-                    self.trigger_time = c.time;
-                    let faults = self.faults.clone();
-                    for i in 0..n {
-                        if self.completion[i].is_none()
-                            && self.relaunch[i].is_none()
-                            && !self.dead[i]
-                        {
-                            let cm = self.cohort.get(i).copied().unwrap_or(1.0);
-                            let s =
-                                model.sample_attempt(&self.works[i], faults.as_ref(), cm, rng);
-                            if let Some(ci) = s.class {
-                                self.class_counts[ci] += 1;
-                            }
-                            let id =
-                                sim.submit_attempt(self.job, s.duration, s.straggled, s.kill_after);
-                            self.index_of.insert(id.0, i);
-                            self.relaunch[i] = Some(id);
-                            self.relaunched += 1;
-                        }
-                    }
-                }
+            Termination::Speculative { .. } => {
+                self.maybe_fire_speculative(sim, model, rng, c.time);
                 if self.done == n {
                     self.finish_at(sim, c.time);
                 }
             }
             Termination::EarliestDecodable => {
-                let mask = self.arrived_mask();
+                let mask = self.credit_mask();
                 if decodable(&mask, Some(li)) {
                     self.finish_at(sim, c.time);
                 }
@@ -826,7 +1047,126 @@ impl PhaseState {
         if !self.finished {
             // A phase carrying permanent deaths can no longer rely on
             // `done == n`; re-test the settle condition on every event.
-            self.check_settled(sim, c.time);
+            self.check_settled(sim, c.time, decodable);
+        }
+        self.finished
+    }
+
+    /// Fire the speculative relaunch wave once `done + n_dead` reaches
+    /// the `wait_frac` threshold. Counting permanent deaths keeps the
+    /// trigger reachable when the k-th *success* can never happen (a
+    /// dead task's quantile slot is spent, not pending); fault-free runs
+    /// have `n_dead == 0`, so their trigger instant — and therefore the
+    /// RNG draw order — is exactly the historical `done == k`.
+    fn maybe_fire_speculative(
+        &mut self,
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        rng: &mut Pcg64,
+        t: f64,
+    ) {
+        let wait_frac = match self.term {
+            Termination::Speculative { wait_frac } => wait_frac,
+            _ => return,
+        };
+        let n = self.n();
+        if n == 0 || !self.trigger_time.is_nan() {
+            return;
+        }
+        let k = ((n as f64 * wait_frac).ceil() as usize).clamp(1, n);
+        if self.done + self.n_dead < k {
+            return;
+        }
+        self.trigger_time = t;
+        let faults = self.faults.clone();
+        for i in 0..n {
+            if self.completion[i].is_none() && self.relaunch[i].is_none() && !self.dead[i] {
+                let cm = self.cohort.get(i).copied().unwrap_or(1.0);
+                let s = model.sample_attempt(&self.works[i], faults.as_ref(), cm, rng);
+                if let Some(ci) = s.class {
+                    self.class_counts[ci] += 1;
+                }
+                let id = sim.submit_attempt(self.job, s.duration, s.straggled, s.kill_after);
+                self.index_of.insert(id.0, i);
+                self.relaunch[i] = Some(id);
+                self.relaunched += 1;
+            }
+        }
+    }
+
+    /// Handle a mid-task progress slice: record the durable fraction,
+    /// steal the remainder of a task lagging past the deadline, and —
+    /// under partial credit — retest decodability with the credited
+    /// mask so decode can start while compute still runs. Returns `true`
+    /// exactly when this slice terminates the phase.
+    fn on_progress(
+        &mut self,
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        rng: &mut Pcg64,
+        c: &Completion,
+        frac: f64,
+        decodable: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
+    ) -> bool {
+        let li = match self.index_of.get(&c.task.0) {
+            Some(&li) => li,
+            None => return false,
+        };
+        if self.finished || self.completion[li].is_some() || self.dead[li] {
+            return false; // stale slice of a settled logical task
+        }
+        let cfg = match self.progress {
+            Some(cfg) => cfg,
+            None => return false,
+        };
+        self.slices_arrived += 1;
+        if frac > self.slice_frac[li] {
+            self.slice_frac[li] = frac;
+        }
+        // (b) Work stealing: a slice arriving past the deadline proves
+        // the task is still running *and* late — re-dispatch its
+        // uncompleted remainder as a smaller work item on a fresh
+        // worker, twin-style (the faster of the two settles the task).
+        if cfg.steal_after > 0.0
+            && !self.steal_deadline.is_nan()
+            && c.time >= self.steal_deadline
+            && self.relaunch[li].is_none()
+        {
+            let kept = if cfg.exploit { self.slice_frac[li] } else { 0.0 };
+            let w = if kept > 0.0 {
+                self.works[li].scaled(1.0 - kept)
+            } else {
+                self.works[li]
+            };
+            let faults = self.faults.clone();
+            let cm = self.cohort.get(li).copied().unwrap_or(1.0);
+            let s = model.sample_attempt(&w, faults.as_ref(), cm, rng);
+            if let Some(ci) = s.class {
+                self.class_counts[ci] += 1;
+            }
+            let id = sim.submit_attempt(self.job, s.duration, s.straggled, s.kill_after);
+            self.index_of.insert(id.0, li);
+            if kept > 0.0 {
+                self.remainder_of.insert(id.0, kept);
+            }
+            self.relaunch[li] = Some(id);
+            self.relaunched += 1;
+            self.remainders_stolen += 1;
+        }
+        // (a)+(c) Partial credit: once the durable fraction clears the
+        // threshold, the task counts toward decodability before it
+        // completes.
+        if matches!(self.term, Termination::EarliestDecodable)
+            && cfg.exploit
+            && cfg.credit_frac < 1.0
+            && !self.credited[li]
+            && self.slice_frac[li] + 1e-12 >= cfg.credit_frac
+        {
+            self.credited[li] = true;
+            let mask = self.credit_mask();
+            if decodable(&mask, Some(li)) {
+                self.finish_at(sim, c.time);
+            }
         }
         self.finished
     }
@@ -843,6 +1183,7 @@ impl PhaseState {
         model: &StragglerModel,
         rng: &mut Pcg64,
         c: &Completion,
+        decodable: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
     ) -> bool {
         let li = match self.index_of.get(&c.task.0) {
             Some(&li) => li,
@@ -854,7 +1195,8 @@ impl PhaseState {
         self.deaths += 1;
         // Under speculative execution the logical task may still be
         // covered by its other attempt; only re-dispatch once both twins
-        // are gone.
+        // are gone. An absorbed death is neither a retry nor an
+        // exhaustion — it gets its own counter so the books still add up.
         let twin = if self.primary[li] == c.task {
             self.relaunch[li]
         } else {
@@ -862,6 +1204,7 @@ impl PhaseState {
         };
         if let Some(t) = twin {
             if sim.is_live(t) {
+                self.absorbed += 1;
                 return false;
             }
         }
@@ -875,8 +1218,20 @@ impl PhaseState {
             // Deterministic exponential backoff: the retry's duration (and
             // any injected kill) is shifted by backoff_s · 2^(attempt-1).
             let backoff = fm.backoff_s * (1u64 << (self.attempts[li] - 1).min(20)) as f64;
+            // Under work exploitation the dead worker's durable slices
+            // outlive it (they were streamed out), so the retry computes
+            // only the remainder.
+            let kept = match self.progress {
+                Some(cfg) if cfg.exploit && self.slice_frac[li] > 0.0 => self.slice_frac[li],
+                _ => 0.0,
+            };
+            let w = if kept > 0.0 {
+                self.works[li].scaled(1.0 - kept)
+            } else {
+                self.works[li]
+            };
             let cm = self.cohort.get(li).copied().unwrap_or(1.0);
-            let s = model.sample_attempt(&self.works[li], Some(&fm), cm, rng);
+            let s = model.sample_attempt(&w, Some(&fm), cm, rng);
             if let Some(ci) = s.class {
                 self.class_counts[ci] += 1;
             }
@@ -887,6 +1242,9 @@ impl PhaseState {
                 s.kill_after.map(|k| backoff + k),
             );
             self.index_of.insert(id.0, li);
+            if kept > 0.0 {
+                self.remainder_of.insert(id.0, kept);
+            }
             if self.primary[li] == c.task {
                 self.primary[li] = id;
             } else {
@@ -897,20 +1255,48 @@ impl PhaseState {
         self.dead[li] = true;
         self.n_dead += 1;
         self.exhausted += 1;
-        self.check_settled(sim, c.time);
+        // A death spends the dead task's quantile slot: the speculative
+        // trigger may have just become reachable.
+        self.maybe_fire_speculative(sim, model, rng, c.time);
+        if !self.finished {
+            self.check_settled(sim, c.time, decodable);
+        }
         self.finished
     }
 
     /// Degrade-instead-of-hang: once permanent deaths exist, the phase
     /// ends when every logical task has either completed or died, or when
-    /// a wait-k target has become unreachable.
-    fn check_settled(&mut self, sim: &mut EventSim, t: f64) {
+    /// its termination target has become unreachable — a wait-k quota
+    /// bigger than the surviving set, or an earliest-decodable predicate
+    /// that is false even on the mask of every live-or-pending task (a
+    /// pure `None`-hint query; the probe must not mutate its state).
+    fn check_settled(
+        &mut self,
+        sim: &mut EventSim,
+        t: f64,
+        decodable: &mut dyn FnMut(&[bool], Option<usize>) -> bool,
+    ) {
         if self.finished || self.n_dead == 0 {
             return;
         }
         let n = self.n();
         let settled = self.done + self.n_dead == n;
-        let infeasible = matches!(self.term, Termination::WaitK(k) if n - self.n_dead < k);
+        let infeasible = match self.term {
+            Termination::WaitK(k) => n - self.n_dead < k,
+            Termination::EarliestDecodable => {
+                // Best case: every task that is not permanently dead
+                // arrives (credited stragglers keep their credit even if
+                // their primary later died — the slices are durable).
+                let potential: Vec<bool> = self
+                    .dead
+                    .iter()
+                    .zip(&self.credited)
+                    .map(|(&d, &cr)| !d || cr)
+                    .collect();
+                !decodable(&potential, None)
+            }
+            _ => false,
+        };
         if settled || infeasible {
             self.degraded = true;
             self.finish_at(sim, t);
@@ -1496,6 +1882,308 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn sliced_attempt_streams_ascending_slices() {
+        let mut sim = EventSim::new(Pool::Workers(1));
+        let t = sim.submit_sliced(0, 8.0, false, None, 4);
+        for (frac, at) in [(0.25, 2.0), (0.5, 4.0), (0.75, 6.0)] {
+            let c = sim.step().unwrap();
+            assert_eq!(c.task, t);
+            assert_eq!(c.progress, Some(frac));
+            assert_eq!(c.time, at);
+            assert!(!c.failed);
+            // The worker is *not* released by a progress event.
+            assert_eq!(sim.busy_workers(), 1);
+        }
+        let fin = sim.step().unwrap();
+        assert_eq!(fin.progress, None);
+        assert_eq!(fin.time, 8.0);
+        assert_eq!(sim.busy_workers(), 0);
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn dying_attempt_keeps_only_durable_slices() {
+        // Kill at 5.0 of an 8.0-second attempt sliced in 4: the slices at
+        // 2.0 and 4.0 are durable, the one at 6.0 dies with the worker.
+        let mut sim = EventSim::unbounded();
+        sim.submit_sliced(0, 8.0, false, Some(5.0), 4);
+        let fracs: Vec<Option<f64>> =
+            std::iter::from_fn(|| sim.step().map(|c| c.progress)).collect();
+        assert_eq!(fracs, vec![Some(0.25), Some(0.5), None]);
+        assert_eq!(sim.now(), 5.0);
+    }
+
+    #[test]
+    fn cancelled_attempt_emits_no_further_slices() {
+        let mut sim = EventSim::unbounded();
+        let a = sim.submit_sliced(0, 10.0, false, None, 5);
+        let b = sim.submit(0, 3.0, false);
+        let c = sim.step().unwrap();
+        assert_eq!((c.task, c.progress), (a, Some(0.2)));
+        sim.cancel(a);
+        // Only b's completion remains; a's later slices are stale.
+        let c2 = sim.step().unwrap();
+        assert_eq!((c2.task, c2.progress), (b, None));
+        assert!(sim.step().is_none());
+    }
+
+    fn progress_cfg(slices: usize, exploit: bool, steal: f64, credit: f64) -> ProgressCfg {
+        ProgressCfg {
+            slices,
+            exploit,
+            steal_after: steal,
+            credit_frac: credit,
+        }
+    }
+
+    #[test]
+    fn inert_progress_config_is_bit_identical_to_plain_launch() {
+        // Slicing without reactions must not move a single completion:
+        // boundaries are derived, never drawn, and no reaction consumes
+        // RNG unless it fires.
+        let m = model();
+        let run = |cfg: Option<&ProgressCfg>| -> (Vec<f64>, f64) {
+            let mut rng = Pcg64::new(40);
+            let mut sim = EventSim::new(Pool::Workers(5));
+            let mut ph = PhaseState::launch_full(
+                &mut sim,
+                &m,
+                &vec![work(); 16],
+                &[],
+                None,
+                &[],
+                cfg,
+                0,
+                Termination::WaitAll,
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            (ph.completion_times(), ph.duration())
+        };
+        let plain = run(None);
+        let sliced = run(Some(&progress_cfg(8, true, 0.0, 1.0)));
+        assert_eq!(plain, sliced);
+    }
+
+    #[test]
+    fn work_stealing_redispatches_remainder_and_exploits_slices() {
+        // Four quick tasks arm the deadline at 2.0 (median 1.0 × 2.0);
+        // the straggler's first slice (t = 250k) is late, so its 75%
+        // remainder is stolen onto a fresh worker that finishes long
+        // before the original would have.
+        let m = model();
+        let cfg = progress_cfg(4, true, 2.0, 1.0);
+        let durations = [1.0, 1.0, 1.0, 1.0, 1.0e6];
+        let mut rng = Pcg64::new(41);
+        let mut sim = EventSim::unbounded();
+        let mut ph = PhaseState::from_durations_progress(
+            &mut sim,
+            &durations,
+            &[false; 5],
+            vec![work(); 5],
+            Some(&cfg),
+            0,
+            Termination::WaitAll,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert!(ph.is_finished());
+        assert_eq!(ph.remainders_stolen, 1);
+        assert_eq!(ph.relaunched, 1);
+        let times = ph.completion_times();
+        assert!(
+            times[4] < 1.0e6,
+            "stolen remainder must beat the straggler, got {}",
+            times[4]
+        );
+        // The kept quarter of the straggler's work was exploited.
+        let expect = 0.25 * work().flops;
+        assert!(
+            (ph.exploited_flops - expect).abs() < 1e-6,
+            "exploited {} vs {}",
+            ph.exploited_flops,
+            expect
+        );
+        assert_eq!(sim.busy_workers(), 0);
+    }
+
+    #[test]
+    fn exploiting_steal_is_no_slower_than_discard_steal() {
+        // Same seed ⇒ the stolen attempt burns identical draws in both
+        // runs; the exploiting one computes a strictly smaller profile,
+        // so its makespan can only be ≤ the discard run's.
+        let m = model();
+        let durations = [1.0, 1.0, 1.0, 1.0, 1.0e6];
+        let run = |exploit: bool| -> (f64, u64, f64) {
+            let cfg = progress_cfg(4, exploit, 2.0, 1.0);
+            let mut rng = Pcg64::new(42);
+            let mut sim = EventSim::unbounded();
+            let mut ph = PhaseState::from_durations_progress(
+                &mut sim,
+                &durations,
+                &[false; 5],
+                vec![work(); 5],
+                Some(&cfg),
+                0,
+                Termination::WaitAll,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            (ph.duration(), ph.remainders_stolen, ph.exploited_flops)
+        };
+        let (t_exploit, stolen_e, flops_e) = run(true);
+        let (t_discard, stolen_d, flops_d) = run(false);
+        assert_eq!(stolen_e, 1);
+        assert_eq!(stolen_d, 1);
+        assert!(flops_e > 0.0);
+        assert_eq!(flops_d, 0.0, "discard semantics exploit nothing");
+        assert!(
+            t_exploit <= t_discard,
+            "exploit {t_exploit} must not lose to discard {t_discard}"
+        );
+    }
+
+    #[test]
+    fn partial_credit_fires_earliest_decodable_early() {
+        // The predicate needs all five tasks; with credit_frac 0.5 the
+        // straggler counts at half done (t = 50), not completion (100).
+        let m = model();
+        let cfg = progress_cfg(4, true, 0.0, 0.5);
+        let durations = [1.0, 1.0, 1.0, 1.0, 100.0];
+        let mut rng = Pcg64::new(43);
+        let mut sim = EventSim::unbounded();
+        let mut ph = PhaseState::from_durations_progress(
+            &mut sim,
+            &durations,
+            &[false; 5],
+            vec![work(); 5],
+            Some(&cfg),
+            0,
+            Termination::EarliestDecodable,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |mask, _| {
+            mask.iter().filter(|&&x| x).count() >= 5
+        });
+        assert!(ph.is_finished());
+        assert_eq!(ph.end_time(), 50.0);
+        assert!(!ph.degraded);
+        assert_eq!(ph.arrival_order().len(), 4);
+        assert_eq!(ph.credit_mask(), vec![true; 5]);
+        assert_eq!(ph.arrived_mask(), vec![true, true, true, true, false]);
+        let expect = 0.5 * work().flops;
+        assert!((ph.exploited_flops - expect).abs() < 1e-6);
+        // The straggler's worker was cancelled at the cutoff.
+        assert_eq!(sim.busy_workers(), 0);
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn speculative_trigger_counts_dead_tasks() {
+        // death_p = 1.0 with no retries: successes are impossible, so the
+        // historical `done == k` trigger could never fire. Dead tasks
+        // spend their quantile slot instead, the wave launches, and the
+        // absorbed-death bookkeeping keeps the invariant exact.
+        let m = model();
+        let fm = churn_model(1.0, 0);
+        let mut rng = Pcg64::new(44);
+        let mut sim = EventSim::unbounded();
+        let n = 20;
+        let mut ph = PhaseState::launch_churn(
+            &mut sim,
+            &m,
+            &vec![work(); n],
+            &[],
+            Some(&fm),
+            &[],
+            0,
+            Termination::Speculative { wait_frac: 0.95 },
+            &mut rng,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        assert!(ph.is_finished());
+        assert!(ph.degraded);
+        assert!(
+            !ph.trigger_time.is_nan(),
+            "deaths must make the trigger reachable"
+        );
+        assert!(ph.relaunched >= 1);
+        assert_eq!(ph.exhausted, n);
+        assert_eq!(ph.deaths, ph.retries + ph.exhausted + ph.absorbed);
+        assert_eq!(sim.busy_workers(), 0);
+    }
+
+    #[test]
+    fn absorbed_twin_deaths_keep_the_books_balanced() {
+        // Speculative churn produces twin races: a death absorbed by a
+        // live twin is neither retried nor exhausted. Across seeds the
+        // extended invariant must hold exactly, and the absorbed path
+        // must actually be exercised.
+        let m = model();
+        let fm = churn_model(0.5, 1);
+        let mut absorbed_total = 0;
+        for seed in 50..70u64 {
+            let mut rng = Pcg64::new(seed);
+            let mut sim = EventSim::new(Pool::Workers(6));
+            let mut ph = PhaseState::launch_churn(
+                &mut sim,
+                &m,
+                &vec![work(); 24],
+                &[],
+                Some(&fm),
+                &[],
+                0,
+                Termination::Speculative { wait_frac: 0.6 },
+                &mut rng,
+            );
+            run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+            assert!(ph.is_finished());
+            assert_eq!(
+                ph.deaths,
+                ph.retries + ph.exhausted + ph.absorbed,
+                "seed {seed}"
+            );
+            assert_eq!(sim.busy_workers(), 0, "seed {seed}");
+            absorbed_total += ph.absorbed;
+        }
+        assert!(absorbed_total > 0, "twin-race path never exercised");
+    }
+
+    #[test]
+    fn earliest_decodable_infeasible_mask_degrades() {
+        // The predicate needs 3 of 4 cells. Universal death with no
+        // retries kills tasks one by one: after the second permanent
+        // loss the best possible mask has only 2 live cells, so the
+        // phase must degrade immediately instead of draining the other
+        // two doomed attempts.
+        let m = model();
+        let fm = churn_model(1.0, 0);
+        let mut rng = Pcg64::new(45);
+        let mut sim = EventSim::unbounded();
+        let mut ph = PhaseState::launch_churn(
+            &mut sim,
+            &m,
+            &vec![work(); 4],
+            &[],
+            Some(&fm),
+            &[],
+            0,
+            Termination::EarliestDecodable,
+            &mut rng,
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |mask, _| {
+            mask.iter().filter(|&&x| x).count() >= 3
+        });
+        assert!(ph.is_finished());
+        assert!(ph.degraded);
+        assert_eq!(
+            ph.exhausted, 2,
+            "must stop at the infeasibility point, not drain all four"
+        );
+        assert_eq!(ph.deaths, 2);
+        // The cutoff cancelled the two still-doomed attempts.
+        assert_eq!(sim.busy_workers(), 0);
+        assert!(sim.step().is_none());
     }
 
     #[test]

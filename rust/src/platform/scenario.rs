@@ -33,8 +33,8 @@
 
 use crate::codes::scheme::{CodingScheme, DecodeProbe, JobShape};
 use crate::codes::Scheme;
-use crate::coordinator::metrics::{FaultMetrics, JobReport};
-use crate::platform::event::{Completion, EventSim, PhaseState, Pool};
+use crate::coordinator::metrics::{FaultMetrics, JobReport, ProgressMetrics};
+use crate::platform::event::{Completion, EventSim, PhaseState, Pool, ProgressCfg};
 use crate::platform::straggler::{
     CorrelatedSlowdown, FailureModel, SlowdownDist, StragglerModel, StragglerParams,
     WorkerClass, WorkerRates,
@@ -59,6 +59,9 @@ pub struct JobSpec {
     /// Per-job failure model; **fully replaces** the scenario-level one
     /// when present (no field merging). `None` = inherit.
     pub failures: Option<FailureModel>,
+    /// Per-job progress config; **fully replaces** the scenario-level
+    /// one when present (no field merging). `None` = inherit.
+    pub progress: Option<ProgressCfg>,
 }
 
 impl JobSpec {
@@ -115,6 +118,10 @@ pub struct Scenario {
     /// `None` = immortal homogeneous fleet (the historical behaviour,
     /// golden-pinned — absent ⇒ zero extra RNG draws).
     pub failures: Option<FailureModel>,
+    /// Optional sub-task progress streaming (the `"progress"` section);
+    /// `None` = opaque attempts (the historical behaviour,
+    /// golden-pinned — absent ⇒ zero extra RNG draws).
+    pub progress: Option<ProgressCfg>,
     pub jobs: Vec<JobSpec>,
 }
 
@@ -146,6 +153,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
             "straggler",
             "storage",
             "failures",
+            "progress",
             "jobs",
         ],
     )?;
@@ -186,6 +194,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
     let straggler = parse_straggler(doc.get("straggler"))?;
     let storage = parse_storage(doc.get("storage"))?;
     let failures = parse_failures(doc.get("failures"), storage.as_ref())?;
+    let progress = parse_progress(doc.get("progress"))?;
 
     let jobs_json = doc
         .get("jobs")
@@ -209,6 +218,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
         rates: WorkerRates::default(),
         storage,
         failures,
+        progress,
         jobs,
     })
 }
@@ -421,6 +431,55 @@ fn parse_failures(
     Ok(Some(fm))
 }
 
+/// Parse the optional `"progress"` section (scenario- or job-level).
+/// Strict like `parse_failures`: unknown keys and wrong-typed values
+/// are errors, so a typo cannot silently disable slicing and get
+/// blessed into a golden.
+fn parse_progress(j: Option<&Json>) -> anyhow::Result<Option<ProgressCfg>> {
+    let Some(j) = j else { return Ok(None) };
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "'progress' must be an object, got {}",
+        j.to_string_compact()
+    );
+    ensure_known_keys(
+        "progress",
+        j,
+        &["slices", "exploit", "steal_after", "credit_frac"],
+    )?;
+    let mut cfg = ProgressCfg::default();
+    if let Some(v) = j.get("slices") {
+        cfg.slices = v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("'progress.slices' must be an integer"))?;
+        anyhow::ensure!(cfg.slices >= 1, "'progress.slices' must be ≥ 1");
+    }
+    if let Some(v) = j.get("exploit") {
+        cfg.exploit = v
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("'progress.exploit' must be a boolean"))?;
+    }
+    if let Some(v) = j.get("steal_after") {
+        cfg.steal_after = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'progress.steal_after' must be a number"))?;
+        anyhow::ensure!(
+            cfg.steal_after.is_finite() && cfg.steal_after >= 0.0,
+            "'progress.steal_after' must be non-negative"
+        );
+    }
+    if let Some(v) = j.get("credit_frac") {
+        cfg.credit_frac = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'progress.credit_frac' must be a number"))?;
+        anyhow::ensure!(
+            cfg.credit_frac > 0.0 && cfg.credit_frac <= 1.0,
+            "'progress.credit_frac' must be in (0, 1]"
+        );
+    }
+    Ok(Some(cfg))
+}
+
 fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
     let mut p = StragglerParams::default();
     let Some(j) = j else { return Ok(p) };
@@ -486,6 +545,7 @@ fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec>
             "encode_workers",
             "arrival",
             "failures",
+            "progress",
         ],
     )?;
     let scheme_str = j
@@ -525,6 +585,7 @@ fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec>
     let arrival = j.get("arrival").and_then(Json::as_f64).unwrap_or(0.0);
     anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
     let failures = parse_failures(j.get("failures"), storage)?;
+    let progress = parse_progress(j.get("progress"))?;
     // Validate the scheme's parameters against the partitioning through
     // the same registry instantiation the runner uses.
     scheme.instantiate(s_a, s_b)?;
@@ -537,6 +598,7 @@ fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec>
         encode_workers,
         arrival,
         failures,
+        progress,
     })
 }
 
@@ -693,6 +755,12 @@ struct JobRun {
     /// Effective failure model: the job-level override when present,
     /// else the scenario default. `None` = immortal fleet.
     faults: Option<FailureModel>,
+    /// Effective progress config: the job-level override when present,
+    /// else the scenario default. `None` = opaque attempts. Applies to
+    /// the compute phase only (the coded grid is where straggler work
+    /// is worth exploiting); exploitation features are gated on the
+    /// scheme's [`ComputePolicy::partial_credit`] capability at launch.
+    progress: Option<ProgressCfg>,
     /// Some phase of this job settled without all its work (permanent
     /// worker deaths): the job's output is incomplete by construction.
     fault_degraded: bool,
@@ -704,6 +772,7 @@ impl JobRun {
         spec: JobSpec,
         storage: Option<&StorageSpec>,
         failures: Option<&FailureModel>,
+        progress: Option<&ProgressCfg>,
         rng: Pcg64,
     ) -> anyhow::Result<JobRun> {
         let scheme = spec.scheme.instantiate(spec.s_a, spec.s_b)?;
@@ -714,6 +783,7 @@ impl JobRun {
         let storage = storage
             .map(|sp| storage_overlay(sp, &format!("job{index}"), scheme.as_ref(), &shape));
         let faults = spec.failures.clone().or_else(|| failures.cloned());
+        let progress = spec.progress.or_else(|| progress.copied());
         Ok(JobRun {
             index,
             spec,
@@ -729,6 +799,7 @@ impl JobRun {
             undecodable: 0,
             storage,
             faults,
+            progress,
             fault_degraded: false,
         })
     }
@@ -784,6 +855,7 @@ impl JobRun {
         f.deaths += ps.deaths as u64;
         f.retries += ps.retries as u64;
         f.exhausted += ps.exhausted as u64;
+        f.absorbed += ps.absorbed as u64;
         f.degraded |= ps.degraded;
         for (slot, &n) in f.classes.iter_mut().zip(ps.class_counts.iter()) {
             slot.1 += n;
@@ -838,13 +910,26 @@ impl JobRun {
             None => &[],
         };
         let cohort = self.cohort_mults(n, true);
-        self.phase = Some(PhaseState::launch_churn(
+        // Exploitation is a *capability* of the scheme, not just a
+        // scenario switch: schemes whose decode cannot consume partial
+        // block-products run any `"progress"` section in observe-only
+        // mode (slices stream, remainders are stolen whole, nothing is
+        // credited). Slicing itself stays on so the stream is visible.
+        let progress = self.progress.map(|mut p| {
+            if !self.scheme.partial_credit() {
+                p.exploit = false;
+                p.credit_frac = 1.0;
+            }
+            p
+        });
+        self.phase = Some(PhaseState::launch_full(
             sim,
             model,
             &works,
             io_extra,
             self.faults.as_ref(),
             &cohort,
+            progress.as_ref(),
             self.index,
             self.scheme.compute_termination(),
             &mut self.rng,
@@ -961,8 +1046,21 @@ impl JobRun {
                     self.report.comp.stragglers = ps.stragglers();
                     self.report.comp.relaunched = ps.relaunched;
                     self.report.comp.virtual_secs = ps.duration();
+                    // Emitted only when slicing was actually on, so
+                    // progress-free (and inert `slices: 1`) reports keep
+                    // their historical shape byte for byte.
+                    if self.progress.is_some_and(|p| p.any()) {
+                        self.report.progress = Some(ProgressMetrics {
+                            slices_arrived: ps.slices_arrived,
+                            exploited_flops: ps.exploited_flops,
+                            remainders_stolen: ps.remainders_stolen,
+                        });
+                    }
                     self.probe = None;
-                    let mask = ps.arrived_mask();
+                    // Credited-but-incomplete stragglers count as arrived
+                    // for decode planning — that is what partial credit
+                    // *means* (identical to `arrived_mask` otherwise).
+                    let mask = ps.credit_mask();
                     self.start_decode(sim, model, &mask);
                 }
                 Stage::Decode => {
@@ -1002,6 +1100,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
                 spec.clone(),
                 sc.storage.as_ref(),
                 sc.failures.as_ref(),
+                sc.progress.as_ref(),
                 root.fork(i as u64),
             )?);
         }
@@ -1118,6 +1217,7 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
                     .field("deaths", fsum(|f| f.deaths))
                     .field("retries", fsum(|f| f.retries))
                     .field("exhausted", fsum(|f| f.exhausted))
+                    .field("absorbed", fsum(|f| f.absorbed))
                     .field("degraded_jobs", degraded_jobs)
                     .field("lost_workers", sim.lost_workers())
                     .build(),
@@ -1413,6 +1513,101 @@ mod tests {
         let plain = run_scenario(&scenario_from(base)).unwrap();
         let inert = run_scenario(&scenario_from(&with_inert)).unwrap();
         assert_eq!(plain.to_string_pretty(), inert.to_string_pretty());
+    }
+
+    #[test]
+    fn inert_progress_section_is_byte_identical_to_absent() {
+        // Same draw-order rule for `"progress"`: one slice per attempt
+        // emits no slice events, so none of the reactions (stealing,
+        // crediting) can fire even when configured — the summary matches
+        // the progress-free run byte for byte, including the absence of
+        // the progress metrics block.
+        let base = r#"{
+            "name": "progress-draw-order",
+            "seed": 47,
+            "workers": [0, 10],
+            "jobs": [
+                {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 8000},
+                {"scheme": "speculative:0.75", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 30}
+            ]
+        }"#;
+        let with_inert = base.replace(
+            "\"seed\": 47,",
+            "\"seed\": 47, \"progress\": {\"slices\": 1, \"exploit\": true, \"steal_after\": 1.5, \"credit_frac\": 0.5},",
+        );
+        let plain = run_scenario(&scenario_from(base)).unwrap();
+        let inert = run_scenario(&scenario_from(&with_inert)).unwrap();
+        assert_eq!(plain.to_string_pretty(), inert.to_string_pretty());
+    }
+
+    #[test]
+    fn progress_section_streams_slices_and_reports_metrics() {
+        let src = r#"{
+            "name": "progress-run",
+            "seed": 61,
+            "workers": 0,
+            "straggler": {"p": 0.4, "slow_min": 2.5, "slow_max": 4.0},
+            "progress": {"slices": 8, "exploit": true, "steal_after": 1.2, "credit_frac": 0.9},
+            "jobs": [
+                {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 8000},
+                {"scheme": "uncoded", "s_a": 4, "s_b": 4, "dims": 8000, "arrival": 500}
+            ]
+        }"#;
+        let sc = scenario_from(src);
+        assert_eq!(sc.progress.unwrap().slices, 8);
+        let a = run_scenario(&sc).unwrap();
+        let b = run_scenario(&sc).unwrap();
+        assert_eq!(
+            a.to_string_pretty(),
+            b.to_string_pretty(),
+            "progress runs must be bit-identical"
+        );
+        let jobs = a.get("runs").unwrap().as_arr().unwrap()[0]
+            .get("jobs")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        // Both jobs stream slices; only the local-product job may credit
+        // or exploit (uncoded has no partial-credit capability, but the
+        // observe-only stream still counts arrivals).
+        for job in jobs {
+            let p = job.get("progress").expect("progress block");
+            assert!(p.get("slices_arrived").unwrap().as_u64().unwrap() > 0);
+        }
+        assert_eq!(jobs[0].get("decode_ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_bad_progress_sections() {
+        let wrap = |frag: &str| {
+            format!(
+                r#"{{"name": "x", "seed": 1, {frag}
+                    "jobs": [{{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}}]}}"#
+            )
+        };
+        let err = parse_scenario(&parse(&wrap(r#""progress": {"slice": 4},"#)).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown progress key 'slice'"), "{err}");
+        for bad in [
+            r#""progress": {"slices": 0},"#,
+            r#""progress": {"slices": "four"},"#,
+            r#""progress": {"steal_after": -1.0},"#,
+            r#""progress": {"credit_frac": 0.0},"#,
+            r#""progress": {"credit_frac": 1.5},"#,
+            r#""progress": 8,"#,
+        ] {
+            assert!(
+                parse_scenario(&parse(&wrap(bad)).unwrap()).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+        // Job-level override replaces the scenario default wholesale.
+        let sc = scenario_from(&wrap(
+            r#""progress": {"slices": 6, "exploit": true},"#,
+        ));
+        assert_eq!(sc.progress.unwrap().slices, 6);
+        assert!(sc.jobs[0].progress.is_none());
     }
 
     #[test]

@@ -128,6 +128,22 @@ impl WorkProfile {
         }
     }
 
+    /// The uncompleted remainder of this profile: every dimension scaled
+    /// by `frac` (work stealing / retry-as-remainder under progress
+    /// exploitation). Per-op counts are kept at ≥ 1 so a remainder still
+    /// pays its invoke/IO constants; `frac` is clamped to `[0, 1]`.
+    pub fn scaled(&self, frac: f64) -> WorkProfile {
+        let frac = frac.clamp(0.0, 1.0);
+        let scale_u = |v: u64| -> u64 { (v as f64 * frac).ceil() as u64 };
+        WorkProfile {
+            bytes_read: scale_u(self.bytes_read),
+            read_ops: scale_u(self.read_ops).max(1),
+            flops: self.flops * frac,
+            bytes_written: scale_u(self.bytes_written),
+            write_ops: scale_u(self.write_ops).max(1),
+        }
+    }
+
     /// Profile of a parity-encode task: read `l` blocks of `rows×cols`,
     /// sum them, write one block. Summing `l` blocks costs `l − 1` block
     /// additions — zero for the degenerate `l ≤ 1` copy-through cases

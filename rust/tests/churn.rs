@@ -8,8 +8,9 @@
 //!
 //! - every logical task either lands in `arrival_order` exactly once or
 //!   is recorded as exhausted — never both, never neither;
-//! - `deaths == retries + exhausted` under wait-all (each failed attempt
-//!   is either re-dispatched or a permanent loss);
+//! - `deaths == retries + exhausted + absorbed` (each failed attempt is
+//!   re-dispatched, a permanent loss, or absorbed by a live twin attempt
+//!   — speculative relaunch or stolen remainder);
 //! - re-dispatches never exceed `max_retries` per task;
 //! - the phase degrades if and only if some task was permanently lost;
 //! - the whole run is bit-identical when repeated with the same seed.
@@ -88,8 +89,12 @@ fn assert_waitall_invariants(ph: &PhaseState, n: usize, fm: &FailureModel) {
         n,
         "every task completes or exhausts"
     );
-    // Each failed attempt was either re-dispatched or a permanent loss.
-    assert_eq!(ph.deaths, ph.retries + ph.exhausted);
+    // Each failed attempt was re-dispatched, a permanent loss, or (under
+    // twinned execution) absorbed by the surviving attempt. Wait-all
+    // never twins, so `absorbed` must stay zero here — asserting the
+    // three-way split keeps the stronger claim visible.
+    assert_eq!(ph.deaths, ph.retries + ph.exhausted + ph.absorbed);
+    assert_eq!(ph.absorbed, 0, "wait-all has no twin to absorb a death");
     // The retry budget is a hard bound.
     assert!(ph.retries <= n * fm.max_retries as usize);
     // Every attempt (primary + retries) drew exactly one worker class.
@@ -167,6 +172,37 @@ fn wait_k_churn_finishes_or_degrades_across_seeds() {
             assert_eq!(ph.arrival_order().len(), k, "seed {seed}");
         }
     }
+}
+
+#[test]
+fn speculative_churn_twin_absorbed_deaths_keep_books_balanced() {
+    // Regression: a death on one of a task's twin attempts while the
+    // other is still running needs no re-dispatch — it used to vanish
+    // from the books entirely, breaking deaths == retries + exhausted.
+    // With a dedicated `absorbed` counter the three-way split is exact
+    // under speculative relaunch at heavy churn.
+    let fm = churn(0.5, 1);
+    let mut absorbed_total = 0usize;
+    for seed in 300..330u64 {
+        let (ph, _) = run_churn_phase(
+            seed,
+            48,
+            Pool::Workers(12),
+            &fm,
+            Termination::Speculative { wait_frac: 0.6 },
+        );
+        assert_eq!(
+            ph.deaths,
+            ph.retries + ph.exhausted + ph.absorbed,
+            "seed {seed}: every death must be a retry, a loss, or absorbed"
+        );
+        // The retry budget still binds each logical task.
+        assert!(ph.retries <= 48 * fm.max_retries as usize, "seed {seed}");
+        absorbed_total += ph.absorbed;
+    }
+    // At death_p = 0.5 with a 60%-quantile speculative trigger, some
+    // relaunched task must lose a twin mid-flight across 30 seeds.
+    assert!(absorbed_total > 0, "expected twin-absorbed deaths at this churn rate");
 }
 
 #[test]

@@ -1,0 +1,213 @@
+//! Progress-event streaming properties over the scenario harness.
+//!
+//! Three contracts (DESIGN.md §Progress events):
+//! 1. **Draw-order**: a scenario without a `"progress"` section is
+//!    byte-identical to the same scenario with an inert one injected —
+//!    slicing derives boundaries from already-sampled durations and the
+//!    reactions draw nothing unless they fire, so the feature is
+//!    invisible until switched on. Run over *every* checked-in scenario.
+//! 2. **Determinism**: progress-enabled runs are bit-identical across
+//!    reruns and across threads (the golden suite already pins rerun
+//!    determinism; here the same document races on spawned threads).
+//! 3. **Exploitation**: at identical redundancy and an identical seed,
+//!    the work-exploiting run's compute makespan is never worse than the
+//!    discard baseline's — stolen remainders carry strictly less work,
+//!    and partial credit can only move the earliest-decodable cutoff
+//!    earlier. This is the paired-seed head-to-head the
+//!    `straggler-exploit` golden pins structurally.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use slec::platform::event::ProgressCfg;
+use slec::platform::scenario::{parse_scenario, run_scenario, Scenario};
+use slec::util::json::{self, Json};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+fn scenario_files() -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = fs::read_dir(scenarios_dir())
+        .expect("rust/scenarios must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_file() && p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    files.sort();
+    assert!(!files.is_empty(), "no scenarios found");
+    files
+}
+
+fn load(path: &Path) -> Scenario {
+    let doc = json::load_file(path)
+        .unwrap_or_else(|e| panic!("loading {}: {e}", path.display()));
+    parse_scenario(&doc).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+/// Contract 1: every progress-free scenario in the suite stays byte
+/// identical when an inert `"progress"` section is injected, and its
+/// reports carry no `progress` block.
+#[test]
+fn progress_free_scenarios_are_untouched_by_an_inert_section() {
+    let mut covered = 0;
+    for path in scenario_files() {
+        let sc = load(&path);
+        let progress_free =
+            sc.progress.is_none() && sc.jobs.iter().all(|j| j.progress.is_none());
+        if !progress_free {
+            continue;
+        }
+        covered += 1;
+        let plain = run_scenario(&sc).unwrap().to_string_pretty();
+        let mut inert = sc.clone();
+        inert.progress = Some(ProgressCfg {
+            slices: 1,
+            exploit: true,
+            steal_after: 1.5,
+            credit_frac: 0.5,
+        });
+        let with_inert = run_scenario(&inert).unwrap().to_string_pretty();
+        assert_eq!(
+            plain,
+            with_inert,
+            "{}: inert progress section must be invisible",
+            path.display()
+        );
+        assert!(
+            !plain.contains("\"slices_arrived\""),
+            "{}: progress-free run must not emit progress metrics",
+            path.display()
+        );
+    }
+    assert!(covered >= 9, "expected ≥ 9 progress-free scenarios, found {covered}");
+}
+
+/// Contract 2: the progress-enabled scenario is bit-identical across
+/// reruns and across concurrently spawned threads.
+#[test]
+fn progress_runs_are_bit_identical_across_threads() {
+    let path = scenarios_dir().join("straggler-exploit.json");
+    let sc = load(&path);
+    assert!(sc.progress.is_some(), "straggler-exploit must enable progress");
+    let reference = run_scenario(&sc).unwrap().to_string_pretty();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let sc = sc.clone();
+            std::thread::spawn(move || run_scenario(&sc).unwrap().to_string_pretty())
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().expect("runner thread"), reference);
+    }
+}
+
+fn exploit_doc(seed: u64, exploit: bool) -> String {
+    // One local-product job at index 0: both variants fork the same
+    // per-job stream off the same seed, so primary samples are identical
+    // and steals fire at identical instants — the only difference is the
+    // work a stolen remainder carries.
+    format!(
+        r#"{{
+            "name": "paired",
+            "seed": {seed},
+            "workers": 0,
+            "straggler": {{"p": 0.5, "slow_min": 2.5, "slow_max": 4.0}},
+            "progress": {{"slices": 8, "exploit": {exploit}, "steal_after": 0.8,
+                          "credit_frac": {credit}}},
+            "jobs": [
+                {{"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 8000}}
+            ]
+        }}"#,
+        credit = if exploit { 0.85 } else { 1.0 },
+    )
+}
+
+fn comp_secs(run: &Json) -> f64 {
+    run.get("runs").unwrap().as_arr().unwrap()[0]
+        .get("jobs")
+        .unwrap()
+        .as_arr()
+        .unwrap()[0]
+        .get("comp")
+        .unwrap()
+        .get("virtual_secs")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+}
+
+fn progress_u64(run: &Json, key: &str) -> u64 {
+    run.get("runs").unwrap().as_arr().unwrap()[0]
+        .get("jobs")
+        .unwrap()
+        .as_arr()
+        .unwrap()[0]
+        .get("progress")
+        .expect("progress block")
+        .get(key)
+        .unwrap()
+        .as_u64()
+        .unwrap()
+}
+
+fn progress_f64(run: &Json, key: &str) -> f64 {
+    run.get("runs").unwrap().as_arr().unwrap()[0]
+        .get("jobs")
+        .unwrap()
+        .as_arr()
+        .unwrap()[0]
+        .get("progress")
+        .expect("progress block")
+        .get(key)
+        .unwrap()
+        .as_f64()
+        .unwrap()
+}
+
+/// Contract 3: paired-seed head-to-head at identical redundancy. Both
+/// variants burn identical draws through the compute phase (primaries at
+/// launch, one resample per steal, steals fire at primary slice times),
+/// and a stolen remainder under exploitation carries a subset of the
+/// discard remainder's work — so seed by seed, the exploiting compute
+/// makespan can only be shorter or equal. The stealing/banking
+/// assertions aggregate over the sweep: whether a *particular* seed
+/// steals (or whether a stolen remainder beats its straggler) depends on
+/// when the earliest-decodable cutoff fires, but across five seeds of 36
+/// tasks with half the fleet straggling 2.5–4x, both must happen.
+#[test]
+fn exploit_is_never_slower_than_discard_at_identical_redundancy() {
+    let mut total_stolen = 0;
+    let mut total_exploited = 0.0;
+    for seed in [11u64, 12, 13, 14, 15] {
+        let exploit = run_scenario(
+            &parse_scenario(&json::parse(&exploit_doc(seed, true)).unwrap()).unwrap(),
+        )
+        .unwrap();
+        let discard = run_scenario(
+            &parse_scenario(&json::parse(&exploit_doc(seed, false)).unwrap()).unwrap(),
+        )
+        .unwrap();
+        let (te, td) = (comp_secs(&exploit), comp_secs(&discard));
+        assert!(
+            te <= td + 1e-9,
+            "seed {seed}: exploit compute makespan {te} must not exceed discard {td}"
+        );
+        assert_eq!(
+            progress_f64(&discard, "exploited_flops"),
+            0.0,
+            "seed {seed}: discard semantics must never credit partial work"
+        );
+        assert!(progress_u64(&exploit, "slices_arrived") > 0);
+        total_stolen += progress_u64(&exploit, "remainders_stolen");
+        total_exploited += progress_f64(&exploit, "exploited_flops");
+    }
+    assert!(
+        total_stolen >= 1,
+        "the seed sweep must re-dispatch at least one straggled remainder"
+    );
+    assert!(
+        total_exploited > 0.0,
+        "exploitation must bank some straggler work across the seed sweep"
+    );
+}

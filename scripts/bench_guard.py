@@ -146,6 +146,25 @@ def self_test() -> int:
     if guard(baseline, fresh) != 0:
         print("self-test FAIL: warn-only regression must not fail the guard")
         bad += 1
+    # End-to-end through the `directions` override path: a `_secs` key
+    # pinned "higher" (e.g. a budget-utilisation metric that happens to
+    # carry the suffix) must regress on a *drop* when enforced — and the
+    # identical drop must pass once the override is removed, since the
+    # suffix convention then reads it as an improved latency.
+    overridden = {
+        "tolerance": 0.5,
+        "values": {"budget_secs": 10.0},
+        "directions": {"budget_secs": "higher"},
+        "enforce": ["budget_secs"],
+    }
+    dropped = {"values": {"budget_secs": 1.0}}
+    if guard(overridden, dropped) != 1:
+        print("self-test FAIL: enforced 'higher' override must fail on a drop")
+        bad += 1
+    del overridden["directions"]
+    if guard(overridden, dropped) != 0:
+        print("self-test FAIL: without the override the suffix rules the drop fine")
+        bad += 1
     print(f"self-test: {bad} failure(s)")
     return 1 if bad else 0
 
