@@ -232,6 +232,108 @@ impl JobReport {
 pub const REPORT_HEADERS: [&str; 6] =
     ["scheme", "T_enc (s)", "T_comp (s)", "T_dec (s)", "T_total (s)", "rel_err"];
 
+/// Streaming sample accumulator with *exact* quantiles, for the golden
+/// latency pins of the coordinator service (and any other report that
+/// needs p50/p95/p99 at golden precision).
+///
+/// Samples are appended in O(1); the sorted view is built lazily on the
+/// first quantile query after an insert and cached until the next
+/// insert. Exactness matters more than memory here: goldens compare at
+/// 1e-6 tolerance, so sketch-style approximations (t-digest, HDR) would
+/// make the pinned percentiles depend on ingestion order.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+    /// Sorted copy of `samples`; rebuilt lazily, invalidated on insert.
+    sorted: Vec<f64>,
+    sum: f64,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    /// Record one sample. Non-finite values are a caller bug.
+    pub fn record(&mut self, x: f64) {
+        assert!(x.is_finite(), "latency sample must be finite, got {x}");
+        self.samples.push(x);
+        self.sorted.clear();
+        self.sum += x;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            f64::NAN
+        } else {
+            self.sum / self.samples.len() as f64
+        }
+    }
+
+    fn sorted(&mut self) -> &[f64] {
+        if self.sorted.is_empty() && !self.samples.is_empty() {
+            self.sorted = self.samples.clone();
+            self.sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        &self.sorted
+    }
+
+    /// Exact linear-interpolated quantile, `q` in `[0, 1]`; NaN when
+    /// empty. `&mut` because the sorted cache may need a rebuild.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        crate::util::stats::percentile_sorted(self.sorted(), q)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.quantile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.quantile(1.0)
+    }
+
+    /// Counts per equal-width bucket over `[lo, hi)`, with underflow
+    /// clamped into the first bucket and overflow into the last — a
+    /// fixed-shape histogram goldens can pin without knowing the range
+    /// of the data in advance.
+    pub fn bucket_counts(&self, lo: f64, hi: f64, buckets: usize) -> Vec<u64> {
+        assert!(buckets >= 1, "need at least one bucket");
+        assert!(hi > lo, "bucket range must be non-empty");
+        let mut counts = vec![0u64; buckets];
+        let width = (hi - lo) / buckets as f64;
+        for &x in &self.samples {
+            let i = (((x - lo) / width).floor() as isize).clamp(0, buckets as isize - 1);
+            counts[i as usize] += 1;
+        }
+        counts
+    }
+
+    /// The summary shape every service report uses:
+    /// `{count, mean, min, p50, p95, p99, max}`.
+    pub fn to_json(&mut self) -> Json {
+        obj()
+            .field("count", self.count())
+            .field("mean", self.mean())
+            .field("min", self.min())
+            .field("p50", self.quantile(0.50))
+            .field("p95", self.quantile(0.95))
+            .field("p99", self.quantile(0.99))
+            .field("max", self.max())
+            .build()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +409,61 @@ mod tests {
         assert_eq!(p.get("slices_arrived").unwrap().as_u64(), Some(96));
         assert_eq!(p.get("remainders_stolen").unwrap().as_u64(), Some(2));
         assert_eq!(p.get("exploited_flops").unwrap().as_f64(), Some(1.5e9));
+    }
+
+    #[test]
+    fn latency_stats_exact_quantiles() {
+        let mut s = LatencyStats::new();
+        // 1..=100 in scrambled order: exact quantiles of a known set.
+        for i in (1..=100).rev() {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+        // percentile_sorted interpolates over n-1 gaps: p50 of 1..=100
+        // is 50.5, p95 is 95.05, p99 is 99.01.
+        assert!((s.quantile(0.50) - 50.5).abs() < 1e-9);
+        assert!((s.quantile(0.95) - 95.05).abs() < 1e-9);
+        assert!((s.quantile(0.99) - 99.01).abs() < 1e-9);
+        let j = s.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(100));
+        assert!((j.get("p95").unwrap().as_f64().unwrap() - 95.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_stats_cache_invalidates_on_insert() {
+        let mut s = LatencyStats::new();
+        s.record(10.0);
+        assert_eq!(s.quantile(1.0), 10.0); // builds the sorted cache
+        s.record(2.0); // must invalidate it
+        assert_eq!(s.quantile(0.0), 2.0);
+        assert_eq!(s.quantile(1.0), 10.0);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn latency_stats_empty_is_nan() {
+        let mut s = LatencyStats::new();
+        assert!(s.is_empty());
+        assert!(s.mean().is_nan());
+        assert!(s.quantile(0.5).is_nan());
+        // NaN serializes as null — a golden wildcard, never a crash.
+        let j = s.to_json();
+        assert!(j.get("p50").unwrap().as_f64().unwrap().is_nan());
+        assert!(j.to_string_pretty().contains("\"p50\": null"));
+    }
+
+    #[test]
+    fn latency_stats_bucket_counts_clamp() {
+        let mut s = LatencyStats::new();
+        for x in [-5.0, 0.0, 1.5, 2.5, 9.9, 42.0] {
+            s.record(x);
+        }
+        // 5 buckets over [0, 10): width 2. Underflow joins bucket 0,
+        // overflow joins the last.
+        assert_eq!(s.bucket_counts(0.0, 10.0, 5), vec![3, 1, 0, 0, 2]);
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod driver;
 pub mod matmul;
 pub mod matvec;
 pub mod metrics;
+pub mod service;
 
 pub use driver::run_job;
 pub use matmul::{run_matmul, Env, EnvBuilder, MatmulJob, MatmulJobBuilder};

@@ -1,0 +1,128 @@
+//! Admission control: queue-depth backpressure and per-tenant
+//! in-flight quotas, with typed rejections so the service report can
+//! break refusals down by cause.
+
+use crate::platform::scenario::{ArrivalSpec, TenantSpec};
+
+/// Why an offered job was turned away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// The admission queue is at `arrivals.queue_depth`.
+    QueueFull,
+    /// The job's tenant is at its in-flight quota.
+    TenantQuota,
+}
+
+/// Per-run admission book-keeping. Checks are ordered: queue-depth
+/// backpressure first (it protects the coordinator itself), the
+/// tenant's quota second — so a full queue never charges a tenant's
+/// quota accounting.
+#[derive(Debug)]
+pub struct AdmissionController {
+    queue_depth: usize,
+    /// Admitted-but-unfinished jobs per tenant (queued + running).
+    load: Vec<usize>,
+    quotas: Vec<usize>,
+}
+
+impl AdmissionController {
+    pub fn new(arr: &ArrivalSpec, tenants: &[TenantSpec]) -> AdmissionController {
+        AdmissionController {
+            queue_depth: arr.queue_depth,
+            load: vec![0; tenants.len()],
+            quotas: tenants.iter().map(|t| t.quota).collect(),
+        }
+    }
+
+    /// Decide one arrival. `queued` is the current admission-queue
+    /// length; `tenant` indexes the scenario's tenants. On `Ok` the
+    /// tenant's in-flight load is charged — release it with
+    /// [`AdmissionController::release`] when the job leaves the system.
+    pub fn admit(&mut self, queued: usize, tenant: Option<usize>) -> Result<(), Rejection> {
+        if self.queue_depth > 0 && queued >= self.queue_depth {
+            return Err(Rejection::QueueFull);
+        }
+        if let Some(i) = tenant {
+            if self.quotas[i] > 0 && self.load[i] >= self.quotas[i] {
+                return Err(Rejection::TenantQuota);
+            }
+            self.load[i] += 1;
+        }
+        Ok(())
+    }
+
+    /// An admitted job finished: free its tenant's quota slot.
+    pub fn release(&mut self, tenant: Option<usize>) {
+        if let Some(i) = tenant {
+            self.load[i] -= 1;
+        }
+    }
+
+    /// Current in-flight load of one tenant.
+    pub fn load(&self, tenant: usize) -> usize {
+        self.load[tenant]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(queue_depth: usize) -> ArrivalSpec {
+        ArrivalSpec {
+            jobs: 1,
+            rate_per_s: 1.0,
+            templates: Vec::new(),
+            queue_depth,
+            max_inflight: 0,
+        }
+    }
+
+    fn tenants(quotas: &[usize]) -> Vec<TenantSpec> {
+        quotas
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| TenantSpec {
+                name: format!("t{i}"),
+                weight: 1.0,
+                quota: q,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn queue_depth_backpressure() {
+        let mut ac = AdmissionController::new(&arr(2), &[]);
+        assert_eq!(ac.admit(0, None), Ok(()));
+        assert_eq!(ac.admit(1, None), Ok(()));
+        assert_eq!(ac.admit(2, None), Err(Rejection::QueueFull));
+        // 0 = unbounded.
+        let mut open = AdmissionController::new(&arr(0), &[]);
+        assert_eq!(open.admit(10_000, None), Ok(()));
+    }
+
+    #[test]
+    fn tenant_quota_charges_and_releases() {
+        let mut ac = AdmissionController::new(&arr(0), &tenants(&[2, 0]));
+        assert_eq!(ac.admit(0, Some(0)), Ok(()));
+        assert_eq!(ac.admit(0, Some(0)), Ok(()));
+        assert_eq!(ac.admit(0, Some(0)), Err(Rejection::TenantQuota));
+        assert_eq!(ac.load(0), 2, "a rejected arrival is not charged");
+        ac.release(Some(0));
+        assert_eq!(ac.admit(0, Some(0)), Ok(()));
+        // Quota 0 = unlimited.
+        for _ in 0..100 {
+            assert_eq!(ac.admit(0, Some(1)), Ok(()));
+        }
+    }
+
+    #[test]
+    fn full_queue_outranks_quota() {
+        // Check order: with both limits breached, the rejection is
+        // QueueFull and the tenant's quota stays untouched.
+        let mut ac = AdmissionController::new(&arr(1), &tenants(&[1]));
+        assert_eq!(ac.admit(0, Some(0)), Ok(()));
+        assert_eq!(ac.admit(1, Some(0)), Err(Rejection::QueueFull));
+        assert_eq!(ac.load(0), 1);
+    }
+}

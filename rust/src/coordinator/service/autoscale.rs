@@ -1,0 +1,259 @@
+//! Pluggable fleet autoscaling for the coordinator service.
+//!
+//! Policies are pure target functions over a [`FleetObservation`]; the
+//! [`Autoscaler`] owns the mechanics every policy shares — cooldown,
+//! `[min, max]` clamping, per-decision step limiting, the fleet-size
+//! trace — and applies decisions through
+//! [`EventSim::set_capacity`]. Resizing never touches the RNG (task
+//! durations are sampled at submission), so autoscaled runs keep the
+//! same draw sequence as fixed-fleet runs and stay bit-reproducible.
+
+use crate::platform::event::EventSim;
+use crate::platform::scenario::AutoscaleSpec;
+
+/// What a policy sees at each decision point.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetObservation {
+    /// Current virtual time.
+    pub time: f64,
+    /// Workers running a task right now.
+    pub busy: usize,
+    /// Tasks submitted but waiting for a worker.
+    pub queued_tasks: usize,
+    /// Jobs admitted but not yet dispatched.
+    pub queued_jobs: usize,
+    /// Jobs currently running phases.
+    pub inflight_jobs: usize,
+    /// Stragglers per finished task so far (0 until jobs finish).
+    pub straggle_rate: f64,
+    /// Worker deaths per finished task so far.
+    pub death_rate: f64,
+}
+
+/// A fleet-sizing policy: given an observation and the current
+/// effective fleet, return the desired effective fleet. The caller
+/// clamps to `[min_workers, max_workers]` and step-limits.
+pub trait AutoscalePolicy {
+    fn name(&self) -> &'static str;
+    fn target(&self, obs: &FleetObservation, cur: usize, spec: &AutoscaleSpec) -> usize;
+}
+
+/// Grow when the dispatch backlog exceeds `scale_up_queue` tasks per
+/// worker (to the size that restores that ratio); shrink toward the
+/// live demand when busy + queued tasks fall below `scale_down_busy` of
+/// the fleet.
+pub struct QueueDepthPolicy;
+
+impl AutoscalePolicy for QueueDepthPolicy {
+    fn name(&self) -> &'static str {
+        "queue-depth"
+    }
+
+    fn target(&self, obs: &FleetObservation, cur: usize, spec: &AutoscaleSpec) -> usize {
+        let backlog = obs.queued_tasks as f64;
+        let demand = obs.busy + obs.queued_tasks;
+        if backlog > spec.scale_up_queue * cur as f64 {
+            (backlog / spec.scale_up_queue).ceil() as usize
+        } else if (demand as f64) < spec.scale_down_busy * cur as f64 {
+            demand.max(1)
+        } else {
+            cur
+        }
+    }
+}
+
+/// [`QueueDepthPolicy`] with fault awareness: growth targets are
+/// inflated by the observed straggle and death rates (headroom for
+/// re-dispatch), and the fleet refuses to shrink while workers are
+/// dying faster than 5 deaths per 100 tasks.
+pub struct FaultAwarePolicy;
+
+impl AutoscalePolicy for FaultAwarePolicy {
+    fn name(&self) -> &'static str {
+        "fault-aware"
+    }
+
+    fn target(&self, obs: &FleetObservation, cur: usize, spec: &AutoscaleSpec) -> usize {
+        let base = QueueDepthPolicy.target(obs, cur, spec);
+        if base > cur {
+            (base as f64 * (1.0 + obs.straggle_rate + obs.death_rate)).ceil() as usize
+        } else if base < cur && obs.death_rate > 0.05 {
+            cur
+        } else {
+            base
+        }
+    }
+}
+
+/// Policy names accepted by the `autoscale.policy` scenario key, in
+/// default-first order — `parse_autoscale` validates against this list
+/// so a typo fails at parse time.
+pub const POLICIES: [&str; 2] = ["queue-depth", "fault-aware"];
+
+/// Instantiate a policy by registry name.
+pub fn make_policy(name: &str) -> anyhow::Result<Box<dyn AutoscalePolicy>> {
+    match name {
+        "queue-depth" => Ok(Box::new(QueueDepthPolicy)),
+        "fault-aware" => Ok(Box::new(FaultAwarePolicy)),
+        other => anyhow::bail!(
+            "unknown autoscale policy '{other}' (known: {})",
+            POLICIES.join(", ")
+        ),
+    }
+}
+
+/// The shared scaling mechanics around a policy.
+pub struct Autoscaler {
+    spec: AutoscaleSpec,
+    policy: Box<dyn AutoscalePolicy>,
+    last_decision: f64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// `(virtual time, effective fleet size)` after every change,
+    /// seeded with the starting size at t = 0.
+    pub trace: Vec<(f64, usize)>,
+}
+
+impl Autoscaler {
+    pub fn new(spec: &AutoscaleSpec, initial: usize) -> anyhow::Result<Autoscaler> {
+        Ok(Autoscaler {
+            policy: make_policy(&spec.policy)?,
+            spec: spec.clone(),
+            last_decision: 0.0,
+            scale_ups: 0,
+            scale_downs: 0,
+            trace: vec![(0.0, initial)],
+        })
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// One decision point. No-op inside the cooldown window or when the
+    /// (clamped, step-limited) target equals the current fleet.
+    /// Applies the change as *effective* capacity: injected worker
+    /// losses are replaced on top of the target, so a death does not
+    /// silently eat a scaling decision.
+    pub fn tick(&mut self, sim: &mut EventSim, obs: &FleetObservation) {
+        if obs.time - self.last_decision < self.spec.cooldown_s {
+            return;
+        }
+        let cur = sim
+            .effective_capacity()
+            .expect("autoscale requires a bounded pool");
+        let clamped = self
+            .policy
+            .target(obs, cur, &self.spec)
+            .clamp(self.spec.min_workers, self.spec.max_workers);
+        let next = if clamped > cur {
+            cur + (clamped - cur).min(self.spec.step)
+        } else {
+            cur - (cur - clamped).min(self.spec.step)
+        };
+        if next == cur {
+            return;
+        }
+        self.last_decision = obs.time;
+        if next > cur {
+            self.scale_ups += 1;
+        } else {
+            self.scale_downs += 1;
+        }
+        sim.set_capacity(next + sim.lost_workers());
+        self.trace.push((obs.time, next));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::event::Pool;
+
+    fn spec() -> AutoscaleSpec {
+        AutoscaleSpec {
+            policy: "queue-depth".into(),
+            min_workers: 2,
+            max_workers: 32,
+            step: 4,
+            cooldown_s: 10.0,
+            scale_up_queue: 2.0,
+            scale_down_busy: 0.5,
+        }
+    }
+
+    fn obs(time: f64, busy: usize, queued_tasks: usize) -> FleetObservation {
+        FleetObservation {
+            time,
+            busy,
+            queued_tasks,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn queue_depth_policy_targets() {
+        let s = spec();
+        let p = QueueDepthPolicy;
+        // Backlog of 20 over 4 workers at 2-per-worker → 10 workers.
+        assert_eq!(p.target(&obs(0.0, 4, 20), 4, &s), 10);
+        // Backlog within threshold, demand healthy → hold.
+        assert_eq!(p.target(&obs(0.0, 4, 6), 4, &s), 4);
+        // Demand (1) below half the fleet → shrink to demand.
+        assert_eq!(p.target(&obs(0.0, 1, 0), 8, &s), 1);
+        // Idle fleet never targets zero.
+        assert_eq!(p.target(&obs(0.0, 0, 0), 8, &s), 1);
+    }
+
+    #[test]
+    fn fault_aware_inflates_growth_and_blocks_shrink_under_churn() {
+        let s = spec();
+        let p = FaultAwarePolicy;
+        let mut o = obs(0.0, 4, 20);
+        o.straggle_rate = 0.2;
+        o.death_rate = 0.3;
+        // queue-depth says 10; inflated by 1.5 → 15.
+        assert_eq!(p.target(&o, 4, &s), 15);
+        // Shrink blocked while deaths are hot…
+        let mut idle = obs(0.0, 1, 0);
+        idle.death_rate = 0.2;
+        assert_eq!(p.target(&idle, 8, &s), 8);
+        // …and allowed once the fleet is calm.
+        idle.death_rate = 0.0;
+        assert_eq!(p.target(&idle, 8, &s), 1);
+    }
+
+    #[test]
+    fn autoscaler_clamps_steps_and_cools_down() {
+        let s = spec();
+        let mut sim = EventSim::new(Pool::Workers(4));
+        let mut az = Autoscaler::new(&s, 4).unwrap();
+        // Huge backlog: target clamps to 32 but the step caps one
+        // decision at +4.
+        az.tick(&mut sim, &obs(10.0, 4, 1000));
+        assert_eq!(sim.capacity(), Some(8));
+        // Inside the cooldown window: no second decision.
+        az.tick(&mut sim, &obs(15.0, 8, 1000));
+        assert_eq!(sim.capacity(), Some(8));
+        // Past the cooldown: next step fires.
+        az.tick(&mut sim, &obs(21.0, 8, 1000));
+        assert_eq!(sim.capacity(), Some(12));
+        assert_eq!(az.scale_ups, 2);
+        assert_eq!(az.scale_downs, 0);
+        assert_eq!(az.trace, vec![(0.0, 4), (10.0, 8), (21.0, 12)]);
+        // Idle fleet shrinks, clamped at min_workers by enough ticks.
+        let mut t = 31.0;
+        while sim.capacity() != Some(2) && t < 200.0 {
+            az.tick(&mut sim, &obs(t, 0, 0));
+            t += 10.0;
+        }
+        assert_eq!(sim.capacity(), Some(2));
+        assert!(az.scale_downs >= 2);
+    }
+
+    #[test]
+    fn unknown_policy_is_an_error_naming_the_registry() {
+        let err = make_policy("queue-dpeth").unwrap_err().to_string();
+        assert!(err.contains("queue-depth, fault-aware"), "{err}");
+    }
+}

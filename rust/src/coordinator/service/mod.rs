@@ -1,0 +1,459 @@
+//! The coordinator service: a long-lived, multi-tenant job queue over
+//! one shared worker fleet.
+//!
+//! Where `run_scenario`'s historical path executes a fixed `jobs` list,
+//! the service accepts an *open-loop* stream of [`Offered`] jobs (a
+//! Poisson arrival process over weighted templates, see
+//! [`offered_jobs`]),
+//! pushes each through admission control ([`AdmissionController`]:
+//! queue-depth backpressure, then per-tenant in-flight quotas),
+//! dispatches admitted jobs best-priority-first into a bounded number
+//! of concurrent in-flight slots, and optionally drives a pluggable
+//! [`AutoscalePolicy`] that resizes the shared fleet from the observed
+//! dispatch backlog and fault rates.
+//!
+//! Admitted jobs run the *identical* `JobRun` pipeline state machine
+//! as explicit-`jobs` scenarios — encode → compute → decode →
+//! recompute — over one shared [`EventSim`]. The RNG contract also
+//! carries over unchanged (DESIGN.md §Coordinator service): per-job
+//! simulation streams are forked from `Pcg64::new(seed)` in arrival
+//! order before anything runs, task durations are sampled at
+//! submission, and the arrival process draws from a separately salted
+//! stream — so every job's timeline is a pure function of `(seed,
+//! arrival seq)`, and admission outcomes, pool size and autoscaling can
+//! never shift a draw.
+
+mod admission;
+mod arrivals;
+mod autoscale;
+
+pub use admission::{AdmissionController, Rejection};
+pub use arrivals::{offered_jobs, Offered};
+pub use autoscale::{
+    make_policy, AutoscalePolicy, Autoscaler, FaultAwarePolicy, FleetObservation,
+    QueueDepthPolicy, POLICIES,
+};
+
+use std::collections::{BTreeMap, BinaryHeap};
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::platform::event::{EventSim, Pool};
+use crate::platform::scenario::{ArrivalSpec, JobRun, JobSpec, Scenario};
+use crate::platform::straggler::{SlowdownDist, StragglerModel, StragglerParams, WorkerRates};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg64;
+
+/// Run a service scenario (one with an `arrivals` section): one service
+/// lifetime per `workers` sweep entry, summarized in the same
+/// golden-comparable document shape as `run_scenario`.
+pub fn run_service(sc: &Scenario) -> anyhow::Result<Json> {
+    let arr = sc
+        .arrivals
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("run_service needs an 'arrivals' section"))?;
+    let model = StragglerModel::new(sc.straggler, sc.rates);
+    let offered = offered_jobs(sc, arr);
+    let mut runs = Vec::with_capacity(sc.workers.len());
+    for &workers in &sc.workers {
+        runs.push(run_one(sc, arr, &offered, workers, &model)?);
+    }
+    Ok(obj()
+        .field("scenario", sc.name.as_str())
+        .field("seed", sc.seed)
+        .field(
+            "straggler",
+            obj()
+                .field(
+                    "dist",
+                    match sc.straggler.slow_dist {
+                        SlowdownDist::LogNormal => "lognormal",
+                        SlowdownDist::Pareto { .. } => "pareto",
+                    },
+                )
+                .field("p", sc.straggler.p)
+                .build(),
+        )
+        .field(
+            "arrivals",
+            obj()
+                .field("jobs", arr.jobs)
+                .field("rate_per_s", arr.rate_per_s)
+                .build(),
+        )
+        .field("runs", Json::Arr(runs))
+        .build())
+}
+
+/// Run one ad-hoc job through the service's single-job path (the
+/// `slec submit` backend): a fresh bounded fleet, the default straggler
+/// calibration unless overridden, and the standard report document.
+pub fn submit_one(
+    spec: &JobSpec,
+    workers: usize,
+    seed: u64,
+    straggler: StragglerParams,
+) -> anyhow::Result<Json> {
+    let model = StragglerModel::new(straggler, WorkerRates::default());
+    let mut sim = EventSim::new(Pool::from_option(Some(workers)));
+    let mut root = Pcg64::new(seed);
+    let mut run = JobRun::new(0, spec.clone(), None, None, None, root.fork(0))?;
+    run.start(&mut sim, &model);
+    while let Some(c) = sim.step() {
+        run.on_completion(&mut sim, &model, &c);
+    }
+    anyhow::ensure!(run.done, "submitted job did not run to completion");
+    let mut doc = run.report.to_json();
+    doc.set("finish", Json::from(run.finish));
+    Ok(doc)
+}
+
+/// Admission-queue entry: max-heap by priority, FIFO within a priority
+/// level (smaller arrival seq pops first).
+#[derive(PartialEq, Eq)]
+struct Pending {
+    priority: u32,
+    seq: usize,
+}
+
+impl Ord for Pending {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.priority.cmp(&o.priority).then(o.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+#[derive(Default, Clone)]
+struct TenantCounters {
+    offered: u64,
+    admitted: u64,
+    rejected_queue: u64,
+    rejected_quota: u64,
+}
+
+#[derive(Default)]
+struct FaultAgg {
+    deaths: u64,
+    retries: u64,
+    exhausted: u64,
+    absorbed: u64,
+    degraded_jobs: u64,
+    any: bool,
+}
+
+struct Counters {
+    admitted: u64,
+    rejected_queue: u64,
+    rejected_quota: u64,
+    tenant: Vec<TenantCounters>,
+    schemes: BTreeMap<String, u64>,
+    latency: LatencyStats,
+    queue_wait: LatencyStats,
+    service_time: LatencyStats,
+    deadline_offered: u64,
+    deadline_met: u64,
+    total_tasks: u64,
+    total_stragglers: u64,
+    faults: FaultAgg,
+}
+
+impl Counters {
+    fn new(tenants: usize) -> Counters {
+        Counters {
+            admitted: 0,
+            rejected_queue: 0,
+            rejected_quota: 0,
+            tenant: vec![TenantCounters::default(); tenants],
+            schemes: BTreeMap::new(),
+            latency: LatencyStats::new(),
+            queue_wait: LatencyStats::new(),
+            service_time: LatencyStats::new(),
+            deadline_offered: 0,
+            deadline_met: 0,
+            total_tasks: 0,
+            total_stragglers: 0,
+            faults: FaultAgg::default(),
+        }
+    }
+
+    fn rate(num: u64, den: u64) -> f64 {
+        if den == 0 {
+            0.0
+        } else {
+            num as f64 / den as f64
+        }
+    }
+
+    fn straggle_rate(&self) -> f64 {
+        Counters::rate(self.total_stragglers, self.total_tasks)
+    }
+
+    fn death_rate(&self) -> f64 {
+        Counters::rate(self.faults.deaths, self.total_tasks)
+    }
+}
+
+/// Fold one finished job into the run counters and free its admission
+/// slot.
+fn finalize_job(
+    run: &JobRun,
+    o: &Offered,
+    started: f64,
+    c: &mut Counters,
+    admission: &mut AdmissionController,
+) {
+    admission.release(o.tenant);
+    let latency = run.finish - o.arrival;
+    c.latency.record(latency);
+    c.service_time.record(run.finish - started);
+    *c.schemes.entry(run.report.scheme.clone()).or_insert(0) += 1;
+    if let Some(d) = run.spec.deadline_s {
+        c.deadline_offered += 1;
+        if latency <= d {
+            c.deadline_met += 1;
+        }
+    }
+    let r = &run.report;
+    c.total_tasks += (r.enc.tasks + r.comp.tasks + r.dec.tasks) as u64;
+    c.total_stragglers += (r.enc.stragglers + r.comp.stragglers + r.dec.stragglers) as u64;
+    if let Some(f) = &r.faults {
+        c.faults.any = true;
+        c.faults.deaths += f.deaths;
+        c.faults.retries += f.retries;
+        c.faults.exhausted += f.exhausted;
+        c.faults.absorbed += f.absorbed;
+        c.faults.degraded_jobs += f.degraded as u64;
+    }
+}
+
+/// One service lifetime over one initial fleet size.
+fn run_one(
+    sc: &Scenario,
+    arr: &ArrivalSpec,
+    offered: &[Offered],
+    workers: usize,
+    model: &StragglerModel,
+) -> anyhow::Result<Json> {
+    let mut sim = EventSim::new(Pool::from_option(Some(workers)));
+    // Per-job sim streams, forked in arrival order before anything runs
+    // — the explicit-`jobs` runner's rule with "job index" read as
+    // "arrival seq". Rejected jobs' streams are forked and discarded,
+    // so admission outcomes cannot shift any other job's draws.
+    let mut root = Pcg64::new(sc.seed);
+    let mut streams: Vec<Option<Pcg64>> =
+        (0..offered.len()).map(|i| Some(root.fork(i as u64))).collect();
+    let mut admission = AdmissionController::new(arr, &sc.tenants);
+    let mut autoscaler = match &sc.autoscale {
+        Some(a) => Some(Autoscaler::new(a, workers)?),
+        None => None,
+    };
+    let mut jobs: Vec<Option<JobRun>> = Vec::new();
+    jobs.resize_with(offered.len(), || None);
+    let mut finalized = vec![false; offered.len()];
+    let mut started = vec![f64::NAN; offered.len()];
+    let mut pending: BinaryHeap<Pending> = BinaryHeap::new();
+    let mut inflight = 0usize;
+    let mut next_arrival = 0usize;
+    let mut c = Counters::new(sc.tenants.len());
+
+    loop {
+        // Dispatch admitted jobs into free in-flight slots, best
+        // priority first.
+        while (arr.max_inflight == 0 || inflight < arr.max_inflight) && !pending.is_empty() {
+            let seq = pending.pop().expect("checked non-empty").seq;
+            let o = &offered[seq];
+            let rng = streams[seq].take().expect("admitted job keeps its stream");
+            let mut run = JobRun::new(
+                seq,
+                o.spec.clone(),
+                sc.storage.as_ref(),
+                sc.failures.as_ref(),
+                sc.progress.as_ref(),
+                rng,
+            )?;
+            started[seq] = sim.now();
+            c.queue_wait.record(sim.now() - o.arrival);
+            inflight += 1;
+            run.start(&mut sim, model);
+            let done = run.done;
+            jobs[seq] = Some(run);
+            if done {
+                finalized[seq] = true;
+                inflight -= 1;
+                finalize_job(
+                    jobs[seq].as_ref().expect("just stored"),
+                    o,
+                    started[seq],
+                    &mut c,
+                    &mut admission,
+                );
+            }
+        }
+
+        // Next cause: arrival or completion, arrival-first on ties —
+        // the same merge rule as the explicit-`jobs` runner.
+        let next_ev = sim.peek_time();
+        let next_arr = (next_arrival < offered.len()).then(|| offered[next_arrival].arrival);
+        match (next_arr, next_ev) {
+            (Some(a), e) if e.is_none_or(|e| a <= e) => {
+                let o = &offered[next_arrival];
+                next_arrival += 1;
+                sim.advance_to(a);
+                if let Some(i) = o.tenant {
+                    c.tenant[i].offered += 1;
+                }
+                match admission.admit(pending.len(), o.tenant) {
+                    Ok(()) => {
+                        c.admitted += 1;
+                        if let Some(i) = o.tenant {
+                            c.tenant[i].admitted += 1;
+                        }
+                        pending.push(Pending {
+                            priority: o.spec.priority,
+                            seq: o.seq,
+                        });
+                    }
+                    Err(Rejection::QueueFull) => {
+                        c.rejected_queue += 1;
+                        if let Some(i) = o.tenant {
+                            c.tenant[i].rejected_queue += 1;
+                        }
+                        streams[o.seq] = None;
+                    }
+                    Err(Rejection::TenantQuota) => {
+                        c.rejected_quota += 1;
+                        if let Some(i) = o.tenant {
+                            c.tenant[i].rejected_quota += 1;
+                        }
+                        streams[o.seq] = None;
+                    }
+                }
+            }
+            (_, Some(_)) => {
+                let comp = sim.step().expect("peeked event must pop");
+                let j = comp.job;
+                let run = jobs[j].as_mut().expect("completion routed to a live job");
+                run.on_completion(&mut sim, model, &comp);
+                if run.done && !finalized[j] {
+                    finalized[j] = true;
+                    inflight -= 1;
+                    finalize_job(run, &offered[j], started[j], &mut c, &mut admission);
+                }
+            }
+            (None, None) => break,
+        }
+
+        if let Some(az) = &mut autoscaler {
+            let observation = FleetObservation {
+                time: sim.now(),
+                busy: sim.busy_workers(),
+                queued_tasks: sim.queued_tasks(),
+                queued_jobs: pending.len(),
+                inflight_jobs: inflight,
+                straggle_rate: c.straggle_rate(),
+                death_rate: c.death_rate(),
+            };
+            az.tick(&mut sim, &observation);
+        }
+    }
+
+    anyhow::ensure!(
+        pending.is_empty() && inflight == 0,
+        "service '{}' stranded {} queued and {} running job(s)",
+        sc.name,
+        pending.len(),
+        inflight
+    );
+
+    let offered_total = offered.len() as u64;
+    debug_assert_eq!(
+        offered_total,
+        c.admitted + c.rejected_queue + c.rejected_quota
+    );
+    let mut run = obj()
+        .field("workers", workers)
+        .field("offered", offered_total)
+        .field("admitted", c.admitted)
+        .field(
+            "rejected",
+            obj()
+                .field("queue_full", c.rejected_queue)
+                .field("tenant_quota", c.rejected_quota)
+                .build(),
+        )
+        .build();
+    if !sc.tenants.is_empty() {
+        let mut tenants = obj().build();
+        for (t, tc) in sc.tenants.iter().zip(&c.tenant) {
+            tenants.set(
+                &t.name,
+                obj()
+                    .field("offered", tc.offered)
+                    .field("admitted", tc.admitted)
+                    .field("rejected_queue", tc.rejected_queue)
+                    .field("rejected_quota", tc.rejected_quota)
+                    .build(),
+            );
+        }
+        run.set("tenants", tenants);
+    }
+    let mut schemes = obj().build();
+    for (name, count) in &c.schemes {
+        schemes.set(name, Json::from(*count));
+    }
+    run.set("schemes", schemes);
+    run.set("latency", c.latency.to_json());
+    run.set("queue_wait", c.queue_wait.to_json());
+    run.set("service", c.service_time.to_json());
+    if c.deadline_offered > 0 {
+        run.set(
+            "deadlines",
+            obj()
+                .field("offered", c.deadline_offered)
+                .field("met", c.deadline_met)
+                .field("missed", c.deadline_offered - c.deadline_met)
+                .build(),
+        );
+    }
+    if let Some(az) = &autoscaler {
+        let spec = sc.autoscale.as_ref().expect("autoscaler implies spec");
+        run.set(
+            "fleet",
+            obj()
+                .field("policy", az.policy_name())
+                .field("min_workers", spec.min_workers)
+                .field("max_workers", spec.max_workers)
+                .field("final", sim.effective_capacity().unwrap_or(0))
+                .field("scale_ups", az.scale_ups)
+                .field("scale_downs", az.scale_downs)
+                .field(
+                    "trace",
+                    Json::Arr(
+                        az.trace
+                            .iter()
+                            .map(|&(t, n)| Json::Arr(vec![Json::from(t), Json::from(n)]))
+                            .collect(),
+                    ),
+                )
+                .build(),
+        );
+    }
+    if c.faults.any {
+        run.set(
+            "faults",
+            obj()
+                .field("deaths", c.faults.deaths)
+                .field("retries", c.faults.retries)
+                .field("exhausted", c.faults.exhausted)
+                .field("absorbed", c.faults.absorbed)
+                .field("degraded_jobs", c.faults.degraded_jobs)
+                .field("lost_workers", sim.lost_workers())
+                .build(),
+        );
+    }
+    Ok(run)
+}

@@ -4,16 +4,23 @@
 //!   figures <id|all>     regenerate paper figures/tables into results/
 //!   run                  run one coded matmul job and print its report
 //!   mc                   Monte-Carlo validation of Theorems 1–2
+//!   serve <scenario>     run a service scenario (open-loop arrivals)
+//!   submit <job.json>    run one ad-hoc job through the service path
+//!   scenarios            list the scenario suite with descriptions
 //!   inspect-artifacts    list the AOT artifact manifest
 //!   help                 this text
 
 use slec::codes::Scheme;
 use slec::config::Config;
 use slec::coordinator::matmul::{run_matmul, MatmulJob};
+use slec::coordinator::service::submit_one;
 use slec::coordinator::REPORT_HEADERS;
 use slec::figures::{self, RunScale};
 use slec::linalg::Matrix;
+use slec::platform::scenario::{parse_scenario, parse_service_job, run_scenario};
+use slec::platform::straggler::StragglerParams;
 use slec::util::cli::{Args, OptSpec};
+use slec::util::json;
 use slec::util::rng::Pcg64;
 use slec::util::stats::render_table;
 
@@ -84,6 +91,9 @@ fn real_main() -> anyhow::Result<()> {
         "figures" => cmd_figures(&rest),
         "run" => cmd_run(&rest),
         "mc" => cmd_mc(&rest),
+        "serve" => cmd_serve(&rest),
+        "submit" => cmd_submit(&rest),
+        "scenarios" => cmd_scenarios(&rest),
         "inspect-artifacts" => cmd_inspect(&rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -104,6 +114,9 @@ fn print_help() {
            figures <id|all>   reproduce paper figures ({}, fig12) into results/\n\
            run                one coded matmul job, printed report\n\
            mc                 Monte-Carlo validation of Theorems 1 and 2\n\
+           serve <scenario>   run a service scenario (open-loop arrivals, admission, autoscale)\n\
+           submit <job.json>  run one ad-hoc job through the service path, printed report\n\
+           scenarios          list the scenario suite with descriptions\n\
            inspect-artifacts  list the AOT artifact manifest\n\n\
          Common options: --config <file> --set k=v[,k=v] --backend host|pjrt --seed N --full",
         figures::ALL.join(", ")
@@ -204,6 +217,118 @@ fn cmd_mc(rest: &[String]) -> anyhow::Result<()> {
             slec::codes::theory::thm1_bound_paper(x as f64, n, p, l),
         );
     }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "seed", help: "override the scenario seed", takes_value: true, default: None },
+        OptSpec { name: "out", help: "write the service report JSON here (default: stdout)", takes_value: true, default: None },
+        OptSpec { name: "quick", help: "cap the arrival process at 150 jobs (CI smoke)", takes_value: false, default: None },
+    ];
+    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+    let path = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("serve needs a scenario file: slec serve <scenario.json>")
+    })?;
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read scenario '{path}': {e}"))?;
+    let mut sc = parse_scenario(&json::parse(&src)?)?;
+    anyhow::ensure!(
+        sc.arrivals.is_some(),
+        "'{path}' has no 'arrivals' section — `serve` runs service scenarios; \
+         explicit-jobs scenarios run through the golden suite"
+    );
+    if let Some(seed) = args.get_u64("seed").map_err(anyhow::Error::msg)? {
+        sc.seed = seed;
+    }
+    if args.flag("quick") {
+        if let Some(arr) = sc.arrivals.as_mut() {
+            arr.jobs = arr.jobs.min(150);
+        }
+    }
+    let report = run_scenario(&sc)?;
+    let text = report.to_string_pretty();
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, text + "\n")?;
+            eprintln!("wrote {out}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_submit(rest: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "workers", help: "fleet size for this job", takes_value: true, default: Some("16") },
+        OptSpec { name: "seed", help: "RNG seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "p", help: "straggle probability override", takes_value: true, default: None },
+    ];
+    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+    let input = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!(
+            "submit needs a job spec: slec submit <job.json> (a file path or inline JSON)"
+        )
+    })?;
+    // A file path if one exists, inline JSON otherwise.
+    let src = match std::fs::read_to_string(input) {
+        Ok(s) => s,
+        Err(_) if input.trim_start().starts_with('{') => input.clone(),
+        Err(e) => anyhow::bail!("cannot read job spec '{input}': {e}"),
+    };
+    let spec = parse_service_job(&json::parse(&src)?)?;
+    let workers = args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap();
+    anyhow::ensure!(workers > 0, "--workers must be ≥ 1");
+    let seed = args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap();
+    let mut straggler = StragglerParams::default();
+    if let Some(p) = args.get_f64("p").map_err(anyhow::Error::msg)? {
+        straggler.p = p;
+    }
+    let report = submit_one(&spec, workers, seed, straggler)?;
+    println!("{}", report.to_string_pretty());
+    Ok(())
+}
+
+fn cmd_scenarios(rest: &[String]) -> anyhow::Result<()> {
+    let specs = vec![OptSpec {
+        name: "dir",
+        help: "scenario directory (default: rust/scenarios or scenarios)",
+        takes_value: true,
+        default: None,
+    }];
+    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+    let dir = match args.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => ["rust/scenarios", "scenarios"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no scenario directory found (tried rust/scenarios, scenarios); use --dir")
+            })?,
+    };
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    anyhow::ensure!(!files.is_empty(), "no *.json scenarios in {}", dir.display());
+    let mut rows = Vec::with_capacity(files.len());
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let sc = parse_scenario(&json::parse(&src)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let (kind, jobs) = match &sc.arrivals {
+            Some(arr) => ("service", arr.jobs),
+            None => ("batch", sc.jobs.len()),
+        };
+        let mut desc: String = sc.description.chars().take(72).collect();
+        if desc.len() < sc.description.len() {
+            desc.push('…');
+        }
+        rows.push(vec![sc.name, kind.to_string(), jobs.to_string(), desc]);
+    }
+    println!("{}", render_table(&["scenario", "kind", "jobs", "description"], &rows));
     Ok(())
 }
 

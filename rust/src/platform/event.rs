@@ -153,6 +153,9 @@ pub struct EventSim {
     /// by this amount, clamped so at least one worker survives (the
     /// platform re-provisions the last slot — the sim must stay live).
     lost: usize,
+    /// Submitted tasks waiting for a worker (live `fifo` entries; kept as
+    /// a counter so autoscaling policies can read the backlog in O(1)).
+    waiting: usize,
 }
 
 impl EventSim {
@@ -169,6 +172,7 @@ impl EventSim {
             fifo: VecDeque::new(),
             seq: 0,
             lost: 0,
+            waiting: 0,
         }
     }
 
@@ -194,6 +198,44 @@ impl EventSim {
     /// Workers permanently lost to injected deaths so far.
     pub fn lost_workers(&self) -> usize {
         self.lost
+    }
+
+    /// Raw bounded-pool capacity (`None` = unbounded). Injected worker
+    /// deaths are *not* subtracted — see [`EventSim::effective_capacity`].
+    pub fn capacity(&self) -> Option<usize> {
+        match self.pool {
+            Pool::Unbounded => None,
+            Pool::Workers(n) => Some(n),
+        }
+    }
+
+    /// Workers the bounded pool can actually run concurrently: capacity
+    /// minus permanent losses (`None` = unbounded).
+    pub fn effective_capacity(&self) -> Option<usize> {
+        self.capacity().map(|n| n.saturating_sub(self.lost))
+    }
+
+    /// Tasks submitted but still waiting for a worker (the dispatch
+    /// backlog autoscaling policies react to). O(1).
+    pub fn queued_tasks(&self) -> usize {
+        self.waiting
+    }
+
+    /// Resize a bounded pool to `n` raw slots at the current virtual
+    /// time. Growing dispatches the longest-waiting queued tasks
+    /// immediately (their durations were sampled at submission, so the
+    /// draw sequence is untouched — only start times move). Shrinking is
+    /// lazy: running tasks keep their workers and the capacity drop bites
+    /// as they complete. Panics on an unbounded pool — there is no fleet
+    /// to scale.
+    pub fn set_capacity(&mut self, n: usize) {
+        assert!(
+            matches!(self.pool, Pool::Workers(_)),
+            "set_capacity on an unbounded pool"
+        );
+        assert!(n > 0, "worker pool must be non-empty");
+        self.pool = Pool::Workers(n);
+        self.dispatch_waiting();
     }
 
     fn has_free_worker(&self) -> bool {
@@ -263,6 +305,7 @@ impl EventSim {
             self.start_task(id);
         } else {
             self.fifo.push_back(id);
+            self.waiting += 1;
         }
         id
     }
@@ -322,7 +365,10 @@ impl EventSim {
     /// worker release.
     pub fn cancel(&mut self, id: TaskId) {
         match self.tasks[id.0].state {
-            TaskState::Waiting => self.tasks[id.0].state = TaskState::Cancelled,
+            TaskState::Waiting => {
+                self.tasks[id.0].state = TaskState::Cancelled;
+                self.waiting -= 1;
+            }
             TaskState::Running => {
                 self.tasks[id.0].state = TaskState::Cancelled;
                 self.release_worker();
@@ -365,6 +411,7 @@ impl EventSim {
         while self.has_free_worker() {
             match self.fifo.pop_front() {
                 Some(next) if self.tasks[next.0].state == TaskState::Waiting => {
+                    self.waiting -= 1;
                     self.start_task(next)
                 }
                 // Lazily drop queue entries cancelled while waiting.
@@ -2205,5 +2252,68 @@ mod tests {
             ph.completion_times()
         };
         assert_eq!(run(77), run(77));
+    }
+
+    #[test]
+    fn queued_tasks_counts_live_backlog() {
+        let mut sim = EventSim::new(Pool::Workers(1));
+        assert_eq!(sim.queued_tasks(), 0);
+        sim.submit(0, 5.0, false);
+        assert_eq!(sim.queued_tasks(), 0, "first task dispatches immediately");
+        let b = sim.submit(0, 1.0, false);
+        sim.submit(0, 1.0, false);
+        assert_eq!(sim.queued_tasks(), 2);
+        sim.cancel(b);
+        assert_eq!(sim.queued_tasks(), 1, "cancelled waiter leaves the backlog");
+        sim.step().unwrap();
+        assert_eq!(sim.queued_tasks(), 0, "completion dispatches the survivor");
+    }
+
+    #[test]
+    fn capacity_accessors_track_pool_and_losses() {
+        let mut sim = EventSim::new(Pool::Workers(3));
+        assert_eq!(sim.capacity(), Some(3));
+        assert_eq!(sim.effective_capacity(), Some(3));
+        sim.submit_attempt(0, 10.0, false, Some(1.0));
+        sim.step().unwrap(); // the kill: one worker permanently lost
+        assert_eq!(sim.lost_workers(), 1);
+        assert_eq!(sim.capacity(), Some(3), "raw capacity ignores losses");
+        assert_eq!(sim.effective_capacity(), Some(2));
+        assert_eq!(EventSim::unbounded().capacity(), None);
+        assert_eq!(EventSim::unbounded().effective_capacity(), None);
+    }
+
+    #[test]
+    fn grow_dispatches_waiters_at_current_time() {
+        let mut sim = EventSim::new(Pool::Workers(1));
+        let a = sim.submit(0, 5.0, false);
+        let b = sim.submit(0, 1.0, false);
+        let c = sim.submit(0, 1.0, false);
+        assert_eq!(sim.queued_tasks(), 2);
+        sim.set_capacity(3);
+        assert_eq!(sim.queued_tasks(), 0, "growth drains the backlog");
+        // b and c start at the resize instant (t=0), keeping their
+        // submission-time durations; a is unaffected.
+        let c1 = sim.step().unwrap();
+        let c2 = sim.step().unwrap();
+        let c3 = sim.step().unwrap();
+        assert_eq!((c1.task, c1.time), (b, 1.0));
+        assert_eq!((c2.task, c2.time), (c, 1.0));
+        assert_eq!((c3.task, c3.time), (a, 5.0));
+    }
+
+    #[test]
+    fn shrink_is_lazy_and_bites_on_completion() {
+        let mut sim = EventSim::new(Pool::Workers(2));
+        sim.submit(0, 2.0, false);
+        sim.submit(0, 3.0, false);
+        sim.set_capacity(1); // both keep running: shrink never kills
+        let d = sim.submit(0, 1.0, false);
+        assert_eq!(sim.queued_tasks(), 1, "no slot for d after the shrink");
+        let times: Vec<(TaskId, f64)> =
+            std::iter::from_fn(|| sim.step().map(|c| (c.task, c.time))).collect();
+        // d waits for BOTH running tasks to finish: the first completion
+        // only brings busy (2) down to the new capacity (1).
+        assert_eq!(times[2], (d, 4.0));
     }
 }

@@ -62,6 +62,15 @@ pub struct JobSpec {
     /// Per-job progress config; **fully replaces** the scenario-level
     /// one when present (no field merging). `None` = inherit.
     pub progress: Option<ProgressCfg>,
+    /// Tenant this job bills to. Only meaningful (and only parseable) in
+    /// service mode — plain `jobs` entries reject the key.
+    pub tenant: Option<String>,
+    /// Dispatch priority in the service queue: higher first, ties by
+    /// arrival order. Plain `jobs` entries reject the key.
+    pub priority: u32,
+    /// Latency SLO hint, seconds from arrival; the service reports
+    /// met/missed counts, it never preempts. `None` = best-effort.
+    pub deadline_s: Option<f64>,
 }
 
 impl JobSpec {
@@ -101,6 +110,58 @@ pub struct StorageSpec {
     pub cache_blocks: usize,
 }
 
+/// One tenant of a service scenario (an entry of the optional
+/// `tenants` array; requires `arrivals`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of unpinned arrivals routed to this tenant.
+    pub weight: f64,
+    /// Max jobs admitted-but-unfinished at once; 0 = unlimited.
+    pub quota: usize,
+}
+
+/// The open-loop Poisson arrival process of a service scenario (the
+/// optional `arrivals` section). Mutually exclusive with `jobs`: a
+/// service scenario's jobs are drawn from `templates` by the
+/// coordinator service instead of being listed explicitly.
+#[derive(Debug, Clone)]
+pub struct ArrivalSpec {
+    /// Total jobs offered to the coordinator.
+    pub jobs: usize,
+    /// Poisson arrival rate, jobs per virtual second.
+    pub rate_per_s: f64,
+    /// Weighted job templates; each arrival samples one. Template
+    /// `arrival` keys are forbidden (times come from the process).
+    pub templates: Vec<(f64, JobSpec)>,
+    /// Admission queue depth; an arrival finding this many jobs already
+    /// queued is rejected with backpressure. 0 = unbounded.
+    pub queue_depth: usize,
+    /// Max jobs running phases concurrently; the rest wait in the
+    /// queue. 0 = unbounded.
+    pub max_inflight: usize,
+}
+
+/// Fleet autoscaling of a service scenario (the optional `autoscale`
+/// section; requires `arrivals` and a bounded pool).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleSpec {
+    /// Policy name from the coordinator service registry
+    /// (`coordinator::service::POLICIES`).
+    pub policy: String,
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Max workers added/removed per scaling decision.
+    pub step: usize,
+    /// Min virtual seconds between scaling decisions.
+    pub cooldown_s: f64,
+    /// Grow when queued tasks exceed this many per worker.
+    pub scale_up_queue: f64,
+    /// Shrink when busy+queued tasks fall below this fraction of the
+    /// fleet.
+    pub scale_down_busy: f64,
+}
+
 /// A parsed scenario file.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -122,6 +183,16 @@ pub struct Scenario {
     /// `None` = opaque attempts (the historical behaviour,
     /// golden-pinned — absent ⇒ zero extra RNG draws).
     pub progress: Option<ProgressCfg>,
+    /// Tenants of a service scenario; empty unless `arrivals` is set.
+    pub tenants: Vec<TenantSpec>,
+    /// Open-loop arrival process; `Some` switches [`run_scenario`] to
+    /// the coordinator service (`coordinator::service`). `None` = the
+    /// historical explicit-`jobs` runner, byte-identical to pre-service
+    /// builds (absent ⇒ zero extra RNG draws).
+    pub arrivals: Option<ArrivalSpec>,
+    /// Fleet autoscaling policy; requires `arrivals`.
+    pub autoscale: Option<AutoscaleSpec>,
+    /// Explicit job list; empty exactly when `arrivals` is set.
     pub jobs: Vec<JobSpec>,
 }
 
@@ -154,6 +225,9 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
             "storage",
             "failures",
             "progress",
+            "tenants",
+            "arrivals",
+            "autoscale",
             "jobs",
         ],
     )?;
@@ -196,18 +270,51 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
     let failures = parse_failures(doc.get("failures"), storage.as_ref())?;
     let progress = parse_progress(doc.get("progress"))?;
 
-    let jobs_json = doc
-        .get("jobs")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow::anyhow!("scenario '{name}' needs a 'jobs' array"))?;
-    anyhow::ensure!(!jobs_json.is_empty(), "scenario '{name}' has no jobs");
-    let mut jobs = Vec::with_capacity(jobs_json.len());
-    for (i, jj) in jobs_json.iter().enumerate() {
-        jobs.push(
-            parse_job(jj, storage.as_ref())
-                .map_err(|e| anyhow::anyhow!("job {i} of '{name}': {e}"))?,
+    let tenants = parse_tenants(doc.get("tenants"))?;
+    let arrivals = parse_arrivals(doc.get("arrivals"), storage.as_ref(), &tenants)?;
+    let autoscale = parse_autoscale(doc.get("autoscale"))?;
+    if arrivals.is_some() {
+        anyhow::ensure!(
+            doc.get("jobs").is_none(),
+            "scenario '{name}' has both 'jobs' and 'arrivals' — a service scenario's \
+             jobs come from the arrival process, drop one of the two sections"
+        );
+        if autoscale.is_some() {
+            anyhow::ensure!(
+                workers.iter().all(|&w| w > 0),
+                "'autoscale' needs a bounded 'workers' pool (0 = unbounded, nothing to scale)"
+            );
+        }
+    } else {
+        anyhow::ensure!(
+            tenants.is_empty(),
+            "'tenants' requires an 'arrivals' section (explicit 'jobs' have no admission \
+             control to bill against)"
+        );
+        anyhow::ensure!(
+            autoscale.is_none(),
+            "'autoscale' requires an 'arrivals' section (a fixed job list has no \
+             open-loop load to react to)"
         );
     }
+
+    let jobs = if arrivals.is_some() {
+        Vec::new()
+    } else {
+        let jobs_json = doc
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("scenario '{name}' needs a 'jobs' array"))?;
+        anyhow::ensure!(!jobs_json.is_empty(), "scenario '{name}' has no jobs");
+        let mut jobs = Vec::with_capacity(jobs_json.len());
+        for (i, jj) in jobs_json.iter().enumerate() {
+            jobs.push(
+                parse_job(jj, storage.as_ref())
+                    .map_err(|e| anyhow::anyhow!("job {i} of '{name}': {e}"))?,
+            );
+        }
+        jobs
+    };
 
     Ok(Scenario {
         name,
@@ -219,6 +326,9 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
         storage,
         failures,
         progress,
+        tenants,
+        arrivals,
+        autoscale,
         jobs,
     })
 }
@@ -480,6 +590,223 @@ fn parse_progress(j: Option<&Json>) -> anyhow::Result<Option<ProgressCfg>> {
     Ok(Some(cfg))
 }
 
+/// Parse the optional `tenants` array (service mode). Strict like every
+/// other section: unknown keys, wrong types, duplicate or empty names
+/// are errors.
+fn parse_tenants(j: Option<&Json>) -> anyhow::Result<Vec<TenantSpec>> {
+    let Some(j) = j else { return Ok(Vec::new()) };
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("'tenants' must be an array of tenant objects"))?;
+    anyhow::ensure!(!arr.is_empty(), "'tenants' must be non-empty when present");
+    let mut out: Vec<TenantSpec> = Vec::with_capacity(arr.len());
+    for t in arr {
+        ensure_known_keys("tenant", t, &["name", "weight", "quota"])?;
+        let name = t
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("tenant needs a string 'name'"))?
+            .to_string();
+        anyhow::ensure!(!name.is_empty(), "tenant 'name' must be non-empty");
+        anyhow::ensure!(
+            out.iter().all(|x| x.name != name),
+            "duplicate tenant '{name}'"
+        );
+        let weight = match t.get("weight") {
+            None => 1.0,
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("tenant '{name}' 'weight' must be a number"))?,
+        };
+        anyhow::ensure!(
+            weight.is_finite() && weight > 0.0,
+            "tenant '{name}' 'weight' must be positive"
+        );
+        let quota = match t.get("quota") {
+            None => 0,
+            Some(v) => v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("tenant '{name}' 'quota' must be an integer (0 = unlimited)")
+            })?,
+        };
+        out.push(TenantSpec { name, weight, quota });
+    }
+    Ok(out)
+}
+
+/// Parse the optional `arrivals` section (service mode). Job templates
+/// are parsed through the same strict job parser as explicit `jobs`,
+/// plus the service-only keys (`weight`, `tenant`, `priority`,
+/// `deadline_s`) — and minus `arrival`, which the Poisson process owns.
+fn parse_arrivals(
+    j: Option<&Json>,
+    storage: Option<&StorageSpec>,
+    tenants: &[TenantSpec],
+) -> anyhow::Result<Option<ArrivalSpec>> {
+    let Some(j) = j else { return Ok(None) };
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "'arrivals' must be an object, got {}",
+        j.to_string_compact()
+    );
+    ensure_known_keys(
+        "arrivals",
+        j,
+        &["jobs", "rate_per_s", "templates", "queue_depth", "max_inflight"],
+    )?;
+    let jobs = j
+        .get("jobs")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("'arrivals' needs an integer 'jobs'"))?;
+    anyhow::ensure!(jobs >= 1, "'arrivals.jobs' must be ≥ 1");
+    let rate_per_s = j
+        .get("rate_per_s")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("'arrivals' needs a number 'rate_per_s'"))?;
+    anyhow::ensure!(
+        rate_per_s.is_finite() && rate_per_s > 0.0,
+        "'arrivals.rate_per_s' must be positive"
+    );
+    let opt_count = |key: &str| -> anyhow::Result<usize> {
+        match j.get(key) {
+            None => Ok(0),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("'arrivals.{key}' must be an integer (0 = unbounded)")
+            }),
+        }
+    };
+    let queue_depth = opt_count("queue_depth")?;
+    let max_inflight = opt_count("max_inflight")?;
+    let tj = j
+        .get("templates")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("'arrivals' needs a 'templates' array"))?;
+    anyhow::ensure!(!tj.is_empty(), "'arrivals.templates' must be non-empty");
+    let mut templates = Vec::with_capacity(tj.len());
+    for (i, t) in tj.iter().enumerate() {
+        anyhow::ensure!(
+            t.get("arrival").is_none(),
+            "template {i}: 'arrival' is forbidden — arrival times come from the \
+             Poisson process"
+        );
+        let weight = match t.get("weight") {
+            None => 1.0,
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("template {i}: 'weight' must be a number"))?,
+        };
+        anyhow::ensure!(
+            weight.is_finite() && weight > 0.0,
+            "template {i}: 'weight' must be positive"
+        );
+        let spec =
+            parse_job_with(t, storage, &["weight", "tenant", "priority", "deadline_s"])
+                .map_err(|e| anyhow::anyhow!("template {i}: {e}"))?;
+        if let Some(tn) = &spec.tenant {
+            anyhow::ensure!(
+                tenants.iter().any(|x| &x.name == tn),
+                "template {i}: tenant '{tn}' is not declared in 'tenants'"
+            );
+        }
+        templates.push((weight, spec));
+    }
+    Ok(Some(ArrivalSpec {
+        jobs,
+        rate_per_s,
+        templates,
+        queue_depth,
+        max_inflight,
+    }))
+}
+
+/// Parse the optional `autoscale` section (service mode). The policy
+/// name is validated against the coordinator service's registry so a
+/// typo fails at parse time, naming the known policies.
+fn parse_autoscale(j: Option<&Json>) -> anyhow::Result<Option<AutoscaleSpec>> {
+    let Some(j) = j else { return Ok(None) };
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "'autoscale' must be an object, got {}",
+        j.to_string_compact()
+    );
+    ensure_known_keys(
+        "autoscale",
+        j,
+        &[
+            "policy",
+            "min_workers",
+            "max_workers",
+            "step",
+            "cooldown_s",
+            "scale_up_queue",
+            "scale_down_busy",
+        ],
+    )?;
+    let policy = match j.get("policy") {
+        None => crate::coordinator::service::POLICIES[0].to_string(),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("'autoscale.policy' must be a string"))?
+            .to_string(),
+    };
+    anyhow::ensure!(
+        crate::coordinator::service::POLICIES.contains(&policy.as_str()),
+        "unknown 'autoscale.policy' '{policy}' (known: {})",
+        crate::coordinator::service::POLICIES.join(", ")
+    );
+    let count = |key: &str, default: usize| -> anyhow::Result<usize> {
+        match j.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("'autoscale.{key}' must be an integer")),
+        }
+    };
+    let min_workers = count("min_workers", 1)?;
+    anyhow::ensure!(min_workers >= 1, "'autoscale.min_workers' must be ≥ 1");
+    let max_workers = j
+        .get("max_workers")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("'autoscale' needs an integer 'max_workers'"))?;
+    anyhow::ensure!(
+        max_workers >= min_workers,
+        "'autoscale.max_workers' must be ≥ min_workers ({min_workers})"
+    );
+    let step = count("step", 1)?;
+    anyhow::ensure!(step >= 1, "'autoscale.step' must be ≥ 1");
+    let num = |key: &str, default: f64| -> anyhow::Result<f64> {
+        match j.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'autoscale.{key}' must be a number")),
+        }
+    };
+    let cooldown_s = num("cooldown_s", 0.0)?;
+    anyhow::ensure!(
+        cooldown_s.is_finite() && cooldown_s >= 0.0,
+        "'autoscale.cooldown_s' must be non-negative"
+    );
+    let scale_up_queue = num("scale_up_queue", 2.0)?;
+    anyhow::ensure!(
+        scale_up_queue.is_finite() && scale_up_queue > 0.0,
+        "'autoscale.scale_up_queue' must be positive"
+    );
+    let scale_down_busy = num("scale_down_busy", 0.5)?;
+    anyhow::ensure!(
+        scale_down_busy.is_finite() && (0.0..1.0).contains(&scale_down_busy),
+        "'autoscale.scale_down_busy' must be in [0, 1)"
+    );
+    Ok(Some(AutoscaleSpec {
+        policy,
+        min_workers,
+        max_workers,
+        step,
+        cooldown_s,
+        scale_up_queue,
+        scale_down_busy,
+    }))
+}
+
 fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
     let mut p = StragglerParams::default();
     let Some(j) = j else { return Ok(p) };
@@ -533,21 +860,39 @@ fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
 }
 
 fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec> {
-    ensure_known_keys(
-        "job",
-        j,
-        &[
-            "scheme",
-            "s_a",
-            "s_b",
-            "dims",
-            "decode_workers",
-            "encode_workers",
-            "arrival",
-            "failures",
-            "progress",
-        ],
-    )?;
+    parse_job_with(j, storage, &[])
+}
+
+/// Parse one ad-hoc service job (the `slec submit` input): an explicit
+/// job object plus the service-only keys, minus `weight` (there is no
+/// template mix to weight against).
+pub fn parse_service_job(j: &Json) -> anyhow::Result<JobSpec> {
+    parse_job_with(j, None, &["tenant", "priority", "deadline_s"])
+}
+
+/// [`parse_job`] with extra allowed keys — the service-only fields
+/// (`tenant`, `priority`, `deadline_s`, plus the template `weight`) are
+/// legal in arrival templates and `slec submit` specs but rejected as
+/// unknown keys on explicit `jobs` entries, where they would silently
+/// do nothing.
+pub(crate) fn parse_job_with(
+    j: &Json,
+    storage: Option<&StorageSpec>,
+    extra_known: &[&str],
+) -> anyhow::Result<JobSpec> {
+    let mut known = vec![
+        "scheme",
+        "s_a",
+        "s_b",
+        "dims",
+        "decode_workers",
+        "encode_workers",
+        "arrival",
+        "failures",
+        "progress",
+    ];
+    known.extend_from_slice(extra_known);
+    ensure_known_keys("job", j, &known)?;
     let scheme_str = j
         .get("scheme")
         .and_then(Json::as_str)
@@ -586,6 +931,34 @@ fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec>
     anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
     let failures = parse_failures(j.get("failures"), storage)?;
     let progress = parse_progress(j.get("progress"))?;
+    let tenant = match j.get("tenant") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| anyhow::anyhow!("job 'tenant' must be a string"))?
+                .to_string(),
+        ),
+    };
+    let priority = match j.get("priority") {
+        None => 0,
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("job 'priority' must be a non-negative integer"))?
+            as u32,
+    };
+    let deadline_s = match j.get("deadline_s") {
+        None => None,
+        Some(v) => {
+            let d = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("job 'deadline_s' must be a number"))?;
+            anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "job 'deadline_s' must be positive"
+            );
+            Some(d)
+        }
+    };
     // Validate the scheme's parameters against the partitioning through
     // the same registry instantiation the runner uses.
     scheme.instantiate(s_a, s_b)?;
@@ -599,6 +972,9 @@ fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec>
         arrival,
         failures,
         progress,
+        tenant,
+        priority,
+        deadline_s,
     })
 }
 
@@ -734,19 +1110,21 @@ enum Stage {
 /// One job's pipeline advancing through the shared event queue; drives
 /// the job's [`CodingScheme`] phase plans (timing only) — the same
 /// contract the coordinator's generic driver executes numerically.
-struct JobRun {
-    index: usize,
-    spec: JobSpec,
+/// `pub(crate)` so the coordinator service (`coordinator::service`) can
+/// drive the identical state machine for admitted jobs.
+pub(crate) struct JobRun {
+    pub(crate) index: usize,
+    pub(crate) spec: JobSpec,
     scheme: Box<dyn CodingScheme>,
     shape: JobShape,
     rng: Pcg64,
-    report: JobReport,
+    pub(crate) report: JobReport,
     stage: Stage,
     phase: Option<PhaseState>,
     /// Live decodability probe of the compute stage.
     probe: Option<DecodeProbe>,
-    done: bool,
-    finish: f64,
+    pub(crate) done: bool,
+    pub(crate) finish: f64,
     /// Cells the decode plan could not recover (recompute fallback).
     undecodable: usize,
     /// Storage-contention overlay of the compute phase (RNG-free),
@@ -767,7 +1145,7 @@ struct JobRun {
 }
 
 impl JobRun {
-    fn new(
+    pub(crate) fn new(
         index: usize,
         spec: JobSpec,
         storage: Option<&StorageSpec>,
@@ -864,7 +1242,7 @@ impl JobRun {
     }
 
     /// Begin the pipeline at the job's arrival time (sim clock is there).
-    fn start(&mut self, sim: &mut EventSim, model: &StragglerModel) {
+    pub(crate) fn start(&mut self, sim: &mut EventSim, model: &StragglerModel) {
         let fleet = self.spec.encode_fleet(self.scheme.compute_tasks());
         match self.scheme.encode_plan(&self.shape, fleet) {
             Some(plan) => self.start_encode(sim, model, fleet, plan),
@@ -1001,7 +1379,12 @@ impl JobRun {
     }
 
     /// Route one completion of this job to its live phase.
-    fn on_completion(&mut self, sim: &mut EventSim, model: &StragglerModel, c: &Completion) {
+    pub(crate) fn on_completion(
+        &mut self,
+        sim: &mut EventSim,
+        model: &StragglerModel,
+        c: &Completion,
+    ) {
         if self.done {
             return;
         }
@@ -1085,7 +1468,17 @@ impl JobRun {
 
 /// Execute every `workers` run of the scenario and return the summary
 /// document compared by the golden suite.
+///
+/// A scenario with an `arrivals` section is a *service* scenario: it is
+/// delegated wholesale to the coordinator service
+/// ([`crate::coordinator::service::run_service`]), which owns the
+/// admission queue, tenant quotas and autoscaler. Everything else runs
+/// through the historical explicit-`jobs` path below, untouched — no
+/// new RNG draws, so pre-service goldens stay byte-identical.
 pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
+    if sc.arrivals.is_some() {
+        return crate::coordinator::service::run_service(sc);
+    }
     let model = StragglerModel::new(sc.straggler, sc.rates);
     let mut runs = Vec::with_capacity(sc.workers.len());
     for &workers in &sc.workers {
@@ -1843,5 +2236,262 @@ mod tests {
         // only delay completions (same durations, queued starts).
         assert_eq!(total(&runs[0]), total(&runs[1]));
         assert!(total(&runs[2]) >= total(&runs[0]) - 1e-9);
+    }
+
+    #[test]
+    fn parses_service_sections_with_defaults() {
+        let sc = scenario_from(
+            r#"{
+                "name": "svc",
+                "seed": 1,
+                "workers": 8,
+                "tenants": [
+                    {"name": "a", "weight": 2.0, "quota": 4},
+                    {"name": "b"}
+                ],
+                "arrivals": {
+                    "jobs": 10,
+                    "rate_per_s": 0.5,
+                    "queue_depth": 16,
+                    "max_inflight": 8,
+                    "templates": [
+                        {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 1000, "weight": 3.0},
+                        {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 1000,
+                         "tenant": "b", "priority": 2, "deadline_s": 60.0}
+                    ]
+                },
+                "autoscale": {"policy": "fault-aware", "min_workers": 2, "max_workers": 64,
+                              "step": 4, "cooldown_s": 5.0}
+            }"#,
+        );
+        assert!(sc.jobs.is_empty(), "service jobs come from the arrival process");
+        assert_eq!(sc.tenants.len(), 2);
+        assert_eq!(sc.tenants[1].weight, 1.0); // default
+        assert_eq!(sc.tenants[1].quota, 0); // default = unlimited
+        let arr = sc.arrivals.as_ref().expect("arrivals parsed");
+        assert_eq!((arr.jobs, arr.queue_depth, arr.max_inflight), (10, 16, 8));
+        assert_eq!(arr.templates[0].0, 3.0);
+        let pinned = &arr.templates[1].1;
+        assert_eq!(pinned.tenant.as_deref(), Some("b"));
+        assert_eq!(pinned.priority, 2);
+        assert_eq!(pinned.deadline_s, Some(60.0));
+        let az = sc.autoscale.as_ref().expect("autoscale parsed");
+        assert_eq!(az.policy, "fault-aware");
+        assert_eq!(az.scale_up_queue, 2.0); // default
+        assert_eq!(az.scale_down_busy, 0.5); // default
+
+        // Minimal service scenario: arrivals alone, no tenants/autoscale.
+        let sc = scenario_from(
+            r#"{
+                "name": "svc-min",
+                "seed": 1,
+                "arrivals": {
+                    "jobs": 3,
+                    "rate_per_s": 1.0,
+                    "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 1000}]
+                }
+            }"#,
+        );
+        let arr = sc.arrivals.as_ref().unwrap();
+        assert_eq!((arr.queue_depth, arr.max_inflight), (0, 0)); // unbounded
+        assert!(sc.tenants.is_empty());
+        assert!(sc.autoscale.is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_service_sections() {
+        let template = r#"[{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]"#;
+        let bad = [
+            // 'jobs' and 'arrivals' are mutually exclusive.
+            format!(
+                r#"{{"name": "x", "seed": 1, "jobs": {template},
+                    "arrivals": {{"jobs": 5, "rate_per_s": 1.0, "templates": {template}}}}}"#
+            ),
+            // 'tenants' / 'autoscale' require 'arrivals'.
+            format!(r#"{{"name": "x", "seed": 1, "tenants": [{{"name": "a"}}], "jobs": {template}}}"#),
+            format!(r#"{{"name": "x", "seed": 1, "autoscale": {{"max_workers": 8}}, "jobs": {template}}}"#),
+            // Autoscaling an unbounded pool is meaningless.
+            format!(
+                r#"{{"name": "x", "seed": 1, "workers": 0, "autoscale": {{"max_workers": 8}},
+                    "arrivals": {{"jobs": 5, "rate_per_s": 1.0, "templates": {template}}}}}"#
+            ),
+            // Templates must not pin an arrival time.
+            r#"{"name": "x", "seed": 1, "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100,
+                               "arrival": 3.0}]}}"#
+                .to_string(),
+            // Pinned tenant must be declared.
+            r#"{"name": "x", "seed": 1, "tenants": [{"name": "a"}],
+                "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100,
+                               "tenant": "ghost"}]}}"#
+                .to_string(),
+            // Duplicate tenants, bad rate, empty templates.
+            format!(
+                r#"{{"name": "x", "seed": 1, "tenants": [{{"name": "a"}}, {{"name": "a"}}],
+                    "arrivals": {{"jobs": 5, "rate_per_s": 1.0, "templates": {template}}}}}"#
+            ),
+            format!(
+                r#"{{"name": "x", "seed": 1,
+                    "arrivals": {{"jobs": 5, "rate_per_s": 0.0, "templates": {template}}}}}"#
+            ),
+            r#"{"name": "x", "seed": 1, "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": []}}"#
+                .to_string(),
+            // Autoscale bounds.
+            format!(
+                r#"{{"name": "x", "seed": 1, "workers": 8,
+                    "autoscale": {{"min_workers": 16, "max_workers": 8}},
+                    "arrivals": {{"jobs": 5, "rate_per_s": 1.0, "templates": {template}}}}}"#
+            ),
+            format!(
+                r#"{{"name": "x", "seed": 1, "workers": 8,
+                    "autoscale": {{"max_workers": 8, "scale_down_busy": 1.0}},
+                    "arrivals": {{"jobs": 5, "rate_per_s": 1.0, "templates": {template}}}}}"#
+            ),
+            // Service-only keys stay illegal on explicit jobs entries.
+            r#"{"name": "x", "seed": 1,
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100,
+                          "tenant": "a"}]}"#
+                .to_string(),
+            r#"{"name": "x", "seed": 1,
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100,
+                          "priority": 1}]}"#
+                .to_string(),
+        ];
+        for src in &bad {
+            assert!(
+                parse_scenario(&parse(src).unwrap()).is_err(),
+                "should reject: {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn service_errors_name_the_culprit() {
+        let fail = |src: &str| parse_scenario(&parse(src).unwrap()).unwrap_err().to_string();
+
+        let err = fail(
+            r#"{"name": "x", "seed": 1, "tenants": [{"name": "a", "quotas": 2}],
+                "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}}"#,
+        );
+        assert!(err.contains("unknown tenant key 'quotas'"), "{err}");
+
+        let err = fail(
+            r#"{"name": "x", "seed": 1, "arrivals": {"jobs": 5, "rate": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}}"#,
+        );
+        assert!(err.contains("unknown arrivals key 'rate'"), "{err}");
+
+        let err = fail(
+            r#"{"name": "x", "seed": 1, "workers": 8,
+                "autoscale": {"max_workers": 8, "cool_down": 5},
+                "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}}"#,
+        );
+        assert!(err.contains("unknown autoscale key 'cool_down'"), "{err}");
+
+        // A policy typo names the whole registry.
+        let err = fail(
+            r#"{"name": "x", "seed": 1, "workers": 8,
+                "autoscale": {"policy": "queue-dpeth", "max_workers": 8},
+                "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}}"#,
+        );
+        assert!(err.contains("queue-dpeth"), "{err}");
+        assert!(err.contains("queue-depth, fault-aware"), "{err}");
+
+        // The jobs/arrivals conflict explains the resolution.
+        let err = fail(
+            r#"{"name": "x", "seed": 1,
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}],
+                "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}}"#,
+        );
+        assert!(err.contains("both 'jobs' and 'arrivals'"), "{err}");
+
+        // Template errors carry their index; the arrival ban says why.
+        let err = fail(
+            r#"{"name": "x", "seed": 1, "arrivals": {"jobs": 5, "rate_per_s": 1.0,
+                "templates": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100},
+                              {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100,
+                               "arrival": 1.0}]}}"#,
+        );
+        assert!(err.contains("template 1"), "{err}");
+        assert!(err.contains("Poisson"), "{err}");
+
+        // On an explicit jobs entry the service keys are plain typos.
+        let err = fail(
+            r#"{"name": "x", "seed": 1,
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100,
+                          "deadline_s": 60}]}"#,
+        );
+        assert!(err.contains("unknown job key 'deadline_s'"), "{err}");
+    }
+
+    #[test]
+    fn service_scenario_runs_twice_bit_identical_across_pool_sizes() {
+        let sc = scenario_from(
+            r#"{
+                "name": "svc-run",
+                "seed": 17,
+                "workers": [6, 24],
+                "straggler": {"p": 0.1},
+                "tenants": [
+                    {"name": "a", "weight": 3.0, "quota": 3},
+                    {"name": "b", "weight": 1.0}
+                ],
+                "arrivals": {
+                    "jobs": 60,
+                    "rate_per_s": 0.2,
+                    "queue_depth": 8,
+                    "max_inflight": 4,
+                    "templates": [
+                        {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 2000, "weight": 3.0},
+                        {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 2000,
+                         "priority": 1, "deadline_s": 500.0}
+                    ]
+                },
+                "autoscale": {"policy": "queue-depth", "min_workers": 2, "max_workers": 48,
+                              "step": 4, "cooldown_s": 10.0}
+            }"#,
+        );
+        let a = run_scenario(&sc).unwrap().to_string_pretty();
+        let b = run_scenario(&sc).unwrap().to_string_pretty();
+        assert_eq!(a, b, "service runs must be bit-identical");
+
+        let out = run_scenario(&sc).unwrap();
+        let runs = out.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "one run per pool-sweep entry");
+        for run in runs {
+            let offered = run.get("offered").unwrap().as_f64().unwrap();
+            let admitted = run.get("admitted").unwrap().as_f64().unwrap();
+            let rej = run.get("rejected").unwrap();
+            let rq = rej.get("queue_full").unwrap().as_f64().unwrap();
+            let rt = rej.get("tenant_quota").unwrap().as_f64().unwrap();
+            assert_eq!(offered, 60.0);
+            assert_eq!(offered, admitted + rq + rt);
+            // Latency percentiles exist, are ordered, and count what ran.
+            let lat = run.get("latency").unwrap();
+            assert_eq!(lat.get("count").unwrap().as_f64().unwrap(), admitted);
+            let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+            let p95 = lat.get("p95").unwrap().as_f64().unwrap();
+            let p99 = lat.get("p99").unwrap().as_f64().unwrap();
+            assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+            // Per-tenant accounting sums back to the totals.
+            let tenants = run.get("tenants").unwrap();
+            let sum: f64 = ["a", "b"]
+                .iter()
+                .map(|t| tenants.get(t).unwrap().get("offered").unwrap().as_f64().unwrap())
+                .sum();
+            assert_eq!(sum, offered);
+            // The fleet trace stays inside the configured bounds.
+            let fleet = run.get("fleet").unwrap();
+            for point in fleet.get("trace").unwrap().as_arr().unwrap() {
+                let n = point.as_arr().unwrap()[1].as_f64().unwrap();
+                assert!((2.0..=48.0).contains(&n), "fleet size {n} out of bounds");
+            }
+        }
     }
 }

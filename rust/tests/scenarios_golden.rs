@@ -171,6 +171,41 @@ fn golden_comparator_semantics() {
 }
 
 #[test]
+fn readme_scenario_table_matches_the_directory() {
+    // README's "Scenario suite" table must list exactly the scenarios
+    // shipped in rust/scenarios/ — a new scenario (or a rename) without
+    // a doc row is a failure in both directions.
+    let readme_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("README.md");
+    let readme = fs::read_to_string(&readme_path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", readme_path.display()));
+    let section = readme
+        .split("## Scenario suite")
+        .nth(1)
+        .expect("README must keep a '## Scenario suite' section")
+        .split("\n## ")
+        .next()
+        .unwrap();
+    let documented: std::collections::BTreeSet<String> = section
+        .lines()
+        .filter(|l| l.starts_with("| `"))
+        .filter_map(|l| {
+            let cell = l.trim_start_matches("| `");
+            cell.split('`').next().map(|s| s.to_string())
+        })
+        .collect();
+    let shipped: std::collections::BTreeSet<String> = scenario_files()
+        .iter()
+        .map(|p| p.file_stem().unwrap().to_string_lossy().to_string())
+        .collect();
+    let missing: Vec<_> = shipped.difference(&documented).collect();
+    let stale: Vec<_> = documented.difference(&shipped).collect();
+    assert!(
+        missing.is_empty() && stale.is_empty(),
+        "README scenario table out of sync: missing rows {missing:?}, stale rows {stale:?}"
+    );
+}
+
+#[test]
 fn coordinator_reports_reproduce_across_runs() {
     // Acceptance tie-in for the event-core refactor: run_matmul with one
     // seed yields identical decode_ok, numerics and phase timings on two

@@ -1,0 +1,140 @@
+//! Integration tests for the coordinator service: the shipped open-loop
+//! scenario runs bit-identically and its report obeys the admission,
+//! percentile and autoscaling invariants the golden pins structurally.
+
+use std::path::{Path, PathBuf};
+
+use slec::coordinator::service::submit_one;
+use slec::platform::scenario::{parse_scenario, parse_service_job, run_scenario, Scenario};
+use slec::platform::straggler::StragglerParams;
+use slec::util::json::{self, Json};
+
+fn open_loop_scenario() -> Scenario {
+    let path: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("scenarios")
+        .join("open-loop-poisson.json");
+    let doc = json::load_file(&path).expect("shipped scenario must load");
+    parse_scenario(&doc).expect("shipped scenario must parse")
+}
+
+fn f(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .unwrap_or_else(|| panic!("missing '{key}' in {}", j.to_string_compact()))
+        .as_f64()
+        .unwrap_or_else(|| panic!("'{key}' is not a number"))
+}
+
+#[test]
+fn open_loop_scenario_is_bit_identical_across_reruns() {
+    let sc = open_loop_scenario();
+    let a = run_scenario(&sc).unwrap().to_string_pretty();
+    let b = run_scenario(&sc).unwrap().to_string_pretty();
+    assert_eq!(a, b, "service reruns must be bit-identical");
+}
+
+#[test]
+fn open_loop_report_obeys_admission_and_percentile_invariants() {
+    let sc = open_loop_scenario();
+    let out = run_scenario(&sc).unwrap();
+    assert_eq!(out.get("scenario").unwrap().as_str(), Some("open-loop-poisson"));
+    let arr = out.get("arrivals").unwrap();
+    assert_eq!(f(arr, "jobs"), 2000.0);
+
+    let runs = out.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 2, "one run per pool-sweep entry");
+    for (run, &start) in runs.iter().zip(&[16.0, 48.0]) {
+        assert_eq!(f(run, "workers"), start);
+        let offered = f(run, "offered");
+        let admitted = f(run, "admitted");
+        let rejected = run.get("rejected").unwrap();
+        assert_eq!(offered, 2000.0);
+        assert_eq!(
+            offered,
+            admitted + f(rejected, "queue_full") + f(rejected, "tenant_quota"),
+            "every offered job is admitted or typed-rejected"
+        );
+        assert!(admitted > 0.0, "the service must do some work");
+
+        // Per-tenant ledgers sum back to the run totals.
+        let tenants = run.get("tenants").unwrap();
+        let names = ["alpha", "bravo", "canary"];
+        let sum = |key: &str| -> f64 {
+            names.iter().map(|n| f(tenants.get(n).unwrap(), key)).sum()
+        };
+        assert_eq!(sum("offered"), offered, "every arrival bills a tenant");
+        assert_eq!(sum("admitted"), admitted);
+        assert_eq!(sum("rejected_queue"), f(rejected, "queue_full"));
+        assert_eq!(sum("rejected_quota"), f(rejected, "tenant_quota"));
+
+        // Scheme counts account for exactly the admitted jobs.
+        let schemes = run.get("schemes").unwrap().as_obj().unwrap();
+        let total: f64 = schemes.iter().map(|(_, v)| v.as_f64().unwrap()).sum();
+        assert_eq!(total, admitted);
+
+        // Latency, queue-wait and service distributions all count the
+        // admitted jobs and keep their percentiles ordered.
+        for key in ["latency", "queue_wait", "service"] {
+            let stats = run.get(key).unwrap();
+            assert_eq!(f(stats, "count"), admitted, "{key} counts admitted jobs");
+            let (min, p50, p95, p99, max) = (
+                f(stats, "min"),
+                f(stats, "p50"),
+                f(stats, "p95"),
+                f(stats, "p99"),
+                f(stats, "max"),
+            );
+            assert!(
+                min <= p50 && p50 <= p95 && p95 <= p99 && p99 <= max,
+                "{key}: {min} {p50} {p95} {p99} {max}"
+            );
+            assert!(min >= 0.0, "{key} cannot be negative");
+        }
+        // End-to-end latency includes the queue wait.
+        assert!(
+            f(run.get("latency").unwrap(), "mean")
+                >= f(run.get("service").unwrap(), "mean") - 1e-9
+        );
+
+        // The deadline ledger is consistent.
+        let dl = run.get("deadlines").unwrap();
+        assert_eq!(f(dl, "offered"), f(dl, "met") + f(dl, "missed"));
+
+        // The fleet trace starts at the sweep width and stays in bounds.
+        let fleet = run.get("fleet").unwrap();
+        assert_eq!(fleet.get("policy").unwrap().as_str(), Some("queue-depth"));
+        let trace = fleet.get("trace").unwrap().as_arr().unwrap();
+        let first = trace[0].as_arr().unwrap();
+        assert_eq!(first[0].as_f64(), Some(0.0));
+        assert_eq!(first[1].as_f64(), Some(start));
+        for point in trace {
+            let n = point.as_arr().unwrap()[1].as_f64().unwrap();
+            assert!(
+                (8.0..=192.0).contains(&n),
+                "fleet size {n} outside [min_workers, max_workers]"
+            );
+        }
+        let last = trace.last().unwrap().as_arr().unwrap();
+        assert_eq!(fleet.get("final").unwrap().as_f64(), last[1].as_f64());
+    }
+}
+
+#[test]
+fn submit_runs_one_job_deterministically() {
+    let spec = parse_service_job(
+        &json::parse(
+            r#"{"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 2000,
+                "priority": 3, "deadline_s": 400.0}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let a = submit_one(&spec, 16, 42, StragglerParams::default()).unwrap();
+    let b = submit_one(&spec, 16, 42, StragglerParams::default()).unwrap();
+    assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+    assert_eq!(a.get("scheme").unwrap().as_str(), Some("local-product"));
+    assert!(f(&a, "t_total") > 0.0);
+    assert!(f(&a, "finish") > 0.0);
+    // A different seed moves the timings.
+    let c = submit_one(&spec, 16, 43, StragglerParams::default()).unwrap();
+    assert_ne!(a.to_string_pretty(), c.to_string_pretty());
+}

@@ -36,7 +36,9 @@ Usage:
 """
 
 import json
+import os
 import sys
+import tempfile
 
 LOWER_SUFFIXES = ("_secs", "_ms", "_ns", "_latency")
 HIGHER_SUFFIXES = ("_per_s", "_mb_per_s", "_gb_per_s", "_gflops", "_speedup", "_ops")
@@ -165,8 +167,53 @@ def self_test() -> int:
     if guard(overridden, dropped) != 0:
         print("self-test FAIL: without the override the suffix rules the drop fine")
         bad += 1
+    # Missing / unparseable inputs produce per-file diagnostics, not
+    # tracebacks: a missing fresh file only warns (the bench may not
+    # have run), a missing baseline and any garbled file are errors.
+    with tempfile.TemporaryDirectory() as tmp:
+        gone = os.path.join(tmp, "gone.json")
+        garbled = os.path.join(tmp, "garbled.json")
+        with open(garbled, "w") as f:
+            f.write("{not json")
+        io_cases = [
+            ("missing fresh file is a warning", gone, "fresh", 0),
+            ("missing baseline is an error", gone, "baseline", 2),
+            ("garbled fresh file is an error", garbled, "fresh", 1),
+            ("garbled baseline is an error", garbled, "baseline", 2),
+        ]
+        for name, path, role, expect in io_cases:
+            data, rc = load_json_file(path, role)
+            status = "pass" if data is None and rc == expect else "FAIL"
+            if status == "FAIL":
+                bad += 1
+            print(f"self-test {status}: {name} (rc {rc}, expected {expect})")
     print(f"self-test: {bad} failure(s)")
     return 1 if bad else 0
+
+
+def load_json_file(path: str, role: str):
+    """Load one JSON input with a per-file diagnostic instead of a traceback.
+
+    Returns `(data, rc)`: `data` is None when the file is unusable, and
+    `rc` is the exit code to propagate. A missing *fresh* file is a
+    warning (the bench may simply not have run; rc 0). A missing
+    baseline is a configuration error (rc 2), and an unparseable file of
+    either role is an error naming the path and the parse position.
+    """
+    try:
+        with open(path) as f:
+            return json.load(f), 0
+    except FileNotFoundError:
+        if role == "baseline":
+            print(f"::error::bench guard: baseline {path} is missing — "
+                  "commit the blessed baseline or fix the path")
+            return None, 2
+        print(f"::warning::bench guard: {path} missing — bench did not run?")
+        return None, 0
+    except json.JSONDecodeError as e:
+        print(f"::error::bench guard: {path} is not valid JSON "
+              f"(line {e.lineno} col {e.colno}: {e.msg})")
+        return None, 2 if role == "baseline" else 1
 
 
 def main() -> int:
@@ -177,14 +224,12 @@ def main() -> int:
               file=sys.stderr)
         return 2
     baseline_path, fresh_path = sys.argv[1], sys.argv[2]
-    with open(baseline_path) as f:
-        baseline = json.load(f)
-    try:
-        with open(fresh_path) as f:
-            fresh = json.load(f)
-    except FileNotFoundError:
-        print(f"::warning::bench guard: {fresh_path} missing — bench did not run?")
-        return 0
+    baseline, rc = load_json_file(baseline_path, "baseline")
+    if baseline is None:
+        return rc
+    fresh, rc = load_json_file(fresh_path, "fresh")
+    if fresh is None:
+        return rc
     return guard(baseline, fresh, fresh_path)
 
 
