@@ -6,7 +6,8 @@
 use slec::codes::local_product::{encode_side_parallel, peel_grid_wavefront, LocalProductCode};
 use slec::codes::peeling::plan_peel;
 use slec::linalg::{gemm, BlockBuf, Matrix, Partition};
-use slec::platform::{launch, StragglerModel, WorkProfile};
+use slec::platform::event::{run_phase, EventSim, PhaseState, Pool, Termination};
+use slec::platform::{StragglerModel, WorkProfile};
 use slec::runtime::HostBackend;
 use slec::storage::{MemStore, ObjectStore};
 use slec::util::bench::{banner, black_box, BenchReport, Bencher};
@@ -154,13 +155,27 @@ fn main() {
         report.value("staging_mb_per_s", mbps);
     }
 
-    // Event loop: launch + order statistics over a 3600-worker phase.
+    // Event loop: launch + order statistics over a 3600-worker phase on
+    // an unbounded pool (the regime the deprecated `sim` facade froze).
     let model = StragglerModel::new(Default::default(), Default::default());
     let work = WorkProfile::block_product(2048, 16384, 2048);
     let r = b.bench("phase launch+sort 3600 workers", || {
         let mut rng = Pcg64::new(3);
-        let phase = launch(&model, &work, 3600, &mut rng);
-        black_box(phase.arrival_order())
+        let mut sim = EventSim::unbounded();
+        let mut ph = PhaseState::launch_uniform(
+            &mut sim,
+            &model,
+            &work,
+            3600,
+            0,
+            Termination::WaitAll,
+            &mut rng,
+        );
+        run_phase(&mut sim, &mut ph, &model, &mut rng, &mut |_, _| false);
+        let finish = ph.completion_times();
+        let mut order: Vec<usize> = (0..finish.len()).collect();
+        order.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
+        black_box(order)
     });
     println!(
         "{}  → {:.2} M events/s",
@@ -172,7 +187,6 @@ fn main() {
     // Discrete-event core: a bounded-pool phase pushes every task through
     // the queue twice (start + finish) with FIFO dispatch in between.
     {
-        use slec::platform::event::{run_phase, EventSim, PhaseState, Pool, Termination};
         let r = b.bench("event core 3600 tasks / 512 workers", || {
             let mut rng = Pcg64::new(4);
             let mut sim = EventSim::new(Pool::Workers(512));

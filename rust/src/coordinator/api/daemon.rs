@@ -1,0 +1,653 @@
+//! `slec daemon` — a wall-clock front door onto the simulated service.
+//!
+//! The daemon binds a real TCP socket and speaks the API of
+//! [`super::http::ENDPOINTS`], but the jobs it accepts still *run in
+//! virtual time* on the deterministic event core: each submission is
+//! stamped with the current virtual instant (wall-clock seconds since
+//! start × `time_scale`; `time_scale = 0` freezes the clock, making
+//! live runs fully deterministic for tests) and fed through the exact
+//! `ServiceCore` arrive/drain path that batch `serve` runs use. Job
+//! sim streams are forked from `(seed, arrival seq)`, so the daemon
+//! inherits the service's reproducibility contract wholesale.
+//!
+//! Every submission — including rejected ones, which still consume a
+//! sequence number and an RNG fork — is appended to a submission log.
+//! [`replay_submission_log`] feeds a log back through the same core and
+//! produces a **bit-identical** report: the wall clock only ever enters
+//! the system through the logged arrival stamps.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::coordinator::service::{run_service_with, Offered, ServiceCore};
+use crate::platform::scenario::{ArrivalSpec, Scenario, StorageSpec};
+use crate::platform::straggler::{StragglerParams, WorkerRates};
+use crate::util::json::{obj, Json};
+
+use super::http::{read_request, Request, Response, ENDPOINTS};
+use super::spec::{check_schema_version, parse_job_spec, versioned, SpecContext};
+
+/// Magic/version key identifying a submission-log document.
+pub const LOG_MAGIC: &str = "slec_submission_log";
+
+/// Configuration of a daemon instance. Either a full service scenario
+/// (reusing its fleet, storage, tenants and admission sections) or, by
+/// default, a synthetic single-fleet scenario built from the scalar
+/// knobs below.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    pub seed: u64,
+    /// Fleet size of the default synthetic scenario.
+    pub workers: usize,
+    /// Admission queue depth (0 = unbounded) of the default scenario.
+    pub queue_depth: usize,
+    /// Concurrent in-flight job cap (0 = unbounded) of the default
+    /// scenario.
+    pub max_inflight: usize,
+    /// Virtual seconds per wall-clock second. 0 freezes the virtual
+    /// clock: every submission arrives at t=0 and runs are
+    /// wall-clock-independent.
+    pub time_scale: f64,
+    /// Run against a full service scenario instead of the synthetic
+    /// default (its `arrivals.jobs` count is ignored — jobs come from
+    /// the socket).
+    pub scenario: Option<Scenario>,
+    /// Where to persist the submission log (rewritten on every
+    /// submission and at shutdown).
+    pub log_path: Option<PathBuf>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            addr: "127.0.0.1:7070".into(),
+            seed: 0,
+            workers: 16,
+            queue_depth: 0,
+            max_inflight: 0,
+            time_scale: 1.0,
+            scenario: None,
+            log_path: None,
+        }
+    }
+}
+
+impl DaemonConfig {
+    /// The scenario this daemon runs: the provided one, or a synthetic
+    /// single-fleet scenario with a shared 8-shard object store and the
+    /// configured admission bounds.
+    pub fn to_scenario(&self) -> anyhow::Result<Scenario> {
+        if let Some(sc) = &self.scenario {
+            anyhow::ensure!(
+                sc.arrivals.is_some(),
+                "daemon scenario '{}' has no 'arrivals' section (needed for admission bounds)",
+                sc.name
+            );
+            return Ok(sc.clone());
+        }
+        anyhow::ensure!(self.workers > 0, "daemon needs at least one worker");
+        Ok(Scenario {
+            name: "daemon".into(),
+            description: "ad-hoc submissions over the HTTP API".into(),
+            seed: self.seed,
+            workers: vec![self.workers],
+            straggler: StragglerParams::default(),
+            rates: WorkerRates::default(),
+            storage: Some(StorageSpec {
+                shards: 8,
+                shard_bandwidth_bps: 100e6,
+                latency_s: 0.0,
+                cache_blocks: 0,
+            }),
+            failures: None,
+            progress: None,
+            tenants: vec![],
+            arrivals: Some(ArrivalSpec {
+                jobs: 0,
+                rate_per_s: 0.0,
+                templates: vec![],
+                queue_depth: self.queue_depth,
+                max_inflight: self.max_inflight,
+            }),
+            autoscale: None,
+            jobs: vec![],
+        })
+    }
+}
+
+/// A bound, running daemon: one `ServiceCore` lifetime behind a
+/// listener.
+pub struct Daemon {
+    listener: TcpListener,
+    core: ServiceCore,
+    sc: Scenario,
+    time_scale: f64,
+    started: Instant,
+    last_v: f64,
+    entries: Vec<Json>,
+    log_path: Option<PathBuf>,
+    shutdown: bool,
+}
+
+impl Daemon {
+    /// Bind the listener and build the service core.
+    pub fn bind(cfg: &DaemonConfig) -> anyhow::Result<Daemon> {
+        let sc = cfg.to_scenario()?;
+        let workers = *sc.workers.first().ok_or_else(|| {
+            anyhow::anyhow!("daemon scenario '{}' has an empty workers sweep", sc.name)
+        })?;
+        let core = ServiceCore::new(&sc, workers)?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind '{}': {e}", cfg.addr))?;
+        Ok(Daemon {
+            listener,
+            core,
+            sc,
+            time_scale: cfg.time_scale,
+            started: Instant::now(),
+            last_v: 0.0,
+            entries: Vec::new(),
+            log_path: cfg.log_path.clone(),
+            shutdown: false,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral
+    /// port).
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Current virtual time: monotone over `elapsed × time_scale`.
+    fn virtual_now(&mut self) -> f64 {
+        let v = self.started.elapsed().as_secs_f64() * self.time_scale;
+        if v > self.last_v {
+            self.last_v = v;
+        }
+        self.last_v
+    }
+
+    /// Accept and answer requests until a `POST /v1/shutdown` arrives;
+    /// returns the final (drained) report document.
+    pub fn serve(&mut self) -> anyhow::Result<Json> {
+        while !self.shutdown {
+            let (stream, _) = match self.listener.accept() {
+                Ok(conn) => conn,
+                Err(e) => {
+                    eprintln!("accept: {e}");
+                    continue;
+                }
+            };
+            if let Err(e) = self.handle_conn(stream) {
+                eprintln!("connection: {e}");
+            }
+        }
+        self.write_log()?;
+        self.core.drain()?;
+        self.core.check_drained()?;
+        Ok(self.report_doc())
+    }
+
+    fn handle_conn(&mut self, mut stream: TcpStream) -> anyhow::Result<()> {
+        let response = match read_request(&mut stream) {
+            Ok(req) => self.route(&req),
+            Err(e) => Response::error(e.status, &e.msg),
+        };
+        response.write_to(&mut stream)?;
+        Ok(())
+    }
+
+    /// Dispatch one request. Pure routing — every payload rule lives in
+    /// the canonical spec parser, so the HTTP surface and the CLI speak
+    /// the same error vocabulary.
+    fn route(&mut self, req: &Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => Response::text(200, "ok\n"),
+            ("GET", "/metrics") => Response::text(200, self.metrics_text()),
+            ("GET", "/v1/scenarios") => self.scenarios_response(),
+            ("GET", "/v1/report") => {
+                let v = self.virtual_now();
+                if let Err(e) = self.core.pump_to(v) {
+                    return Response::error(500, &format!("{e:#}"));
+                }
+                let summary = self.core.summary();
+                Response::json(200, &self.partial_report(summary))
+            }
+            ("POST", "/v1/jobs") => self.submit(req),
+            ("POST", "/v1/shutdown") => {
+                self.shutdown = true;
+                // Drain so the shutdown response *is* the final report;
+                // `serve` re-drains (a no-op) before returning it.
+                match self.core.drain().and_then(|()| self.core.check_drained()) {
+                    Ok(()) => Response::json(200, &self.report_doc()),
+                    Err(e) => Response::error(500, &format!("drain failed: {e}")),
+                }
+            }
+            ("GET", path) if path.starts_with("/v1/jobs/") => self.job_status(path),
+            // Known path, wrong method: 405, not 404.
+            (_, path)
+                if path.starts_with("/v1/jobs/")
+                    || ENDPOINTS.iter().any(|(_, p, _)| *p == path) =>
+            {
+                Response::error(405, &format!("method {} not allowed on {path}", req.method))
+            }
+            (_, path) => {
+                let routes: Vec<String> = ENDPOINTS
+                    .iter()
+                    .map(|(m, p, _)| format!("{m} {p}"))
+                    .collect();
+                Response::error(
+                    404,
+                    &format!("no route for '{path}' (routes: {})", routes.join(", ")),
+                )
+            }
+        }
+    }
+
+    /// `POST /v1/jobs`: canonical parse, tenant resolution, virtual
+    /// arrival stamp, admission through the service core, log append.
+    fn submit(&mut self, req: &Request) -> Response {
+        let body = match std::str::from_utf8(&req.body) {
+            Ok(s) => s,
+            Err(_) => return Response::error(400, "body is not UTF-8"),
+        };
+        let raw = match crate::util::json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return Response::error(400, &format!("body is not JSON: {e}")),
+        };
+        let mut spec =
+            match parse_job_spec(&raw, self.sc.storage.as_ref(), SpecContext::Submit) {
+                Ok(s) => s,
+                Err(e) => return Response::error(400, &format!("{e:#}")),
+            };
+        let tenant = match resolve_tenant(&self.sc, spec.tenant.as_deref()) {
+            Ok(t) => t,
+            Err(e) => return Response::error(400, &e),
+        };
+        let arrival = self.virtual_now();
+        spec.arrival = arrival;
+        let seq = self.entries.len();
+        let offered = Offered {
+            seq,
+            arrival,
+            tenant,
+            template: None,
+            spec,
+        };
+        let tenant_name = offered.spec.tenant.clone();
+        if let Err(e) = self.core.arrive(offered) {
+            return Response::error(500, &format!("{e:#}"));
+        }
+        self.entries.push(
+            obj()
+                .field("seq", seq)
+                .field("arrival", arrival)
+                .field(
+                    "tenant",
+                    tenant_name.map_or(Json::Null, |t| Json::from(t.as_str())),
+                )
+                .field("spec", raw)
+                .build(),
+        );
+        if let Err(e) = self.write_log() {
+            return Response::error(500, &format!("writing submission log: {e:#}"));
+        }
+        let state = self.core.job_state(seq).expect("job just arrived");
+        let status = if state.wire().starts_with("rejected") {
+            429
+        } else {
+            202
+        };
+        Response::json(
+            status,
+            &versioned(
+                obj()
+                    .field("seq", seq)
+                    .field("status", state.wire())
+                    .field("arrival", arrival)
+                    .build(),
+            ),
+        )
+    }
+
+    /// `GET /v1/jobs/<seq>`.
+    fn job_status(&mut self, path: &str) -> Response {
+        let tail = &path["/v1/jobs/".len()..];
+        let seq: usize = match tail.parse() {
+            Ok(n) => n,
+            Err(_) => {
+                return Response::error(400, &format!("job id '{tail}' is not an integer"))
+            }
+        };
+        // Catch the core up to the present so "running" vs "done"
+        // reflects the virtual clock (replay-invisible: processing
+        // events early never moves a timestamp).
+        let v = self.virtual_now();
+        if let Err(e) = self.core.pump_to(v) {
+            return Response::error(500, &format!("{e:#}"));
+        }
+        match self.core.job_json(seq) {
+            Some(doc) => Response::json(200, &versioned(doc)),
+            None => Response::error(404, &format!("no job with seq {seq}")),
+        }
+    }
+
+    fn scenarios_response(&self) -> Response {
+        let infos = match super::default_scenario_dir() {
+            Some(dir) => match super::scenario_index(&dir) {
+                Ok(infos) => infos,
+                Err(e) => return Response::error(500, &format!("{e:#}")),
+            },
+            None => Vec::new(),
+        };
+        let items: Vec<Json> = infos
+            .iter()
+            .map(|i| {
+                obj()
+                    .field("name", i.name.as_str())
+                    .field("kind", i.kind)
+                    .field("jobs", i.jobs)
+                    .field("description", i.description.as_str())
+                    .build()
+            })
+            .collect();
+        Response::json(200, &versioned(obj().field("scenarios", Json::Arr(items)).build()))
+    }
+
+    fn metrics_text(&mut self) -> String {
+        let v = self.virtual_now();
+        let _ = self.core.pump_to(v);
+        let s = self.core.stats();
+        let mut out = String::new();
+        for (name, value) in [
+            ("slec_offered_total", s.offered as f64),
+            ("slec_admitted_total", s.admitted as f64),
+            ("slec_rejected_queue_total", s.rejected_queue as f64),
+            ("slec_rejected_quota_total", s.rejected_quota as f64),
+            ("slec_jobs_done_total", s.done as f64),
+            ("slec_jobs_queued", s.queued as f64),
+            ("slec_jobs_inflight", s.inflight as f64),
+            ("slec_workers", s.workers as f64),
+            ("slec_virtual_seconds", s.now),
+        ] {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+        }
+        out
+    }
+
+    /// The versioned report wrapper — shared verbatim with the replay
+    /// path, which is what makes replay bit-identity checkable on the
+    /// whole document.
+    fn report_doc(&mut self) -> Json {
+        let summary = self.core.summary();
+        daemon_report(&self.sc, self.entries.len(), summary)
+    }
+
+    fn partial_report(&mut self, summary: Json) -> Json {
+        daemon_report(&self.sc, self.entries.len(), summary)
+    }
+
+    /// Persist the submission log (whole-file rewrite: logs are small
+    /// and this keeps the file valid JSON at every instant).
+    fn write_log(&self) -> anyhow::Result<()> {
+        let Some(path) = &self.log_path else { return Ok(()) };
+        let doc = obj()
+            .field("slec_submission_log", 1u64)
+            .field("mode", "daemon")
+            .field("seed", self.sc.seed)
+            .field(
+                "config",
+                obj()
+                    .field("workers", self.core.stats().workers)
+                    .field(
+                        "queue_depth",
+                        self.sc.arrivals.as_ref().map_or(0, |a| a.queue_depth),
+                    )
+                    .field(
+                        "max_inflight",
+                        self.sc.arrivals.as_ref().map_or(0, |a| a.max_inflight),
+                    )
+                    .build(),
+            )
+            .field("entries", Json::Arr(self.entries.clone()))
+            .build();
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+        f.write_all(doc.to_string_pretty().as_bytes())?;
+        f.write_all(b"\n")?;
+        Ok(())
+    }
+}
+
+/// Map a submitted tenant name onto the scenario's tenant index.
+/// Anonymous submissions are always allowed (no quota applies); a named
+/// tenant must exist when the scenario defines any.
+fn resolve_tenant(sc: &Scenario, tenant: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(name) = tenant else { return Ok(None) };
+    if sc.tenants.is_empty() {
+        // No tenant sections configured: the name still namespaces the
+        // job's storage keys, but there is no quota slot to bill.
+        return Ok(None);
+    }
+    match sc.tenants.iter().position(|t| t.name == name) {
+        Some(i) => Ok(Some(i)),
+        None => {
+            let known: Vec<&str> = sc.tenants.iter().map(|t| t.name.as_str()).collect();
+            Err(format!(
+                "unknown tenant '{name}' (known: {})",
+                known.join(", ")
+            ))
+        }
+    }
+}
+
+/// The daemon's report wrapper: identifying fields + the service run
+/// summary, stamped with the schema version.
+fn daemon_report(sc: &Scenario, submissions: usize, summary: Json) -> Json {
+    versioned(
+        obj()
+            .field("scenario", sc.name.as_str())
+            .field("seed", sc.seed)
+            .field("submissions", submissions)
+            .field("run", summary)
+            .build(),
+    )
+}
+
+/// The submission log of a batch `serve` run: entries reference the
+/// sampled template by index (the scenario file already holds the
+/// specs), so a replay against the same scenario reconstructs every
+/// offered job loss-free.
+pub fn submission_log(sc: &Scenario) -> anyhow::Result<Json> {
+    let arr = sc
+        .arrivals
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("'{}' has no 'arrivals' section to log", sc.name))?;
+    let offered = crate::coordinator::service::offered_jobs(sc, arr);
+    let entries: Vec<Json> = offered
+        .iter()
+        .map(|o| {
+            obj()
+                .field("seq", o.seq)
+                .field("arrival", o.arrival)
+                .field(
+                    "tenant",
+                    o.tenant.map_or(Json::Null, |i| Json::from(i as u64)),
+                )
+                .field(
+                    "template",
+                    o.template
+                        .map_or(Json::Null, |i| Json::from(i as u64)),
+                )
+                .build()
+        })
+        .collect();
+    Ok(obj()
+        .field("slec_submission_log", 1u64)
+        .field("mode", "serve")
+        .field("seed", sc.seed)
+        .field("entries", Json::Arr(entries))
+        .build())
+}
+
+/// Replay a submission log.
+///
+/// - `mode: "serve"` needs the original scenario (templates live
+///   there); the output is the raw service document — byte-identical to
+///   the `slec serve` artifact of the run that wrote the log.
+/// - `mode: "daemon"` rebuilds the synthetic daemon scenario from the
+///   log's `config` block (or runs against an explicit scenario) and
+///   re-submits every logged spec at its logged virtual arrival; the
+///   output is byte-identical to the daemon's final report.
+pub fn replay_submission_log(log: &Json, scenario: Option<&Scenario>) -> anyhow::Result<Json> {
+    let magic = log
+        .get(LOG_MAGIC)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("not a submission log (missing '{LOG_MAGIC}')"))?;
+    anyhow::ensure!(magic == 1, "unsupported submission-log version {magic}");
+    let mode = log
+        .get("mode")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("submission log has no 'mode'"))?;
+    let entries = log
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("submission log has no 'entries' array"))?;
+    match mode {
+        "serve" => {
+            let sc = scenario.ok_or_else(|| {
+                anyhow::anyhow!("replaying a serve log needs --scenario (templates live there)")
+            })?;
+            let offered = serve_entries_to_offered(sc, entries)?;
+            run_service_with(sc, &offered)
+        }
+        "daemon" => {
+            let sc = match scenario {
+                Some(sc) => sc.clone(),
+                None => daemon_scenario_from_log(log)?,
+            };
+            let workers = *sc.workers.first().ok_or_else(|| {
+                anyhow::anyhow!("scenario '{}' has an empty workers sweep", sc.name)
+            })?;
+            let mut core = ServiceCore::new(&sc, workers)?;
+            for (i, e) in entries.iter().enumerate() {
+                let o = daemon_entry_to_offered(&sc, e, i)?;
+                core.arrive(o)?;
+            }
+            core.drain()?;
+            core.check_drained()?;
+            let summary = core.summary();
+            Ok(daemon_report(&sc, entries.len(), summary))
+        }
+        other => anyhow::bail!("unknown submission-log mode '{other}'"),
+    }
+}
+
+fn serve_entries_to_offered(sc: &Scenario, entries: &[Json]) -> anyhow::Result<Vec<Offered>> {
+    let arr = sc
+        .arrivals
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("scenario '{}' has no 'arrivals' section", sc.name))?;
+    let mut out = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let seq = e
+            .get("seq")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("entry {i}: missing 'seq'"))?;
+        let arrival = e
+            .get("arrival")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("entry {i}: missing 'arrival'"))?;
+        let ti = e
+            .get("template")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("entry {i}: serve logs need a 'template' index"))?;
+        anyhow::ensure!(
+            ti < arr.templates.len(),
+            "entry {i}: template {ti} out of range ({} templates)",
+            arr.templates.len()
+        );
+        let tenant = match e.get("tenant") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let t = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("entry {i}: 'tenant' must be an index"))?;
+                anyhow::ensure!(
+                    t < sc.tenants.len(),
+                    "entry {i}: tenant {t} out of range ({} tenants)",
+                    sc.tenants.len()
+                );
+                Some(t)
+            }
+        };
+        let (_, template) = &arr.templates[ti];
+        let mut spec = template.clone();
+        spec.arrival = arrival;
+        if let Some(t) = tenant {
+            spec.tenant = Some(sc.tenants[t].name.clone());
+        }
+        out.push(Offered {
+            seq,
+            arrival,
+            tenant,
+            template: Some(ti),
+            spec,
+        });
+    }
+    Ok(out)
+}
+
+fn daemon_entry_to_offered(sc: &Scenario, e: &Json, i: usize) -> anyhow::Result<Offered> {
+    let seq = e
+        .get("seq")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("entry {i}: missing 'seq'"))?;
+    let arrival = e
+        .get("arrival")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("entry {i}: missing 'arrival'"))?;
+    let raw = e
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("entry {i}: daemon logs need a 'spec' document"))?;
+    let mut spec = parse_job_spec(raw, sc.storage.as_ref(), SpecContext::Submit)
+        .map_err(|err| anyhow::anyhow!("entry {i}: {err}"))?;
+    let tenant = resolve_tenant(sc, spec.tenant.as_deref())
+        .map_err(|err| anyhow::anyhow!("entry {i}: {err}"))?;
+    spec.arrival = arrival;
+    Ok(Offered {
+        seq,
+        arrival,
+        tenant,
+        template: None,
+        spec,
+    })
+}
+
+/// Rebuild the synthetic daemon scenario from a daemon log's `config`
+/// block.
+fn daemon_scenario_from_log(log: &Json) -> anyhow::Result<Scenario> {
+    let seed = log
+        .get("seed")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("submission log has no 'seed'"))?;
+    let cfgj = log
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("daemon log has no 'config' block; pass --scenario"))?;
+    check_schema_version(log)?;
+    let cfg = DaemonConfig {
+        seed,
+        workers: cfgj
+            .get("workers")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("log config has no 'workers'"))?,
+        queue_depth: cfgj.get("queue_depth").and_then(Json::as_usize).unwrap_or(0),
+        max_inflight: cfgj.get("max_inflight").and_then(Json::as_usize).unwrap_or(0),
+        ..DaemonConfig::default()
+    };
+    cfg.to_scenario()
+}

@@ -1,0 +1,264 @@
+//! A deliberately small HTTP/1.1 layer over `std::net` — just enough
+//! protocol for the daemon's JSON API, with zero dependencies.
+//!
+//! Scope: one request per connection (`Connection: close` semantics),
+//! methods GET/POST, a `Content-Length` body (no chunked encoding), and
+//! hard caps on header and body size so a misbehaving client cannot
+//! balloon memory. Everything the daemon serves is JSON except
+//! `/healthz` and `/metrics`, which follow their conventional plain-text
+//! shapes.
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use crate::util::json::{obj, Json};
+
+use super::spec::SCHEMA_VERSION;
+
+/// Cap on the request line + headers. Anything larger is a client bug.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on a request body (a job spec is a few hundred bytes; scenario
+/// uploads are not a thing on this surface).
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// The daemon's route table: method, path, one-line description. The
+/// single source of truth — `GET /v1/scenarios`-style docs tables in the
+/// README are tested against it, and the 404 handler lists it.
+pub const ENDPOINTS: &[(&str, &str, &str)] = &[
+    ("POST", "/v1/jobs", "submit a job spec; returns seq + admission status"),
+    ("GET", "/v1/jobs/<seq>", "poll one job: queued / running / done + report"),
+    ("GET", "/v1/report", "service report over everything submitted so far"),
+    ("GET", "/v1/scenarios", "list bundled scenario files"),
+    ("GET", "/healthz", "liveness probe (plain text)"),
+    ("GET", "/metrics", "counters in Prometheus text format"),
+    ("POST", "/v1/shutdown", "drain queued jobs, return the final report, stop"),
+];
+
+/// A parsed request: method, path, and raw body bytes.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// A protocol-level failure while reading a request, mapped straight to
+/// a status code by the caller.
+#[derive(Debug)]
+pub struct BadRequest {
+    pub status: u16,
+    pub msg: String,
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> BadRequest {
+    BadRequest {
+        status,
+        msg: msg.into(),
+    }
+}
+
+/// Read one HTTP/1.1 request from a stream. Enforces the header and
+/// body caps; tolerates (and ignores) headers it does not understand.
+pub fn read_request(stream: &mut impl Read) -> Result<Request, BadRequest> {
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    let mut header_bytes = 0usize;
+    read_line(&mut r, &mut line, &mut header_bytes)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| bad(400, "empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| bad(400, "request line has no path"))?
+        .to_string();
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        _ => return Err(bad(400, "not an HTTP/1.x request")),
+    }
+    if method != "GET" && method != "POST" {
+        return Err(bad(405, format!("method '{method}' not allowed (GET or POST)")));
+    }
+    let mut content_length = 0usize;
+    loop {
+        line.clear();
+        read_line(&mut r, &mut line, &mut header_bytes)?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad(400, "unparsable Content-Length"))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(bad(
+            400,
+            format!("body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|e| bad(400, format!("short body: {e}")))?;
+    Ok(Request { method, path, body })
+}
+
+fn read_line(
+    r: &mut impl BufRead,
+    line: &mut String,
+    header_bytes: &mut usize,
+) -> Result<(), BadRequest> {
+    let n = r
+        .read_line(line)
+        .map_err(|e| bad(400, format!("reading request: {e}")))?;
+    if n == 0 {
+        return Err(bad(400, "connection closed mid-request"));
+    }
+    *header_bytes += n;
+    if *header_bytes > MAX_HEADER_BYTES {
+        return Err(bad(400, "request headers exceed the 16 KiB cap"));
+    }
+    Ok(())
+}
+
+/// A response ready to serialize: status, content type and body.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, doc: &Json) -> Self {
+        Response {
+            status,
+            content_type: "application/json",
+            body: doc.to_string_pretty().into_bytes(),
+        }
+    }
+
+    /// A plain-text response (healthz, metrics).
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// An error response: the one error vocabulary of the API surface —
+    /// `{"error": ..., "schema_version": ...}` — so clients parse every
+    /// failure the same way, whichever layer produced it.
+    pub fn error(status: u16, msg: &str) -> Self {
+        let doc = obj()
+            .field("error", msg)
+            .field("schema_version", SCHEMA_VERSION)
+            .build();
+        Response::json(status, &doc)
+    }
+
+    /// Serialize onto the wire.
+    pub fn write_to(&self, stream: &mut impl Write) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Reason phrases for the handful of statuses this surface speaks.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(raw: &str) -> Result<Request, BadRequest> {
+        read_request(&mut raw.as_bytes())
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let r = req("POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"a\":1}")
+            .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/jobs");
+        assert_eq!(r.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn parses_a_get_without_body() {
+        let r = req("GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_protocol_garbage() {
+        assert_eq!(req("").unwrap_err().status, 400);
+        assert_eq!(req("GET /x\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(req("DELETE /x HTTP/1.1\r\n\r\n").unwrap_err().status, 405);
+        assert_eq!(
+            req("POST /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n")
+                .unwrap_err()
+                .status,
+            400
+        );
+        // Declared body longer than what arrives.
+        assert_eq!(
+            req("POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort")
+                .unwrap_err()
+                .status,
+            400
+        );
+        // Body cap.
+        let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 5 << 20);
+        assert_eq!(req(&huge).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn responses_serialize_with_length_and_reason() {
+        let mut out = Vec::new();
+        Response::text(200, "ok").write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\nok"), "{text}");
+    }
+
+    #[test]
+    fn error_bodies_carry_the_schema_version() {
+        let r = Response::error(400, "unknown job key 'speling'");
+        let doc = crate::util::json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(
+            doc.get("error").unwrap().as_str(),
+            Some("unknown job key 'speling'")
+        );
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(SCHEMA_VERSION));
+    }
+}

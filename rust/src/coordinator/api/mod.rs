@@ -1,0 +1,78 @@
+//! The coordinator's public API surface.
+//!
+//! One typed, versioned boundary for everything that crosses into or
+//! out of the system:
+//!
+//! - [`spec`] — the canonical [`parse_job_spec`] every entry point
+//!   (scenario `jobs`, arrival templates, `slec submit`, `slec run`,
+//!   `POST /v1/jobs`) parses through, plus the [`SCHEMA_VERSION`]
+//!   stamped on API-path reports.
+//! - [`http`] — a dependency-free HTTP/1.1 layer and the
+//!   [`ENDPOINTS`] route table.
+//! - [`daemon`] — `slec daemon`: real sockets in front of the
+//!   deterministic service core, with a submission log whose replay is
+//!   bit-identical ([`replay_submission_log`]).
+
+pub mod daemon;
+pub mod http;
+pub mod spec;
+
+pub use daemon::{replay_submission_log, submission_log, Daemon, DaemonConfig, LOG_MAGIC};
+pub use http::{Request, Response, ENDPOINTS};
+pub use spec::{
+    check_schema_version, load_job_spec, parse_job_spec, versioned, SpecContext, SCHEMA_VERSION,
+};
+
+use std::path::{Path, PathBuf};
+
+/// One row of the scenario listing (CLI `slec scenarios` and the
+/// daemon's `GET /v1/scenarios` render the same index).
+#[derive(Debug, Clone)]
+pub struct ScenarioInfo {
+    pub name: String,
+    /// `"service"` (has an `arrivals` section) or `"batch"`.
+    pub kind: &'static str,
+    /// Offered arrivals for a service scenario, explicit job count for
+    /// a batch one.
+    pub jobs: usize,
+    pub description: String,
+    pub path: PathBuf,
+}
+
+/// The conventional scenario directory relative to the working
+/// directory (repo root or `rust/`), if one exists.
+pub fn default_scenario_dir() -> Option<PathBuf> {
+    ["rust/scenarios", "scenarios"]
+        .iter()
+        .map(PathBuf::from)
+        .find(|p| p.is_dir())
+}
+
+/// Parse every `*.json` scenario in `dir`, sorted by file name. A file
+/// that fails to parse fails the listing — a broken bundled scenario
+/// should never be silently hidden.
+pub fn scenario_index(dir: &Path) -> anyhow::Result<Vec<ScenarioInfo>> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    let mut out = Vec::with_capacity(files.len());
+    for path in files {
+        let sc = crate::platform::scenario::parse_scenario(&crate::util::json::load_file(&path)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let (kind, jobs) = match &sc.arrivals {
+            Some(arr) => ("service", arr.jobs),
+            None => ("batch", sc.jobs.len()),
+        };
+        out.push(ScenarioInfo {
+            name: sc.name,
+            kind,
+            jobs,
+            description: sc.description,
+            path,
+        });
+    }
+    Ok(out)
+}

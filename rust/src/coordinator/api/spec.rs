@@ -1,0 +1,270 @@
+//! The canonical, versioned job-spec surface.
+//!
+//! Every way a job enters the system — explicit scenario `jobs`
+//! entries, service arrival templates, `slec submit` ad-hoc specs, the
+//! `slec run` CLI flags and the daemon's `POST /v1/jobs` bodies — parses
+//! through [`parse_job_spec`]: one strict-keyed parser, one validation
+//! path, one error vocabulary (unknown keys fail loudly, naming the
+//! culprit and the known set). The contexts differ only in which
+//! service-side keys they admit, captured by [`SpecContext`].
+//!
+//! Documents may carry an explicit `schema_version`; the current
+//! surface is [`SCHEMA_VERSION`]. Reports emitted by the API path
+//! (submit, daemon, replay) carry the same field, appended via
+//! [`versioned`] so pre-existing golden documents stay byte-identical.
+
+use crate::codes::Scheme;
+use crate::platform::scenario::{
+    ensure_known_keys, parse_failures, parse_progress, JobSpec, StorageSpec,
+};
+use crate::util::json::Json;
+
+/// Version of the JobSpec/JobReport wire surface. Bumped on any
+/// incompatible change to the job-spec keys or the report shape.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Where a job spec is being parsed from — decides which service-side
+/// keys are legal. The base surface (scheme, partitioning, dims,
+/// workers, failures, progress, `schema_version`) is identical
+/// everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecContext {
+    /// Explicit scenario `jobs` entry: no service keys — `tenant`,
+    /// `priority` and `deadline_s` would silently do nothing there, so
+    /// they are rejected as unknown.
+    Batch,
+    /// Service arrival template: service keys plus the template
+    /// `weight`. (`arrival` is additionally forbidden by the template
+    /// parser — times come from the Poisson process.)
+    Template,
+    /// Ad-hoc submission (`slec submit`, `POST /v1/jobs`): service keys,
+    /// no `weight` (there is no template mix to weight against).
+    Submit,
+}
+
+impl SpecContext {
+    fn extra_keys(self) -> &'static [&'static str] {
+        match self {
+            SpecContext::Batch => &[],
+            SpecContext::Template => &["weight", "tenant", "priority", "deadline_s"],
+            SpecContext::Submit => &["tenant", "priority", "deadline_s"],
+        }
+    }
+}
+
+/// Parse one job spec — the single parser behind every entry point.
+/// Strict: unknown keys, wrong types and invalid partitionings are
+/// errors naming the culprit key. `storage` (when the surrounding
+/// scenario has a `storage` section) is needed to validate
+/// shard-aligned failure models.
+pub fn parse_job_spec(
+    j: &Json,
+    storage: Option<&StorageSpec>,
+    ctx: SpecContext,
+) -> anyhow::Result<JobSpec> {
+    let mut known = vec![
+        "schema_version",
+        "scheme",
+        "s_a",
+        "s_b",
+        "dims",
+        "decode_workers",
+        "encode_workers",
+        "arrival",
+        "failures",
+        "progress",
+    ];
+    known.extend_from_slice(ctx.extra_keys());
+    ensure_known_keys("job", j, &known)?;
+    check_schema_version(j)?;
+    let scheme_str = j
+        .get("scheme")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("job needs a 'scheme' string"))?;
+    let scheme = Scheme::parse(scheme_str)?;
+    let s_a = j
+        .get("s_a")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("job needs integer 's_a'"))?;
+    let s_b = j
+        .get("s_b")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("job needs integer 's_b'"))?;
+    let dims = match j.get("dims") {
+        Some(Json::Arr(items)) if items.len() == 3 => {
+            let d: Vec<usize> = items
+                .iter()
+                .map(|it| it.as_usize().unwrap_or(0))
+                .collect();
+            anyhow::ensure!(d.iter().all(|&x| x > 0), "'dims' must be positive");
+            (d[0], d[1], d[2])
+        }
+        Some(Json::Num(_)) => {
+            let n = j.get("dims").unwrap().as_usize().unwrap_or(0);
+            anyhow::ensure!(n > 0, "'dims' must be positive");
+            (n, n, n)
+        }
+        _ => anyhow::bail!("job needs 'dims' (an [m, k, l] array or one cube dim)"),
+    };
+    anyhow::ensure!(s_a > 0 && s_b > 0, "'s_a' and 's_b' must be positive");
+    anyhow::ensure!(dims.0 % s_a == 0, "s_a must divide dims[0]");
+    anyhow::ensure!(dims.2 % s_b == 0, "s_b must divide dims[2]");
+    let decode_workers = j.get("decode_workers").and_then(Json::as_usize).unwrap_or(4);
+    let encode_workers = j.get("encode_workers").and_then(Json::as_usize).unwrap_or(0);
+    let arrival = j.get("arrival").and_then(Json::as_f64).unwrap_or(0.0);
+    anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
+    let failures = parse_failures(j.get("failures"), storage)?;
+    let progress = parse_progress(j.get("progress"))?;
+    let tenant = match j.get("tenant") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| anyhow::anyhow!("job 'tenant' must be a string"))?
+                .to_string(),
+        ),
+    };
+    let priority = match j.get("priority") {
+        None => 0,
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("job 'priority' must be a non-negative integer"))?
+            as u32,
+    };
+    let deadline_s = match j.get("deadline_s") {
+        None => None,
+        Some(v) => {
+            let d = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("job 'deadline_s' must be a number"))?;
+            anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "job 'deadline_s' must be positive"
+            );
+            Some(d)
+        }
+    };
+    // Validate the scheme's parameters against the partitioning through
+    // the same registry instantiation the runner uses.
+    scheme.instantiate(s_a, s_b)?;
+    Ok(JobSpec {
+        scheme,
+        s_a,
+        s_b,
+        dims,
+        decode_workers,
+        encode_workers,
+        arrival,
+        failures,
+        progress,
+        tenant,
+        priority,
+        deadline_s,
+    })
+}
+
+/// Validate an optional `schema_version` key: absent = current, present
+/// = must be an integer equal to [`SCHEMA_VERSION`].
+pub fn check_schema_version(j: &Json) -> anyhow::Result<()> {
+    let Some(v) = j.get("schema_version") else { return Ok(()) };
+    let n = v
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("'schema_version' must be an integer"))?;
+    anyhow::ensure!(
+        n == SCHEMA_VERSION,
+        "unsupported 'schema_version' {n} (this build speaks {SCHEMA_VERSION})"
+    );
+    Ok(())
+}
+
+/// Load a job spec from a file path or inline JSON — the `slec submit`
+/// and daemon front-door convention (a file path if one exists, inline
+/// JSON otherwise), through the canonical parser's `Submit` context.
+pub fn load_job_spec(input: &str) -> anyhow::Result<JobSpec> {
+    let src = match std::fs::read_to_string(input) {
+        Ok(s) => s,
+        Err(_) if input.trim_start().starts_with('{') => input.to_string(),
+        Err(e) => anyhow::bail!("cannot read job spec '{input}': {e}"),
+    };
+    parse_job_spec(
+        &crate::util::json::parse(&src)?,
+        None,
+        SpecContext::Submit,
+    )
+}
+
+/// Stamp a report document with the current [`SCHEMA_VERSION`] —
+/// appended, like the `storage`/`faults` blocks, so documents that
+/// never pass through the API path keep their historical byte shape.
+pub fn versioned(mut doc: Json) -> Json {
+    doc.set("schema_version", Json::from(SCHEMA_VERSION));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn spec_json(extra: &str) -> Json {
+        parse(&format!(
+            r#"{{"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 1000{extra}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn contexts_gate_service_keys() {
+        let j = spec_json(r#", "tenant": "acme", "priority": 2, "deadline_s": 60"#);
+        // Batch rejects service keys, naming the culprit.
+        let err = parse_job_spec(&j, None, SpecContext::Batch)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown job key 'tenant'"), "{err}");
+        // Submit accepts them.
+        let spec = parse_job_spec(&j, None, SpecContext::Submit).unwrap();
+        assert_eq!(spec.tenant.as_deref(), Some("acme"));
+        assert_eq!(spec.priority, 2);
+        assert_eq!(spec.deadline_s, Some(60.0));
+        // Only Template accepts `weight`.
+        let w = spec_json(r#", "weight": 2.0"#);
+        assert!(parse_job_spec(&w, None, SpecContext::Submit).is_err());
+        assert!(parse_job_spec(&w, None, SpecContext::Template).is_ok());
+    }
+
+    #[test]
+    fn schema_version_accepted_current_rejected_other() {
+        let ok = spec_json(r#", "schema_version": 1"#);
+        assert!(parse_job_spec(&ok, None, SpecContext::Batch).is_ok());
+        let bad = spec_json(r#", "schema_version": 2"#);
+        let err = parse_job_spec(&bad, None, SpecContext::Batch)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unsupported 'schema_version' 2"), "{err}");
+        let not_int = spec_json(r#", "schema_version": "one""#);
+        assert!(parse_job_spec(&not_int, None, SpecContext::Batch).is_err());
+    }
+
+    #[test]
+    fn load_job_spec_takes_inline_json_or_file() {
+        let inline = r#"{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}"#;
+        let spec = load_job_spec(inline).unwrap();
+        assert_eq!(spec.scheme.name(), "uncoded");
+        let dir = std::env::temp_dir().join("slec-spec-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.json");
+        std::fs::write(&path, inline).unwrap();
+        let from_file = load_job_spec(path.to_str().unwrap()).unwrap();
+        assert_eq!(from_file.scheme.name(), "uncoded");
+        // Neither a file nor inline JSON: a readable error.
+        assert!(load_job_spec("no-such-file.json").is_err());
+    }
+
+    #[test]
+    fn versioned_appends_the_current_version() {
+        let doc = versioned(crate::util::json::obj().field("x", 1).build());
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        // Appended last, not interleaved.
+        let text = doc.to_string_compact();
+        assert!(text.ends_with(r#""schema_version":1}"#), "{text}");
+    }
+}

@@ -9,6 +9,7 @@
 //! trait; [`driver::run_job`] is the one generic phase driver every
 //! scheme (and workload) executes through.
 
+pub mod api;
 pub mod driver;
 pub mod matmul;
 pub mod matvec;

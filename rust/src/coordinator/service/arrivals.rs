@@ -28,6 +28,11 @@ pub struct Offered {
     /// Index into `Scenario::tenants`; `None` = anonymous (no tenants
     /// section).
     pub tenant: Option<usize>,
+    /// Index into `ArrivalSpec::templates` this job was sampled from;
+    /// `None` for ad-hoc submissions (the daemon path). Lets the
+    /// submission log reference the template instead of serializing the
+    /// whole spec, so a replay reconstructs it loss-free.
+    pub template: Option<usize>,
     pub spec: JobSpec,
 }
 
@@ -45,7 +50,8 @@ pub fn offered_jobs(sc: &Scenario, arr: &ArrivalSpec) -> Vec<Offered> {
     let mut out = Vec::with_capacity(arr.jobs);
     for seq in 0..arr.jobs {
         clock += rng.exponential(arr.rate_per_s);
-        let (_, template) = &arr.templates[rng.categorical(&weights)];
+        let ti = rng.categorical(&weights);
+        let (_, template) = &arr.templates[ti];
         let tenant = match &template.tenant {
             // Parse-time validation guarantees pinned tenants exist.
             Some(name) => Some(
@@ -66,6 +72,7 @@ pub fn offered_jobs(sc: &Scenario, arr: &ArrivalSpec) -> Vec<Offered> {
             seq,
             arrival: clock,
             tenant,
+            template: Some(ti),
             spec,
         });
     }

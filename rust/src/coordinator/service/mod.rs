@@ -17,11 +17,23 @@
 //! recompute — over one shared [`EventSim`]. The RNG contract also
 //! carries over unchanged (DESIGN.md §Coordinator service): per-job
 //! simulation streams are forked from `Pcg64::new(seed)` in arrival
-//! order before anything runs, task durations are sampled at
-//! submission, and the arrival process draws from a separately salted
-//! stream — so every job's timeline is a pure function of `(seed,
-//! arrival seq)`, and admission outcomes, pool size and autoscaling can
-//! never shift a draw.
+//! order, task durations are sampled at submission, and the arrival
+//! process draws from a separately salted stream — so every job's
+//! timeline is a pure function of `(seed, arrival seq)`, and admission
+//! outcomes, pool size and autoscaling can never shift a draw.
+//!
+//! Since the API redesign the run loop lives in `ServiceCore`, an
+//! *incremental* engine: arrivals are fed one at a time (batch `serve`
+//! runs, replayed submission logs and the wall-clock `slec daemon` all
+//! push through the same `arrive`/`drain` methods), so a replayed
+//! submission log is bit-identical to the batch run that logged it.
+//!
+//! When the scenario has a `storage` section, all concurrent service
+//! jobs additionally share one [`ObjectStore`]: every finished job's
+//! report manifest is written under its tenant's key prefix
+//! (`keys::tenant_report`), and the service report gains per-tenant
+//! [`StorageMetrics`] rollups — real manifest writes plus the job's
+//! modeled coded-block read demand from the contention overlay.
 
 mod admission;
 mod arrivals;
@@ -35,11 +47,13 @@ pub use autoscale::{
 };
 
 use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::Arc;
 
-use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::metrics::{LatencyStats, StorageMetrics};
 use crate::platform::event::{EventSim, Pool};
 use crate::platform::scenario::{ArrivalSpec, JobRun, JobSpec, Scenario};
 use crate::platform::straggler::{SlowdownDist, StragglerModel, StragglerParams, WorkerRates};
+use crate::storage::{keys, MemStore, ObjectStore};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg64;
 
@@ -51,11 +65,28 @@ pub fn run_service(sc: &Scenario) -> anyhow::Result<Json> {
         .arrivals
         .as_ref()
         .ok_or_else(|| anyhow::anyhow!("run_service needs an 'arrivals' section"))?;
-    let model = StragglerModel::new(sc.straggler, sc.rates);
     let offered = offered_jobs(sc, arr);
+    run_service_with(sc, &offered)
+}
+
+/// [`run_service`] over an explicit offered-job list instead of the
+/// scenario's Poisson process — the replay path: feeding back the
+/// arrivals recorded in a submission log reproduces the original run's
+/// document byte for byte.
+pub fn run_service_with(sc: &Scenario, offered: &[Offered]) -> anyhow::Result<Json> {
+    let arr = sc
+        .arrivals
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("run_service needs an 'arrivals' section"))?;
     let mut runs = Vec::with_capacity(sc.workers.len());
     for &workers in &sc.workers {
-        runs.push(run_one(sc, arr, &offered, workers, &model)?);
+        let mut core = ServiceCore::new(sc, workers)?;
+        for o in offered {
+            core.arrive(o.clone())?;
+        }
+        core.drain()?;
+        core.check_drained()?;
+        runs.push(core.summary());
     }
     Ok(obj()
         .field("scenario", sc.name.as_str())
@@ -197,6 +228,32 @@ impl Counters {
     }
 }
 
+/// Where one offered job currently is in the service lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum JobState {
+    /// Turned away at admission.
+    Rejected(Rejection),
+    /// Admitted, waiting in the priority queue for an in-flight slot.
+    Queued,
+    /// Dispatched; phases in flight on the shared fleet.
+    Running,
+    /// Finished and folded into the run counters.
+    Done,
+}
+
+impl JobState {
+    /// Wire name used by the daemon's status endpoint.
+    pub(crate) fn wire(&self) -> &'static str {
+        match self {
+            JobState::Rejected(Rejection::QueueFull) => "rejected:queue_full",
+            JobState::Rejected(Rejection::TenantQuota) => "rejected:tenant_quota",
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+        }
+    }
+}
+
 /// Fold one finished job into the run counters and free its admission
 /// slot.
 fn finalize_job(
@@ -230,230 +287,435 @@ fn finalize_job(
     }
 }
 
-/// One service lifetime over one initial fleet size.
-fn run_one(
-    sc: &Scenario,
-    arr: &ArrivalSpec,
-    offered: &[Offered],
+/// One service lifetime over one initial fleet size, fed arrivals
+/// incrementally.
+///
+/// The engine behind both `run_service_with` (batch: all arrivals
+/// pushed back to back) and the wall-clock daemon (arrivals pushed as
+/// sockets deliver them, with [`ServiceCore::pump_to`] advancing the
+/// virtual clock between submissions). The event ordering is exactly
+/// the historical batch loop's: before every processed event, admitted
+/// jobs are dispatched into free in-flight slots; arrivals win ties
+/// with completions; the autoscaler ticks once after every arrival or
+/// completion. Because dispatch never advances the clock and always
+/// runs before the next event is popped, slicing the same arrival
+/// sequence differently across calls cannot move any timestamp — the
+/// bit-identity guarantee the replay path rests on.
+pub(crate) struct ServiceCore {
+    sc: Scenario,
+    arr: ArrivalSpec,
+    model: StragglerModel,
     workers: usize,
-    model: &StragglerModel,
-) -> anyhow::Result<Json> {
-    let mut sim = EventSim::new(Pool::from_option(Some(workers)));
-    // Per-job sim streams, forked in arrival order before anything runs
-    // — the explicit-`jobs` runner's rule with "job index" read as
-    // "arrival seq". Rejected jobs' streams are forked and discarded,
-    // so admission outcomes cannot shift any other job's draws.
-    let mut root = Pcg64::new(sc.seed);
-    let mut streams: Vec<Option<Pcg64>> =
-        (0..offered.len()).map(|i| Some(root.fork(i as u64))).collect();
-    let mut admission = AdmissionController::new(arr, &sc.tenants);
-    let mut autoscaler = match &sc.autoscale {
-        Some(a) => Some(Autoscaler::new(a, workers)?),
-        None => None,
-    };
-    let mut jobs: Vec<Option<JobRun>> = Vec::new();
-    jobs.resize_with(offered.len(), || None);
-    let mut finalized = vec![false; offered.len()];
-    let mut started = vec![f64::NAN; offered.len()];
-    let mut pending: BinaryHeap<Pending> = BinaryHeap::new();
-    let mut inflight = 0usize;
-    let mut next_arrival = 0usize;
-    let mut c = Counters::new(sc.tenants.len());
+    sim: EventSim,
+    /// Per-job stream root; forked once per arrival, in seq order —
+    /// identical streams to the historical up-front forking. Rejected
+    /// jobs' forks are discarded, so admission outcomes cannot shift
+    /// any other job's draws.
+    root: Pcg64,
+    admission: AdmissionController,
+    autoscaler: Option<Autoscaler>,
+    /// All indexed by arrival seq.
+    meta: Vec<Offered>,
+    jobs: Vec<Option<JobRun>>,
+    state: Vec<JobState>,
+    streams: Vec<Option<Pcg64>>,
+    started: Vec<f64>,
+    pending: BinaryHeap<Pending>,
+    inflight: usize,
+    c: Counters,
+    /// Shared across every concurrent job of this service lifetime
+    /// (present exactly when the scenario has a `storage` section).
+    store: Option<Arc<dyn ObjectStore>>,
+    /// Per-tenant storage rollups; anonymous jobs bill to `"-"`.
+    tenant_storage: BTreeMap<String, StorageMetrics>,
+}
 
-    loop {
-        // Dispatch admitted jobs into free in-flight slots, best
-        // priority first.
-        while (arr.max_inflight == 0 || inflight < arr.max_inflight) && !pending.is_empty() {
-            let seq = pending.pop().expect("checked non-empty").seq;
-            let o = &offered[seq];
-            let rng = streams[seq].take().expect("admitted job keeps its stream");
+impl ServiceCore {
+    pub(crate) fn new(sc: &Scenario, workers: usize) -> anyhow::Result<ServiceCore> {
+        let arr = sc
+            .arrivals
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("service core needs an 'arrivals' section"))?
+            .clone();
+        let autoscaler = match &sc.autoscale {
+            Some(a) => Some(Autoscaler::new(a, workers)?),
+            None => None,
+        };
+        let store: Option<Arc<dyn ObjectStore>> = sc
+            .storage
+            .as_ref()
+            .map(|sp| Arc::new(MemStore::with_config(sp.shards, 0)) as Arc<dyn ObjectStore>);
+        Ok(ServiceCore {
+            model: StragglerModel::new(sc.straggler, sc.rates),
+            workers,
+            sim: EventSim::new(Pool::from_option(Some(workers))),
+            root: Pcg64::new(sc.seed),
+            admission: AdmissionController::new(&arr, &sc.tenants),
+            autoscaler,
+            meta: Vec::new(),
+            jobs: Vec::new(),
+            state: Vec::new(),
+            streams: Vec::new(),
+            started: Vec::new(),
+            pending: BinaryHeap::new(),
+            inflight: 0,
+            c: Counters::new(sc.tenants.len()),
+            store,
+            tenant_storage: BTreeMap::new(),
+            arr,
+            sc: sc.clone(),
+        })
+    }
+
+    /// Dispatch admitted jobs into free in-flight slots, best priority
+    /// first.
+    fn dispatch(&mut self) -> anyhow::Result<()> {
+        while (self.arr.max_inflight == 0 || self.inflight < self.arr.max_inflight)
+            && !self.pending.is_empty()
+        {
+            let seq = self.pending.pop().expect("checked non-empty").seq;
+            let rng = self.streams[seq].take().expect("admitted job keeps its stream");
+            let (arrival, spec) = {
+                let o = &self.meta[seq];
+                (o.arrival, o.spec.clone())
+            };
             let mut run = JobRun::new(
                 seq,
-                o.spec.clone(),
-                sc.storage.as_ref(),
-                sc.failures.as_ref(),
-                sc.progress.as_ref(),
+                spec,
+                self.sc.storage.as_ref(),
+                self.sc.failures.as_ref(),
+                self.sc.progress.as_ref(),
                 rng,
             )?;
-            started[seq] = sim.now();
-            c.queue_wait.record(sim.now() - o.arrival);
-            inflight += 1;
-            run.start(&mut sim, model);
+            self.started[seq] = self.sim.now();
+            self.c.queue_wait.record(self.sim.now() - arrival);
+            self.inflight += 1;
+            run.start(&mut self.sim, &self.model);
             let done = run.done;
-            jobs[seq] = Some(run);
+            self.jobs[seq] = Some(run);
+            self.state[seq] = JobState::Running;
             if done {
-                finalized[seq] = true;
-                inflight -= 1;
-                finalize_job(
-                    jobs[seq].as_ref().expect("just stored"),
-                    o,
-                    started[seq],
-                    &mut c,
-                    &mut admission,
-                );
+                self.inflight -= 1;
+                self.finalize(seq);
             }
         }
+        Ok(())
+    }
 
-        // Next cause: arrival or completion, arrival-first on ties —
-        // the same merge rule as the explicit-`jobs` runner.
-        let next_ev = sim.peek_time();
-        let next_arr = (next_arrival < offered.len()).then(|| offered[next_arrival].arrival);
-        match (next_arr, next_ev) {
-            (Some(a), e) if e.is_none_or(|e| a <= e) => {
-                let o = &offered[next_arrival];
-                next_arrival += 1;
-                sim.advance_to(a);
-                if let Some(i) = o.tenant {
-                    c.tenant[i].offered += 1;
-                }
-                match admission.admit(pending.len(), o.tenant) {
-                    Ok(()) => {
-                        c.admitted += 1;
-                        if let Some(i) = o.tenant {
-                            c.tenant[i].admitted += 1;
-                        }
-                        pending.push(Pending {
-                            priority: o.spec.priority,
-                            seq: o.seq,
-                        });
-                    }
-                    Err(Rejection::QueueFull) => {
-                        c.rejected_queue += 1;
-                        if let Some(i) = o.tenant {
-                            c.tenant[i].rejected_queue += 1;
-                        }
-                        streams[o.seq] = None;
-                    }
-                    Err(Rejection::TenantQuota) => {
-                        c.rejected_quota += 1;
-                        if let Some(i) = o.tenant {
-                            c.tenant[i].rejected_quota += 1;
-                        }
-                        streams[o.seq] = None;
-                    }
-                }
+    /// Fold a finished job into the counters, free its admission slot,
+    /// and — when the service has a shared store — persist its report
+    /// manifest under the tenant's key prefix and roll its storage
+    /// traffic into the tenant's metrics.
+    fn finalize(&mut self, seq: usize) {
+        self.state[seq] = JobState::Done;
+        let run = self.jobs[seq].as_ref().expect("finalized job ran");
+        let o = &self.meta[seq];
+        finalize_job(run, o, self.started[seq], &mut self.c, &mut self.admission);
+        if let Some(store) = &self.store {
+            let tenant = o.spec.tenant.as_deref().unwrap_or("-");
+            let body = run.report.to_json().to_string_compact().into_bytes();
+            let m = self.tenant_storage.entry(tenant.to_string()).or_default();
+            m.puts += 1;
+            m.bytes_in += body.len() as u64;
+            if let Some(load) = run.storage_load() {
+                m.gets += load.shard_reads.iter().sum::<u64>();
+                m.bytes_out += load.shard_bytes.iter().sum::<u64>();
             }
-            (_, Some(_)) => {
-                let comp = sim.step().expect("peeked event must pop");
-                let j = comp.job;
-                let run = jobs[j].as_mut().expect("completion routed to a live job");
-                run.on_completion(&mut sim, model, &comp);
-                if run.done && !finalized[j] {
-                    finalized[j] = true;
-                    inflight -= 1;
-                    finalize_job(run, &offered[j], started[j], &mut c, &mut admission);
-                }
-            }
-            (None, None) => break,
-        }
-
-        if let Some(az) = &mut autoscaler {
-            let observation = FleetObservation {
-                time: sim.now(),
-                busy: sim.busy_workers(),
-                queued_tasks: sim.queued_tasks(),
-                queued_jobs: pending.len(),
-                inflight_jobs: inflight,
-                straggle_rate: c.straggle_rate(),
-                death_rate: c.death_rate(),
-            };
-            az.tick(&mut sim, &observation);
+            store.put(&keys::tenant_report(tenant, seq), body);
         }
     }
 
-    anyhow::ensure!(
-        pending.is_empty() && inflight == 0,
-        "service '{}' stranded {} queued and {} running job(s)",
-        sc.name,
-        pending.len(),
-        inflight
-    );
+    /// Process every simulated event strictly before `cutoff`
+    /// (`None` = all of them), dispatching before each and ticking the
+    /// autoscaler after each. Strict `<` implements the arrival-first
+    /// tie rule: an event at exactly the next arrival's time is handled
+    /// *after* that arrival is admitted.
+    fn advance_before(&mut self, cutoff: Option<f64>) -> anyhow::Result<()> {
+        loop {
+            self.dispatch()?;
+            match self.sim.peek_time() {
+                Some(e) if cutoff.is_none_or(|v| e < v) => {
+                    let comp = self.sim.step().expect("peeked event must pop");
+                    let j = comp.job;
+                    let run = self.jobs[j].as_mut().expect("completion routed to a live job");
+                    run.on_completion(&mut self.sim, &self.model, &comp);
+                    if run.done && self.state[j] != JobState::Done {
+                        self.inflight -= 1;
+                        self.finalize(j);
+                    }
+                    self.tick();
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
 
-    let offered_total = offered.len() as u64;
-    debug_assert_eq!(
-        offered_total,
-        c.admitted + c.rejected_queue + c.rejected_quota
-    );
-    let mut run = obj()
-        .field("workers", workers)
-        .field("offered", offered_total)
-        .field("admitted", c.admitted)
-        .field(
-            "rejected",
-            obj()
-                .field("queue_full", c.rejected_queue)
-                .field("tenant_quota", c.rejected_quota)
-                .build(),
-        )
-        .build();
-    if !sc.tenants.is_empty() {
-        let mut tenants = obj().build();
-        for (t, tc) in sc.tenants.iter().zip(&c.tenant) {
-            tenants.set(
-                &t.name,
+    fn tick(&mut self) {
+        if let Some(az) = &mut self.autoscaler {
+            let observation = FleetObservation {
+                time: self.sim.now(),
+                busy: self.sim.busy_workers(),
+                queued_tasks: self.sim.queued_tasks(),
+                queued_jobs: self.pending.len(),
+                inflight_jobs: self.inflight,
+                straggle_rate: self.c.straggle_rate(),
+                death_rate: self.c.death_rate(),
+            };
+            az.tick(&mut self.sim, &observation);
+        }
+    }
+
+    /// Feed the next arrival. Arrivals must come in seq order with
+    /// non-decreasing times; `o.seq` is also the job's sim-stream fork
+    /// index and its `JobRun` index.
+    pub(crate) fn arrive(&mut self, o: Offered) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            o.seq == self.meta.len(),
+            "arrival out of order: got seq {}, expected {}",
+            o.seq,
+            self.meta.len()
+        );
+        self.advance_before(Some(o.arrival))?;
+        let stream = self.root.fork(o.seq as u64);
+        self.sim.advance_to(o.arrival);
+        if let Some(i) = o.tenant {
+            self.c.tenant[i].offered += 1;
+        }
+        let outcome = self.admission.admit(self.pending.len(), o.tenant);
+        let state = match outcome {
+            Ok(()) => {
+                self.c.admitted += 1;
+                if let Some(i) = o.tenant {
+                    self.c.tenant[i].admitted += 1;
+                }
+                self.pending.push(Pending {
+                    priority: o.spec.priority,
+                    seq: o.seq,
+                });
+                JobState::Queued
+            }
+            Err(r @ Rejection::QueueFull) => {
+                self.c.rejected_queue += 1;
+                if let Some(i) = o.tenant {
+                    self.c.tenant[i].rejected_queue += 1;
+                }
+                JobState::Rejected(r)
+            }
+            Err(r @ Rejection::TenantQuota) => {
+                self.c.rejected_quota += 1;
+                if let Some(i) = o.tenant {
+                    self.c.tenant[i].rejected_quota += 1;
+                }
+                JobState::Rejected(r)
+            }
+        };
+        self.streams.push(match state {
+            JobState::Rejected(_) => None,
+            _ => Some(stream),
+        });
+        self.meta.push(o);
+        self.jobs.push(None);
+        self.state.push(state);
+        self.started.push(f64::NAN);
+        self.tick();
+        Ok(())
+    }
+
+    /// Advance the virtual clock through every event strictly before
+    /// `v` — the daemon's between-submissions pump. A no-op for batch
+    /// runs (the next `arrive` performs the same catch-up).
+    pub(crate) fn pump_to(&mut self, v: f64) -> anyhow::Result<()> {
+        self.advance_before(Some(v))
+    }
+
+    /// Run every remaining queued and in-flight job to completion.
+    pub(crate) fn drain(&mut self) -> anyhow::Result<()> {
+        self.advance_before(None)
+    }
+
+    /// After a drain, no job may be stranded.
+    pub(crate) fn check_drained(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pending.is_empty() && self.inflight == 0,
+            "service '{}' stranded {} queued and {} running job(s)",
+            self.sc.name,
+            self.pending.len(),
+            self.inflight
+        );
+        Ok(())
+    }
+
+    /// Current lifecycle state of one offered job (`None` = unknown
+    /// seq).
+    pub(crate) fn job_state(&self, seq: usize) -> Option<JobState> {
+        self.state.get(seq).copied()
+    }
+
+    /// Status document of one offered job for the daemon's
+    /// `GET /v1/jobs/<id>`: seq, state, arrival, tenant, and — once
+    /// done — the full report with its finish time.
+    pub(crate) fn job_json(&self, seq: usize) -> Option<Json> {
+        let state = *self.state.get(seq)?;
+        let o = &self.meta[seq];
+        let mut doc = obj()
+            .field("seq", seq)
+            .field("status", state.wire())
+            .field("arrival", o.arrival)
+            .build();
+        if let Some(t) = &o.spec.tenant {
+            doc.set("tenant", Json::from(t.as_str()));
+        }
+        if state == JobState::Done {
+            let run = self.jobs[seq].as_ref().expect("done job ran");
+            let mut report = run.report.to_json();
+            report.set("finish", Json::from(run.finish));
+            doc.set("report", report);
+        }
+        doc
+    }
+
+    /// Quick counters for the daemon's `/metrics` endpoint.
+    pub(crate) fn stats(&self) -> CoreStats {
+        CoreStats {
+            now: self.sim.now(),
+            offered: self.meta.len() as u64,
+            admitted: self.c.admitted,
+            rejected_queue: self.c.rejected_queue,
+            rejected_quota: self.c.rejected_quota,
+            done: self.c.latency.count() as u64,
+            queued: self.pending.len(),
+            inflight: self.inflight,
+            workers: self.sim.effective_capacity().unwrap_or(0),
+        }
+    }
+
+    /// The run summary document (one entry of the service report's
+    /// `runs` array). Callable mid-flight — the daemon's `/v1/report`
+    /// summarizes whatever has finished so far; after `drain` it is the
+    /// final batch-identical document.
+    pub(crate) fn summary(&mut self) -> Json {
+        let offered_total = self.meta.len() as u64;
+        debug_assert_eq!(
+            offered_total,
+            self.c.admitted + self.c.rejected_queue + self.c.rejected_quota
+        );
+        let c = &mut self.c;
+        let mut run = obj()
+            .field("workers", self.workers)
+            .field("offered", offered_total)
+            .field("admitted", c.admitted)
+            .field(
+                "rejected",
                 obj()
-                    .field("offered", tc.offered)
-                    .field("admitted", tc.admitted)
-                    .field("rejected_queue", tc.rejected_queue)
-                    .field("rejected_quota", tc.rejected_quota)
+                    .field("queue_full", c.rejected_queue)
+                    .field("tenant_quota", c.rejected_quota)
+                    .build(),
+            )
+            .build();
+        if !self.sc.tenants.is_empty() {
+            let mut tenants = obj().build();
+            for (t, tc) in self.sc.tenants.iter().zip(&c.tenant) {
+                tenants.set(
+                    &t.name,
+                    obj()
+                        .field("offered", tc.offered)
+                        .field("admitted", tc.admitted)
+                        .field("rejected_queue", tc.rejected_queue)
+                        .field("rejected_quota", tc.rejected_quota)
+                        .build(),
+                );
+            }
+            run.set("tenants", tenants);
+        }
+        let mut schemes = obj().build();
+        for (name, count) in &c.schemes {
+            schemes.set(name, Json::from(*count));
+        }
+        run.set("schemes", schemes);
+        run.set("latency", c.latency.to_json());
+        run.set("queue_wait", c.queue_wait.to_json());
+        run.set("service", c.service_time.to_json());
+        if c.deadline_offered > 0 {
+            run.set(
+                "deadlines",
+                obj()
+                    .field("offered", c.deadline_offered)
+                    .field("met", c.deadline_met)
+                    .field("missed", c.deadline_offered - c.deadline_met)
                     .build(),
             );
         }
-        run.set("tenants", tenants);
+        if let Some(az) = &self.autoscaler {
+            let spec = self.sc.autoscale.as_ref().expect("autoscaler implies spec");
+            run.set(
+                "fleet",
+                obj()
+                    .field("policy", az.policy_name())
+                    .field("min_workers", spec.min_workers)
+                    .field("max_workers", spec.max_workers)
+                    .field("final", self.sim.effective_capacity().unwrap_or(0))
+                    .field("scale_ups", az.scale_ups)
+                    .field("scale_downs", az.scale_downs)
+                    .field(
+                        "trace",
+                        Json::Arr(
+                            az.trace
+                                .iter()
+                                .map(|&(t, n)| Json::Arr(vec![Json::from(t), Json::from(n)]))
+                                .collect(),
+                        ),
+                    )
+                    .build(),
+            );
+        }
+        if c.faults.any {
+            run.set(
+                "faults",
+                obj()
+                    .field("deaths", c.faults.deaths)
+                    .field("retries", c.faults.retries)
+                    .field("exhausted", c.faults.exhausted)
+                    .field("absorbed", c.faults.absorbed)
+                    .field("degraded_jobs", c.faults.degraded_jobs)
+                    .field("lost_workers", self.sim.lost_workers())
+                    .build(),
+            );
+        }
+        // Shared-store rollup — appended, and only when the scenario
+        // configures storage, so storage-less service goldens (the
+        // whole pre-existing suite) keep their historical byte shape.
+        if let (Some(store), Some(sp)) = (&self.store, &self.sc.storage) {
+            let s = store.stats();
+            let mut tenants = obj().build();
+            for (name, m) in &self.tenant_storage {
+                tenants.set(name, m.to_json());
+            }
+            run.set(
+                "storage",
+                obj()
+                    .field("shards", sp.shards)
+                    .field("objects", store.list("").len())
+                    .field("puts", s.puts)
+                    .field("gets", s.gets)
+                    .field("bytes_in", s.bytes_in)
+                    .field("bytes_out", s.bytes_out)
+                    .field("tenants", tenants)
+                    .build(),
+            );
+        }
+        run
     }
-    let mut schemes = obj().build();
-    for (name, count) in &c.schemes {
-        schemes.set(name, Json::from(*count));
-    }
-    run.set("schemes", schemes);
-    run.set("latency", c.latency.to_json());
-    run.set("queue_wait", c.queue_wait.to_json());
-    run.set("service", c.service_time.to_json());
-    if c.deadline_offered > 0 {
-        run.set(
-            "deadlines",
-            obj()
-                .field("offered", c.deadline_offered)
-                .field("met", c.deadline_met)
-                .field("missed", c.deadline_offered - c.deadline_met)
-                .build(),
-        );
-    }
-    if let Some(az) = &autoscaler {
-        let spec = sc.autoscale.as_ref().expect("autoscaler implies spec");
-        run.set(
-            "fleet",
-            obj()
-                .field("policy", az.policy_name())
-                .field("min_workers", spec.min_workers)
-                .field("max_workers", spec.max_workers)
-                .field("final", sim.effective_capacity().unwrap_or(0))
-                .field("scale_ups", az.scale_ups)
-                .field("scale_downs", az.scale_downs)
-                .field(
-                    "trace",
-                    Json::Arr(
-                        az.trace
-                            .iter()
-                            .map(|&(t, n)| Json::Arr(vec![Json::from(t), Json::from(n)]))
-                            .collect(),
-                    ),
-                )
-                .build(),
-        );
-    }
-    if c.faults.any {
-        run.set(
-            "faults",
-            obj()
-                .field("deaths", c.faults.deaths)
-                .field("retries", c.faults.retries)
-                .field("exhausted", c.faults.exhausted)
-                .field("absorbed", c.faults.absorbed)
-                .field("degraded_jobs", c.faults.degraded_jobs)
-                .field("lost_workers", sim.lost_workers())
-                .build(),
-        );
-    }
-    Ok(run)
+}
+
+/// Snapshot of a [`ServiceCore`]'s admission and fleet counters.
+pub(crate) struct CoreStats {
+    pub(crate) now: f64,
+    pub(crate) offered: u64,
+    pub(crate) admitted: u64,
+    pub(crate) rejected_queue: u64,
+    pub(crate) rejected_quota: u64,
+    pub(crate) done: u64,
+    pub(crate) queued: usize,
+    pub(crate) inflight: usize,
+    pub(crate) workers: usize,
 }

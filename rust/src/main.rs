@@ -5,19 +5,26 @@
 //!   run                  run one coded matmul job and print its report
 //!   mc                   Monte-Carlo validation of Theorems 1–2
 //!   serve <scenario>     run a service scenario (open-loop arrivals)
+//!   daemon               HTTP API over a live service core (see /v1/jobs)
+//!   replay <log.json>    re-run a submission log, bit-identical
 //!   submit <job.json>    run one ad-hoc job through the service path
 //!   scenarios            list the scenario suite with descriptions
 //!   inspect-artifacts    list the AOT artifact manifest
 //!   help                 this text
+//!
+//! Every job spec — scenario `jobs` entries, arrival templates, `submit`
+//! inputs, `run` flags and daemon bodies — parses through the canonical
+//! `coordinator::api` surface: one strict-keyed parser, one error
+//! vocabulary.
 
-use slec::codes::Scheme;
 use slec::config::Config;
+use slec::coordinator::api;
 use slec::coordinator::matmul::{run_matmul, MatmulJob};
 use slec::coordinator::service::submit_one;
 use slec::coordinator::REPORT_HEADERS;
 use slec::figures::{self, RunScale};
 use slec::linalg::Matrix;
-use slec::platform::scenario::{parse_scenario, parse_service_job, run_scenario};
+use slec::platform::scenario::{parse_scenario, run_scenario};
 use slec::platform::straggler::StragglerParams;
 use slec::util::cli::{Args, OptSpec};
 use slec::util::json;
@@ -92,6 +99,8 @@ fn real_main() -> anyhow::Result<()> {
         "run" => cmd_run(&rest),
         "mc" => cmd_mc(&rest),
         "serve" => cmd_serve(&rest),
+        "daemon" => cmd_daemon(&rest),
+        "replay" => cmd_replay(&rest),
         "submit" => cmd_submit(&rest),
         "scenarios" => cmd_scenarios(&rest),
         "inspect-artifacts" => cmd_inspect(&rest),
@@ -115,6 +124,8 @@ fn print_help() {
            run                one coded matmul job, printed report\n\
            mc                 Monte-Carlo validation of Theorems 1 and 2\n\
            serve <scenario>   run a service scenario (open-loop arrivals, admission, autoscale)\n\
+           daemon             serve the HTTP job API on a socket (--addr, --time-scale, --log)\n\
+           replay <log.json>  re-run a submission log; output is bit-identical to the run that wrote it\n\
            submit <job.json>  run one ad-hoc job through the service path, printed report\n\
            scenarios          list the scenario suite with descriptions\n\
            inspect-artifacts  list the AOT artifact manifest\n\n\
@@ -153,7 +164,6 @@ fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
     }
     let cfg = build_config(&args)?;
     let (env, _rt) = cfg.build_env()?;
-    let scheme = Scheme::parse(scheme_arg)?;
     let rows = args.get_usize("rows").map_err(anyhow::Error::msg)?.unwrap();
     let k = args.get_usize("k").map_err(anyhow::Error::msg)?.unwrap();
     let blocks = args.get_usize("blocks").map_err(anyhow::Error::msg)?.unwrap();
@@ -163,13 +173,28 @@ fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?
         .unwrap();
 
+    // The flags become a canonical job document: `run` validates through
+    // the same API parser (scheme registry, divisibility, strict keys)
+    // as every other entry point.
+    let doc = json::obj()
+        .field("scheme", scheme_arg)
+        .field("s_a", blocks)
+        .field("s_b", blocks)
+        .field(
+            "dims",
+            json::Json::Arr(vec![rows.into(), k.into(), rows.into()]),
+        )
+        .field("decode_workers", decode_workers)
+        .build();
+    let spec = api::parse_job_spec(&doc, None, api::SpecContext::Batch)?;
+
     let mut rng = Pcg64::new(cfg.seed);
-    let a = Matrix::randn(rows, k, &mut rng, 0.0, 1.0);
-    let b = Matrix::randn(rows, k, &mut rng, 0.0, 1.0);
+    let a = Matrix::randn(spec.dims.0, spec.dims.1, &mut rng, 0.0, 1.0);
+    let b = Matrix::randn(spec.dims.2, spec.dims.1, &mut rng, 0.0, 1.0);
     let mut builder = MatmulJob::builder()
-        .blocks(blocks, blocks)
-        .scheme(scheme)
-        .decode_workers(decode_workers)
+        .blocks(spec.s_a, spec.s_b)
+        .scheme(spec.scheme.clone())
+        .decode_workers(spec.decode_workers)
         .verify(true)
         .seed(cfg.seed)
         .job_id("cli");
@@ -179,7 +204,7 @@ fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
     let job = builder.build();
     let (_, report) = run_matmul(&env, &a, &b, &job)?;
     println!("{}", render_table(&REPORT_HEADERS, &[report.row()]));
-    println!("{}", report.to_json().to_string_pretty());
+    println!("{}", api::versioned(report.to_json()).to_string_pretty());
     Ok(())
 }
 
@@ -225,6 +250,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         OptSpec { name: "seed", help: "override the scenario seed", takes_value: true, default: None },
         OptSpec { name: "out", help: "write the service report JSON here (default: stdout)", takes_value: true, default: None },
         OptSpec { name: "quick", help: "cap the arrival process at 150 jobs (CI smoke)", takes_value: false, default: None },
+        OptSpec { name: "log", help: "also write the submission log here (replayable via `slec replay`)", takes_value: true, default: None },
     ];
     let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
     let path = args.positional.first().ok_or_else(|| {
@@ -246,7 +272,97 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             arr.jobs = arr.jobs.min(150);
         }
     }
+    if let Some(log) = args.get("log") {
+        // Written before the run: the log is a pure function of the
+        // (possibly seed-overridden, quick-capped) scenario.
+        std::fs::write(log, api::submission_log(&sc)?.to_string_pretty() + "\n")?;
+        eprintln!("wrote submission log {log}");
+    }
     let report = run_scenario(&sc)?;
+    let text = report.to_string_pretty();
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, text + "\n")?;
+            eprintln!("wrote {out}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_daemon(rest: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "addr", help: "bind address (port 0 = ephemeral)", takes_value: true, default: Some("127.0.0.1:7070") },
+        OptSpec { name: "seed", help: "base RNG seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "workers", help: "fleet size", takes_value: true, default: Some("16") },
+        OptSpec { name: "queue-depth", help: "admission queue depth (0 = unbounded)", takes_value: true, default: Some("0") },
+        OptSpec { name: "max-inflight", help: "concurrent in-flight job cap (0 = unbounded)", takes_value: true, default: Some("0") },
+        OptSpec { name: "time-scale", help: "virtual seconds per wall second (0 = frozen clock)", takes_value: true, default: Some("1") },
+        OptSpec { name: "scenario", help: "run against a service scenario file instead of the default fleet", takes_value: true, default: None },
+        OptSpec { name: "log", help: "persist the submission log here (replayable via `slec replay`)", takes_value: true, default: None },
+    ];
+    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+    let scenario = match args.get("scenario") {
+        Some(path) => {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read scenario '{path}': {e}"))?;
+            Some(parse_scenario(&json::parse(&src)?)?)
+        }
+        None => None,
+    };
+    let time_scale = args.get_f64("time-scale").map_err(anyhow::Error::msg)?.unwrap();
+    anyhow::ensure!(
+        time_scale >= 0.0 && time_scale.is_finite(),
+        "--time-scale must be a finite non-negative number"
+    );
+    let cfg = api::DaemonConfig {
+        addr: args.get("addr").unwrap().to_string(),
+        seed: args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap(),
+        workers: args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap(),
+        queue_depth: args.get_usize("queue-depth").map_err(anyhow::Error::msg)?.unwrap(),
+        max_inflight: args.get_usize("max-inflight").map_err(anyhow::Error::msg)?.unwrap(),
+        time_scale,
+        scenario,
+        log_path: args.get("log").map(std::path::PathBuf::from),
+    };
+    let mut daemon = api::Daemon::bind(&cfg)?;
+    eprintln!("slec daemon listening on http://{}", daemon.local_addr()?);
+    eprintln!("POST /v1/shutdown drains the queue and returns the final report");
+    let report = daemon.serve()?;
+    println!("{}", report.to_string_pretty());
+    Ok(())
+}
+
+fn cmd_replay(rest: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "scenario", help: "the scenario the log was recorded against (required for serve logs)", takes_value: true, default: None },
+        OptSpec { name: "seed", help: "override the scenario seed (match the recording run's --seed)", takes_value: true, default: None },
+        OptSpec { name: "quick", help: "cap the arrival process at 150 jobs (match the recording run's --quick)", takes_value: false, default: None },
+        OptSpec { name: "out", help: "write the replayed report JSON here (default: stdout)", takes_value: true, default: None },
+    ];
+    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+    let path = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("replay needs a submission log: slec replay <log.json>")
+    })?;
+    let log = json::load_file(std::path::Path::new(path))?;
+    let scenario = match args.get("scenario") {
+        Some(sp) => {
+            let src = std::fs::read_to_string(sp)
+                .map_err(|e| anyhow::anyhow!("cannot read scenario '{sp}': {e}"))?;
+            let mut sc = parse_scenario(&json::parse(&src)?)?;
+            if let Some(seed) = args.get_u64("seed").map_err(anyhow::Error::msg)? {
+                sc.seed = seed;
+            }
+            if args.flag("quick") {
+                if let Some(arr) = sc.arrivals.as_mut() {
+                    arr.jobs = arr.jobs.min(150);
+                }
+            }
+            Some(sc)
+        }
+        None => None,
+    };
+    let report = api::replay_submission_log(&log, scenario.as_ref())?;
     let text = report.to_string_pretty();
     match args.get("out") {
         Some(out) => {
@@ -270,13 +386,7 @@ fn cmd_submit(rest: &[String]) -> anyhow::Result<()> {
             "submit needs a job spec: slec submit <job.json> (a file path or inline JSON)"
         )
     })?;
-    // A file path if one exists, inline JSON otherwise.
-    let src = match std::fs::read_to_string(input) {
-        Ok(s) => s,
-        Err(_) if input.trim_start().starts_with('{') => input.clone(),
-        Err(e) => anyhow::bail!("cannot read job spec '{input}': {e}"),
-    };
-    let spec = parse_service_job(&json::parse(&src)?)?;
+    let spec = api::load_job_spec(input)?;
     let workers = args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap();
     anyhow::ensure!(workers > 0, "--workers must be ≥ 1");
     let seed = args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap();
@@ -285,7 +395,7 @@ fn cmd_submit(rest: &[String]) -> anyhow::Result<()> {
         straggler.p = p;
     }
     let report = submit_one(&spec, workers, seed, straggler)?;
-    println!("{}", report.to_string_pretty());
+    println!("{}", api::versioned(report).to_string_pretty());
     Ok(())
 }
 
@@ -299,34 +409,20 @@ fn cmd_scenarios(rest: &[String]) -> anyhow::Result<()> {
     let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
     let dir = match args.get("dir") {
         Some(d) => std::path::PathBuf::from(d),
-        None => ["rust/scenarios", "scenarios"]
-            .iter()
-            .map(std::path::PathBuf::from)
-            .find(|p| p.is_dir())
-            .ok_or_else(|| {
-                anyhow::anyhow!("no scenario directory found (tried rust/scenarios, scenarios); use --dir")
-            })?,
+        None => api::default_scenario_dir().ok_or_else(|| {
+            anyhow::anyhow!("no scenario directory found (tried rust/scenarios, scenarios); use --dir")
+        })?,
     };
-    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)?
-        .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| p.extension().is_some_and(|x| x == "json"))
-        .collect();
-    files.sort();
-    anyhow::ensure!(!files.is_empty(), "no *.json scenarios in {}", dir.display());
-    let mut rows = Vec::with_capacity(files.len());
-    for path in &files {
-        let src = std::fs::read_to_string(path)?;
-        let sc = parse_scenario(&json::parse(&src)?)
-            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
-        let (kind, jobs) = match &sc.arrivals {
-            Some(arr) => ("service", arr.jobs),
-            None => ("batch", sc.jobs.len()),
-        };
-        let mut desc: String = sc.description.chars().take(72).collect();
-        if desc.len() < sc.description.len() {
+    // The same index the daemon serves on GET /v1/scenarios.
+    let infos = api::scenario_index(&dir)?;
+    anyhow::ensure!(!infos.is_empty(), "no *.json scenarios in {}", dir.display());
+    let mut rows = Vec::with_capacity(infos.len());
+    for info in infos {
+        let mut desc: String = info.description.chars().take(72).collect();
+        if desc.len() < info.description.len() {
             desc.push('…');
         }
-        rows.push(vec![sc.name, kind.to_string(), jobs.to_string(), desc]);
+        rows.push(vec![info.name, info.kind.to_string(), info.jobs.to_string(), desc]);
     }
     println!("{}", render_table(&["scenario", "kind", "jobs", "description"], &rows));
     Ok(())

@@ -22,6 +22,10 @@ pub mod sim;
 pub mod straggler;
 
 pub use event::{Completion, EventSim, PhaseState, Pool, TaskId, Termination};
+// The legacy phase facade is deprecated but stays re-exported so
+// external callers keep compiling (with a deprecation warning at their
+// use sites) while they migrate to the event core.
+#[allow(deprecated)]
 pub use sim::{earliest_decodable, launch, launch_tasks, recompute_round, speculative, Phase};
 pub use straggler::{
     JobSample, SlowdownDist, StragglerModel, StragglerParams, WorkProfile, WorkerRates,

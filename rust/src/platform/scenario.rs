@@ -197,7 +197,7 @@ pub struct Scenario {
 }
 
 /// Reject unknown keys so config typos fail loudly, naming the bad key.
-fn ensure_known_keys(ctx: &str, j: &Json, known: &[&str]) -> anyhow::Result<()> {
+pub(crate) fn ensure_known_keys(ctx: &str, j: &Json, known: &[&str]) -> anyhow::Result<()> {
     if let Some(fields) = j.as_obj() {
         for (k, _) in fields {
             anyhow::ensure!(
@@ -389,7 +389,7 @@ fn parse_storage(j: Option<&Json>) -> anyhow::Result<Option<StorageSpec>> {
 /// Strict like `parse_storage`: unknown keys and wrong-typed values are
 /// errors, so a typo cannot silently produce an immortal fleet and get
 /// blessed into a golden.
-fn parse_failures(
+pub(crate) fn parse_failures(
     j: Option<&Json>,
     storage: Option<&StorageSpec>,
 ) -> anyhow::Result<Option<FailureModel>> {
@@ -545,7 +545,7 @@ fn parse_failures(
 /// Strict like `parse_failures`: unknown keys and wrong-typed values
 /// are errors, so a typo cannot silently disable slicing and get
 /// blessed into a golden.
-fn parse_progress(j: Option<&Json>) -> anyhow::Result<Option<ProgressCfg>> {
+pub(crate) fn parse_progress(j: Option<&Json>) -> anyhow::Result<Option<ProgressCfg>> {
     let Some(j) = j else { return Ok(None) };
     anyhow::ensure!(
         j.as_obj().is_some(),
@@ -698,9 +698,12 @@ fn parse_arrivals(
             weight.is_finite() && weight > 0.0,
             "template {i}: 'weight' must be positive"
         );
-        let spec =
-            parse_job_with(t, storage, &["weight", "tenant", "priority", "deadline_s"])
-                .map_err(|e| anyhow::anyhow!("template {i}: {e}"))?;
+        let spec = crate::coordinator::api::parse_job_spec(
+            t,
+            storage,
+            crate::coordinator::api::SpecContext::Template,
+        )
+        .map_err(|e| anyhow::anyhow!("template {i}: {e}"))?;
         if let Some(tn) = &spec.tenant {
             anyhow::ensure!(
                 tenants.iter().any(|x| &x.name == tn),
@@ -860,122 +863,20 @@ fn parse_straggler(j: Option<&Json>) -> anyhow::Result<StragglerParams> {
 }
 
 fn parse_job(j: &Json, storage: Option<&StorageSpec>) -> anyhow::Result<JobSpec> {
-    parse_job_with(j, storage, &[])
+    crate::coordinator::api::parse_job_spec(j, storage, crate::coordinator::api::SpecContext::Batch)
 }
 
 /// Parse one ad-hoc service job (the `slec submit` input): an explicit
 /// job object plus the service-only keys, minus `weight` (there is no
-/// template mix to weight against).
+/// template mix to weight against). An alias of the canonical API
+/// parser ([`crate::coordinator::api::parse_job_spec`]) in its
+/// `Submit` context, kept under its historical name.
 pub fn parse_service_job(j: &Json) -> anyhow::Result<JobSpec> {
-    parse_job_with(j, None, &["tenant", "priority", "deadline_s"])
-}
-
-/// [`parse_job`] with extra allowed keys — the service-only fields
-/// (`tenant`, `priority`, `deadline_s`, plus the template `weight`) are
-/// legal in arrival templates and `slec submit` specs but rejected as
-/// unknown keys on explicit `jobs` entries, where they would silently
-/// do nothing.
-pub(crate) fn parse_job_with(
-    j: &Json,
-    storage: Option<&StorageSpec>,
-    extra_known: &[&str],
-) -> anyhow::Result<JobSpec> {
-    let mut known = vec![
-        "scheme",
-        "s_a",
-        "s_b",
-        "dims",
-        "decode_workers",
-        "encode_workers",
-        "arrival",
-        "failures",
-        "progress",
-    ];
-    known.extend_from_slice(extra_known);
-    ensure_known_keys("job", j, &known)?;
-    let scheme_str = j
-        .get("scheme")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow::anyhow!("job needs a 'scheme' string"))?;
-    let scheme = Scheme::parse(scheme_str)?;
-    let s_a = j
-        .get("s_a")
-        .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow::anyhow!("job needs integer 's_a'"))?;
-    let s_b = j
-        .get("s_b")
-        .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow::anyhow!("job needs integer 's_b'"))?;
-    let dims = match j.get("dims") {
-        Some(Json::Arr(items)) if items.len() == 3 => {
-            let d: Vec<usize> = items
-                .iter()
-                .map(|it| it.as_usize().unwrap_or(0))
-                .collect();
-            anyhow::ensure!(d.iter().all(|&x| x > 0), "'dims' must be positive");
-            (d[0], d[1], d[2])
-        }
-        Some(Json::Num(_)) => {
-            let n = j.get("dims").unwrap().as_usize().unwrap_or(0);
-            anyhow::ensure!(n > 0, "'dims' must be positive");
-            (n, n, n)
-        }
-        _ => anyhow::bail!("job needs 'dims' (an [m, k, l] array or one cube dim)"),
-    };
-    anyhow::ensure!(s_a > 0 && s_b > 0, "'s_a' and 's_b' must be positive");
-    anyhow::ensure!(dims.0 % s_a == 0, "s_a must divide dims[0]");
-    anyhow::ensure!(dims.2 % s_b == 0, "s_b must divide dims[2]");
-    let decode_workers = j.get("decode_workers").and_then(Json::as_usize).unwrap_or(4);
-    let encode_workers = j.get("encode_workers").and_then(Json::as_usize).unwrap_or(0);
-    let arrival = j.get("arrival").and_then(Json::as_f64).unwrap_or(0.0);
-    anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
-    let failures = parse_failures(j.get("failures"), storage)?;
-    let progress = parse_progress(j.get("progress"))?;
-    let tenant = match j.get("tenant") {
-        None => None,
-        Some(v) => Some(
-            v.as_str()
-                .ok_or_else(|| anyhow::anyhow!("job 'tenant' must be a string"))?
-                .to_string(),
-        ),
-    };
-    let priority = match j.get("priority") {
-        None => 0,
-        Some(v) => v
-            .as_u64()
-            .ok_or_else(|| anyhow::anyhow!("job 'priority' must be a non-negative integer"))?
-            as u32,
-    };
-    let deadline_s = match j.get("deadline_s") {
-        None => None,
-        Some(v) => {
-            let d = v
-                .as_f64()
-                .ok_or_else(|| anyhow::anyhow!("job 'deadline_s' must be a number"))?;
-            anyhow::ensure!(
-                d.is_finite() && d > 0.0,
-                "job 'deadline_s' must be positive"
-            );
-            Some(d)
-        }
-    };
-    // Validate the scheme's parameters against the partitioning through
-    // the same registry instantiation the runner uses.
-    scheme.instantiate(s_a, s_b)?;
-    Ok(JobSpec {
-        scheme,
-        s_a,
-        s_b,
-        dims,
-        decode_workers,
-        encode_workers,
-        arrival,
-        failures,
-        progress,
-        tenant,
-        priority,
-        deadline_s,
-    })
+    crate::coordinator::api::parse_job_spec(
+        j,
+        None,
+        crate::coordinator::api::SpecContext::Submit,
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -1180,6 +1081,13 @@ impl JobRun {
             progress,
             fault_degraded: false,
         })
+    }
+
+    /// The job's storage-contention demand (`None` when the scenario
+    /// has no `storage` section) — the coordinator service rolls it
+    /// into per-tenant shared-store metrics.
+    pub(crate) fn storage_load(&self) -> Option<&StorageLoad> {
+        self.storage.as_ref()
     }
 
     /// Per-task correlated-slowdown multipliers of one phase (empty =

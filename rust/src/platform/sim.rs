@@ -24,6 +24,12 @@
 //!
 //! Real numerics are computed separately by the coordinator; this module
 //! is purely about *when* things happen on the simulated platform.
+//!
+//! **Deprecated**: every function here is a frozen compatibility shim.
+//! New code should drive [`super::event`] (`PhaseState` +
+//! `run_phase`) directly — it has the same determinism contract plus
+//! bounded pools, worker reuse and multi-job contention. The facade
+//! stays (with its n=0 regression tests) until external callers move.
 
 use crate::platform::event::{run_phase, EventSim, PhaseState, Termination};
 use crate::platform::straggler::{StragglerModel, WorkProfile};
@@ -37,11 +43,14 @@ pub struct Phase {
 }
 
 /// Launch `n` tasks with the same work profile.
+#[deprecated(since = "0.1.0", note = "drive platform::event (PhaseState + run_phase) directly")]
+#[allow(deprecated)] // shims call shims
 pub fn launch(model: &StragglerModel, work: &WorkProfile, n: usize, rng: &mut Pcg64) -> Phase {
     launch_tasks(model, &vec![*work; n], rng)
 }
 
 /// Launch tasks with heterogeneous profiles.
+#[deprecated(since = "0.1.0", note = "drive platform::event (PhaseState + run_phase) directly")]
 pub fn launch_tasks(model: &StragglerModel, works: &[WorkProfile], rng: &mut Pcg64) -> Phase {
     let mut sim = EventSim::unbounded();
     let mut ph = PhaseState::launch(&mut sim, model, works, 0, Termination::WaitAll, rng);
@@ -96,6 +105,7 @@ pub struct SpeculativeOutcome {
 /// tasks have finished, then resubmit every unfinished task on a fresh
 /// worker *without killing the original* — "the worker that finishes
 /// first submits its results" (§I). An empty phase completes at once.
+#[deprecated(since = "0.1.0", note = "drive platform::event (PhaseState + run_phase) directly")]
 pub fn speculative(
     model: &StragglerModel,
     work: &WorkProfile,
@@ -136,6 +146,7 @@ pub fn speculative(
 /// Returns `(stop_time, arrived_mask)`. If the predicate never fires, the
 /// phase degenerates to wait-all with every task arrived; a phase that is
 /// decodable with nothing stops at time 0.
+#[deprecated(since = "0.1.0", note = "drive platform::event (PhaseState + run_phase) directly")]
 pub fn earliest_decodable(
     phase: &Phase,
     mut decodable: impl FnMut(&[bool]) -> bool,
@@ -163,6 +174,8 @@ pub fn earliest_decodable(
 
 /// Recompute stragglers: launch replacement tasks for `missing` at
 /// `start_time`; returns the time all replacements are done.
+#[deprecated(since = "0.1.0", note = "drive platform::event (PhaseState + run_phase) directly")]
+#[allow(deprecated)] // shims call shims
 pub fn recompute_round(
     model: &StragglerModel,
     work: &WorkProfile,
@@ -178,6 +191,7 @@ pub fn recompute_round(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the facade keeps its own regression tests
 mod tests {
     use super::*;
     use crate::platform::straggler::{StragglerParams, WorkerRates};

@@ -462,6 +462,18 @@ pub mod keys {
     pub fn vec_block(job: &str, i: usize) -> String {
         format!("{job}/vec/{i:05}")
     }
+
+    /// Key prefix owning every object a tenant's service jobs write,
+    /// so per-tenant listings and rollups are one prefix scan.
+    /// Anonymous jobs bill to the `"-"` pseudo-tenant.
+    pub fn tenant_prefix(tenant: &str) -> String {
+        format!("svc/{tenant}/")
+    }
+
+    /// Report manifest of service job `seq`, under its tenant's prefix.
+    pub fn tenant_report(tenant: &str, seq: usize) -> String {
+        format!("svc/{tenant}/job{seq:06}/report")
+    }
 }
 
 /// Store a matrix under a key through the zero-copy block surface. The

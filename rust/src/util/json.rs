@@ -576,6 +576,10 @@ fn num_close(a: f64, b: f64) -> bool {
 /// compare with 1e-6 absolute/relative tolerance so goldens can be
 /// hand-written or machine-blessed. One line per divergent field is
 /// appended to `out`.
+///
+/// `schema_version` is structural, not a measurement: when a golden pins
+/// it, the observed value must match *exactly* — no numeric tolerance,
+/// which would let a version drift slide through as "close enough".
 pub fn golden_diff(golden: &Json, got: &Json, path: &str, out: &mut Vec<String>) {
     match golden {
         Json::Null => {}
@@ -594,6 +598,15 @@ pub fn golden_diff(golden: &Json, got: &Json, path: &str, out: &mut Vec<String>)
                     format!("{path}.{k}")
                 };
                 match got.get(k) {
+                    Some(g) if k == "schema_version" => {
+                        if v != g {
+                            out.push(format!(
+                                "{sub}: golden schema_version {} vs observed {}",
+                                v.to_string_compact(),
+                                g.to_string_compact()
+                            ));
+                        }
+                    }
                     Some(g) => golden_diff(v, g, &sub, out),
                     None => out.push(format!("{sub}: missing in observed output")),
                 }
@@ -740,5 +753,27 @@ mod tests {
     #[test]
     fn non_finite_serializes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+    }
+
+    #[test]
+    fn golden_diff_schema_version_is_exact_while_numbers_stay_tolerant() {
+        let golden = parse(r#"{"latency": 1.0, "schema_version": 1}"#).unwrap();
+        // Within tolerance on a measurement, exact on the version: clean.
+        let ok = parse(r#"{"latency": 1.0000001, "schema_version": 1}"#).unwrap();
+        let mut out = Vec::new();
+        golden_diff(&golden, &ok, "", &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // A "close" schema_version is still a hard mismatch.
+        let drifted = parse(r#"{"latency": 1.0, "schema_version": 1.0000001}"#).unwrap();
+        let mut out = Vec::new();
+        golden_diff(&golden, &drifted, "", &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("schema_version"), "{out:?}");
+        // Subset semantics still hold: goldens that never pinned the
+        // version don't start failing when outputs grow one.
+        let unpinned = parse(r#"{"latency": 1.0}"#).unwrap();
+        let mut out = Vec::new();
+        golden_diff(&unpinned, &ok, "", &mut out);
+        assert!(out.is_empty(), "{out:?}");
     }
 }

@@ -1,13 +1,15 @@
-//! Determinism contract of the simulated platform (`platform::sim` +
+//! Determinism contract of the simulated platform (`platform::event` +
 //! `platform::straggler`): all randomness flows through the caller's
 //! `Pcg64`, so two runs with the same seed produce identical job
 //! timelines and straggler sets. The seeding contract is documented in
 //! `platform/straggler.rs`.
+//!
+//! These tests drive the event core (`PhaseState` + `run_phase`)
+//! directly — the deprecated `platform::sim` facade keeps its own
+//! regression tests in-module until it is removed.
 
-use slec::platform::{
-    launch, launch_tasks, recompute_round, speculative, StragglerModel, StragglerParams,
-    WorkProfile, WorkerRates,
-};
+use slec::platform::event::{run_phase, EventSim, PhaseState, Termination};
+use slec::platform::{StragglerModel, StragglerParams, WorkProfile, WorkerRates};
 use slec::util::rng::Pcg64;
 
 fn model() -> StragglerModel {
@@ -18,29 +20,55 @@ fn work() -> WorkProfile {
     WorkProfile::block_product(512, 2048, 512)
 }
 
+/// Run one wait-all phase on an unbounded pool; returns per-task finish
+/// times and straggler mask.
+fn run_wait_all(
+    m: &StragglerModel,
+    works: &[WorkProfile],
+    rng: &mut Pcg64,
+) -> (Vec<f64>, Vec<bool>) {
+    let mut sim = EventSim::unbounded();
+    let mut ph = PhaseState::launch(&mut sim, m, works, 0, Termination::WaitAll, rng);
+    run_phase(&mut sim, &mut ph, m, rng, &mut |_, _| false);
+    (ph.completion_times(), ph.straggled_mask())
+}
+
 #[test]
 fn identical_seed_identical_timeline_and_stragglers() {
     let m = model();
-    let w = work();
+    let works = vec![work(); 500];
     let mut r1 = Pcg64::new(0xDE7E);
     let mut r2 = Pcg64::new(0xDE7E);
-    let p1 = launch(&m, &w, 500, &mut r1);
-    let p2 = launch(&m, &w, 500, &mut r2);
+    let (f1, s1) = run_wait_all(&m, &works, &mut r1);
+    let (f2, s2) = run_wait_all(&m, &works, &mut r2);
     // Bitwise-identical virtual finish times AND straggler masks.
-    assert_eq!(p1.finish, p2.finish);
-    assert_eq!(p1.straggled, p2.straggled);
-    assert_eq!(p1.arrival_order(), p2.arrival_order());
+    assert_eq!(f1, f2);
+    assert_eq!(s1, s2);
 }
 
 #[test]
 fn speculative_outcome_is_deterministic() {
     let m = model();
-    let w = work();
+    let works = vec![work(); 300];
     let run = |seed: u64| {
         let mut rng = Pcg64::new(seed);
-        let phase = launch(&m, &w, 300, &mut rng);
-        let out = speculative(&m, &w, &phase, 0.79, &mut rng);
-        (out.completion, out.makespan, out.trigger_time, out.relaunched)
+        let (finish, straggled) = run_wait_all(&m, &works, &mut rng);
+        let mut sim = EventSim::unbounded();
+        let mut ph = PhaseState::from_durations(
+            &mut sim,
+            &finish,
+            &straggled,
+            works.clone(),
+            0,
+            Termination::Speculative { wait_frac: 0.79 },
+        );
+        run_phase(&mut sim, &mut ph, &m, &mut rng, &mut |_, _| false);
+        (
+            ph.completion_times(),
+            ph.duration(),
+            ph.trigger_time,
+            ph.relaunched,
+        )
     };
     assert_eq!(run(7), run(7));
 }
@@ -55,9 +83,13 @@ fn heterogeneous_launch_and_recompute_deterministic() {
     ];
     let run = |seed: u64| {
         let mut rng = Pcg64::new(seed);
-        let phase = launch_tasks(&m, &works, &mut rng);
-        let t = recompute_round(&m, &works[1], 3, phase.wait_all(), &mut rng);
-        (phase.finish, phase.straggled, t)
+        let (finish, straggled) = run_wait_all(&m, &works, &mut rng);
+        // Recompute round: three replacement tasks starting at the
+        // phase makespan.
+        let makespan = finish.iter().copied().fold(0.0, f64::max);
+        let (replacements, _) = run_wait_all(&m, &vec![works[1]; 3], &mut rng);
+        let t = makespan + replacements.iter().copied().fold(0.0, f64::max);
+        (finish, straggled, t)
     };
     assert_eq!(run(11), run(11));
 }
@@ -65,12 +97,12 @@ fn heterogeneous_launch_and_recompute_deterministic() {
 #[test]
 fn different_seeds_produce_different_timelines() {
     let m = model();
-    let w = work();
+    let works = vec![work(); 200];
     let mut r1 = Pcg64::new(1);
     let mut r2 = Pcg64::new(2);
-    let p1 = launch(&m, &w, 200, &mut r1);
-    let p2 = launch(&m, &w, 200, &mut r2);
-    assert_ne!(p1.finish, p2.finish);
+    let (f1, _) = run_wait_all(&m, &works, &mut r1);
+    let (f2, _) = run_wait_all(&m, &works, &mut r2);
+    assert_ne!(f1, f2);
 }
 
 #[test]
@@ -90,4 +122,19 @@ fn model_holds_no_hidden_state() {
     let a2 = ma.sample_fleet(&w, 64, &mut r1);
     let b2 = mb.sample_fleet(&w, 64, &mut r2);
     assert_eq!(a2, b2);
+}
+
+#[test]
+#[allow(deprecated)]
+fn event_core_matches_the_deprecated_facade() {
+    // The facade is frozen, not broken: until it is removed, its
+    // output must stay bit-identical to driving the event core by hand.
+    let m = model();
+    let works = vec![work(); 64];
+    let mut r1 = Pcg64::new(21);
+    let mut r2 = Pcg64::new(21);
+    let legacy = slec::platform::launch_tasks(&m, &works, &mut r1);
+    let (finish, straggled) = run_wait_all(&m, &works, &mut r2);
+    assert_eq!(legacy.finish, finish);
+    assert_eq!(legacy.straggled, straggled);
 }

@@ -4,7 +4,7 @@
 
 use std::path::{Path, PathBuf};
 
-use slec::coordinator::service::submit_one;
+use slec::coordinator::service::{run_service, submit_one};
 use slec::platform::scenario::{parse_scenario, parse_service_job, run_scenario, Scenario};
 use slec::platform::straggler::StragglerParams;
 use slec::util::json::{self, Json};
@@ -137,4 +137,71 @@ fn submit_runs_one_job_deterministically() {
     // A different seed moves the timings.
     let c = submit_one(&spec, 16, 43, StragglerParams::default()).unwrap();
     assert_ne!(a.to_string_pretty(), c.to_string_pretty());
+}
+
+#[test]
+fn service_with_storage_rolls_up_per_tenant_metrics() {
+    // A service over a shared object store: every finished job persists
+    // its report manifest under its tenant's key prefix, and the run
+    // summary gains a `storage` block with per-tenant rollups.
+    let sc = parse_scenario(
+        &json::parse(
+            r#"{
+                "name": "storage-rollup",
+                "seed": 5,
+                "workers": [12],
+                "storage": {"shards": 4},
+                "tenants": [
+                    {"name": "acme", "weight": 2.0},
+                    {"name": "globex", "weight": 1.0}
+                ],
+                "arrivals": {
+                    "jobs": 30,
+                    "rate_per_s": 0.4,
+                    "max_inflight": 3,
+                    "templates": [
+                        {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 1000},
+                        {"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 1000}
+                    ]
+                }
+            }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let report = run_service(&sc).unwrap();
+    let runs = report.get("runs").unwrap().as_arr().unwrap();
+    let run = &runs[0];
+    let storage = run
+        .get("storage")
+        .expect("scenarios with a 'storage' section report a storage block");
+    assert_eq!(f(storage, "shards"), 4.0);
+    // One manifest put (and one stored object) per finished job.
+    let done = f(run.get("latency").unwrap(), "count");
+    assert!(done > 0.0);
+    assert_eq!(f(storage, "puts"), done);
+    assert_eq!(f(storage, "objects"), done);
+    assert!(f(storage, "bytes_in") > 0.0);
+    // The per-tenant rollups partition the totals exactly.
+    let tenants = storage.get("tenants").unwrap();
+    let Json::Obj(entries) = tenants else {
+        panic!("tenants rollup must be an object")
+    };
+    assert!(!entries.is_empty());
+    let (mut puts, mut bytes_in) = (0.0, 0.0);
+    for (name, m) in entries {
+        assert!(
+            name == "acme" || name == "globex" || name == "-",
+            "unexpected tenant '{name}'"
+        );
+        puts += f(m, "puts");
+        bytes_in += f(m, "bytes_in");
+    }
+    assert_eq!(puts, f(storage, "puts"));
+    assert_eq!(bytes_in, f(storage, "bytes_in"));
+    // The whole document stays deterministic with the store in play.
+    assert_eq!(
+        report.to_string_pretty(),
+        run_service(&sc).unwrap().to_string_pretty()
+    );
 }
