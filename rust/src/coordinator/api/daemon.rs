@@ -19,7 +19,7 @@
 use std::io::Write as _;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::service::{run_service_with, Offered, ServiceCore};
 use crate::platform::scenario::{ArrivalSpec, Scenario, StorageSpec};
@@ -59,6 +59,11 @@ pub struct DaemonConfig {
     /// Where to persist the submission log (rewritten on every
     /// submission and at shutdown).
     pub log_path: Option<PathBuf>,
+    /// Per-connection socket read/write timeout in wall-clock seconds.
+    /// Bounds how long a client that connects and then goes silent (or
+    /// trickles bytes — slow-loris) can pin the accept loop. `0`
+    /// disables the timeout.
+    pub io_timeout_s: f64,
 }
 
 impl Default for DaemonConfig {
@@ -72,6 +77,7 @@ impl Default for DaemonConfig {
             time_scale: 1.0,
             scenario: None,
             log_path: None,
+            io_timeout_s: 10.0,
         }
     }
 }
@@ -105,6 +111,7 @@ impl DaemonConfig {
             }),
             failures: None,
             progress: None,
+            storage_faults: None,
             tenants: vec![],
             arrivals: Some(ArrivalSpec {
                 jobs: 0,
@@ -130,6 +137,7 @@ pub struct Daemon {
     last_v: f64,
     entries: Vec<Json>,
     log_path: Option<PathBuf>,
+    io_timeout: Option<Duration>,
     shutdown: bool,
 }
 
@@ -152,6 +160,8 @@ impl Daemon {
             last_v: 0.0,
             entries: Vec::new(),
             log_path: cfg.log_path.clone(),
+            io_timeout: (cfg.io_timeout_s > 0.0)
+                .then(|| Duration::from_secs_f64(cfg.io_timeout_s)),
             shutdown: false,
         })
     }
@@ -193,6 +203,11 @@ impl Daemon {
     }
 
     fn handle_conn(&mut self, mut stream: TcpStream) -> anyhow::Result<()> {
+        // A silent or trickling client must not pin the accept loop:
+        // bound both directions, and answer a read timeout with 408 so
+        // well-behaved-but-slow clients learn why they were cut off.
+        stream.set_read_timeout(self.io_timeout)?;
+        stream.set_write_timeout(self.io_timeout)?;
         let response = match read_request(&mut stream) {
             Ok(req) => self.route(&req),
             Err(e) => Response::error(e.status, &e.msg),
@@ -373,6 +388,14 @@ impl Daemon {
             ("slec_jobs_inflight", s.inflight as f64),
             ("slec_workers", s.workers as f64),
             ("slec_virtual_seconds", s.now),
+            ("slec_storage_transients_total", s.storage_faults.transients as f64),
+            ("slec_storage_retries_total", s.storage_faults.retries as f64),
+            ("slec_storage_lost_total", s.storage_faults.lost as f64),
+            ("slec_storage_corrupt_total", s.storage_faults.corrupt as f64),
+            (
+                "slec_storage_recovered_total",
+                s.storage_faults.recovered_via_parity as f64,
+            ),
         ] {
             out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
         }

@@ -103,9 +103,25 @@ pub fn read_request(stream: &mut impl Read) -> Result<Request, BadRequest> {
         ));
     }
     let mut body = vec![0u8; content_length];
-    r.read_exact(&mut body)
-        .map_err(|e| bad(400, format!("short body: {e}")))?;
+    r.read_exact(&mut body).map_err(|e| match io_err(e) {
+        b if b.status == 408 => b,
+        b => bad(400, format!("short body: {}", b.msg)),
+    })?;
     Ok(Request { method, path, body })
+}
+
+/// Map a socket read error onto a status: a timeout (the connection's
+/// `set_read_timeout` deadline, surfaced as `WouldBlock` on Unix or
+/// `TimedOut` on Windows) is the client's fault and gets 408 —
+/// everything else is a plain 400.
+fn io_err(e: std::io::Error) -> BadRequest {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            bad(408, "timed out waiting for the request")
+        }
+        _ => bad(400, format!("reading request: {e}")),
+    }
 }
 
 fn read_line(
@@ -113,9 +129,7 @@ fn read_line(
     line: &mut String,
     header_bytes: &mut usize,
 ) -> Result<(), BadRequest> {
-    let n = r
-        .read_line(line)
-        .map_err(|e| bad(400, format!("reading request: {e}")))?;
+    let n = r.read_line(line).map_err(io_err)?;
     if n == 0 {
         return Err(bad(400, "connection closed mid-request"));
     }
@@ -187,6 +201,7 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         _ => "Unknown",
@@ -239,6 +254,14 @@ mod tests {
         // Body cap.
         let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 5 << 20);
         assert_eq!(req(&huge).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn socket_timeouts_map_to_408_everything_else_to_400() {
+        use std::io::{Error, ErrorKind};
+        assert_eq!(io_err(Error::from(ErrorKind::WouldBlock)).status, 408);
+        assert_eq!(io_err(Error::from(ErrorKind::TimedOut)).status, 408);
+        assert_eq!(io_err(Error::from(ErrorKind::ConnectionReset)).status, 400);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use crate::codes::Scheme;
 use crate::platform::scenario::{
-    ensure_known_keys, parse_failures, parse_progress, JobSpec, StorageSpec,
+    ensure_known_keys, parse_failures, parse_progress, parse_storage_faults, JobSpec, StorageSpec,
 };
 use crate::util::json::Json;
 
@@ -25,8 +25,8 @@ pub const SCHEMA_VERSION: u64 = 1;
 
 /// Where a job spec is being parsed from — decides which service-side
 /// keys are legal. The base surface (scheme, partitioning, dims,
-/// workers, failures, progress, `schema_version`) is identical
-/// everywhere.
+/// workers, failures, progress, storage_faults, `schema_version`) is
+/// identical everywhere.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SpecContext {
     /// Explicit scenario `jobs` entry: no service keys — `tenant`,
@@ -73,6 +73,7 @@ pub fn parse_job_spec(
         "arrival",
         "failures",
         "progress",
+        "storage_faults",
     ];
     known.extend_from_slice(ctx.extra_keys());
     ensure_known_keys("job", j, &known)?;
@@ -115,6 +116,7 @@ pub fn parse_job_spec(
     anyhow::ensure!(arrival >= 0.0, "'arrival' must be non-negative");
     let failures = parse_failures(j.get("failures"), storage)?;
     let progress = parse_progress(j.get("progress"))?;
+    let storage_faults = parse_storage_faults(j.get("storage_faults"))?;
     let tenant = match j.get("tenant") {
         None => None,
         Some(v) => Some(
@@ -156,6 +158,7 @@ pub fn parse_job_spec(
         arrival,
         failures,
         progress,
+        storage_faults,
         tenant,
         priority,
         deadline_s,

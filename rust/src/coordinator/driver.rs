@@ -31,13 +31,14 @@
 
 use crate::codes::scheme::{CodingScheme, ComputePolicy, JobShape};
 use crate::coordinator::matmul::{Env, MatmulJob};
-use crate::coordinator::metrics::{JobReport, StorageMetrics};
+use crate::coordinator::metrics::{FaultMetrics, JobReport, StorageMetrics};
 use crate::linalg::blocked::{assemble_grid, GridShape, Partition};
 use crate::linalg::matrix::{BlockBuf, Matrix};
 use crate::platform::event::{run_phase, EventSim, PhaseState, Termination};
 use crate::platform::straggler::{StragglerModel, WorkProfile};
 use crate::runtime::manifest::JobManifest;
-use crate::storage::keys;
+use crate::storage::faults::{RetryPolicy, StorageError, StorageFaultMetrics};
+use crate::storage::{keys, ObjectStore};
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::{parallel_for, parallel_map};
 
@@ -169,8 +170,8 @@ pub fn run_job(
     report.comp.stragglers = comp.stragglers();
     report.comp.relaunched = comp.relaunched;
     report.comp.virtual_secs = comp.duration();
-    let arrived = comp.arrived_mask();
-    let arrival_order = comp.arrival_order().to_vec();
+    let mut arrived = comp.arrived_mask();
+    let mut arrival_order = comp.arrival_order().to_vec();
 
     // Numerics: compute the arrived products only. The rest are the
     // stragglers decode must reconstruct.
@@ -196,6 +197,7 @@ pub fn run_job(
     // `get_block`): the round-trip is exact by construction and the
     // store/cache counters account the same logical wire bytes as the
     // historical serialize-and-parse path.
+    let mut sf = StorageFaultMetrics::default();
     if staged && report.numerics_ok {
         let store = env.store.as_ref();
         let rb = b_coded.len();
@@ -214,11 +216,27 @@ pub fn run_job(
             let blk = grid[*cell].as_ref().expect("filtered to arrived cells");
             store.put_block(key, blk.clone());
         });
+        // Read back through the typed error path. A block that stays
+        // unreadable after the retry budget is not a job failure — it is
+        // demoted to one more *erasure*, exactly what the code was built
+        // to absorb, and decode re-plans from the thinned arrival mask.
+        let mut backoff_secs = 0.0f64;
         for (cell, key) in &out_keys {
-            let blk = store
-                .get_block(key)
-                .ok_or_else(|| anyhow::anyhow!("missing staged block-product: {key}"))?;
-            grid[*cell] = Some(blk);
+            match read_staged_block(store, key, &env.retry, &mut sf, &mut backoff_secs) {
+                Ok(blk) => grid[*cell] = Some(blk),
+                Err(_) => {
+                    sf.lost += 1;
+                    arrived[*cell] = false;
+                    arrival_order.retain(|&c| c != *cell);
+                    grid[*cell] = None;
+                }
+            }
+        }
+        if backoff_secs > 0.0 {
+            // Retries waited in virtual time; the clock carries into the
+            // decode phase and the wait is billed to the decode report.
+            sim.advance_to(sim.now() + backoff_secs);
+            report.dec.virtual_secs += backoff_secs;
         }
     }
 
@@ -232,6 +250,30 @@ pub fn run_job(
         let dec = drive_phase(&mut sim, &env.model, &plan.profiles, term, &mut |_, _| false, rng);
         report.dec.relaunched += dec.relaunched;
         report.dec.virtual_secs += dec.duration();
+    }
+
+    // Storage-loss resolution. A single lost block usually *is*
+    // coverable: the erasure code was provisioned for stragglers, and a
+    // read failure is just one more erasure — decode peels it from the
+    // parities and the job still reports `decode_ok = true`. When the
+    // losses exceed the parity slack, the job degrades honestly: the
+    // blocks are gone from the store, so recomputing them here would
+    // fabricate data the storage tier lost. No panic either way.
+    if sf.lost > 0 {
+        if plan.undecodable == 0 {
+            sf.recovered_via_parity = sf.lost;
+        } else {
+            report
+                .faults
+                .get_or_insert_with(FaultMetrics::default)
+                .degraded = true;
+            report.storage_faults = Some(sf);
+            report.storage = Some(storage_delta(env, &store_before, cache_before));
+            return Ok((Matrix::zeros(a.rows, b.rows), report));
+        }
+    }
+    if sf.any() {
+        report.storage_faults = Some(sf);
     }
 
     // Recompute fallback: unreachable under earliest-decodable
@@ -285,6 +327,40 @@ pub fn run_job(
         &sys,
     );
     Ok((c, report))
+}
+
+/// Read one staged block through the typed-error path with bounded,
+/// deterministic exponential backoff. Transient and corrupt reads are
+/// retried, each retry adding its backoff to the virtual-time bill; a
+/// `NotFound` (the object is gone) is final immediately. A returned
+/// error means the retry budget is exhausted — the caller demotes the
+/// block to an erasure rather than failing the job.
+fn read_staged_block(
+    store: &dyn ObjectStore,
+    key: &str,
+    retry: &RetryPolicy,
+    sf: &mut StorageFaultMetrics,
+    backoff: &mut f64,
+) -> Result<BlockBuf, StorageError> {
+    let mut attempt: u32 = 0;
+    loop {
+        match store.try_get_block(key) {
+            Ok(blk) => return Ok(blk),
+            Err(e) => {
+                match &e {
+                    StorageError::Transient { .. } => sf.transients += 1,
+                    StorageError::Corrupt { .. } => sf.corrupt += 1,
+                    StorageError::NotFound { .. } => {}
+                }
+                if !e.retryable() || attempt >= retry.max_retries {
+                    return Err(e);
+                }
+                attempt += 1;
+                sf.retries += 1;
+                *backoff += retry.backoff(attempt);
+            }
+        }
+    }
 }
 
 /// This job's share of the store/cache counters since `before`.

@@ -30,6 +30,7 @@ use crate::platform::event::{EventSim, Pool};
 use crate::platform::StragglerModel;
 use crate::runtime::ComputeBackend;
 use crate::storage::cache::{BlockCache, CachedStore};
+use crate::storage::faults::RetryPolicy;
 use crate::storage::{MemStore, ObjectStore};
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::num_threads;
@@ -61,6 +62,9 @@ pub struct Env {
     /// legacy behaviour); `Some(w)` ⇒ at most `w` concurrent workers,
     /// with excess tasks queueing FIFO.
     pub pool: Option<usize>,
+    /// Retry/backoff policy for staged block-product read-back — how
+    /// hard the driver tries before demoting a block to an erasure.
+    pub retry: RetryPolicy,
 }
 
 /// Builder for [`Env`] — the one source of environment defaults
@@ -74,6 +78,7 @@ pub struct EnvBuilder {
     threads: Option<usize>,
     pool: Option<usize>,
     cache_bytes: usize,
+    retry: Option<RetryPolicy>,
 }
 
 impl EnvBuilder {
@@ -114,6 +119,13 @@ impl EnvBuilder {
         self
     }
 
+    /// Retry/backoff policy for staged block reads (default:
+    /// [`RetryPolicy::default`] — 3 retries, 1 s exponential backoff).
+    pub fn retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = Some(retry);
+        self
+    }
+
     pub fn build(self) -> Env {
         let base: Arc<dyn ObjectStore> = self.store.unwrap_or_else(|| Arc::new(MemStore::new()));
         let (store, cache) = if self.cache_bytes > 0 {
@@ -134,6 +146,7 @@ impl EnvBuilder {
                 .unwrap_or_else(|| StragglerModel::new(Default::default(), Default::default())),
             threads: self.threads.unwrap_or_else(num_threads),
             pool: self.pool,
+            retry: self.retry.unwrap_or_default(),
         }
     }
 }

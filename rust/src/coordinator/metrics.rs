@@ -1,6 +1,7 @@
 //! Job metrics: the `T_enc + T_comp + T_dec` decomposition the paper's
 //! evaluation revolves around (Fig 2), plus communication accounting.
 
+use crate::storage::faults::StorageFaultMetrics;
 use crate::util::json::{obj, Json};
 
 /// One phase's virtual-time outcome.
@@ -159,6 +160,9 @@ pub struct JobReport {
     /// Sub-task progress outcome; `None` when the run has no
     /// `"progress"` section (keeps pre-progress reports byte-identical).
     pub progress: Option<ProgressMetrics>,
+    /// Storage-fault outcome; `None` unless at least one fault event
+    /// touched this job (keeps pre-fault reports byte-identical).
+    pub storage_faults: Option<StorageFaultMetrics>,
 }
 
 impl JobReport {
@@ -175,6 +179,7 @@ impl JobReport {
             storage: None,
             faults: None,
             progress: None,
+            storage_faults: None,
         }
     }
 
@@ -208,6 +213,9 @@ impl JobReport {
         }
         if let Some(p) = &self.progress {
             doc.set("progress", p.to_json());
+        }
+        if let Some(sf) = &self.storage_faults {
+            doc.set("storage_faults", sf.to_json());
         }
         doc
     }
@@ -409,6 +417,26 @@ mod tests {
         assert_eq!(p.get("slices_arrived").unwrap().as_u64(), Some(96));
         assert_eq!(p.get("remainders_stolen").unwrap().as_u64(), Some(2));
         assert_eq!(p.get("exploited_flops").unwrap().as_f64(), Some(1.5e9));
+    }
+
+    #[test]
+    fn storage_faults_block_appears_only_when_present() {
+        let mut r = JobReport::new("local-product");
+        assert!(r.to_json().get("storage_faults").is_none());
+        r.storage_faults = Some(StorageFaultMetrics {
+            transients: 5,
+            retries: 6,
+            lost: 1,
+            corrupt: 2,
+            recovered_via_parity: 1,
+        });
+        let j = r.to_json();
+        let sf = j.get("storage_faults").expect("storage_faults block");
+        assert_eq!(sf.get("transients").unwrap().as_u64(), Some(5));
+        assert_eq!(sf.get("retries").unwrap().as_u64(), Some(6));
+        assert_eq!(sf.get("lost").unwrap().as_u64(), Some(1));
+        assert_eq!(sf.get("corrupt").unwrap().as_u64(), Some(2));
+        assert_eq!(sf.get("recovered_via_parity").unwrap().as_u64(), Some(1));
     }
 
     #[test]

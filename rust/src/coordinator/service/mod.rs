@@ -53,6 +53,7 @@ use crate::coordinator::metrics::{LatencyStats, StorageMetrics};
 use crate::platform::event::{EventSim, Pool};
 use crate::platform::scenario::{ArrivalSpec, JobRun, JobSpec, Scenario};
 use crate::platform::straggler::{SlowdownDist, StragglerModel, StragglerParams, WorkerRates};
+use crate::storage::faults::StorageFaultMetrics;
 use crate::storage::{keys, MemStore, ObjectStore};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg64;
@@ -127,7 +128,7 @@ pub fn submit_one(
     let model = StragglerModel::new(straggler, WorkerRates::default());
     let mut sim = EventSim::new(Pool::from_option(Some(workers)));
     let mut root = Pcg64::new(seed);
-    let mut run = JobRun::new(0, spec.clone(), None, None, None, root.fork(0))?;
+    let mut run = JobRun::new(0, spec.clone(), None, None, None, None, seed, root.fork(0))?;
     run.start(&mut sim, &model);
     while let Some(c) = sim.step() {
         run.on_completion(&mut sim, &model, &c);
@@ -190,6 +191,9 @@ struct Counters {
     total_tasks: u64,
     total_stragglers: u64,
     faults: FaultAgg,
+    /// Storage-fault rollup; reported only when some job observed one.
+    storage_faults: StorageFaultMetrics,
+    storage_faults_any: bool,
 }
 
 impl Counters {
@@ -208,6 +212,8 @@ impl Counters {
             total_tasks: 0,
             total_stragglers: 0,
             faults: FaultAgg::default(),
+            storage_faults: StorageFaultMetrics::default(),
+            storage_faults_any: false,
         }
     }
 
@@ -284,6 +290,10 @@ fn finalize_job(
         c.faults.exhausted += f.exhausted;
         c.faults.absorbed += f.absorbed;
         c.faults.degraded_jobs += f.degraded as u64;
+    }
+    if let Some(sf) = &r.storage_faults {
+        c.storage_faults_any = true;
+        c.storage_faults.add(sf);
     }
 }
 
@@ -385,6 +395,8 @@ impl ServiceCore {
                 self.sc.storage.as_ref(),
                 self.sc.failures.as_ref(),
                 self.sc.progress.as_ref(),
+                self.sc.storage_faults.as_ref(),
+                self.sc.seed,
                 rng,
             )?;
             self.started[seq] = self.sim.now();
@@ -586,6 +598,7 @@ impl ServiceCore {
             queued: self.pending.len(),
             inflight: self.inflight,
             workers: self.sim.effective_capacity().unwrap_or(0),
+            storage_faults: self.c.storage_faults,
         }
     }
 
@@ -681,6 +694,12 @@ impl ServiceCore {
                     .build(),
             );
         }
+        // Storage-fault rollup — appended, and only when some job
+        // actually observed a fault event, so fault-free runs keep
+        // their historical byte shape.
+        if c.storage_faults_any {
+            run.set("storage_faults", c.storage_faults.to_json());
+        }
         // Shared-store rollup — appended, and only when the scenario
         // configures storage, so storage-less service goldens (the
         // whole pre-existing suite) keep their historical byte shape.
@@ -718,4 +737,5 @@ pub(crate) struct CoreStats {
     pub(crate) queued: usize,
     pub(crate) inflight: usize,
     pub(crate) workers: usize,
+    pub(crate) storage_faults: StorageFaultMetrics,
 }

@@ -300,6 +300,7 @@ fn cmd_daemon(rest: &[String]) -> anyhow::Result<()> {
         OptSpec { name: "time-scale", help: "virtual seconds per wall second (0 = frozen clock)", takes_value: true, default: Some("1") },
         OptSpec { name: "scenario", help: "run against a service scenario file instead of the default fleet", takes_value: true, default: None },
         OptSpec { name: "log", help: "persist the submission log here (replayable via `slec replay`)", takes_value: true, default: None },
+        OptSpec { name: "io-timeout", help: "per-connection socket read/write timeout in seconds (0 = none)", takes_value: true, default: Some("10") },
     ];
     let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
     let scenario = match args.get("scenario") {
@@ -315,6 +316,11 @@ fn cmd_daemon(rest: &[String]) -> anyhow::Result<()> {
         time_scale >= 0.0 && time_scale.is_finite(),
         "--time-scale must be a finite non-negative number"
     );
+    let io_timeout_s = args.get_f64("io-timeout").map_err(anyhow::Error::msg)?.unwrap();
+    anyhow::ensure!(
+        io_timeout_s >= 0.0 && io_timeout_s.is_finite(),
+        "--io-timeout must be a finite non-negative number"
+    );
     let cfg = api::DaemonConfig {
         addr: args.get("addr").unwrap().to_string(),
         seed: args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap(),
@@ -324,6 +330,7 @@ fn cmd_daemon(rest: &[String]) -> anyhow::Result<()> {
         time_scale,
         scenario,
         log_path: args.get("log").map(std::path::PathBuf::from),
+        io_timeout_s,
     };
     let mut daemon = api::Daemon::bind(&cfg)?;
     eprintln!("slec daemon listening on http://{}", daemon.local_addr()?);

@@ -39,6 +39,7 @@ use crate::platform::straggler::{
     CorrelatedSlowdown, FailureModel, SlowdownDist, StragglerModel, StragglerParams,
     WorkerClass, WorkerRates,
 };
+use crate::storage::faults::{StorageFaultMetrics, StorageFaultSpec, STORAGE_FAULT_SALT};
 use crate::storage::{keys, shard_of};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg64;
@@ -62,6 +63,10 @@ pub struct JobSpec {
     /// Per-job progress config; **fully replaces** the scenario-level
     /// one when present (no field merging). `None` = inherit.
     pub progress: Option<ProgressCfg>,
+    /// Per-job storage-fault model; **fully replaces** the
+    /// scenario-level one when present (no field merging). `None` =
+    /// inherit.
+    pub storage_faults: Option<StorageFaultSpec>,
     /// Tenant this job bills to. Only meaningful (and only parseable) in
     /// service mode — plain `jobs` entries reject the key.
     pub tenant: Option<String>,
@@ -183,6 +188,11 @@ pub struct Scenario {
     /// `None` = opaque attempts (the historical behaviour,
     /// golden-pinned — absent ⇒ zero extra RNG draws).
     pub progress: Option<ProgressCfg>,
+    /// Optional storage fault injection (the `"storage_faults"`
+    /// section); `None` **or inert** (all probabilities zero) = the
+    /// perfect store (the historical behaviour, golden-pinned — absent
+    /// or inert ⇒ zero extra RNG draws).
+    pub storage_faults: Option<StorageFaultSpec>,
     /// Tenants of a service scenario; empty unless `arrivals` is set.
     pub tenants: Vec<TenantSpec>,
     /// Open-loop arrival process; `Some` switches [`run_scenario`] to
@@ -225,6 +235,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
             "storage",
             "failures",
             "progress",
+            "storage_faults",
             "tenants",
             "arrivals",
             "autoscale",
@@ -269,6 +280,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
     let storage = parse_storage(doc.get("storage"))?;
     let failures = parse_failures(doc.get("failures"), storage.as_ref())?;
     let progress = parse_progress(doc.get("progress"))?;
+    let storage_faults = parse_storage_faults(doc.get("storage_faults"))?;
 
     let tenants = parse_tenants(doc.get("tenants"))?;
     let arrivals = parse_arrivals(doc.get("arrivals"), storage.as_ref(), &tenants)?;
@@ -326,6 +338,7 @@ pub fn parse_scenario(doc: &Json) -> anyhow::Result<Scenario> {
         storage,
         failures,
         progress,
+        storage_faults,
         tenants,
         arrivals,
         autoscale,
@@ -588,6 +601,77 @@ pub(crate) fn parse_progress(j: Option<&Json>) -> anyhow::Result<Option<Progress
         );
     }
     Ok(Some(cfg))
+}
+
+/// Parse the optional `"storage_faults"` section (scenario- or
+/// job-level). Strict like `parse_storage`: unknown keys and wrong-typed
+/// values are errors, so a typo cannot silently yield a perfect store
+/// and get blessed into a golden.
+pub(crate) fn parse_storage_faults(j: Option<&Json>) -> anyhow::Result<Option<StorageFaultSpec>> {
+    let Some(j) = j else { return Ok(None) };
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "'storage_faults' must be an object, got {}",
+        j.to_string_compact()
+    );
+    ensure_known_keys(
+        "storage_faults",
+        j,
+        &[
+            "transient_p",
+            "throttle_s",
+            "loss_p",
+            "corrupt_p",
+            "max_retries",
+            "backoff_s",
+        ],
+    )?;
+    let mut spec = StorageFaultSpec::default();
+    let prob = |key: &str, default: f64| -> anyhow::Result<f64> {
+        let Some(v) = j.get(key) else {
+            return Ok(default);
+        };
+        let p = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'storage_faults.{key}' must be a number"))?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&p),
+            "'storage_faults.{key}' must be a probability in [0, 1]"
+        );
+        Ok(p)
+    };
+    spec.transient_p = prob("transient_p", spec.transient_p)?;
+    spec.loss_p = prob("loss_p", spec.loss_p)?;
+    spec.corrupt_p = prob("corrupt_p", spec.corrupt_p)?;
+    if let Some(v) = j.get("throttle_s") {
+        spec.throttle_s = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'storage_faults.throttle_s' must be a number"))?;
+        anyhow::ensure!(
+            spec.throttle_s.is_finite() && spec.throttle_s >= 0.0,
+            "'storage_faults.throttle_s' must be non-negative"
+        );
+    }
+    if let Some(v) = j.get("max_retries") {
+        let n = v
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("'storage_faults.max_retries' must be an integer"))?;
+        anyhow::ensure!(
+            n <= u32::MAX as u64,
+            "'storage_faults.max_retries' is out of range"
+        );
+        spec.max_retries = n as u32;
+    }
+    if let Some(v) = j.get("backoff_s") {
+        spec.backoff_s = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'storage_faults.backoff_s' must be a number"))?;
+        anyhow::ensure!(
+            spec.backoff_s.is_finite() && spec.backoff_s >= 0.0,
+            "'storage_faults.backoff_s' must be non-negative"
+        );
+    }
+    Ok(Some(spec))
 }
 
 /// Parse the optional `tenants` array (service mode). Strict like every
@@ -1008,6 +1092,35 @@ enum Stage {
     Recompute,
 }
 
+/// Timing-land storage faults of one job — the scenario runner's
+/// counterpart of `storage::faults::FaultyStore` (which wraps a real
+/// store on the coordinator path). All draws come from a dedicated
+/// stream forked off `Pcg64::new(seed ^ STORAGE_FAULT_SALT)` per job
+/// index, so an absent or inert `"storage_faults"` section consumes
+/// zero draws from the job's main stream and every fault-free golden
+/// stays byte-identical.
+///
+/// Draw order (pinned by the golden; see DESIGN.md §Storage faults),
+/// each knob gated on its own probability:
+/// 1. `loss_p` — one draw per coded *input* block: a-side rows `0..ra`,
+///    then b-side cols `0..rb` (1-D schemes: one draw per input pair).
+///    A lost block erases every grid cell that reads it.
+/// 2. `transient_p` — one draw per compute task; a hit is one re-read,
+///    delaying the task by `throttle_s`.
+/// 3. `corrupt_p` — one draw per compute task; a detected corruption is
+///    also one re-read plus `throttle_s` (the digest catches it, the
+///    worker fetches again).
+struct SFaultState {
+    spec: StorageFaultSpec,
+    rng: Pcg64,
+    /// Grid cells erased by lost input blocks (empty = none lost).
+    lost_cells: Vec<bool>,
+    metrics: StorageFaultMetrics,
+    /// Losses exceeded the code's parity slack: the job's output is
+    /// honestly incomplete.
+    degraded: bool,
+}
+
 /// One job's pipeline advancing through the shared event queue; drives
 /// the job's [`CodingScheme`] phase plans (timing only) — the same
 /// contract the coordinator's generic driver executes numerically.
@@ -1043,6 +1156,9 @@ pub(crate) struct JobRun {
     /// Some phase of this job settled without all its work (permanent
     /// worker deaths): the job's output is incomplete by construction.
     fault_degraded: bool,
+    /// Effective storage-fault state: the job-level override when
+    /// present, else the scenario default; `None` when absent or inert.
+    sfault: Option<SFaultState>,
 }
 
 impl JobRun {
@@ -1052,6 +1168,8 @@ impl JobRun {
         storage: Option<&StorageSpec>,
         failures: Option<&FailureModel>,
         progress: Option<&ProgressCfg>,
+        storage_faults: Option<&StorageFaultSpec>,
+        fault_seed: u64,
         rng: Pcg64,
     ) -> anyhow::Result<JobRun> {
         let scheme = spec.scheme.instantiate(spec.s_a, spec.s_b)?;
@@ -1063,6 +1181,20 @@ impl JobRun {
             .map(|sp| storage_overlay(sp, &format!("job{index}"), scheme.as_ref(), &shape));
         let faults = spec.failures.clone().or_else(|| failures.cloned());
         let progress = spec.progress.or_else(|| progress.copied());
+        // Fresh salted root per job (not a fork of the job stream): the
+        // fault timeline is a pure function of (fault_seed, job index)
+        // and an inert spec touches no stream at all.
+        let sfault = spec
+            .storage_faults
+            .or_else(|| storage_faults.copied())
+            .filter(StorageFaultSpec::any)
+            .map(|sfspec| SFaultState {
+                spec: sfspec,
+                rng: Pcg64::new(fault_seed ^ STORAGE_FAULT_SALT).fork(index as u64),
+                lost_cells: Vec::new(),
+                metrics: StorageFaultMetrics::default(),
+                degraded: false,
+            });
         Ok(JobRun {
             index,
             spec,
@@ -1080,6 +1212,7 @@ impl JobRun {
             faults,
             progress,
             fault_degraded: false,
+            sfault,
         })
     }
 
@@ -1183,17 +1316,105 @@ impl JobRun {
         ));
     }
 
+    /// Draw this job's storage faults at compute launch (see
+    /// [`SFaultState`] for the pinned draw order) and return the
+    /// per-task re-read delays to fold into the I/O overlay (empty =
+    /// none).
+    fn draw_storage_faults(&mut self, n: usize) -> Vec<f64> {
+        let (ra, rb) = self.scheme.coded_grid_dims();
+        let one_d = ra == 1;
+        let Some(sf) = &mut self.sfault else {
+            return Vec::new();
+        };
+        let s = sf.spec;
+        if s.loss_p > 0.0 {
+            let mut lost = vec![false; n];
+            if one_d {
+                // 1-D layout: cell c reads exactly input pair c.
+                for l in lost.iter_mut() {
+                    if sf.rng.bernoulli(s.loss_p) {
+                        sf.metrics.lost += 1;
+                        *l = true;
+                    }
+                }
+            } else {
+                for r in 0..ra {
+                    if sf.rng.bernoulli(s.loss_p) {
+                        sf.metrics.lost += 1;
+                        for (c, l) in lost.iter_mut().enumerate() {
+                            if c / rb == r {
+                                *l = true;
+                            }
+                        }
+                    }
+                }
+                for j in 0..rb {
+                    if sf.rng.bernoulli(s.loss_p) {
+                        sf.metrics.lost += 1;
+                        for (c, l) in lost.iter_mut().enumerate() {
+                            if c % rb == j {
+                                *l = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if lost.iter().any(|&l| l) {
+                sf.lost_cells = lost;
+            }
+        }
+        let mut extra = Vec::new();
+        if s.transient_p > 0.0 || s.corrupt_p > 0.0 {
+            extra = vec![0.0; n];
+            if s.transient_p > 0.0 {
+                for e in extra.iter_mut() {
+                    if sf.rng.bernoulli(s.transient_p) {
+                        sf.metrics.transients += 1;
+                        sf.metrics.retries += 1;
+                        *e += s.throttle_s;
+                    }
+                }
+            }
+            if s.corrupt_p > 0.0 {
+                for e in extra.iter_mut() {
+                    if sf.rng.bernoulli(s.corrupt_p) {
+                        sf.metrics.corrupt += 1;
+                        sf.metrics.retries += 1;
+                        *e += s.throttle_s;
+                    }
+                }
+            }
+        }
+        extra
+    }
+
     fn start_compute(&mut self, sim: &mut EventSim, model: &StragglerModel) {
         self.stage = Stage::Compute;
         self.probe = Some(self.scheme.decode_probe());
         let n = self.scheme.compute_tasks();
         let works = vec![self.shape.compute_profile(); n];
+        // Storage-fault draws happen before phase sampling but on their
+        // own salted stream, so the main stream's draw sequence is
+        // untouched either way.
+        let fault_extra = self.draw_storage_faults(n);
         // The storage overlay rides on top of the sampled durations
         // (empty slice = none): the RNG draw sequence is identical either
         // way, which is what keeps storage-off goldens bit-identical.
-        let io_extra: &[f64] = match &self.storage {
-            Some(load) => &load.extra_secs,
-            None => &[],
+        let mut merged: Vec<f64>;
+        let io_extra: &[f64] = match (&self.storage, fault_extra.is_empty()) {
+            (Some(load), true) => &load.extra_secs,
+            (Some(load), false) => {
+                merged = load.extra_secs.clone();
+                for (m, e) in merged.iter_mut().zip(&fault_extra) {
+                    *m += e;
+                }
+                &merged
+            }
+            (None, false) => {
+                merged = fault_extra;
+                &merged
+            }
+            (None, true) => &[],
         };
         let cohort = self.cohort_mults(n, true);
         // Exploitation is a *capability* of the scheme, not just a
@@ -1220,6 +1441,29 @@ impl JobRun {
             self.scheme.compute_termination(),
             &mut self.rng,
         ));
+        // A lost input block erases its grid cells: wrap the scheme's
+        // probe so (1) erased cells never count as arrived, and (2) the
+        // phase still terminates at the last arrival when the surviving
+        // mask cannot decode — degenerating to wait-all, after which the
+        // decode plan reports the loss honestly instead of the job
+        // hanging on a probe that can never fire.
+        if let Some(sf) = &self.sfault {
+            if !sf.lost_cells.is_empty() {
+                let lost = sf.lost_cells.clone();
+                let mut inner = self.probe.take().expect("probe set above");
+                self.probe = Some(Box::new(move |mask: &[bool], hint: Option<usize>| {
+                    let masked: Vec<bool> =
+                        mask.iter().zip(&lost).map(|(&m, &l)| m && !l).collect();
+                    let fired = match hint {
+                        // An erased cell's arrival is a pure feasibility
+                        // query — nothing real arrived.
+                        Some(c) if lost[c] => inner(&masked, None),
+                        h => inner(&masked, h),
+                    };
+                    fired || mask.iter().all(|&m| m)
+                }));
+            }
+        }
     }
 
     fn start_decode(&mut self, sim: &mut EventSim, model: &StragglerModel, arrived: &[bool]) {
@@ -1230,6 +1474,17 @@ impl JobRun {
         self.report.dec.blocks_read = plan.blocks_read;
         self.report.dec.tasks = plan.profiles.len();
         self.report.decode_ok = plan.undecodable == 0;
+        if let Some(sf) = &mut self.sfault {
+            if sf.metrics.lost > 0 {
+                if plan.undecodable == 0 {
+                    // Parity slack covered every erased cell: the lost
+                    // blocks are reconstructed by the decode itself.
+                    sf.metrics.recovered_via_parity = sf.metrics.lost;
+                } else {
+                    sf.degraded = true;
+                }
+            }
+        }
         if plan.profiles.is_empty() {
             self.start_recompute(sim, model);
         } else {
@@ -1253,7 +1508,11 @@ impl JobRun {
     // termination (see `JobReport::decode_ok`): kept for cutoff policies
     // that cannot guarantee a decodable mask.
     fn start_recompute(&mut self, sim: &mut EventSim, model: &StragglerModel) {
-        if self.undecodable == 0 {
+        // Storage loss past the parity slack is *not* recomputable: the
+        // input blocks are gone, so re-running the cell would fabricate
+        // data the store lost. Finish and report the degradation.
+        let storage_degraded = self.sfault.as_ref().is_some_and(|sf| sf.degraded);
+        if self.undecodable == 0 || storage_degraded {
             self.finish_job(sim.now());
             return;
         }
@@ -1283,6 +1542,19 @@ impl JobRun {
             // least one phase: the output is incomplete regardless of
             // what the decode plan said about the cells that did arrive.
             self.report.decode_ok = false;
+        }
+        if let Some(sf) = &self.sfault {
+            if sf.degraded {
+                self.report.decode_ok = false;
+                // Storage loss degrades the job through the same honest
+                // channel worker churn uses.
+                self.report.faults.get_or_insert_with(FaultMetrics::default).degraded = true;
+            }
+            // Appended only when something actually happened, so runs
+            // whose draws all came up clean keep the historical shape.
+            if sf.metrics.any() {
+                self.report.storage_faults = Some(sf.metrics);
+            }
         }
     }
 
@@ -1351,7 +1623,16 @@ impl JobRun {
                     // Credited-but-incomplete stragglers count as arrived
                     // for decode planning — that is what partial credit
                     // *means* (identical to `arrived_mask` otherwise).
-                    let mask = ps.credit_mask();
+                    let mut mask = ps.credit_mask();
+                    // Cells fed by lost input blocks are erasures no
+                    // matter what their worker computed.
+                    if let Some(sf) = &self.sfault {
+                        for (m, &l) in mask.iter_mut().zip(&sf.lost_cells) {
+                            if l {
+                                *m = false;
+                            }
+                        }
+                    }
                     self.start_decode(sim, model, &mask);
                 }
                 Stage::Decode => {
@@ -1402,6 +1683,8 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
                 sc.storage.as_ref(),
                 sc.failures.as_ref(),
                 sc.progress.as_ref(),
+                sc.storage_faults.as_ref(),
+                sc.seed,
                 root.fork(i as u64),
             )?);
         }
@@ -1524,6 +1807,18 @@ pub fn run_scenario(sc: &Scenario) -> anyhow::Result<Json> {
                     .build(),
             );
         }
+        // Run-level storage-fault rollup — present exactly when some job
+        // observed a fault event (clean runs keep their historical byte
+        // shape).
+        if jobs.iter().any(|j| j.report.storage_faults.is_some()) {
+            let mut sum = StorageFaultMetrics::default();
+            for j in &jobs {
+                if let Some(sf) = &j.report.storage_faults {
+                    sum.add(sf);
+                }
+            }
+            run.set("storage_faults", sum.to_json());
+        }
         runs.push(run);
     }
 
@@ -1595,6 +1890,71 @@ mod tests {
         assert_eq!(sc.straggler.slow_dist, SlowdownDist::Pareto { alpha: 1.2 });
         assert_eq!(sc.jobs[0].arrival, 10.5);
         assert_eq!(sc.jobs[0].encode_workers, 2);
+    }
+
+    #[test]
+    fn parses_storage_faults_section_with_defaults_and_rejects_bad_values() {
+        let sc = scenario_from(
+            r#"{
+                "name": "sf",
+                "seed": 5,
+                "storage_faults": {"transient_p": 0.12, "throttle_s": 4.0,
+                                   "loss_p": 0.08, "corrupt_p": 0.05},
+                "jobs": [
+                    {"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 1000}
+                ]
+            }"#,
+        );
+        let spec = sc.storage_faults.expect("storage_faults parsed");
+        assert_eq!(spec.transient_p, 0.12);
+        assert_eq!(spec.throttle_s, 4.0);
+        assert_eq!(spec.loss_p, 0.08);
+        assert_eq!(spec.corrupt_p, 0.05);
+        assert_eq!(spec.max_retries, 3);
+        assert_eq!(spec.backoff_s, 1.0);
+        assert!(spec.any());
+
+        // An empty section is valid — and inert.
+        let sc = scenario_from(
+            r#"{"name": "sf0", "seed": 1, "storage_faults": {},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+        );
+        assert!(!sc.storage_faults.expect("parsed").any());
+
+        for bad in [
+            // Probability out of range.
+            r#"{"name": "x", "seed": 1, "storage_faults": {"loss_p": 1.5},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Wrong-typed value.
+            r#"{"name": "x", "seed": 1, "storage_faults": {"corrupt_p": "often"},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Negative throttle.
+            r#"{"name": "x", "seed": 1, "storage_faults": {"throttle_s": -1.0},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Fractional retries.
+            r#"{"name": "x", "seed": 1, "storage_faults": {"max_retries": 2.5},
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            // Not an object.
+            r#"{"name": "x", "seed": 1, "storage_faults": 0.5,
+                "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+        ] {
+            assert!(
+                parse_scenario(&parse(bad).unwrap()).is_err(),
+                "should reject: {bad}"
+            );
+        }
+
+        // Typos fail loudly, naming the culprit.
+        let err = parse_scenario(
+            &parse(
+                r#"{"name": "x", "seed": 1, "storage_faults": {"lose_p": 0.1},
+                    "jobs": [{"scheme": "uncoded", "s_a": 2, "s_b": 2, "dims": 100}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown storage_faults key 'lose_p'"), "{err}");
     }
 
     #[test]

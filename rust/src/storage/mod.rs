@@ -12,6 +12,9 @@
 //!
 //! Submodules:
 //! - [`cache`] — LRU read-through block cache over any [`ObjectStore`].
+//! - [`faults`] — deterministic fault injection ([`faults::FaultyStore`])
+//!   and the typed error surface ([`faults::StorageError`]) of fallible
+//!   block reads, plus the FNV-1a integrity digest.
 //! - [`transfer`] — per-object latency/bandwidth timing with
 //!   single-stream caps (fig3/fig10–11 S3 calibrations).
 //! - [`cost`] — the original aggregate I/O → virtual-seconds model used
@@ -19,6 +22,7 @@
 
 pub mod cache;
 pub mod cost;
+pub mod faults;
 pub mod transfer;
 
 use std::collections::HashMap;
@@ -97,6 +101,18 @@ pub trait ObjectStore: Send + Sync {
     /// (a non-wire payload reads as absent).
     fn get_block(&self, key: &str) -> Option<BlockBuf> {
         self.get(key).and_then(|b| BlockBuf::from_wire(&b).ok())
+    }
+
+    /// Fallible block fetch — the surface the driver's retry and
+    /// erasure-recovery machinery consumes. Plain stores never throttle
+    /// or corrupt, so the default maps a miss to
+    /// [`faults::StorageError::NotFound`] and everything else to `Ok`;
+    /// [`faults::FaultyStore`] overrides this with the full typed
+    /// vocabulary.
+    fn try_get_block(&self, key: &str) -> Result<BlockBuf, faults::StorageError> {
+        self.get_block(key).ok_or_else(|| faults::StorageError::NotFound {
+            key: key.to_string(),
+        })
     }
 }
 

@@ -201,6 +201,50 @@ fn daemon_rejects_malformed_requests_with_culprit_errors() {
     client.join().expect("client thread");
 }
 
+#[test]
+fn silent_connections_time_out_without_wedging_the_daemon() {
+    // A client that connects and then sends nothing (slow-loris) must
+    // not pin the accept loop: the daemon answers 408 after its socket
+    // timeout and keeps serving well-behaved clients.
+    let cfg = DaemonConfig {
+        io_timeout_s: 0.2,
+        ..frozen_config()
+    };
+    let mut daemon = Daemon::bind(&cfg).unwrap();
+    let addr = daemon.local_addr().unwrap();
+    let client = thread::spawn(move || {
+        // Connect and go silent. Read whatever the daemon eventually
+        // answers — a 408 with the standard error vocabulary.
+        let mut s = TcpStream::connect(addr).expect("connect to daemon");
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 408 Request Timeout"), "{buf}");
+        let body = buf.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+        let doc = json::parse(body).unwrap();
+        assert!(
+            doc.get("error").unwrap().as_str().unwrap().contains("timed out"),
+            "{body}"
+        );
+
+        // Same story for a trickler: headers promise a body that never
+        // arrives in full.
+        let mut s = TcpStream::connect(addr).expect("connect to daemon");
+        s.write_all(b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 100\r\n\r\n{\"sch")
+            .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 408"), "{buf}");
+
+        // The daemon is still alive and serving.
+        let (st, body) = http(addr, "GET", "/healthz", None);
+        assert_eq!((st, body.as_str()), (200, "ok\n"));
+        let (st, _) = http(addr, "POST", "/v1/shutdown", None);
+        assert_eq!(st, 200);
+    });
+    daemon.serve().unwrap();
+    client.join().expect("client thread");
+}
+
 /// A small service scenario with tenants, admission pressure and a
 /// shared store — enough structure that a replay drift would show.
 const SCENARIO: &str = r#"{

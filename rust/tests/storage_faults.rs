@@ -1,0 +1,221 @@
+//! The storage-fault plane over the scenario harness.
+//!
+//! Contracts (DESIGN.md §Storage faults):
+//! 1. **Draw-order**: a scenario without a `"storage_faults"` section is
+//!    byte-identical to the same scenario with an inert one injected —
+//!    fault draws live on their own salted stream and an inert spec
+//!    consumes zero draws, so the feature is invisible until switched
+//!    on. Run over *every* checked-in fault-free scenario.
+//! 2. **Erasure recovery**: a coded job that loses a block within its
+//!    parity slack still reports `decode_ok = true`, with the loss
+//!    accounted as `recovered_via_parity`; an uncoded job with lost
+//!    blocks degrades honestly (`decode_ok = false`, `faults.degraded`)
+//!    instead of panicking or hanging.
+//! 3. **Chaos determinism**: the fault-injecting scenario is
+//!    bit-identical across reruns — fault draws are a pure function of
+//!    `(seed, job index)`.
+//! 4. **Throttle accounting**: transient re-reads shift every task by
+//!    exactly the throttle delay, and nothing else about the timeline
+//!    moves.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use slec::platform::scenario::{parse_scenario, run_scenario, Scenario};
+use slec::storage::faults::StorageFaultSpec;
+use slec::util::json::{self, Json};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+fn scenario_files() -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = fs::read_dir(scenarios_dir())
+        .expect("rust/scenarios must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_file() && p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    files.sort();
+    assert!(!files.is_empty(), "no scenarios found");
+    files
+}
+
+fn load(path: &Path) -> Scenario {
+    let doc = json::load_file(path)
+        .unwrap_or_else(|e| panic!("loading {}: {e}", path.display()));
+    parse_scenario(&doc).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+fn run_jobs(report: &Json) -> &[Json] {
+    report.get("runs").unwrap().as_arr().unwrap()[0]
+        .get("jobs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+}
+
+/// Contract 1: every fault-free scenario in the suite stays byte
+/// identical when an inert `"storage_faults"` section is injected, and
+/// its reports carry no `storage_faults` block.
+#[test]
+fn fault_free_scenarios_are_untouched_by_an_inert_section() {
+    let mut covered = 0;
+    for path in scenario_files() {
+        let sc = load(&path);
+        let fault_free =
+            sc.storage_faults.is_none() && sc.jobs.iter().all(|j| j.storage_faults.is_none());
+        if !fault_free {
+            continue;
+        }
+        covered += 1;
+        let plain = run_scenario(&sc).unwrap().to_string_pretty();
+        let mut inert = sc.clone();
+        // All probabilities zero: the spec parses but must consume no
+        // draws and leave no trace in the report.
+        inert.storage_faults = Some(StorageFaultSpec::default());
+        let with_inert = run_scenario(&inert).unwrap().to_string_pretty();
+        assert_eq!(
+            plain,
+            with_inert,
+            "{}: inert storage_faults section must be invisible",
+            path.display()
+        );
+        assert!(
+            !plain.contains("\"storage_faults\""),
+            "{}: fault-free run must not emit storage-fault metrics",
+            path.display()
+        );
+    }
+    assert!(covered >= 11, "expected ≥ 11 fault-free scenarios, found {covered}");
+}
+
+/// Contract 2 over the checked-in scenario (the same run the golden
+/// pins): the coded jobs absorb their losses, the uncoded job degrades
+/// honestly, and the run-level rollup adds up.
+#[test]
+fn coded_jobs_recover_lost_blocks_and_uncoded_degrades_honestly() {
+    let sc = load(&scenarios_dir().join("storage-faults.json"));
+    let report = run_scenario(&sc).unwrap();
+    let jobs = run_jobs(&report);
+    assert_eq!(jobs.len(), 3);
+
+    // Local-product loses one coded row-block and still decodes — the
+    // loss is just one more erasure, peeled from the parities.
+    let lp = &jobs[0];
+    assert_eq!(lp.get("decode_ok").unwrap().as_bool(), Some(true));
+    let sf = lp.get("storage_faults").expect("local-product fault block");
+    assert_eq!(sf.get("lost").unwrap().as_u64(), Some(1));
+    assert_eq!(sf.get("recovered_via_parity").unwrap().as_u64(), Some(1));
+    assert!(sf.get("transients").unwrap().as_u64().unwrap() > 0);
+
+    // Product sees only transient/corrupt churn: retried, not lost.
+    let pr = &jobs[1];
+    assert_eq!(pr.get("decode_ok").unwrap().as_bool(), Some(true));
+    let sf = pr.get("storage_faults").expect("product fault block");
+    assert_eq!(sf.get("lost").unwrap().as_u64(), Some(0));
+    assert!(sf.get("retries").unwrap().as_u64().unwrap() > 0);
+
+    // Uncoded has no parities: its losses are unrecoverable and the job
+    // reports that instead of fabricating data or panicking.
+    let un = &jobs[2];
+    assert_eq!(un.get("decode_ok").unwrap().as_bool(), Some(false));
+    let f = un.get("faults").expect("uncoded faults block");
+    assert_eq!(f.get("degraded").unwrap().as_bool(), Some(true));
+    let sf = un.get("storage_faults").expect("uncoded fault block");
+    assert!(sf.get("lost").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(sf.get("recovered_via_parity").unwrap().as_u64(), Some(0));
+
+    // Run-level rollup = sum of the per-job blocks.
+    let roll = report.get("runs").unwrap().as_arr().unwrap()[0]
+        .get("storage_faults")
+        .expect("run-level rollup");
+    for key in ["transients", "retries", "lost", "corrupt", "recovered_via_parity"] {
+        let sum: u64 = jobs
+            .iter()
+            .filter_map(|j| j.get("storage_faults"))
+            .map(|s| s.get(key).unwrap().as_u64().unwrap())
+            .sum();
+        assert_eq!(roll.get(key).unwrap().as_u64(), Some(sum), "{key}");
+    }
+}
+
+/// Contract 3: chaos determinism. Two runs of the fault-injecting
+/// scenario are bit-identical, and the report lands in `target/chaos/`
+/// for the CI chaos-smoke job to archive.
+#[test]
+fn chaos_rerun_is_bit_identical() {
+    let sc = load(&scenarios_dir().join("storage-faults.json"));
+    let first = run_scenario(&sc).unwrap();
+    let second = run_scenario(&sc).unwrap();
+    let text = first.to_string_pretty();
+    assert_eq!(
+        text,
+        second.to_string_pretty(),
+        "fault injection must be a pure function of (seed, job index)"
+    );
+    let roll = first.get("runs").unwrap().as_arr().unwrap()[0]
+        .get("storage_faults")
+        .expect("run-level rollup");
+    assert!(
+        roll.get("recovered_via_parity").unwrap().as_u64().unwrap() >= 1,
+        "the chaos run must exercise parity recovery"
+    );
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target").join("chaos");
+    fs::create_dir_all(&dir).expect("create target/chaos");
+    fs::write(dir.join("storage-faults-report.json"), text + "\n")
+        .expect("write chaos report");
+}
+
+fn throttle_doc(seed: u64, faults: &str) -> Scenario {
+    let doc = format!(
+        r#"{{
+            "name": "throttle",
+            "seed": {seed},
+            "workers": 0{faults},
+            "jobs": [
+                {{"scheme": "local-product:2x2", "s_a": 4, "s_b": 4, "dims": 2000}}
+            ]
+        }}"#
+    );
+    parse_scenario(&json::parse(&doc).unwrap()).unwrap()
+}
+
+/// Contract 4: with `transient_p = 1` every task re-reads once and pays
+/// exactly the throttle delay; the straggler timeline itself (sampled
+/// from the untouched main stream) does not move, so the compute
+/// makespan shifts by exactly the throttle.
+#[test]
+fn throttled_retries_shift_the_makespan_by_exactly_the_throttle() {
+    for seed in [5u64, 6, 7] {
+        let plain = run_scenario(&throttle_doc(seed, "")).unwrap();
+        let faulty = run_scenario(&throttle_doc(
+            seed,
+            r#", "storage_faults": {"transient_p": 1.0, "throttle_s": 7.0}"#,
+        ))
+        .unwrap();
+        let comp = |r: &Json| -> f64 {
+            run_jobs(r)[0]
+                .get("comp")
+                .unwrap()
+                .get("virtual_secs")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let (p, f) = (comp(&plain), comp(&faulty));
+        assert!(
+            (f - p - 7.0).abs() < 1e-9,
+            "seed {seed}: expected +7 s shift, got {p} -> {f}"
+        );
+        let sf = run_jobs(&faulty)[0]
+            .get("storage_faults")
+            .expect("fault block");
+        assert_eq!(sf.get("transients").unwrap().as_u64(), Some(36));
+        assert_eq!(sf.get("retries").unwrap().as_u64(), Some(36));
+        assert_eq!(sf.get("lost").unwrap().as_u64(), Some(0));
+        // The plain run carries no fault block at all.
+        assert!(run_jobs(&plain)[0].get("storage_faults").is_none());
+    }
+}
